@@ -1,0 +1,159 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack
+//! on a realistic serving workload.
+//!
+//! 1. Build traces for both nf-core workflows (the "historical runs").
+//! 2. Start the coordinator with the **PJRT backend**: batched OLS
+//!    training and prediction execute the AOT-compiled Pallas kernels
+//!    (`artifacts/*.hlo.txt`) — Python is never invoked.
+//! 3. Train models for all 21 task types.
+//! 4. Replay both workflows in DAG order from 8 concurrent submitter
+//!    threads: request a plan per instance, simulate the execution
+//!    against its trace, report OOMs back, retry until success.
+//! 5. Report end-to-end latency percentiles, plan throughput, batching
+//!    efficiency, and total wastage vs a peak-only strategy.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example online_service
+//! ```
+//! (Falls back to the native backend when artifacts are missing.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::BackendSpec;
+use ksplus::runtime::default_artifacts_dir;
+use ksplus::trace::workflow::Workflow;
+use ksplus::trace::Execution;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. historical traces + live workload ---------------------------
+    let workflows = [Workflow::eager(), Workflow::sarek()];
+    let history: Vec<_> = workflows.iter().map(|wf| wf.generate(42, 200)).collect();
+    let live: Vec<_> = workflows.iter().map(|wf| wf.generate(1337, 200)).collect();
+
+    // --- 2. coordinator with the PJRT backend ---------------------------
+    let dir = default_artifacts_dir();
+    let spec = if dir.join("manifest.json").exists() {
+        println!("backend: PJRT (artifacts from {})", dir.display());
+        BackendSpec::Pjrt(Some(dir))
+    } else {
+        println!("backend: native (artifacts not built; run `make artifacts`)");
+        BackendSpec::Native
+    };
+    let coord = Coordinator::start(CoordinatorConfig::default(), spec);
+    let client = coord.client();
+
+    // --- 3. train all task types ----------------------------------------
+    let t0 = Instant::now();
+    let mut n_models = 0;
+    for hist in &history {
+        for t in &hist.tasks {
+            client.train(&t.task, t.executions.clone());
+            n_models += 1;
+        }
+    }
+    println!("trained {n_models} task models in {:.0} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    // --- 4. replay the live workload in DAG order -----------------------
+    // Tasks of each workflow are submitted stage by stage (topological
+    // order), all instances of a stage in parallel across 8 threads.
+    let oom_reports = Arc::new(AtomicUsize::new(0));
+    let mut wastage_ks = 0.0f64;
+    let mut served = 0usize;
+    let t0 = Instant::now();
+    for (wf, lv) in workflows.iter().zip(&live) {
+        for stage in wf.topo_order() {
+            let execs: Vec<Execution> = lv.task(stage).unwrap().executions.clone();
+            let chunks: Vec<Vec<Execution>> = execs
+                .chunks(execs.len().div_ceil(8).max(1))
+                .map(|c| c.to_vec())
+                .collect();
+            let mut handles = Vec::new();
+            for chunk in chunks {
+                let c = coord.client();
+                let ooms = oom_reports.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut wastage = 0.0f64;
+                    for e in &chunk {
+                        // Plan -> simulate -> report failures until done.
+                        let mut plan = c.plan(&e.task, e.input_mb);
+                        let mut attempts = 0;
+                        loop {
+                            attempts += 1;
+                            match plan.first_oom(e) {
+                                None => {
+                                    wastage += plan.wastage_gbs(e);
+                                    break;
+                                }
+                                Some((t_fail, _)) => {
+                                    wastage += plan.alloc_gbs(t_fail.max(e.dt));
+                                    ooms.fetch_add(1, Ordering::Relaxed);
+                                    if attempts > 10 {
+                                        break;
+                                    }
+                                    plan = c.report_failure(&plan, t_fail);
+                                }
+                            }
+                        }
+                    }
+                    wastage
+                }));
+            }
+            for h in handles {
+                wastage_ks += h.join().unwrap();
+            }
+            served += execs.len();
+        }
+    }
+    let serve_wall = t0.elapsed();
+
+    // --- 5. report -------------------------------------------------------
+    let stats = client.stats();
+    println!("\n== end-to-end results ==");
+    println!("instances served    : {served}");
+    println!("wall time           : {:.2} s", serve_wall.as_secs_f64());
+    println!(
+        "plan throughput     : {:.0} plans/s",
+        stats.requests as f64 / serve_wall.as_secs_f64()
+    );
+    println!(
+        "batching            : {} batches, mean size {:.1}",
+        stats.batches,
+        stats.mean_batch_size()
+    );
+    println!(
+        "plan latency        : p50 {:.0} us  p95 {:.0} us  p99 {:.0} us",
+        stats.latency_percentile_us(50.0),
+        stats.latency_percentile_us(95.0),
+        stats.latency_percentile_us(99.0)
+    );
+    println!("OOM reports handled : {}", oom_reports.load(Ordering::Relaxed));
+    println!("KS+ wastage         : {wastage_ks:.0} GBs");
+
+    // Baseline comparison: peak-only (max historic peak + 10 %).
+    let mut wastage_flat = 0.0f64;
+    for (hist, lv) in history.iter().zip(&live) {
+        for t in &lv.tasks {
+            let peak = hist
+                .task(&t.task)
+                .map(|h| h.peaks().iter().cloned().fold(0.0, f64::max))
+                .unwrap_or(4.0);
+            let plan = ksplus::segments::StepPlan::flat((peak * 1.1).min(128.0));
+            for e in &t.executions {
+                wastage_flat += if plan.covers(e) {
+                    plan.wastage_gbs(e)
+                } else {
+                    plan.alloc_gbs(e.duration()) + 128.0 * e.duration()
+                };
+            }
+        }
+    }
+    println!("flat-peak wastage   : {wastage_flat:.0} GBs");
+    println!(
+        "reduction           : {:.0}%",
+        (1.0 - wastage_ks / wastage_flat) * 100.0
+    );
+    Ok(())
+}

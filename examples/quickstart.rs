@@ -1,0 +1,53 @@
+//! Quickstart: train KS+ on one task's history, predict a plan for a new
+//! instance, and survive an OOM with the segment-rescaling retry.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ksplus::predictor::by_name;
+use ksplus::sim::run_task;
+use ksplus::trace::workflow::Workflow;
+use ksplus::trace::split_train_test;
+use ksplus::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Get some task history. Here: synthetic BWA traces from the
+    //    eager workflow generator (or load your own CSV via trace::io).
+    let trace = Workflow::eager().generate(42, 200);
+    let bwa = trace.task("bwa").expect("bwa task");
+    let (train, test) = split_train_test(bwa, 0.5, &mut Rng::new(1));
+    println!("BWA: {} training / {} test executions", train.len(), test.len());
+
+    // 2. Train KS+ with k = 4 variable segments on a 128 GB node.
+    let mut ksplus = by_name("ksplus", 4, 128.0).expect("method");
+    ksplus.train(&train);
+
+    // 3. Predict an allocation plan for a new input size.
+    let e = &test[0];
+    let plan = ksplus.plan(e.input_mb);
+    println!("\ninput {:.0} MB -> plan with {} segments:", e.input_mb, plan.k());
+    for i in 0..plan.k() {
+        println!("  from {:>6.0} s allocate {:>5.2} GB", plan.starts[i], plan.peaks[i]);
+    }
+
+    // 4. Run the whole test set through the OOM/retry simulator and
+    //    compare wastage against a peak-only baseline.
+    let mut improved = by_name("ppm-improved", 4, 128.0).unwrap();
+    improved.train(&train);
+    let mut w_ks = 0.0;
+    let mut w_ppm = 0.0;
+    let mut retries = 0usize;
+    for e in &test {
+        let (o, _) = run_task(ksplus.as_ref(), e, 10);
+        assert!(o.success);
+        w_ks += o.wastage_gbs;
+        retries += o.attempts - 1;
+        w_ppm += run_task(improved.as_ref(), e, 10).0.wastage_gbs;
+    }
+    println!("\ntest-set wastage:");
+    println!("  KS+          : {:>8.0} GBs ({} retries)", w_ks, retries);
+    println!("  PPM-Improved : {:>8.0} GBs", w_ppm);
+    println!("  reduction    : {:.0}%", (1.0 - w_ks / w_ppm) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Segment explorer: visualise Algorithm 1 on a BWA trace as ASCII art,
+//! comparing k values and greedy vs optimal segmentation.
+//!
+//! ```sh
+//! cargo run --release --example segment_explorer -- 4
+//! ```
+
+use ksplus::segments::algorithm::{get_segments, optimal_segments};
+use ksplus::trace::workflow::Workflow;
+
+const WIDTH: usize = 100;
+const HEIGHT: usize = 16;
+
+fn render(samples: &[f64], plan_peaks: &[(usize, f64)], peak: f64) -> String {
+    // plan_peaks: (start sample, level) pairs.
+    let mut grid = vec![vec![' '; WIDTH]; HEIGHT];
+    let n = samples.len();
+    for col in 0..WIDTH {
+        let idx = col * n / WIDTH;
+        let h = ((samples[idx] / peak) * (HEIGHT - 1) as f64).round() as usize;
+        for row in 0..=h.min(HEIGHT - 1) {
+            grid[HEIGHT - 1 - row][col] = '.';
+        }
+    }
+    // Overlay the plan as '#'.
+    for col in 0..WIDTH {
+        let idx = col * n / WIDTH;
+        let level = plan_peaks
+            .iter()
+            .take_while(|(s, _)| *s <= idx)
+            .last()
+            .map(|(_, p)| *p)
+            .unwrap_or(0.0);
+        let h = ((level / peak) * (HEIGHT - 1) as f64).round() as usize;
+        grid[HEIGHT - 1 - h.min(HEIGHT - 1)][col] = '#';
+    }
+    grid.into_iter().map(|row| row.into_iter().collect::<String>()).collect::<Vec<_>>().join("\n")
+}
+
+fn main() {
+    let k: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let trace = Workflow::eager().generate(42, 200);
+    let e = &trace.task("bwa").unwrap().executions[0];
+    let peak = e.peak() * 1.05;
+
+    println!(
+        "BWA execution: {:.0} s, peak {:.1} GB, {} samples ('.' usage, '#' allocation)\n",
+        e.duration(),
+        e.peak(),
+        e.samples.len()
+    );
+
+    for (name, seg) in [
+        (format!("greedy k={k}"), get_segments(&e.samples, k)),
+        (format!("optimal k={k}"), optimal_segments(&e.samples, k)),
+    ] {
+        let offsets = seg.start_offsets();
+        let overlay: Vec<(usize, f64)> =
+            offsets.iter().copied().zip(seg.peaks.iter().copied()).collect();
+        println!("--- {name}: {} segments, envelope error {:.1} GB-samples ---",
+            seg.peaks.len(),
+            seg.envelope_error(&e.samples));
+        println!("{}\n", render(&e.samples, &overlay, peak));
+    }
+
+    // Wastage vs k table.
+    println!("wastage of the greedy plan vs k (this execution only):");
+    for kk in 1..=8 {
+        let seg = get_segments(&e.samples, kk);
+        let plan = seg.to_plan(e.dt);
+        println!("  k={kk}: {:>7.1} GBs", plan.wastage_gbs(e));
+    }
+}

@@ -1,0 +1,132 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Emits HLO *text* (NOT HloModuleProto.serialize()): jax >= 0.5 writes protos
+with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, per bucket, into --outdir:
+  fit_b{B}_n{N}.hlo.txt          (x[B,N], y[B,N], m[B,N]) -> (coef[B,2],)
+  predict_b{B}.hlo.txt           (coef[B,2], xq[B], scale[B]) -> (yhat[B],)
+  fit_predict_b{B}_n{N}.hlo.txt  (x,y,m,xq,scale) -> (yhat[B], coef[B,2])
+  wastage_b{B}_n{N}.hlo.txt      (alloc,used,m[B,N], dt[B]) -> (gbs[B],)
+  manifest.json                  shapes + entry metadata for the rust side
+
+Run once at build time (`make artifacts`); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ols
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def lower_all(outdir: str, b: int, n: int, pb: int) -> dict:
+    entries = []
+
+    def emit(name: str, fn, specs, inputs, outputs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+        )
+        print(f"  {fname}: {len(text)} chars")
+
+    # Fit and fused fit+predict come in two observation buckets: the
+    # small one covers typical training histories (n <= 64) at ~1/8 the
+    # cost; the rust runtime selects per call.
+    for nn in sorted({ols.FIT_N_SMALL, n}):
+        emit(
+            f"fit_b{b}_n{nn}",
+            model.fit_model,
+            [_spec(b, nn)] * 3,
+            [{"shape": [b, nn]}] * 3,
+            [{"shape": [b, 2]}],
+        )
+        emit(
+            f"fit_predict_b{b}_n{nn}",
+            model.fit_predict_model,
+            [_spec(b, nn)] * 3 + [_spec(b), _spec(b)],
+            [{"shape": [b, nn]}] * 3 + [{"shape": [b]}, {"shape": [b]}],
+            [{"shape": [b]}, {"shape": [b, 2]}],
+        )
+    emit(
+        f"predict_b{pb}",
+        model.predict_model,
+        [_spec(pb, 2), _spec(pb), _spec(pb)],
+        [{"shape": [pb, 2]}, {"shape": [pb]}, {"shape": [pb]}],
+        [{"shape": [pb]}],
+    )
+    emit(
+        f"wastage_b{b}_n{n}",
+        model.wastage_model,
+        [_spec(b, n)] * 3 + [_spec(b)],
+        [{"shape": [b, n]}] * 3 + [{"shape": [b]}],
+        [{"shape": [b]}],
+    )
+    k = ols.PLAN_K
+    emit(
+        f"plan_wastage_b{b}_n{n}_k{k}",
+        model.plan_wastage_model,
+        [_spec(b, k), _spec(b, k), _spec(b, n), _spec(b, n), _spec(b)],
+        [{"shape": [b, k]}] * 2 + [{"shape": [b, n]}] * 2 + [{"shape": [b]}],
+        [{"shape": [b]}],
+    )
+    return {
+        "buckets": {
+            "fit_b": b,
+            "fit_n": n,
+            "fit_n_small": min(ols.FIT_N_SMALL, n),
+            "predict_b": pb,
+            "plan_k": k,
+        },
+        "block_b": ols.BLOCK_B,
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--fit-b", type=int, default=ols.FIT_B)
+    ap.add_argument("--fit-n", type=int, default=ols.FIT_N)
+    ap.add_argument("--predict-b", type=int, default=ols.PREDICT_B)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = lower_all(args.outdir, args.fit_b, args.fit_n, args.predict_b)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

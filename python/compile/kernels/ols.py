@@ -1,0 +1,188 @@
+"""Layer-1 Pallas kernels for KS+.
+
+The numeric hot spot of KS+ is thousands of *independent, tiny* ordinary
+least-squares problems: one (start-time, peak-memory) regression pair per
+task x segment model, each fitted over the historical executions of that
+task and evaluated for every new task instance. We batch them: one batch
+row == one regression model, padded to a bucket shape and masked.
+
+Kernels (all interpret=True -- CPU PJRT cannot execute Mosaic lowerings):
+
+  fit      : (x[B,N], y[B,N], m[B,N])                  -> coef[B,2]
+  predict  : (coef[B,2], xq[B], scale[B])              -> yhat[B]
+  wastage  : (alloc[B,N], used[B,N], m[B,N], dt[B])    -> gbs[B]
+
+TPU mapping (DESIGN.md SectionHardware-Adaptation): rows are tiled over the
+batch dimension in VMEM-resident blocks; every reduction is a lane-wise
+sum over the observation axis, i.e. VPU work on (8,128) tiles. There is
+no matmul, so the kernels are HBM-bandwidth bound; block sizes are chosen
+so one (BLOCK_B, N) f32 tile of each operand fits VMEM comfortably
+(3 operands x 128 x 512 x 4 B = 768 KiB << 16 MiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default bucket shapes, shared with aot.py and the rust runtime manifest.
+FIT_B, FIT_N = 256, 512
+# Small-observation bucket: typical training histories have <= 64
+# executions, so the runtime picks this bucket and does 1/8 of the work.
+FIT_N_SMALL = 64
+PREDICT_B = 1024
+WASTAGE_B, WASTAGE_N = 256, 512
+# Max segments per plan for the plan_wastage kernel.
+PLAN_K = 8
+
+# Batch-dimension block: one grid step for the default bucket (256 rows
+# x 512 obs x 3 operands x 4 B = 1.5 MiB, comfortably VMEM-resident);
+# perf pass measured ~8 % over 128-row blocks on the CPU interpret path
+# and halves the grid-loop overhead.
+BLOCK_B = 256
+
+# Guard for degenerate regressions (n < 2 observations or zero variance).
+_EPS = 1e-12
+
+
+def _fit_kernel(x_ref, y_ref, m_ref, o_ref):
+    """Masked closed-form OLS per row.
+
+    slope = (n*Sxy - Sx*Sy) / (n*Sxx - Sx^2); intercept = (Sy - slope*Sx)/n.
+    Degenerate rows (n < 2 or ~zero x-variance) fall back to slope = 0,
+    intercept = mean(y) -- exactly what the rust-side reference predictor
+    does for tasks with a single historical execution.
+    """
+    m = m_ref[...]
+    x = x_ref[...] * m
+    y = y_ref[...] * m
+    n = jnp.sum(m, axis=-1)
+    sx = jnp.sum(x, axis=-1)
+    sy = jnp.sum(y, axis=-1)
+    sxy = jnp.sum(x * y, axis=-1)
+    sxx = jnp.sum(x * x, axis=-1)
+    denom = n * sxx - sx * sx
+    ok = (n >= 2.0) & (jnp.abs(denom) > _EPS)
+    safe = jnp.where(ok, denom, 1.0)
+    slope = jnp.where(ok, (n * sxy - sx * sy) / safe, 0.0)
+    nz = jnp.maximum(n, 1.0)
+    intercept = jnp.where(ok, (sy - slope * sx) / nz, sy / nz)
+    o_ref[...] = jnp.stack([slope, intercept], axis=-1)
+
+
+def _predict_kernel(coef_ref, xq_ref, scale_ref, o_ref):
+    """yhat = (slope * xq + intercept) * scale, clamped at >= 0.
+
+    `scale` carries the KS+ safety offsets (1.10 for segment peaks, 0.85
+    for segment start times), one factor per row so a single artifact
+    serves both model families.
+    """
+    coef = coef_ref[...]
+    yhat = coef[:, 0] * xq_ref[...] + coef[:, 1]
+    o_ref[...] = jnp.maximum(yhat * scale_ref[...], 0.0)
+
+
+def _wastage_kernel(alloc_ref, used_ref, m_ref, dt_ref, o_ref):
+    """GB-seconds wastage per row: sum(max(alloc - used, 0) * m) * dt."""
+    over = jnp.maximum(alloc_ref[...] - used_ref[...], 0.0) * m_ref[...]
+    o_ref[...] = jnp.sum(over, axis=-1) * dt_ref[...]
+
+
+def _plan_wastage_kernel(starts_ref, peaks_ref, used_ref, m_ref, dt_ref, o_ref):
+    """Wastage of a step-function plan against a usage trace, per row.
+
+    The plan is (starts[K], peaks[K]) with monotone non-decreasing peaks
+    (padding: repeat the last start/peak). The allocation at sample j is
+    max over segments i of peaks[i] * (starts[i] <= j*dt) -- valid
+    because peaks are monotone. Wastage = sum(max(alloc - used, 0)*m)*dt.
+    """
+    starts = starts_ref[...]  # [BB, K]
+    peaks = peaks_ref[...]  # [BB, K]
+    used = used_ref[...]  # [BB, N]
+    m = m_ref[...]  # [BB, N]
+    dt = dt_ref[...]  # [BB]
+    n = used.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)[None, :] * dt[:, None]  # [BB, N]
+    active = starts[:, None, :] <= t[:, :, None]  # [BB, N, K]
+    alloc = jnp.max(jnp.where(active, peaks[:, None, :], 0.0), axis=-1)  # [BB, N]
+    over = jnp.maximum(alloc - used, 0.0) * m
+    o_ref[...] = jnp.sum(over, axis=-1) * dt
+
+
+def _row_blocks(b: int) -> tuple[int, int]:
+    bb = min(BLOCK_B, b)
+    assert b % bb == 0, f"batch {b} not divisible by block {bb}"
+    return b // bb, bb
+
+
+def fit(x, y, m):
+    """Batched masked OLS. x, y, m: f32[B, N] -> coef f32[B, 2]."""
+    b, n = x.shape
+    grid, bb = _row_blocks(b)
+    spec2 = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        _fit_kernel,
+        grid=(grid,),
+        in_specs=[spec2, spec2, spec2],
+        out_specs=pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        interpret=True,
+    )(x, y, m)
+
+
+def predict(coef, xq, scale):
+    """Batched affine predict with safety scale. -> f32[B]."""
+    b = xq.shape[0]
+    grid, bb = _row_blocks(b)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(coef, xq, scale)
+
+
+def wastage(alloc, used, m, dt):
+    """Batched over-allocation integral. -> f32[B] (GB-seconds)."""
+    b, n = alloc.shape
+    grid, bb = _row_blocks(b)
+    spec2 = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((bb,), lambda i: (i,))
+    return pl.pallas_call(
+        _wastage_kernel,
+        grid=(grid,),
+        in_specs=[spec2, spec2, spec2, spec1],
+        out_specs=spec1,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(alloc, used, m, dt)
+
+
+def plan_wastage(starts, peaks, used, m, dt):
+    """Step-plan-vs-trace wastage without materialising the allocation.
+
+    starts, peaks: f32[B, K]; used, m: f32[B, N]; dt: f32[B] -> f32[B].
+    """
+    b, n = used.shape
+    k = starts.shape[1]
+    grid, bb = _row_blocks(b)
+    speck = pl.BlockSpec((bb, k), lambda i: (i, 0))
+    spec2 = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((bb,), lambda i: (i,))
+    return pl.pallas_call(
+        _plan_wastage_kernel,
+        grid=(grid,),
+        in_specs=[speck, speck, spec2, spec2, spec1],
+        out_specs=spec1,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(starts, peaks, used, m, dt)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels in ols.py.
+
+These are the correctness reference: pytest asserts allclose between every
+kernel and its oracle across a hypothesis sweep of shapes/values, and the
+rust-side unit tests pin the same closed forms.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def fit_ref(x, y, m):
+    x = jnp.asarray(x, jnp.float32) * m
+    y = jnp.asarray(y, jnp.float32) * m
+    n = jnp.sum(m, axis=-1)
+    sx = jnp.sum(x, axis=-1)
+    sy = jnp.sum(y, axis=-1)
+    sxy = jnp.sum(x * y, axis=-1)
+    sxx = jnp.sum(x * x, axis=-1)
+    denom = n * sxx - sx * sx
+    ok = (n >= 2.0) & (jnp.abs(denom) > _EPS)
+    safe = jnp.where(ok, denom, 1.0)
+    slope = jnp.where(ok, (n * sxy - sx * sy) / safe, 0.0)
+    nz = jnp.maximum(n, 1.0)
+    intercept = jnp.where(ok, (sy - slope * sx) / nz, sy / nz)
+    return jnp.stack([slope, intercept], axis=-1)
+
+
+def predict_ref(coef, xq, scale):
+    yhat = coef[:, 0] * xq + coef[:, 1]
+    return jnp.maximum(yhat * scale, 0.0)
+
+
+def wastage_ref(alloc, used, m, dt):
+    over = jnp.maximum(alloc - used, 0.0) * m
+    return jnp.sum(over, axis=-1) * dt
+
+
+def plan_wastage_ref(starts, peaks, used, m, dt):
+    n = used.shape[-1]
+    t = jnp.arange(n, dtype=jnp.float32)[None, :] * dt[:, None]
+    active = starts[:, None, :] <= t[:, :, None]
+    alloc = jnp.max(jnp.where(active, peaks[:, None, :], 0.0), axis=-1)
+    over = jnp.maximum(alloc - used, 0.0) * m
+    return jnp.sum(over, axis=-1) * dt

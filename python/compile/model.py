@@ -1,0 +1,47 @@
+"""Layer-2 JAX model: the batched KS+ regression pipeline.
+
+Jittable entry points, each wrapping the Layer-1 Pallas kernels so that a
+single HLO module per bucket is produced by aot.py:
+
+  fit_model         -- fit one OLS model per row (task x segment x target).
+  predict_model     -- evaluate fitted models with KS+ safety scales.
+  fit_predict_model -- fused fit + predict, the coordinator hot path:
+                       one artifact execution instead of two round trips.
+  wastage_model     -- batched GB-seconds plan-vs-trace evaluation used by
+                       the experiment harness for bulk scoring.
+
+Python never runs at request time: aot.py lowers these once to HLO text
+and the rust runtime executes the compiled artifacts.
+"""
+
+from __future__ import annotations
+
+from compile.kernels import ols
+
+
+def fit_model(x, y, m):
+    """f32[B,N] x 3 -> (coef f32[B,2],)."""
+    return (ols.fit(x, y, m),)
+
+
+def predict_model(coef, xq, scale):
+    """coef f32[B,2], xq f32[B], scale f32[B] -> (yhat f32[B],)."""
+    return (ols.predict(coef, xq, scale),)
+
+
+def fit_predict_model(x, y, m, xq, scale):
+    """Fused fit + predict over the same bucket; single HLO round trip."""
+    coef = ols.fit(x, y, m)
+    return (ols.predict(coef, xq, scale), coef)
+
+
+def wastage_model(alloc, used, m, dt):
+    """f32[B,N] x 3, dt f32[B] -> (gbs f32[B],)."""
+    return (ols.wastage(alloc, used, m, dt),)
+
+
+def plan_wastage_model(starts, peaks, used, m, dt):
+    """Step-plan scoring: starts/peaks f32[B,K], used/m f32[B,N],
+    dt f32[B] -> (gbs f32[B],). Saves materialising the allocation
+    series host-side for bulk experiment scoring."""
+    return (ols.plan_wastage(starts, peaks, used, m, dt),)

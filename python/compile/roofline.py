@@ -1,0 +1,140 @@
+"""L1 roofline estimator (DESIGN.md SectionHardware-Adaptation).
+
+Pallas interpret mode gives CPU-numpy timings only, so real-TPU
+performance is *estimated* from the kernels' memory traffic and the
+BlockSpec layout. For every kernel this module reports:
+
+  - VMEM working set per grid step (must fit the ~16 MiB budget),
+  - bytes moved HBM<->VMEM per invocation,
+  - arithmetic intensity (flop/byte),
+  - bandwidth-bound runtime estimate on a v4-class core (~1.2 TB/s),
+  - MXU utilisation (zero by design: no matmuls; the kernels are VPU
+    reductions, the roofline is HBM streaming).
+
+Usage: python -m compile.roofline
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from compile.kernels import ols
+
+VMEM_BYTES = 16 * 2**20
+HBM_BW = 1.2e12  # bytes/s, v4-class
+F32 = 4
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_per_step: int
+    hbm_bytes: int
+    flops: int
+    grid_steps: int
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1)
+
+    @property
+    def est_runtime_s(self) -> float:
+        # Bandwidth-bound: all our kernels sit far left of the ridge.
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_per_step <= VMEM_BYTES
+
+    def row(self) -> str:
+        return (
+            f"{self.name:<28} {self.vmem_per_step / 2**20:>7.2f} MiB "
+            f"{self.hbm_bytes / 2**20:>8.2f} MiB {self.intensity:>7.3f} "
+            f"{self.est_runtime_s * 1e6:>8.1f} us "
+            f"{'ok' if self.fits_vmem else 'OVER'}"
+        )
+
+
+def estimates(
+    b: int = ols.FIT_B,
+    n: int = ols.FIT_N,
+    pb: int = ols.PREDICT_B,
+    k: int = ols.PLAN_K,
+    block_b: int = ols.BLOCK_B,
+) -> list[KernelEstimate]:
+    steps = max(b // block_b, 1)
+    out = []
+    # fit: 3 inputs [B,N], output [B,2]; ~8 flops/element (mul+adds for
+    # 4 running sums) + O(B) epilogue.
+    io_fit = (3 * b * n + b * 2) * F32
+    out.append(
+        KernelEstimate(
+            f"fit b{b} n{n}",
+            3 * block_b * n * F32 + block_b * 2 * F32,
+            io_fit,
+            8 * b * n + 12 * b,
+            steps,
+        )
+    )
+    io_fit_small = (3 * b * ols.FIT_N_SMALL + b * 2) * F32
+    out.append(
+        KernelEstimate(
+            f"fit b{b} n{ols.FIT_N_SMALL} (small)",
+            3 * block_b * ols.FIT_N_SMALL * F32 + block_b * 2 * F32,
+            io_fit_small,
+            8 * b * ols.FIT_N_SMALL + 12 * b,
+            steps,
+        )
+    )
+    # predict: coef [B,2] + 2x [B] in, [B] out; ~4 flops/row.
+    io_pred = (pb * 2 + 3 * pb) * F32
+    out.append(
+        KernelEstimate(
+            f"predict b{pb}",
+            (min(block_b, pb) * 5) * F32,
+            io_pred,
+            4 * pb,
+            max(pb // block_b, 1),
+        )
+    )
+    # wastage: 3x [B,N] + [B] in, [B] out; ~3 flops/element.
+    io_w = (3 * b * n + 2 * b) * F32
+    out.append(
+        KernelEstimate(
+            f"wastage b{b} n{n}",
+            3 * block_b * n * F32,
+            io_w,
+            3 * b * n,
+            steps,
+        )
+    )
+    # plan_wastage: 2x [B,K] + 2x [B,N] + [B] in, [B] out; the [B,N,K]
+    # compare/max intermediate stays in VMEM.
+    io_pw = (2 * b * k + 2 * b * n + 2 * b) * F32
+    out.append(
+        KernelEstimate(
+            f"plan_wastage b{b} n{n} k{k}",
+            (2 * block_b * k + 2 * block_b * n + block_b * n * k) * F32,
+            io_pw,
+            (3 * k + 3) * b * n,
+            steps,
+        )
+    )
+    return out
+
+
+def main() -> None:
+    print(
+        f"{'kernel':<28} {'VMEM/step':>11} {'HBM moved':>12} {'fl/B':>7} "
+        f"{'t@1.2TB/s':>11} fits"
+    )
+    for e in estimates():
+        print(e.row())
+    print(
+        "\nAll kernels are HBM-bandwidth bound (intensity << ridge ~100 "
+        "flop/B on v4); MXU idle by design. VMEM budget: 16 MiB."
+    )
+
+
+if __name__ == "__main__":
+    main()

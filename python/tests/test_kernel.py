@@ -1,0 +1,239 @@
+"""Pallas kernels vs pure-jnp oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes (block-aligned and ragged-masked), value ranges
+(GB-scale memory, second-scale times), and degenerate rows (n<2, zero
+variance); every case asserts allclose against ref.py.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ols, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mk(rng, b, n, lo, hi):
+    return rng.uniform(lo, hi, size=(b, n)).astype(np.float32)
+
+
+def _mask(rng, b, n, min_obs=0):
+    counts = rng.integers(min_obs, n + 1, size=b)
+    m = np.zeros((b, n), np.float32)
+    for i, c in enumerate(counts):
+        m[i, :c] = 1.0
+    return m
+
+
+# ---------------------------------------------------------------- fit
+
+
+@pytest.mark.parametrize("b,n", [(2, 4), (8, 16), (128, 64), (256, 32)])
+def test_fit_matches_ref_dense(b, n):
+    rng = np.random.default_rng(b * 1000 + n)
+    x = _mk(rng, b, n, 0.1, 100.0)
+    y = 3.5 * x + 7.0 + rng.normal(0, 0.5, size=(b, n)).astype(np.float32)
+    m = np.ones((b, n), np.float32)
+    got = ols.fit(x, y, m)
+    want = ref.fit_ref(x, y, m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_fit_recovers_exact_line():
+    b, n = 128, 16
+    rng = np.random.default_rng(0)
+    x = _mk(rng, b, n, 1.0, 50.0)
+    slopes = rng.uniform(-5, 5, size=(b, 1)).astype(np.float32)
+    icepts = rng.uniform(-10, 10, size=(b, 1)).astype(np.float32)
+    y = slopes * x + icepts
+    m = np.ones((b, n), np.float32)
+    coef = np.asarray(ols.fit(x, y, m))
+    np.testing.assert_allclose(coef[:, 0], slopes[:, 0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(coef[:, 1], icepts[:, 0], rtol=1e-3, atol=2e-2)
+
+
+def test_fit_masked_rows_match_unpadded():
+    """A masked row must equal fitting only its unmasked prefix."""
+    b, n = 128, 32
+    rng = np.random.default_rng(7)
+    x = _mk(rng, b, n, 0.5, 20.0)
+    y = _mk(rng, b, n, 0.0, 64.0)
+    m = _mask(rng, b, n, min_obs=2)
+    coef = np.asarray(ols.fit(x, y, m))
+    for i in range(0, b, 17):
+        c = int(m[i].sum())
+        got = np.asarray(
+            ref.fit_ref(x[i : i + 1, :c], y[i : i + 1, :c], np.ones((1, c), np.float32))
+        )[0]
+        np.testing.assert_allclose(coef[i], got, rtol=1e-3, atol=1e-2)
+
+
+def test_fit_degenerate_rows():
+    """n==0 -> (0,0); n==1 -> (0, y0); zero x-variance -> (0, mean y)."""
+    b, n = 128, 8
+    x = np.ones((b, n), np.float32) * 4.0
+    y = np.full((b, n), 12.0, np.float32)
+    m = np.ones((b, n), np.float32)
+    m[0] = 0.0  # no observations
+    m[1] = 0.0
+    m[1, 0] = 1.0  # single observation
+    coef = np.asarray(ols.fit(x, y, m))
+    np.testing.assert_allclose(coef[0], [0.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(coef[1], [0.0, 12.0], atol=1e-5)
+    # constant x: degenerate denominator -> slope 0, intercept mean(y)
+    np.testing.assert_allclose(coef[2], [0.0, 12.0], atol=1e-5)
+
+
+@given(
+    b=st.sampled_from([2, 8, 64, 128, 256]),
+    n=st.sampled_from([2, 8, 32, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fit_hypothesis(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _mk(rng, b, n, 0.0, 1000.0)
+    y = _mk(rng, b, n, 0.0, 128.0)
+    m = _mask(rng, b, n)
+    got = np.asarray(ols.fit(x, y, m))
+    want = np.asarray(ref.fit_ref(x, y, m))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------- predict
+
+
+@given(
+    b=st.sampled_from([2, 8, 128, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predict_hypothesis(b, seed):
+    rng = np.random.default_rng(seed)
+    coef = rng.uniform(-10, 10, size=(b, 2)).astype(np.float32)
+    xq = rng.uniform(0, 500, size=b).astype(np.float32)
+    scale = rng.choice(np.asarray([0.85, 1.0, 1.1], np.float32), size=b)
+    got = np.asarray(ols.predict(coef, xq, scale))
+    want = np.asarray(ref.predict_ref(coef, xq, scale))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_clamps_negative():
+    coef = np.asarray([[-1.0, 0.0], [0.0, -5.0]], np.float32)
+    xq = np.asarray([10.0, 1.0], np.float32)
+    scale = np.ones(2, np.float32)
+    got = np.asarray(ols.predict(coef, xq, scale))
+    np.testing.assert_allclose(got, [0.0, 0.0])
+
+
+def test_predict_safety_scales():
+    """+10% memory / -15% time offsets are plain multiplicative scales."""
+    coef = np.tile(np.asarray([[2.0, 1.0]], np.float32), (4, 1))
+    xq = np.full(4, 3.0, np.float32)  # base = 7.0
+    scale = np.asarray([1.0, 1.1, 0.85, 0.5], np.float32)
+    got = np.asarray(ols.predict(coef, xq, scale))
+    np.testing.assert_allclose(got, 7.0 * scale, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- wastage
+
+
+@given(
+    b=st.sampled_from([2, 128, 256]),
+    n=st.sampled_from([4, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wastage_hypothesis(b, n, seed):
+    rng = np.random.default_rng(seed)
+    alloc = _mk(rng, b, n, 0.0, 64.0)
+    used = _mk(rng, b, n, 0.0, 64.0)
+    m = _mask(rng, b, n)
+    dt = rng.uniform(0.1, 30.0, size=b).astype(np.float32)
+    got = np.asarray(ols.wastage(alloc, used, m, dt))
+    want = np.asarray(ref.wastage_ref(alloc, used, m, dt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_wastage_ignores_underallocation():
+    """used > alloc contributes zero (failure cost is accounted in rust)."""
+    b, n = 2, 4
+    alloc = np.full((b, n), 2.0, np.float32)
+    used = np.asarray(
+        [[1.0, 1.0, 1.0, 1.0], [3.0, 3.0, 3.0, 3.0]], np.float32
+    )
+    m = np.ones((b, n), np.float32)
+    dt = np.ones(b, np.float32)
+    got = np.asarray(ols.wastage(alloc, used, m, dt))
+    np.testing.assert_allclose(got, [4.0, 0.0])
+
+
+def test_wastage_exact_value():
+    alloc = np.asarray([[10.0, 10.0, 10.0, 0.0]], np.float32)
+    used = np.asarray([[4.0, 6.0, 10.0, 0.0]], np.float32)
+    m = np.asarray([[1.0, 1.0, 1.0, 0.0]], np.float32)
+    dt = np.asarray([5.0], np.float32)
+    got = np.asarray(ols.wastage(alloc, used, m, dt))
+    np.testing.assert_allclose(got, [(6.0 + 4.0 + 0.0) * 5.0])
+
+
+# ---------------------------------------------------------------- plan_wastage
+
+
+def _mk_plans(rng, b, k):
+    """Random monotone step plans padded to k segments."""
+    starts = np.zeros((b, k), np.float32)
+    peaks = np.zeros((b, k), np.float32)
+    for i in range(b):
+        segs = 1 + rng.integers(0, k)
+        s, p = 0.0, rng.uniform(0.5, 4.0)
+        for j in range(k):
+            if j < segs:
+                starts[i, j], peaks[i, j] = s, p
+                s += rng.uniform(1.0, 20.0)
+                p += rng.uniform(0.0, 4.0)
+            else:  # pad: repeat last
+                starts[i, j], peaks[i, j] = starts[i, j - 1], peaks[i, j - 1]
+    return starts, peaks
+
+
+@given(
+    b=st.sampled_from([2, 8, 128]),
+    n=st.sampled_from([4, 64, 256]),
+    k=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_plan_wastage_hypothesis(b, n, k, seed):
+    rng = np.random.default_rng(seed)
+    starts, peaks = _mk_plans(rng, b, k)
+    used = _mk(rng, b, n, 0.0, 16.0)
+    m = _mask(rng, b, n)
+    dt = rng.uniform(0.1, 5.0, size=b).astype(np.float32)
+    got = np.asarray(ols.plan_wastage(starts, peaks, used, m, dt))
+    want = np.asarray(ref.plan_wastage_ref(starts, peaks, used, m, dt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_plan_wastage_matches_manual_step_function():
+    # Plan: 2 GB for [0, 10), then 5 GB. dt = 1, 20 samples of 1 GB used.
+    starts = np.asarray([[0.0, 10.0]], np.float32)
+    peaks = np.asarray([[2.0, 5.0]], np.float32)
+    used = np.ones((1, 20), np.float32)
+    m = np.ones((1, 20), np.float32)
+    dt = np.asarray([1.0], np.float32)
+    got = np.asarray(ols.plan_wastage(starts, peaks, used, m, dt))
+    # 10 samples waste 1, 10 samples waste 4.
+    np.testing.assert_allclose(got, [50.0], rtol=1e-6)
+
+
+def test_plan_wastage_underallocation_contributes_zero():
+    starts = np.asarray([[0.0]], np.float32)
+    peaks = np.asarray([[1.0]], np.float32)
+    used = np.full((1, 4), 3.0, np.float32)
+    m = np.ones((1, 4), np.float32)
+    dt = np.asarray([2.0], np.float32)
+    got = np.asarray(ols.plan_wastage(starts, peaks, used, m, dt))
+    np.testing.assert_allclose(got, [0.0])

@@ -1,0 +1,88 @@
+"""L2 model shape checks + AOT lowering smoke tests.
+
+Verifies that every model entry point produces the manifest shapes and
+that the HLO-text lowering used by aot.py succeeds for the shipped
+buckets (the same path `make artifacts` runs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ols, ref
+
+
+def test_fit_model_shapes():
+    b, n = 128, 32
+    x = jnp.zeros((b, n), jnp.float32)
+    (coef,) = model.fit_model(x, x, x)
+    assert coef.shape == (b, 2) and coef.dtype == jnp.float32
+
+
+def test_predict_model_shapes():
+    b = 128
+    coef = jnp.zeros((b, 2), jnp.float32)
+    v = jnp.zeros((b,), jnp.float32)
+    (yhat,) = model.predict_model(coef, v, v)
+    assert yhat.shape == (b,) and yhat.dtype == jnp.float32
+
+
+def test_fit_predict_fused_equals_two_step():
+    b, n = 128, 16
+    rng = np.random.default_rng(3)
+    x = rng.uniform(1, 100, size=(b, n)).astype(np.float32)
+    y = (2.0 * x + 5.0).astype(np.float32)
+    m = np.ones((b, n), np.float32)
+    xq = rng.uniform(1, 100, size=b).astype(np.float32)
+    scale = np.full(b, 1.1, np.float32)
+    yhat, coef = model.fit_predict_model(x, y, m, xq, scale)
+    (coef2,) = model.fit_model(x, y, m)
+    (yhat2,) = model.predict_model(coef2, xq, scale)
+    np.testing.assert_allclose(np.asarray(yhat), np.asarray(yhat2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(coef), np.asarray(coef2), rtol=1e-6)
+
+
+def test_wastage_model_shapes():
+    b, n = 128, 64
+    a = jnp.zeros((b, n), jnp.float32)
+    dt = jnp.zeros((b,), jnp.float32)
+    (w,) = model.wastage_model(a, a, a, dt)
+    assert w.shape == (b,)
+
+
+@pytest.mark.parametrize(
+    "fn,specs",
+    [
+        (model.fit_model, [(128, 16)] * 3),
+        (model.predict_model, [(128, 2), (128,), (128,)]),
+        (model.fit_predict_model, [(128, 16)] * 3 + [(128,), (128,)]),
+        (model.wastage_model, [(128, 16)] * 3 + [(128,)]),
+    ],
+)
+def test_hlo_text_lowering(fn, specs):
+    """Every entry point lowers to parseable non-empty HLO text."""
+    shaped = [jax.ShapeDtypeStruct(s, jnp.float32) for s in specs]
+    lowered = jax.jit(fn).lower(*shaped)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 200
+
+
+def test_jit_fit_matches_eager():
+    """jit-compiled path == eager path (what the artifact will compute)."""
+    b, n = 128, 8
+    rng = np.random.default_rng(11)
+    x = rng.uniform(0, 10, size=(b, n)).astype(np.float32)
+    y = rng.uniform(0, 10, size=(b, n)).astype(np.float32)
+    m = np.ones((b, n), np.float32)
+    (eager,) = model.fit_model(x, y, m)
+    (jitted,) = jax.jit(model.fit_model)(x, y, m)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(eager), np.asarray(ref.fit_ref(x, y, m)), rtol=1e-4, atol=1e-4
+    )

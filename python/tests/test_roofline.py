@@ -1,0 +1,30 @@
+"""Roofline estimator sanity checks."""
+
+from __future__ import annotations
+
+from compile import roofline
+from compile.kernels import ols
+
+
+def test_all_kernels_fit_vmem():
+    for e in roofline.estimates():
+        assert e.fits_vmem, f"{e.name} needs {e.vmem_per_step} B of VMEM"
+
+
+def test_bandwidth_bound():
+    # Every kernel sits far below a ~100 flop/byte ridge.
+    for e in roofline.estimates():
+        assert e.intensity < 10.0, f"{e.name} intensity {e.intensity}"
+
+
+def test_small_bucket_moves_less_data():
+    es = {e.name: e for e in roofline.estimates()}
+    big = es[f"fit b{ols.FIT_B} n{ols.FIT_N}"]
+    small = es[f"fit b{ols.FIT_B} n{ols.FIT_N_SMALL} (small)"]
+    assert small.hbm_bytes * 4 < big.hbm_bytes
+    assert small.est_runtime_s < big.est_runtime_s
+
+
+def test_runtime_estimates_subsecond():
+    for e in roofline.estimates():
+        assert 0.0 < e.est_runtime_s < 0.01, e.name

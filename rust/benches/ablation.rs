@@ -1,0 +1,103 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   1. Safety offsets (Section II-B): sweep the +10 % memory and −15 %
+//!      start-time offsets and measure total wastage.
+//!   2. Retry strategy (Section II-C): KS+ segment rescaling vs naive
+//!      peak doubling on the same plans.
+//!   3. Dynamic k (future work): ksplus-auto vs fixed k.
+//!
+//! Run: `cargo bench --bench ablation`.
+
+use ksplus::experiments::{evaluate_method, ExpConfig};
+use ksplus::metrics::WastageReport;
+use ksplus::predictor::ksplus::KsPlus;
+use ksplus::predictor::Predictor;
+use ksplus::segments::StepPlan;
+use ksplus::sim::run_all;
+use ksplus::trace::workflow::Workflow;
+use ksplus::trace::split_train_test;
+use ksplus::util::rng::Rng;
+
+/// Evaluate a custom-built predictor over the whole workflow.
+fn evaluate_custom<F>(_wf: &Workflow, trace: &ksplus::trace::WorkflowTrace, build: F) -> f64
+where
+    F: Fn() -> Box<dyn Predictor>,
+{
+    let mut report = WastageReport::default();
+    for (idx, t) in trace.tasks.iter().enumerate() {
+        let mut rng = Rng::new(1).fork(idx as u64 + 1);
+        let (train, test) = split_train_test(t, 0.5, &mut rng);
+        let mut pred = build();
+        pred.train(&train);
+        for o in run_all(pred.as_ref(), &test) {
+            report.add(&o);
+        }
+    }
+    report.total_wastage_gbs()
+}
+
+/// KS+ with the paper's retry replaced by naive doubling — isolates the
+/// contribution of the segment-rescaling strategy.
+struct KsPlusDoublingRetry(KsPlus);
+
+impl Predictor for KsPlusDoublingRetry {
+    fn name(&self) -> &'static str {
+        "ksplus-doubling-retry"
+    }
+    fn train(&mut self, h: &[ksplus::trace::Execution]) {
+        self.0.train(h);
+    }
+    fn plan(&self, input_mb: f64) -> StepPlan {
+        self.0.plan(input_mb)
+    }
+    fn on_failure(&self, prev: &StepPlan, _t: f64, _a: usize) -> StepPlan {
+        StepPlan::new(
+            prev.starts.clone(),
+            prev.peaks.iter().map(|p| (p * 2.0).min(self.0.capacity())).collect(),
+        )
+    }
+    fn capacity(&self) -> f64 {
+        self.0.capacity()
+    }
+}
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let wf = Workflow::eager();
+    let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+
+    println!("== ablation 1: safety offsets (eager, 50% train, k=4) ==");
+    println!("{:>10} {:>10} {:>14}", "mem", "time", "wastage GBs");
+    for mem in [1.0, 1.05, 1.10, 1.20] {
+        for time in [1.0, 0.85, 0.70] {
+            let w = evaluate_custom(&wf, &trace, || {
+                Box::new(KsPlus::new(4, 128.0).with_offsets(mem, time))
+            });
+            let mark = if (mem, time) == (1.10, 0.85) { "  <- paper" } else { "" };
+            println!("{mem:>10.2} {time:>10.2} {w:>14.0}{mark}");
+        }
+    }
+
+    println!("\n== ablation 2: retry strategy (eager, 50% train, k=4) ==");
+    let w_rescale = evaluate_custom(&wf, &trace, || Box::new(KsPlus::new(4, 128.0)));
+    let w_double = evaluate_custom(&wf, &trace, || {
+        Box::new(KsPlusDoublingRetry(KsPlus::new(4, 128.0)))
+    });
+    println!("  segment rescaling (paper): {w_rescale:>10.0} GBs");
+    println!("  naive peak doubling      : {w_double:>10.0} GBs");
+    println!(
+        "  rescaling saves          : {:>9.1}%",
+        (1.0 - w_rescale / w_double) * 100.0
+    );
+
+    println!("\n== ablation 3: dynamic k selection (future work) ==");
+    for (label, method, k) in [
+        ("fixed k=2", "ksplus", 2),
+        ("fixed k=4", "ksplus", 4),
+        ("fixed k=8", "ksplus", 8),
+        ("auto (CV)", "ksplus-auto", 4),
+    ] {
+        let r = evaluate_method(method, k, 128.0, &wf, &trace, 0.5, 1).unwrap();
+        println!("  {label:>10}: {:>10.0} GBs", r.total_wastage_gbs());
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench for the descriptive figures (1a, 1b, 2, 3, 4, 5): generation +
+//! analysis cost, and a stability check that the headline statistics
+//! stay near the paper's values.
+
+use ksplus::experiments::{figs, ExpConfig};
+use ksplus::util::bench::bench;
+
+fn main() {
+    let cfg = ExpConfig::default();
+    for name in ["fig1a", "fig1b", "fig2", "fig3", "fig4", "fig5"] {
+        bench(&format!("descriptive/{name}"), 1, 5, || {
+            ksplus::experiments::run(name, &cfg, None).unwrap();
+        });
+    }
+    // Stability: median bwa peak near the paper's 10.6 GB.
+    let out = figs::fig1a(&cfg).unwrap();
+    let peaks: Vec<f64> = out
+        .json
+        .get("fig1a_peaks_gb")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.as_f64().unwrap())
+        .collect();
+    let median = ksplus::util::stats::median(&peaks);
+    println!("fig1a median bwa peak: {median:.2} GB (paper ~10.6)");
+}

@@ -1,0 +1,32 @@
+//! Bench for Fig 6: end-to-end evaluation of every method on both
+//! workflows (one seed, 50 % train) — the paper's main figure, timed.
+//!
+//! Prints both the wastage rows (shape check against the paper) and the
+//! wall-clock cost per method evaluation.
+
+use ksplus::experiments::{evaluate_method, ExpConfig};
+use ksplus::predictor::paper_methods;
+use ksplus::trace::workflow::Workflow;
+use ksplus::util::bench::{bench, black_box};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    for wf in [Workflow::eager(), Workflow::sarek()] {
+        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+        println!("== fig6 bench: {} ==", wf.name);
+        for method in paper_methods() {
+            let mut wastage = 0.0;
+            let r = bench(&format!("{}/{method}", wf.name), 1, 5, || {
+                let rep =
+                    evaluate_method(method, cfg.k, cfg.capacity_gb, &wf, &trace, 0.5, 1)
+                        .unwrap();
+                wastage = black_box(rep.total_wastage_gbs());
+            });
+            println!(
+                "  -> {method}: {:.0} GBs wastage, {:.1} ms/eval",
+                wastage,
+                r.median_s * 1e3
+            );
+        }
+    }
+}

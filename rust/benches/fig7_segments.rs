@@ -1,0 +1,56 @@
+//! Bench for Fig 7: KS+ wastage across k = 2..10 (robustness sweep),
+//! plus the greedy-vs-optimal segmentation ablation from DESIGN.md.
+
+use ksplus::experiments::{evaluate_method, ExpConfig};
+use ksplus::segments::algorithm::{get_segments, optimal_segments};
+use ksplus::trace::workflow::Workflow;
+use ksplus::util::bench::{bench, black_box};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    // Part 1: the figure itself.
+    for wf in [Workflow::eager(), Workflow::sarek()] {
+        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+        println!("== fig7 bench: {} ==", wf.name);
+        for k in [2usize, 4, 6, 8, 10] {
+            let mut wastage = 0.0;
+            bench(&format!("{}/k={k}", wf.name), 0, 3, || {
+                let rep =
+                    evaluate_method("ksplus", k, cfg.capacity_gb, &wf, &trace, 0.5, 1)
+                        .unwrap();
+                wastage = black_box(rep.total_wastage_gbs());
+            });
+            println!("  -> k={k}: {wastage:.0} GBs");
+        }
+    }
+
+    // Part 2 (ablation): greedy Algorithm 1 vs exact DP — wastage gap
+    // and speed gap on real bwa series.
+    let wf = Workflow::eager();
+    let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+    let bwa = trace.task("bwa").unwrap();
+    let series: Vec<&Vec<f64>> =
+        bwa.executions.iter().take(30).map(|e| &e.samples).collect();
+    for k in [2usize, 4, 8] {
+        let mut greedy_err = 0.0;
+        let mut dp_err = 0.0;
+        let rg = bench(&format!("greedy/k={k}"), 1, 10, || {
+            greedy_err = series
+                .iter()
+                .map(|s| black_box(get_segments(s, k)).envelope_error(s))
+                .sum();
+        });
+        let rd = bench(&format!("dp-optimal/k={k}"), 1, 10, || {
+            dp_err = series
+                .iter()
+                .map(|s| black_box(optimal_segments(s, k)).envelope_error(s))
+                .sum();
+        });
+        println!(
+            "  -> k={k}: greedy error {greedy_err:.1} vs optimal {dp_err:.1} \
+             ({}x error, {:.0}x faster)",
+            if dp_err > 0.0 { format!("{:.3}", greedy_err / dp_err) } else { "inf".into() },
+            rd.median_s / rg.median_s
+        );
+    }
+}

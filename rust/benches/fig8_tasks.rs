@@ -1,0 +1,45 @@
+//! Bench for Fig 8: per-task wastage for the nine eager tasks, KS+ vs
+//! the strongest baseline (k-Segments Selective), one seed, 50 % train.
+
+use ksplus::experiments::{evaluate_method, ExpConfig};
+use ksplus::trace::workflow::Workflow;
+use ksplus::util::bench::bench;
+
+fn main() {
+    let cfg = ExpConfig::default();
+    let wf = Workflow::eager();
+    let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+
+    let mut ks = None;
+    let mut sel = None;
+    bench("fig8/ksplus-eval", 0, 3, || {
+        ks = Some(
+            evaluate_method("ksplus", cfg.k, cfg.capacity_gb, &wf, &trace, 0.5, 1).unwrap(),
+        );
+    });
+    bench("fig8/kseg-selective-eval", 0, 3, || {
+        sel = Some(
+            evaluate_method(
+                "ksegments-selective",
+                cfg.k,
+                cfg.capacity_gb,
+                &wf,
+                &trace,
+                0.5,
+                1,
+            )
+            .unwrap(),
+        );
+    });
+    let (ks, sel) = (ks.unwrap(), sel.unwrap());
+    println!("== fig8: per-task wastage, ksplus vs ksegments-selective ==");
+    for (task, agg) in &ks.per_task {
+        let base = sel.task_wastage(task);
+        println!(
+            "  {task:>16}: {:>9.0} vs {:>9.0} GBs ({:+.0}%)",
+            agg.wastage_gbs,
+            base,
+            (agg.wastage_gbs / base - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf):
+//!
+//!   L3 native  : segmentation, plan math, simulator step rate
+//!   L3 service : coordinator plan throughput/latency, native vs PJRT
+//!   L1/L2 PJRT : batched fit / predict / fused / wastage artifact cost
+//!
+//! Run: `cargo bench --bench hotpath` (artifacts required for the PJRT
+//! section; it is skipped with a notice when absent).
+
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::BackendSpec;
+use ksplus::predictor::regression::{FitEngine, NativeFit};
+use ksplus::predictor::by_name;
+use ksplus::runtime::{default_artifacts_dir, Runtime};
+use ksplus::segments::algorithm::get_segments;
+use ksplus::sim::run_task;
+use ksplus::trace::workflow::Workflow;
+use ksplus::util::bench::{bench, black_box};
+use ksplus::util::rng::Rng;
+
+fn main() {
+    let wf = Workflow::eager();
+    let trace = wf.generate(42, 200);
+    let bwa = trace.task("bwa").unwrap().clone();
+
+    // ---- L3 native hot paths -------------------------------------------
+    println!("== L3 native ==");
+    let series: Vec<&Vec<f64>> = bwa.executions.iter().map(|e| &e.samples).collect();
+    let total_samples: usize = series.iter().map(|s| s.len()).sum();
+    let r = bench("segmentation/k4/60-traces", 3, 20, || {
+        for s in &series {
+            black_box(get_segments(s, 4));
+        }
+    });
+    println!("  -> {}", r.throughput_line(total_samples as f64, "samples"));
+
+    let mut pred = by_name("ksplus", 4, 128.0).unwrap();
+    pred.train(&bwa.executions);
+    let r = bench("ksplus/plan", 10, 50, || {
+        for e in bwa.executions.iter().take(32) {
+            black_box(pred.plan(e.input_mb));
+        }
+    });
+    println!("  -> {}", r.throughput_line(32.0, "plans"));
+
+    let r = bench("sim/run_task/60-traces", 3, 20, || {
+        for e in &bwa.executions {
+            black_box(run_task(pred.as_ref(), e, 10));
+        }
+    });
+    println!("  -> {}", r.throughput_line(total_samples as f64, "trace-samples"));
+
+    let r = bench("native-ols/512rows-x-128obs", 3, 20, || {
+        let mut rng = Rng::new(1);
+        let rows: Vec<(Vec<f64>, Vec<f64>)> = (0..512)
+            .map(|_| {
+                let xs: Vec<f64> = (0..128).map(|_| rng.f64()).collect();
+                let ys: Vec<f64> = (0..128).map(|_| rng.f64()).collect();
+                (xs, ys)
+            })
+            .collect();
+        black_box(NativeFit.fit_batch(&rows));
+    });
+    println!("  -> {}", r.throughput_line(512.0, "fits"));
+
+    // ---- coordinator service (native backend) ---------------------------
+    println!("== L3 coordinator (native backend) ==");
+    coordinator_bench(BackendSpec::Native, &trace);
+
+    // ---- PJRT artifacts ---------------------------------------------------
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP PJRT section: artifacts not built (make artifacts)");
+        return;
+    }
+    println!("== L1/L2 PJRT artifacts ==");
+    let rt = Runtime::load(&dir).expect("runtime");
+    let mut rng = Rng::new(2);
+    let b = rt.manifest().fit_b;
+    let rows: Vec<(Vec<f64>, Vec<f64>)> = (0..b)
+        .map(|_| {
+            let xs: Vec<f64> = (0..128).map(|_| rng.uniform(0.0, 1000.0)).collect();
+            let ys: Vec<f64> = xs.iter().map(|x| 0.01 * x + 1.0).collect();
+            (xs, ys)
+        })
+        .collect();
+    let r = bench(&format!("pjrt/fit/{b}x128"), 3, 20, || {
+        black_box(rt.fit_batch(&rows).unwrap());
+    });
+    println!("  -> {}", r.throughput_line(b as f64, "fits"));
+
+    // Typical training history (<= 64 obs) hits the small bucket.
+    let rows_small: Vec<(Vec<f64>, Vec<f64>)> = rows
+        .iter()
+        .map(|(xs, ys)| (xs[..40].to_vec(), ys[..40].to_vec()))
+        .collect();
+    let r = bench(&format!("pjrt/fit/{b}x40-small-bucket"), 3, 20, || {
+        black_box(rt.fit_batch(&rows_small).unwrap());
+    });
+    println!("  -> {}", r.throughput_line(b as f64, "fits"));
+
+    let models = rt.fit_batch(&rows).unwrap();
+    let pb = rt.manifest().predict_b;
+    let models_big: Vec<_> = (0..pb).map(|i| models[i % models.len()]).collect();
+    let xq: Vec<f64> = (0..pb).map(|i| i as f64).collect();
+    let scale = vec![1.1; pb];
+    let r = bench(&format!("pjrt/predict/{pb}"), 3, 50, || {
+        black_box(rt.predict_batch(&models_big, &xq, &scale).unwrap());
+    });
+    println!("  -> {}", r.throughput_line(pb as f64, "predictions"));
+
+    let xq_b: Vec<f64> = (0..b).map(|i| i as f64).collect();
+    let scale_b = vec![1.1; b];
+    bench(&format!("pjrt/fit_predict-fused/{b}x128"), 3, 20, || {
+        black_box(rt.fit_predict(&rows, &xq_b, &scale_b).unwrap());
+    });
+    bench(&format!("pjrt/fit+predict-two-step/{b}x128"), 3, 20, || {
+        let m = rt.fit_batch(&rows).unwrap();
+        black_box(rt.predict_batch(&m, &xq_b, &scale_b).unwrap());
+    });
+
+    let wrows: Vec<(Vec<f64>, Vec<f64>, f64)> = bwa
+        .executions
+        .iter()
+        .map(|e| {
+            let alloc = vec![e.peak(); e.samples.len()];
+            (alloc, e.samples.clone(), e.dt)
+        })
+        .collect();
+    let n_samples: usize = wrows.iter().map(|r| r.0.len()).sum();
+    let r = bench("pjrt/wastage/60-traces", 3, 20, || {
+        black_box(rt.wastage_batch(&wrows).unwrap());
+    });
+    println!("  -> {}", r.throughput_line(n_samples as f64, "samples"));
+
+    // ---- coordinator service (PJRT backend) -----------------------------
+    println!("== L3 coordinator (PJRT backend) ==");
+    coordinator_bench(BackendSpec::Pjrt(Some(dir)), &trace);
+}
+
+fn coordinator_bench(spec: BackendSpec, trace: &ksplus::trace::WorkflowTrace) {
+    let coord = Coordinator::start(CoordinatorConfig::default(), spec);
+    let client = coord.client();
+    for t in &trace.tasks {
+        client.train(&t.task, t.executions.clone());
+    }
+    // Closed-loop from 8 threads to exercise the batcher.
+    let n_per_thread = 200;
+    let threads = 8;
+    let r = bench("coordinator/plan-closed-loop", 1, 5, || {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let c = coord.client();
+            let tasks: Vec<(String, f64)> = trace
+                .tasks
+                .iter()
+                .map(|tt| (tt.task.clone(), tt.executions[t % tt.executions.len()].input_mb))
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..n_per_thread {
+                    let (task, input) = &tasks[i % tasks.len()];
+                    black_box(c.plan(task, *input));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!(
+        "  -> {}",
+        r.throughput_line((n_per_thread * threads) as f64, "plans")
+    );
+    let stats = client.stats();
+    println!(
+        "  -> mean batch {:.1}, p50 latency {:.0} us, p99 {:.0} us",
+        stats.mean_batch_size(),
+        stats.latency_percentile_us(50.0),
+        stats.latency_percentile_us(99.0)
+    );
+}

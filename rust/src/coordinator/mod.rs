@@ -1,0 +1,289 @@
+//! Online memory-prediction service: the deployment surface a workflow
+//! engine (Nextflow/Airflow/Snakemake) would call before submitting each
+//! task to the resource manager.
+//!
+//! Architecture (std threads + channels; see DESIGN.md Section 5b):
+//!
+//! ```text
+//!   clients ──mpsc──▶ worker thread (owns model store + backend)
+//!                        ├─ Train    : batched OLS fit (2k rows/task)
+//!                        ├─ Plan     : dynamic batcher — collects up to
+//!                        │             `batch_max` requests or
+//!                        │             `batch_delay`, then ONE batched
+//!                        │             predict over all task×segment
+//!                        │             models (PJRT artifact exec)
+//!                        └─ Failure  : KS+ segment-rescaling retry
+//! ```
+//!
+//! The batcher is the L3 hot path: every flush is a single PJRT
+//! execution of `predict_b{B}.hlo.txt` covering every queued request's
+//! 2k regression evaluations. The Python stack is never invoked.
+
+pub mod server;
+pub mod service;
+
+use std::rc::Rc;
+
+use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
+use crate::predictor::regression::{FitEngine, LinModel, NativeFit};
+use crate::runtime::Runtime;
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+
+/// Numeric backend for the coordinator. PJRT handles are thread-affine
+/// (`Rc`): the service constructs its backend *inside* the worker thread
+/// from a `BackendSpec`.
+#[derive(Clone)]
+pub enum Backend {
+    /// In-process closed form (tests, environments without artifacts).
+    Native,
+    /// AOT Pallas kernels through PJRT (production path).
+    Pjrt(Rc<Runtime>),
+}
+
+/// Send-able description of a backend, resolved on the worker thread.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    Native,
+    /// Load artifacts from this directory (or the default location).
+    Pjrt(Option<std::path::PathBuf>),
+}
+
+impl BackendSpec {
+    pub fn build(&self) -> anyhow::Result<Backend> {
+        match self {
+            BackendSpec::Native => Ok(Backend::Native),
+            BackendSpec::Pjrt(dir) => {
+                let dir = dir
+                    .clone()
+                    .unwrap_or_else(crate::runtime::default_artifacts_dir);
+                Ok(Backend::Pjrt(Rc::new(Runtime::load(&dir)?)))
+            }
+        }
+    }
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    fn fit(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+        match self {
+            Backend::Native => NativeFit.fit_batch(rows),
+            Backend::Pjrt(rt) => rt.fit_batch(rows).expect("PJRT fit"),
+        }
+    }
+
+    fn predict(&self, models: &[LinModel], xq: &[f64], scale: &[f64]) -> Vec<f64> {
+        match self {
+            Backend::Native => models
+                .iter()
+                .zip(xq.iter().zip(scale))
+                .map(|(m, (x, s))| (m.predict(*x) * s).max(0.0))
+                .collect(),
+            Backend::Pjrt(rt) => rt.predict_batch(models, xq, scale).expect("PJRT predict"),
+        }
+    }
+}
+
+/// Per-task fitted segment models.
+#[derive(Debug, Clone)]
+pub struct TaskModels {
+    pub start_models: Vec<LinModel>,
+    pub peak_models: Vec<LinModel>,
+    /// Highest peak seen in training (fallback allocation).
+    pub fallback_peak: f64,
+}
+
+/// Model store + pure prediction logic, shared by the threaded service
+/// and the batch experiment path.
+pub struct ModelStore {
+    pub k: usize,
+    pub capacity_gb: f64,
+    backend: Backend,
+    models: std::collections::BTreeMap<String, TaskModels>,
+}
+
+impl ModelStore {
+    pub fn new(k: usize, capacity_gb: f64, backend: Backend) -> Self {
+        ModelStore { k, capacity_gb, backend, models: Default::default() }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn has_task(&self, task: &str) -> bool {
+        self.models.contains_key(task)
+    }
+
+    pub fn tasks(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Train (or retrain) one task from its history: one batched fit of
+    /// 2k regression rows.
+    pub fn train(&mut self, task: &str, history: &[Execution]) {
+        if history.is_empty() {
+            return;
+        }
+        let rows = KsPlus::regression_rows(self.k, history);
+        let fitted = self.backend.fit(&rows);
+        let fallback_peak = history.iter().map(|e| e.peak()).fold(0.0, f64::max).max(0.1);
+        self.models.insert(
+            task.to_string(),
+            TaskModels {
+                start_models: fitted[..self.k].to_vec(),
+                peak_models: fitted[self.k..].to_vec(),
+                fallback_peak,
+            },
+        );
+    }
+
+    /// Plan a batch of requests with ONE backend predict call.
+    /// Unknown tasks get a capacity-safe flat fallback.
+    pub fn plan_batch(&self, requests: &[(String, f64)]) -> Vec<StepPlan> {
+        // Gather rows for known tasks.
+        let mut models = Vec::with_capacity(requests.len() * 2 * self.k);
+        let mut xq = Vec::with_capacity(models.capacity());
+        let mut scale = Vec::with_capacity(models.capacity());
+        let mut known = Vec::with_capacity(requests.len());
+        for (task, input) in requests {
+            match self.models.get(task) {
+                None => known.push(false),
+                Some(tm) => {
+                    known.push(true);
+                    for m in &tm.start_models {
+                        models.push(*m);
+                        xq.push(*input);
+                        scale.push(TIME_UNDERPREDICT);
+                    }
+                    for m in &tm.peak_models {
+                        models.push(*m);
+                        xq.push(*input);
+                        scale.push(MEM_OVERPREDICT);
+                    }
+                }
+            }
+        }
+        let flat = self.backend.predict(&models, &xq, &scale);
+        let mut out = Vec::with_capacity(requests.len());
+        let mut off = 0usize;
+        for (i, (task, _)) in requests.iter().enumerate() {
+            if !known[i] {
+                let peak = self
+                    .models
+                    .get(task)
+                    .map(|m| m.fallback_peak)
+                    .unwrap_or(self.capacity_gb / 4.0);
+                out.push(StepPlan::flat(peak.min(self.capacity_gb)));
+                continue;
+            }
+            let starts = &flat[off..off + self.k];
+            let peaks = &flat[off + self.k..off + 2 * self.k];
+            off += 2 * self.k;
+            // Offsets already applied via `scale`; pass identity here.
+            out.push(KsPlus::assemble_plan(starts, peaks, 1.0, 1.0, self.capacity_gb));
+        }
+        out
+    }
+
+    /// KS+ retry strategy (Section II-C) for a reported OOM.
+    pub fn on_failure(&self, prev: &StepPlan, fail_time: f64) -> StepPlan {
+        // Stateless plan math: delegate to a throwaway KsPlus with our
+        // capacity. (The strategy uses no trained state.)
+        use crate::predictor::Predictor;
+        KsPlus::new(self.k, self.capacity_gb).on_failure(prev, fail_time, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::Predictor;
+    use crate::util::rng::Rng;
+
+    fn two_phase_exec(input: f64, rng: &mut Rng) -> Execution {
+        let d1 = ((input * 0.01) as usize).max(2);
+        let d2 = ((input * 0.003) as usize).max(1);
+        let mut s = vec![input * 0.0005; d1];
+        s.extend(vec![input * 0.001; d2]);
+        for v in s.iter_mut() {
+            *v *= 1.0 - 0.01 * rng.f64();
+        }
+        Execution::new("bwa", input, 1.0, s)
+    }
+
+    #[test]
+    fn store_matches_ksplus_predictor() {
+        let mut rng = Rng::new(1);
+        let hist: Vec<Execution> =
+            (0..30).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        let mut pred = KsPlus::new(2, 128.0);
+        pred.train(&hist);
+        let plans = store.plan_batch(&[("bwa".into(), 8000.0)]);
+        let want = pred.plan(8000.0);
+        assert_eq!(plans[0].k(), want.k());
+        for i in 0..want.k() {
+            assert!((plans[0].starts[i] - want.starts[i]).abs() < 1e-9, "{plans:?} vs {want:?}");
+            assert!((plans[0].peaks[i] - want.peaks[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unknown_task_gets_fallback() {
+        let store = ModelStore::new(2, 128.0, Backend::Native);
+        let plans = store.plan_batch(&[("mystery".into(), 100.0)]);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].k(), 1);
+        assert!(plans[0].peaks[0] <= 128.0);
+    }
+
+    #[test]
+    fn batch_of_mixed_tasks() {
+        let mut rng = Rng::new(2);
+        let hist: Vec<Execution> =
+            (0..20).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        let reqs: Vec<(String, f64)> = vec![
+            ("bwa".into(), 4000.0),
+            ("mystery".into(), 1.0),
+            ("bwa".into(), 8000.0),
+        ];
+        let plans = store.plan_batch(&reqs);
+        assert_eq!(plans.len(), 3);
+        assert!(plans[0].peaks.last() < plans[2].peaks.last());
+        assert!(plans.iter().all(|p| p.is_valid()));
+    }
+
+    #[test]
+    fn failure_rescaling_delegates_to_ksplus() {
+        let store = ModelStore::new(2, 128.0, Backend::Native);
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        let next = store.on_failure(&prev, 60.0);
+        assert_eq!(next.starts, vec![0.0, 60.0]);
+    }
+
+    #[test]
+    fn retrain_replaces_models() {
+        let mut rng = Rng::new(3);
+        let h1: Vec<Execution> =
+            (0..10).map(|_| two_phase_exec(3000.0, &mut rng)).collect();
+        let h2: Vec<Execution> =
+            (0..10).map(|_| two_phase_exec(9000.0, &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.train("bwa", &h1);
+        let p1 = store.plan_batch(&[("bwa".into(), 5000.0)]);
+        store.train("bwa", &h2);
+        let p2 = store.plan_batch(&[("bwa".into(), 5000.0)]);
+        // Different training data -> different (still valid) plans.
+        assert!(p1[0].is_valid() && p2[0].is_valid());
+    }
+}

@@ -1,0 +1,316 @@
+//! Wire protocol server: newline-delimited JSON over TCP, the interface
+//! a workflow engine (Nextflow plugin, Airflow operator) calls.
+//!
+//! Requests (one JSON object per line):
+//!   {"op":"train","task":"bwa","history":[{"input_mb":..,"dt":..,"samples":[..]},..]}
+//!   {"op":"plan","task":"bwa","input_mb":8000.0}
+//!   {"op":"failure","plan":{"starts":[..],"peaks":[..]},"fail_time":624.0}
+//!   {"op":"stats"}
+//!
+//! Responses:
+//!   {"ok":true, ...}            on success (fields depend on op)
+//!   {"ok":false,"error":"..."}  on failure
+//!
+//! One OS thread per connection; every connection shares the single
+//! coordinator worker (and thus its dynamic batcher), so concurrent
+//! clients' plan requests are batched into single PJRT executions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::service::Client;
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+/// A running TCP front end over a coordinator `Client`.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for ephemeral) and serve until `stop()`.
+    pub fn start(addr: &str, client: Client) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("ksplus-server-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let c = client.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, c);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting new connections (existing ones finish naturally).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_request(&line, &client) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("ok", false.into()), ("error", format!("{e:#}").into())]),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+    Ok(())
+}
+
+fn plan_to_json(p: &StepPlan) -> Json {
+    Json::obj(vec![
+        ("starts", Json::arr_f64(&p.starts)),
+        ("peaks", Json::arr_f64(&p.peaks)),
+    ])
+}
+
+fn plan_from_json(j: &Json) -> Result<StepPlan> {
+    let get_vec = |key: &str| -> Result<Vec<f64>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .with_context(|| format!("plan missing '{key}'"))?
+            .iter()
+            .map(|v| v.as_f64().context("non-number in plan"))
+            .collect()
+    };
+    let starts = get_vec("starts")?;
+    let peaks = get_vec("peaks")?;
+    anyhow::ensure!(!starts.is_empty() && starts.len() == peaks.len(), "malformed plan");
+    Ok(StepPlan::new(starts, peaks))
+}
+
+fn execution_from_json(task: &str, j: &Json) -> Result<Execution> {
+    let input_mb = j.get("input_mb").and_then(Json::as_f64).context("input_mb")?;
+    let dt = j.get("dt").and_then(Json::as_f64).context("dt")?;
+    anyhow::ensure!(dt > 0.0, "dt must be positive");
+    let samples: Result<Vec<f64>> = j
+        .get("samples")
+        .and_then(Json::as_arr)
+        .context("samples")?
+        .iter()
+        .map(|v| v.as_f64().context("non-number sample"))
+        .collect();
+    Ok(Execution::new(task, input_mb, dt, samples?))
+}
+
+fn handle_request(line: &str, client: &Client) -> Result<Json> {
+    let req = Json::parse(line).context("invalid JSON")?;
+    let op = req.get("op").and_then(Json::as_str).context("missing 'op'")?;
+    match op {
+        "train" => {
+            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
+            let history: Result<Vec<Execution>> = req
+                .get("history")
+                .and_then(Json::as_arr)
+                .context("missing 'history'")?
+                .iter()
+                .map(|j| execution_from_json(task, j))
+                .collect();
+            let history = history?;
+            anyhow::ensure!(!history.is_empty(), "empty history");
+            let n = history.len();
+            client.train(task, history);
+            Ok(Json::obj(vec![
+                ("ok", true.into()),
+                ("trained", task.into()),
+                ("executions", n.into()),
+            ]))
+        }
+        "plan" => {
+            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
+            let input = req.get("input_mb").and_then(Json::as_f64).context("missing 'input_mb'")?;
+            let plan = client.plan(task, input);
+            Ok(Json::obj(vec![("ok", true.into()), ("plan", plan_to_json(&plan))]))
+        }
+        "failure" => {
+            let prev = plan_from_json(req.get("plan").context("missing 'plan'")?)?;
+            let t = req.get("fail_time").and_then(Json::as_f64).context("missing 'fail_time'")?;
+            let plan = client.report_failure(&prev, t);
+            Ok(Json::obj(vec![("ok", true.into()), ("plan", plan_to_json(&plan))]))
+        }
+        "stats" => {
+            let s = client.stats();
+            Ok(Json::obj(vec![
+                ("ok", true.into()),
+                ("requests", (s.requests as usize).into()),
+                ("batches", (s.batches as usize).into()),
+                ("failures_handled", (s.failures_handled as usize).into()),
+                ("tasks_trained", (s.tasks_trained as usize).into()),
+                ("latency_p50_us", s.latency_percentile_us(50.0).into()),
+                ("latency_p99_us", s.latency_percentile_us(99.0).into()),
+            ]))
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{Coordinator, CoordinatorConfig};
+    use crate::coordinator::BackendSpec;
+    use crate::util::rng::Rng;
+
+    fn start() -> (Coordinator, Server) {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        );
+        let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
+        (coord, server)
+    }
+
+    fn roundtrip(stream: &mut TcpStream, req: &str) -> Json {
+        writeln!(stream, "{req}").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    }
+
+    fn train_req() -> String {
+        let mut rng = Rng::new(1);
+        let mut hist = Vec::new();
+        for _ in 0..12 {
+            let input = rng.uniform(2000.0, 10000.0);
+            let n = ((input * 0.005) as usize).max(3);
+            let samples: Vec<String> = (0..n)
+                .map(|i| {
+                    let lvl = if i < n / 2 { input * 0.0004 } else { input * 0.0009 };
+                    format!("{:.4}", lvl)
+                })
+                .collect();
+            hist.push(format!(
+                r#"{{"input_mb":{input:.1},"dt":1.0,"samples":[{}]}}"#,
+                samples.join(",")
+            ));
+        }
+        format!(r#"{{"op":"train","task":"bwa","history":[{}]}}"#, hist.join(","))
+    }
+
+    #[test]
+    fn train_plan_failure_roundtrip() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, &train_req());
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("executions").and_then(Json::as_usize), Some(12));
+
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":6000}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let plan = r.get("plan").unwrap();
+        let starts = plan.get("starts").unwrap().as_arr().unwrap();
+        assert!(!starts.is_empty());
+
+        let fail = format!(
+            r#"{{"op":"failure","plan":{plan},"fail_time":5.0}}"#,
+            plan = plan
+        );
+        let r = roundtrip(&mut s, &fail);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("tasks_trained").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn malformed_requests_get_errors_not_disconnects() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        for bad in [
+            "not json",
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"plan"}"#,
+            r#"{"op":"train","task":"x","history":[]}"#,
+            r#"{"op":"failure","plan":{"starts":[],"peaks":[]},"fail_time":1}"#,
+        ] {
+            let r = roundtrip(&mut s, bad);
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "req: {bad}");
+            assert!(r.get("error").is_some());
+        }
+        // Connection still usable afterwards.
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn concurrent_connections_share_batcher() {
+        let (coord, server) = start();
+        let mut s0 = TcpStream::connect(server.addr()).unwrap();
+        roundtrip(&mut s0, &train_req());
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let addr = server.addr();
+            handles.push(std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                for j in 0..10 {
+                    let r = roundtrip(
+                        &mut s,
+                        &format!(
+                            r#"{{"op":"plan","task":"bwa","input_mb":{}}}"#,
+                            3000 + i * 100 + j
+                        ),
+                    );
+                    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = coord.client().stats();
+        assert_eq!(stats.requests, 80);
+        assert!(stats.batches <= 80);
+    }
+
+    #[test]
+    fn stop_unblocks_accept() {
+        let (_coord, mut server) = start();
+        server.stop(); // must not hang
+    }
+}

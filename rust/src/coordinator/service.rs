@@ -1,0 +1,412 @@
+//! Threaded coordinator service: dynamic batcher + request router over
+//! the `ModelStore`.
+//!
+//! One worker thread owns the store and the numeric backend. Plan
+//! requests are coalesced — a flush happens when `batch_max` requests
+//! are pending or the oldest has waited `batch_delay` — so each flush
+//! costs one batched predict regardless of the number of clients.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{BackendSpec, ModelStore};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Segments per task model.
+    pub k: usize,
+    pub capacity_gb: f64,
+    /// Flush the batcher at this many pending plan requests.
+    pub batch_max: usize,
+    /// ... or when the oldest pending request is this old.
+    pub batch_delay: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            k: 4,
+            capacity_gb: 128.0,
+            batch_max: 64,
+            batch_delay: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Service-side counters, exposed via `Client::stats`.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub failures_handled: u64,
+    pub tasks_trained: u64,
+    /// Plan-request latencies, microseconds (enqueue -> response send).
+    pub latencies_us: Vec<f64>,
+}
+
+impl ServiceStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.latencies_us, p)
+    }
+}
+
+enum Msg {
+    Train {
+        task: String,
+        history: Vec<Execution>,
+        done: mpsc::SyncSender<()>,
+    },
+    Plan {
+        task: String,
+        input_mb: f64,
+        enqueued: Instant,
+        resp: mpsc::SyncSender<StepPlan>,
+    },
+    Failure {
+        prev: StepPlan,
+        fail_time: f64,
+        resp: mpsc::SyncSender<StepPlan>,
+    },
+    Stats {
+        resp: mpsc::SyncSender<ServiceStats>,
+    },
+    Shutdown,
+}
+
+/// Handle to a running coordinator; cheap to clone via `client()`.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Client endpoint (clonable, thread-safe sender).
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+struct Pending {
+    task: String,
+    input_mb: f64,
+    enqueued: Instant,
+    resp: mpsc::SyncSender<StepPlan>,
+}
+
+impl Coordinator {
+    /// Spawn the worker. The backend is *built inside* the worker thread
+    /// because PJRT handles are thread-affine.
+    pub fn start(cfg: CoordinatorConfig, spec: BackendSpec) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("ksplus-coordinator".into())
+            .spawn(move || {
+                let backend = spec.build().expect("backend construction failed");
+                worker(cfg, backend, rx)
+            })
+            .expect("spawn coordinator");
+        Coordinator { tx, handle: Some(handle) }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Client {
+    /// Fit (or refit) the task's segment models; blocks until stored.
+    pub fn train(&self, task: &str, history: Vec<Execution>) {
+        let (done_tx, done_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Train { task: task.to_string(), history, done: done_tx })
+            .expect("coordinator gone");
+        let _ = done_rx.recv();
+    }
+
+    /// Request an allocation plan; blocks until the batcher flushes.
+    pub fn plan(&self, task: &str, input_mb: f64) -> StepPlan {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Plan {
+                task: task.to_string(),
+                input_mb,
+                enqueued: Instant::now(),
+                resp: resp_tx,
+            })
+            .expect("coordinator gone");
+        resp_rx.recv().expect("coordinator dropped request")
+    }
+
+    /// Report an OOM; returns the rescaled retry plan.
+    pub fn report_failure(&self, prev: &StepPlan, fail_time: f64) -> StepPlan {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Failure { prev: prev.clone(), fail_time, resp: resp_tx })
+            .expect("coordinator gone");
+        resp_rx.recv().expect("coordinator dropped request")
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::Stats { resp: resp_tx }).expect("coordinator gone");
+        resp_rx.recv().expect("coordinator dropped request")
+    }
+}
+
+fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc::Receiver<Msg>) {
+    let mut store = ModelStore::new(cfg.k, cfg.capacity_gb, backend);
+    let mut stats = ServiceStats::default();
+    let mut pending: Vec<Pending> = Vec::new();
+
+    let flush = |pending: &mut Vec<Pending>, store: &ModelStore, stats: &mut ServiceStats| {
+        if pending.is_empty() {
+            return;
+        }
+        let reqs: Vec<(String, f64)> =
+            pending.iter().map(|p| (p.task.clone(), p.input_mb)).collect();
+        let plans = store.plan_batch(&reqs);
+        stats.batches += 1;
+        for (p, plan) in pending.drain(..).zip(plans) {
+            stats.requests += 1;
+            stats.latencies_us.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
+            let _ = p.resp.send(plan);
+        }
+    };
+
+    // Continuous ("drain-then-flush") batching: block for the first
+    // message, then greedily drain whatever else is already queued —
+    // requests that arrived while the previous batch was being served
+    // coalesce naturally, and an idle service answers in microseconds
+    // instead of waiting out a fixed delay. `batch_delay` survives only
+    // as the bound on one final linger poll used when a single request
+    // is pending (cheap insurance for lock-step submitters).
+    'outer: loop {
+        let mut next = match rx.recv() {
+            Ok(m) => Some(m),
+            Err(_) => break,
+        };
+        // Handle one message; Plan messages start a drain cycle.
+        while let Some(msg) = next.take() {
+            match msg {
+                Msg::Plan { task, input_mb, enqueued, resp } => {
+                    pending.push(Pending { task, input_mb, enqueued, resp });
+                    // Drain everything already enqueued.
+                    while pending.len() < cfg.batch_max {
+                        match rx.try_recv() {
+                            Ok(Msg::Plan { task, input_mb, enqueued, resp }) => {
+                                pending.push(Pending { task, input_mb, enqueued, resp });
+                            }
+                            Ok(other) => {
+                                next = Some(other);
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                flush(&mut pending, &store, &mut stats);
+                                break 'outer;
+                            }
+                        }
+                    }
+                    // Linger once for stragglers when the batch is tiny.
+                    if next.is_none() && pending.len() == 1 && !cfg.batch_delay.is_zero() {
+                        if let Ok(m) = rx.recv_timeout(cfg.batch_delay.min(
+                            Duration::from_micros(100),
+                        )) {
+                            next = Some(m);
+                            if let Some(Msg::Plan { task, input_mb, enqueued, resp }) =
+                                next.take_if(|m| matches!(m, Msg::Plan { .. }))
+                            {
+                                pending.push(Pending { task, input_mb, enqueued, resp });
+                            }
+                        }
+                    }
+                    flush(&mut pending, &store, &mut stats);
+                }
+                Msg::Train { task, history, done } => {
+                    // Train implies a model swap: flush first so
+                    // in-flight requests see a consistent store.
+                    flush(&mut pending, &store, &mut stats);
+                    store.train(&task, &history);
+                    stats.tasks_trained += 1;
+                    let _ = done.send(());
+                }
+                Msg::Failure { prev, fail_time, resp } => {
+                    stats.failures_handled += 1;
+                    let _ = resp.send(store.on_failure(&prev, fail_time));
+                }
+                Msg::Stats { resp } => {
+                    let _ = resp.send(stats.clone());
+                }
+                Msg::Shutdown => {
+                    flush(&mut pending, &store, &mut stats);
+                    break 'outer;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::ksplus::KsPlus;
+    use crate::predictor::Predictor;
+    use crate::util::rng::Rng;
+
+    fn two_phase_exec(input: f64, rng: &mut Rng) -> Execution {
+        let d1 = ((input * 0.01) as usize).max(2);
+        let d2 = ((input * 0.003) as usize).max(1);
+        let mut s = vec![input * 0.0005; d1];
+        s.extend(vec![input * 0.001; d2]);
+        for v in s.iter_mut() {
+            *v *= 1.0 - 0.01 * rng.f64();
+        }
+        Execution::new("bwa", input, 1.0, s)
+    }
+
+    fn history(seed: u64, n: usize) -> Vec<Execution> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect()
+    }
+
+    #[test]
+    fn end_to_end_plan_matches_offline_predictor() {
+        let hist = history(1, 30);
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        );
+        let client = coord.client();
+        client.train("bwa", hist.clone());
+        let got = client.plan("bwa", 8000.0);
+        let mut want = KsPlus::new(2, 128.0);
+        want.train(&hist);
+        let want = want.plan(8000.0);
+        assert_eq!(got.k(), want.k());
+        for i in 0..got.k() {
+            assert!((got.starts[i] - want.starts[i]).abs() < 1e-9);
+            assert!((got.peaks[i] - want.peaks[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_get_batched() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                k: 2,
+                batch_max: 16,
+                batch_delay: Duration::from_millis(4),
+                ..Default::default()
+            },
+            BackendSpec::Native,
+        );
+        let client = coord.client();
+        client.train("bwa", history(2, 20));
+        let mut handles = Vec::new();
+        for i in 0..32 {
+            let c = coord.client();
+            handles.push(std::thread::spawn(move || {
+                c.plan("bwa", 3000.0 + i as f64 * 100.0)
+            }));
+        }
+        let plans: Vec<StepPlan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(plans.len(), 32);
+        assert!(plans.iter().all(|p| p.is_valid()));
+        let stats = client.stats();
+        assert_eq!(stats.requests, 32);
+        assert!(stats.batches < 32, "no batching happened: {}", stats.batches);
+        assert!(stats.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn failure_roundtrip() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        );
+        let client = coord.client();
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        let retry = client.report_failure(&prev, 60.0);
+        assert_eq!(retry.starts, vec![0.0, 60.0]);
+        assert_eq!(client.stats().failures_handled, 1);
+    }
+
+    #[test]
+    fn unknown_task_served_with_fallback() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+        let plan = coord.client().plan("never-trained", 123.0);
+        assert!(plan.is_valid());
+    }
+
+    #[test]
+    fn stats_latency_recorded() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { batch_delay: Duration::from_micros(200), ..Default::default() },
+            BackendSpec::Native,
+        );
+        let client = coord.client();
+        client.train("bwa", history(3, 10));
+        for _ in 0..5 {
+            client.plan("bwa", 4000.0);
+        }
+        let stats = client.stats();
+        assert_eq!(stats.latencies_us.len(), 5);
+        assert!(stats.latency_percentile_us(50.0) > 0.0);
+    }
+
+    #[test]
+    fn pjrt_backend_end_to_end() {
+        // The production path: coordinator worker owns a PJRT runtime
+        // built from the AOT artifacts; plans must match the native
+        // backend to f32 precision.
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let hist = history(7, 25);
+        let cfg = CoordinatorConfig { k: 3, ..Default::default() };
+        let pjrt = Coordinator::start(cfg.clone(), BackendSpec::Pjrt(Some(dir)));
+        let native = Coordinator::start(cfg, BackendSpec::Native);
+        pjrt.client().train("bwa", hist.clone());
+        native.client().train("bwa", hist);
+        for input in [2500.0, 6000.0, 11000.0] {
+            let a = pjrt.client().plan("bwa", input);
+            let b = native.client().plan("bwa", input);
+            assert_eq!(a.k(), b.k(), "{a:?} vs {b:?}");
+            for i in 0..a.k() {
+                assert!((a.starts[i] - b.starts[i]).abs() < 0.5, "{a:?} vs {b:?}");
+                assert!((a.peaks[i] - b.peaks[i]).abs() < 0.05, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shutdown_flushes_cleanly() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+        let client = coord.client();
+        client.train("bwa", history(4, 10));
+        drop(coord); // must not hang or panic
+        // Client calls after shutdown fail loudly (panic) — we only
+        // check drop-order safety here.
+        let _ = client;
+    }
+}

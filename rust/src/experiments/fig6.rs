@@ -1,0 +1,210 @@
+//! Fig 6: aggregated memory wastage (GB*s) per method, workflow, and
+//! training fraction, averaged over the split seeds.
+//!
+//! Paper headline (shape to reproduce):
+//! - KS+ lowest everywhere;
+//! - vs best baseline (k-Segments Selective): eager -36/-39/-40 %,
+//!   sarek -31/-28/-29 %;
+//! - vs best peak-only baseline (PPM-Improved): eager about -51 %,
+//!   sarek about -45 %;
+//! - PPM-Improved far below Tovar-PPM (the machine-max retry hurts on
+//!   128 GB nodes); Default can beat Tovar-PPM on sarek.
+
+use anyhow::Result;
+
+use crate::experiments::{evaluate_method, report, ExpConfig, ExpOutput};
+use crate::metrics::relative_reduction;
+use crate::predictor::paper_methods;
+use crate::trace::workflow::Workflow;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One (workflow, method, frac) cell: per-seed total wastage.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub workflow: &'static str,
+    pub method: &'static str,
+    pub train_frac: f64,
+    pub wastage_gbs: Vec<f64>,
+    pub failures: Vec<f64>,
+}
+
+pub fn collect(cfg: &ExpConfig) -> Result<Vec<Cell>> {
+    collect_methods(cfg, &paper_methods())
+}
+
+pub fn collect_methods(cfg: &ExpConfig, methods: &[&'static str]) -> Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for wf in [Workflow::eager(), Workflow::sarek()] {
+        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+        for &frac in &cfg.train_fracs {
+            for &method in methods {
+                let mut wastage = Vec::with_capacity(cfg.seeds.len());
+                let mut failures = Vec::with_capacity(cfg.seeds.len());
+                for &seed in &cfg.seeds {
+                    let r = evaluate_method(
+                        method,
+                        cfg.k,
+                        cfg.capacity_gb,
+                        &wf,
+                        &trace,
+                        frac,
+                        seed,
+                    )?;
+                    wastage.push(r.total_wastage_gbs());
+                    failures.push(r.total_failures() as f64);
+                }
+                cells.push(Cell {
+                    workflow: wf.name,
+                    method,
+                    train_frac: frac,
+                    wastage_gbs: wastage,
+                    failures,
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Extended Fig 6: adds the Witt LR related-work baselines and the
+/// dynamic-k KS+ variant (future work) to the paper's method set.
+pub fn run_extended(cfg: &ExpConfig) -> Result<ExpOutput> {
+    let methods = crate::predictor::all_methods();
+    let cells = collect_methods(cfg, &methods)?;
+    let mut text = String::new();
+    let mut json_rows = Vec::new();
+    for wf_name in ["eager", "sarek"] {
+        let mut table = report::Table::new(&["method", "train%", "wastage GBs", "failures"]);
+        for &frac in &cfg.train_fracs {
+            for &method in &methods {
+                let cell = cells
+                    .iter()
+                    .find(|c| c.workflow == wf_name && c.method == method && c.train_frac == frac)
+                    .unwrap();
+                table.row(vec![
+                    method.to_string(),
+                    format!("{:.0}", frac * 100.0),
+                    report::mean_pm_std(&cell.wastage_gbs),
+                    report::f(stats::mean(&cell.failures)),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("workflow", wf_name.into()),
+                    ("method", method.into()),
+                    ("train_frac", cell.train_frac.into()),
+                    ("wastage_gbs_mean", stats::mean(&cell.wastage_gbs).into()),
+                ]));
+            }
+        }
+        text.push_str(&table.render(&format!("Fig 6-extended ({wf_name})")));
+        text.push('\n');
+    }
+    Ok(ExpOutput { text, json: Json::obj(vec![("fig6x", Json::Arr(json_rows))]) })
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
+    let cells = collect(cfg)?;
+    let mut text = String::new();
+    let mut json_rows = Vec::new();
+
+    for wf_name in ["eager", "sarek"] {
+        let mut table = report::Table::new(&["method", "train%", "wastage GBs", "failures"]);
+        for &frac in &cfg.train_fracs {
+            for method in paper_methods() {
+                let cell = cells
+                    .iter()
+                    .find(|c| c.workflow == wf_name && c.method == method && c.train_frac == frac)
+                    .unwrap();
+                table.row(vec![
+                    method.to_string(),
+                    format!("{:.0}", frac * 100.0),
+                    report::mean_pm_std(&cell.wastage_gbs),
+                    report::f(stats::mean(&cell.failures)),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("workflow", wf_name.into()),
+                    ("method", method.into()),
+                    ("train_frac", cell.train_frac.into()),
+                    ("wastage_gbs_mean", stats::mean(&cell.wastage_gbs).into()),
+                    ("wastage_gbs_std", stats::stddev(&cell.wastage_gbs).into()),
+                    ("failures_mean", stats::mean(&cell.failures).into()),
+                ]));
+            }
+        }
+        text.push_str(&table.render(&format!("Fig 6 ({wf_name}): aggregated wastage")));
+
+        // Headline reductions per fraction.
+        for &frac in &cfg.train_fracs {
+            let w = |m: &str| {
+                stats::mean(
+                    &cells
+                        .iter()
+                        .find(|c| c.workflow == wf_name && c.method == m && c.train_frac == frac)
+                        .unwrap()
+                        .wastage_gbs,
+                )
+            };
+            let ks = w("ksplus");
+            let best_baseline = paper_methods()
+                .iter()
+                .filter(|m| **m != "ksplus")
+                .map(|m| w(m))
+                .fold(f64::INFINITY, f64::min);
+            text.push_str(&format!(
+                "  {}% train: KS+ vs best baseline: {:+.0}%  vs PPM-Improved: {:+.0}%\n",
+                frac * 100.0,
+                -relative_reduction(ks, best_baseline) * 100.0,
+                -relative_reduction(ks, w("ppm-improved")) * 100.0,
+            ));
+        }
+        text.push('\n');
+    }
+
+    Ok(ExpOutput { text, json: Json::obj(vec![("fig6", Json::Arr(json_rows))]) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig { seeds: vec![1], train_fracs: vec![0.5], ..Default::default() }
+    }
+
+    #[test]
+    fn produces_cell_per_method() {
+        let cells = collect(&tiny_cfg()).unwrap();
+        // 2 workflows x 1 frac x 6 methods
+        assert_eq!(cells.len(), 12);
+        assert!(cells.iter().all(|c| c.wastage_gbs.len() == 1));
+        assert!(cells.iter().all(|c| c.wastage_gbs[0] > 0.0));
+    }
+
+    #[test]
+    fn ksplus_beats_peak_baselines_eager() {
+        let cells = collect(&tiny_cfg()).unwrap();
+        let w = |m: &str| {
+            cells
+                .iter()
+                .find(|c| c.workflow == "eager" && c.method == m)
+                .unwrap()
+                .wastage_gbs[0]
+        };
+        assert!(
+            w("ksplus") < w("ppm-improved"),
+            "KS+ {} !< PPM-Improved {}",
+            w("ksplus"),
+            w("ppm-improved")
+        );
+        assert!(w("ksplus") < w("tovar-ppm"));
+        assert!(w("ksplus") < w("default"));
+    }
+
+    #[test]
+    fn report_renders() {
+        let out = run(&tiny_cfg()).unwrap();
+        assert!(out.text.contains("Fig 6 (eager)"));
+        assert!(out.text.contains("ksplus"));
+        assert!(out.json.get("fig6").is_some());
+    }
+}

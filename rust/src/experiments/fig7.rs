@@ -1,0 +1,80 @@
+//! Fig 7: effect of the segment count k on KS+'s aggregated wastage,
+//! for both workflows (paper: robust across k, shallow optimum near 6).
+
+use anyhow::Result;
+
+use crate::experiments::{evaluate_method, report, ExpConfig, ExpOutput};
+use crate::trace::workflow::Workflow;
+use crate::util::json::Json;
+use crate::util::stats;
+
+pub const K_RANGE: std::ops::RangeInclusive<usize> = 2..=10;
+
+pub fn collect(cfg: &ExpConfig) -> Result<Vec<(&'static str, usize, Vec<f64>)>> {
+    let mut out = Vec::new();
+    for wf in [Workflow::eager(), Workflow::sarek()] {
+        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+        for k in K_RANGE {
+            let mut wastage = Vec::with_capacity(cfg.seeds.len());
+            for &seed in &cfg.seeds {
+                let r =
+                    evaluate_method("ksplus", k, cfg.capacity_gb, &wf, &trace, 0.5, seed)?;
+                wastage.push(r.total_wastage_gbs());
+            }
+            out.push((wf.name, k, wastage));
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
+    let series = collect(cfg)?;
+    let mut text = String::new();
+    let mut json_rows = Vec::new();
+    for wf_name in ["eager", "sarek"] {
+        let mut table = report::Table::new(&["k", "wastage GBs"]);
+        let rows: Vec<_> = series.iter().filter(|(w, _, _)| *w == wf_name).collect();
+        for (_, k, wastage) in &rows {
+            table.row(vec![k.to_string(), report::mean_pm_std(wastage)]);
+            json_rows.push(Json::obj(vec![
+                ("workflow", (*wf_name).into()),
+                ("k", (*k).into()),
+                ("wastage_gbs_mean", stats::mean(wastage).into()),
+                ("wastage_gbs_std", stats::stddev(wastage).into()),
+            ]));
+        }
+        text.push_str(&table.render(&format!("Fig 7 ({wf_name}): KS+ wastage vs k")));
+        // Robustness summary: max/min ratio across k.
+        let means: Vec<f64> = rows.iter().map(|(_, _, w)| stats::mean(w)).collect();
+        let max = means.iter().cloned().fold(f64::MIN, f64::max);
+        let min = means.iter().cloned().fold(f64::MAX, f64::min);
+        let best_k = rows[means.iter().position(|&m| m == min).unwrap()].1;
+        text.push_str(&format!(
+            "  spread max/min = {:.2}x, best k = {best_k}\n\n",
+            max / min
+        ));
+    }
+    Ok(ExpOutput { text, json: Json::obj(vec![("fig7", Json::Arr(json_rows))]) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_k_range() {
+        let cfg = ExpConfig { seeds: vec![1], ..Default::default() };
+        let series = collect(&cfg).unwrap();
+        assert_eq!(series.len(), 2 * K_RANGE.count());
+        // Wastage stays positive and finite for every k.
+        assert!(series.iter().all(|(_, _, w)| w[0].is_finite() && w[0] > 0.0));
+    }
+
+    #[test]
+    fn report_contains_both_workflows() {
+        let cfg = ExpConfig { seeds: vec![1], ..Default::default() };
+        let out = run(&cfg).unwrap();
+        assert!(out.text.contains("Fig 7 (eager)"));
+        assert!(out.text.contains("Fig 7 (sarek)"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig 8: per-task memory wastage for the nine predicted eager tasks,
+//! per method and training fraction.
+//!
+//! Paper shape: bwa dominates total wastage; KS+ cuts it by ~40 % vs the
+//! best baseline; mtnucratio shows the largest relative reduction; a
+//! couple of small tasks may slightly regress vs k-Segments Selective.
+
+use anyhow::Result;
+
+use crate::experiments::{evaluate_method, report, ExpConfig, ExpOutput};
+use crate::predictor::paper_methods;
+use crate::trace::workflow::Workflow;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// (task, method, frac) -> per-seed wastage.
+pub type TaskCells = Vec<(String, &'static str, f64, Vec<f64>)>;
+
+pub fn collect(cfg: &ExpConfig) -> Result<TaskCells> {
+    let wf = Workflow::eager();
+    let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+    let tasks: Vec<String> = trace.tasks.iter().map(|t| t.task.clone()).collect();
+    let mut cells: TaskCells = Vec::new();
+    for &frac in &cfg.train_fracs {
+        for method in paper_methods() {
+            // One evaluation per seed yields every task's wastage at once.
+            let mut per_task: std::collections::BTreeMap<String, Vec<f64>> =
+                tasks.iter().map(|t| (t.clone(), Vec::new())).collect();
+            for &seed in &cfg.seeds {
+                let r = evaluate_method(method, cfg.k, cfg.capacity_gb, &wf, &trace, frac, seed)?;
+                for t in &tasks {
+                    per_task.get_mut(t).unwrap().push(r.task_wastage(t));
+                }
+            }
+            for t in &tasks {
+                cells.push((t.clone(), method, frac, per_task[t].clone()));
+            }
+        }
+    }
+    Ok(cells)
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
+    let cells = collect(cfg)?;
+    let mut text = String::new();
+    let mut json_rows = Vec::new();
+    let wf = Workflow::eager();
+    let task_names: Vec<&str> = wf.counts.iter().map(|(n, _)| *n).collect();
+
+    for &frac in &cfg.train_fracs {
+        let mut table = report::Table::new(
+            &["task", "ksplus", "kseg-sel", "kseg-par", "tovar", "ppm-impr", "default"],
+        );
+        for task in &task_names {
+            let mut row = vec![task.to_string()];
+            for method in paper_methods() {
+                let cell = cells
+                    .iter()
+                    .find(|(t, m, f, _)| t == task && *m == method && *f == frac)
+                    .unwrap();
+                row.push(report::f(stats::mean(&cell.3)));
+                json_rows.push(Json::obj(vec![
+                    ("task", (*task).into()),
+                    ("method", method.into()),
+                    ("train_frac", frac.into()),
+                    ("wastage_gbs_mean", stats::mean(&cell.3).into()),
+                ]));
+            }
+            table.row(row);
+        }
+        text.push_str(
+            &table.render(&format!("Fig 8 (eager, {:.0}% train): per-task wastage GBs", frac * 100.0)),
+        );
+        text.push('\n');
+    }
+    Ok(ExpOutput { text, json: Json::obj(vec![("fig8", Json::Arr(json_rows))]) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig { seeds: vec![1], train_fracs: vec![0.5], ..Default::default() }
+    }
+
+    #[test]
+    fn covers_all_tasks_and_methods() {
+        let cells = collect(&tiny_cfg()).unwrap();
+        assert_eq!(cells.len(), 9 * 6);
+    }
+
+    #[test]
+    fn bwa_dominates_wastage() {
+        let cells = collect(&tiny_cfg()).unwrap();
+        // For the default method, bwa should be the largest contributor
+        // (as in the paper).
+        let default_cells: Vec<_> =
+            cells.iter().filter(|(_, m, _, _)| *m == "default").collect();
+        let bwa = default_cells.iter().find(|(t, ..)| t == "bwa").unwrap().3[0];
+        for (t, _, _, w) in &default_cells {
+            if t != "bwa" {
+                assert!(bwa >= w[0], "bwa {bwa} < {t} {}", w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders_tables() {
+        let out = run(&tiny_cfg()).unwrap();
+        assert!(out.text.contains("Fig 8"));
+        assert!(out.text.contains("bwa"));
+    }
+}

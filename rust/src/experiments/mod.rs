@@ -1,0 +1,201 @@
+//! Experiment harness: regenerates every figure of the paper's
+//! evaluation (Figs 1-8) from the synthetic workflow traces.
+//!
+//! Each experiment prints the same rows/series the paper reports and
+//! returns them as JSON for the `results/` directory. The experiment
+//! index lives in DESIGN.md Section 3; EXPERIMENTS.md records
+//! paper-vs-measured for each.
+
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod figs;
+pub mod report;
+pub mod throughput;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::WastageReport;
+use crate::predictor::{self, Predictor};
+use crate::sim;
+use crate::trace::workflow::Workflow;
+use crate::trace::{split_train_test, Execution, WorkflowTrace};
+use crate::util::rng::Rng;
+
+/// Shared experiment parameters (paper Section III-A).
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Train/test split seeds; the paper averages over 10.
+    pub seeds: Vec<u64>,
+    /// Training fractions of Fig 6/8.
+    pub train_fracs: Vec<f64>,
+    /// Segment count for the segment methods (Fig 7 sweeps it).
+    pub k: usize,
+    /// Node capacity (AMD EPYC 7282 testbed: 128 GB).
+    pub capacity_gb: f64,
+    /// Trace-generation seed (the "recorded dataset"; fixed, unlike the
+    /// split seeds).
+    pub trace_seed: u64,
+    /// Target samples per trace (bounded by the wastage bucket N=512).
+    pub target_samples: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            seeds: (1..=10).collect(),
+            train_fracs: vec![0.25, 0.50, 0.75],
+            k: 4,
+            capacity_gb: 128.0,
+            trace_seed: 42,
+            target_samples: 200,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Smaller variant for smoke tests and benches.
+    pub fn quick() -> Self {
+        ExpConfig { seeds: vec![1, 2, 3], ..Default::default() }
+    }
+}
+
+/// Build a trained predictor for `method` on `train`, honouring the
+/// per-task developer default for the `default` baseline.
+pub fn trained_predictor(
+    method: &str,
+    k: usize,
+    capacity: f64,
+    workflow: &Workflow,
+    task: &str,
+    train: &[Execution],
+) -> Result<Box<dyn Predictor>> {
+    let mut pred: Box<dyn Predictor> = if method == "default" {
+        let limit = workflow
+            .archetype(task)
+            .map(|a| a.default_limit_gb)
+            .unwrap_or(4.0);
+        Box::new(predictor::DefaultLimits::with_limit(capacity, limit))
+    } else {
+        match predictor::by_name(method, k, capacity) {
+            Some(p) => p,
+            None => bail!("unknown method '{method}'"),
+        }
+    };
+    pred.train(train);
+    Ok(pred)
+}
+
+/// Evaluate one method on one workflow trace for one (train_frac, seed):
+/// per task, split -> train -> simulate the test set through the
+/// OOM/retry loop; aggregate wastage across tasks.
+///
+/// The split RNG is forked per task from `seed` only, so every method
+/// sees the identical split (paired comparison, as in the paper).
+pub fn evaluate_method(
+    method: &str,
+    k: usize,
+    capacity: f64,
+    workflow: &Workflow,
+    trace: &WorkflowTrace,
+    train_frac: f64,
+    seed: u64,
+) -> Result<WastageReport> {
+    let mut report = WastageReport::default();
+    for (task_idx, task_traces) in trace.tasks.iter().enumerate() {
+        let mut split_rng = Rng::new(seed).fork(task_idx as u64 + 1);
+        let (train, test) = split_train_test(task_traces, train_frac, &mut split_rng);
+        let pred = trained_predictor(method, k, capacity, workflow, &task_traces.task, &train)?;
+        for outcome in sim::run_all(pred.as_ref(), &test) {
+            report.add(&outcome);
+        }
+    }
+    Ok(report)
+}
+
+/// Run an experiment by figure id; returns the rendered text report.
+pub fn run(name: &str, cfg: &ExpConfig, out_dir: Option<&std::path::Path>) -> Result<String> {
+    let result = match name {
+        "fig1a" => figs::fig1a(cfg),
+        "fig1b" => figs::fig1b(cfg),
+        "fig2" => figs::fig2(cfg),
+        "fig3" => figs::fig3(cfg),
+        "fig4" => figs::fig4(cfg),
+        "fig5" => figs::fig5(cfg),
+        "fig6" => fig6::run(cfg),
+        "fig6x" => fig6::run_extended(cfg),
+        "throughput" => throughput::run(cfg),
+        "fig7" => fig7::run(cfg),
+        "fig8" => fig8::run(cfg),
+        "all" => {
+            let mut out = String::new();
+            for id in
+                ["fig1a", "fig1b", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "throughput"]
+            {
+                out.push_str(&run(id, cfg, out_dir)?);
+                out.push('\n');
+            }
+            return Ok(out);
+        }
+        _ => bail!("unknown experiment '{name}' (try fig1a..fig8 or all)"),
+    }?;
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, result.json.to_string())?;
+    }
+    Ok(result.text)
+}
+
+/// An experiment's rendered output.
+pub struct ExpOutput {
+    pub text: String,
+    pub json: crate::util::json::Json,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_method_runs_all_tasks() {
+        let wf = Workflow::eager();
+        let trace = wf.generate(42, 80);
+        let r = evaluate_method("ppm-improved", 4, 128.0, &wf, &trace, 0.5, 1).unwrap();
+        assert_eq!(r.per_task.len(), 9);
+        assert!(r.total_wastage_gbs() > 0.0);
+    }
+
+    #[test]
+    fn identical_split_across_methods() {
+        // Paired evaluation: instance counts per task must match between
+        // methods for the same seed.
+        let wf = Workflow::eager();
+        let trace = wf.generate(42, 60);
+        let a = evaluate_method("ksplus", 4, 128.0, &wf, &trace, 0.5, 3).unwrap();
+        let b = evaluate_method("tovar-ppm", 4, 128.0, &wf, &trace, 0.5, 3).unwrap();
+        for (task, agg) in &a.per_task {
+            assert_eq!(agg.instances, b.per_task[task].instances, "{task}");
+        }
+    }
+
+    #[test]
+    fn default_method_uses_archetype_limits() {
+        let wf = Workflow::eager();
+        let trace = wf.generate(42, 60);
+        let r = evaluate_method("default", 4, 128.0, &wf, &trace, 0.5, 1).unwrap();
+        assert!(r.total_wastage_gbs() > 0.0);
+    }
+
+    #[test]
+    fn unknown_method_errors() {
+        let wf = Workflow::eager();
+        let trace = wf.generate(42, 40);
+        assert!(evaluate_method("nope", 4, 128.0, &wf, &trace, 0.5, 1).is_err());
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("fig99", &ExpConfig::quick(), None).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Cluster-throughput experiment (ours): the paper's introduction argues
+//! that over-allocation "limits the throughput on both a workflow and a
+//! cluster level". This experiment quantifies that claim: run the full
+//! eager workflow in DAG order on a small cluster under every method and
+//! report makespan, throughput, and memory efficiency next to wastage.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::experiments::{report, trained_predictor, ExpConfig, ExpOutput};
+use crate::predictor::{paper_methods, Predictor};
+use crate::sim::cluster::{ClusterConfig, PredictorSource};
+use crate::sim::dag::run_workflow_dag;
+use crate::trace::workflow::Workflow;
+use crate::trace::{split_train_test, TaskTraces, WorkflowTrace};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+struct Trained(BTreeMap<String, Box<dyn Predictor>>);
+
+impl PredictorSource for Trained {
+    fn get(&self, task: &str) -> Option<&dyn Predictor> {
+        self.0.get(task).map(|p| p.as_ref())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub method: &'static str,
+    pub makespan_s: f64,
+    pub throughput_per_h: f64,
+    pub wastage_gbs: f64,
+    pub efficiency: f64,
+}
+
+pub fn collect(cfg: &ExpConfig, nodes: usize) -> Result<Vec<ThroughputRow>> {
+    let wf = Workflow::eager();
+    let full = wf.generate(cfg.trace_seed, cfg.target_samples);
+    let cluster = ClusterConfig { nodes, node_capacity_gb: cfg.capacity_gb };
+    let mut rows = Vec::new();
+    for method in paper_methods() {
+        // Identical split across methods (seed 1).
+        let mut preds = Trained(BTreeMap::new());
+        let mut test = WorkflowTrace { name: full.name.clone(), tasks: Vec::new() };
+        for (idx, t) in full.tasks.iter().enumerate() {
+            let mut rng = Rng::new(1).fork(idx as u64 + 1);
+            let (train, test_set) = split_train_test(t, 0.5, &mut rng);
+            preds.0.insert(
+                t.task.clone(),
+                trained_predictor(method, cfg.k, cfg.capacity_gb, &wf, &t.task, &train)?,
+            );
+            test.tasks.push(TaskTraces { task: t.task.clone(), executions: test_set });
+        }
+        let r = run_workflow_dag(&cluster, &wf, &test, &preds);
+        let instances = r.report.total_instances() as f64;
+        rows.push(ThroughputRow {
+            method,
+            makespan_s: r.makespan_s,
+            throughput_per_h: if r.makespan_s > 0.0 {
+                instances / (r.makespan_s / 3600.0)
+            } else {
+                0.0
+            },
+            wastage_gbs: r.report.total_wastage_gbs(),
+            efficiency: r.report.efficiency(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
+    let nodes = 4;
+    let rows = collect(cfg, nodes)?;
+    let mut table = report::Table::new(&[
+        "method",
+        "makespan s",
+        "tasks/h",
+        "wastage GBs",
+        "mem efficiency",
+    ]);
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        table.row(vec![
+            r.method.to_string(),
+            report::f(r.makespan_s),
+            report::f(r.throughput_per_h),
+            report::f(r.wastage_gbs),
+            format!("{:.1}%", r.efficiency * 100.0),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("method", r.method.into()),
+            ("makespan_s", r.makespan_s.into()),
+            ("throughput_per_h", r.throughput_per_h.into()),
+            ("wastage_gbs", r.wastage_gbs.into()),
+            ("efficiency", r.efficiency.into()),
+        ]));
+    }
+    let text = table.render(&format!(
+        "Throughput (ours): eager DAG on {nodes} x 128 GB nodes, 50% train"
+    ));
+    Ok(ExpOutput { text, json: Json::obj(vec![("throughput", Json::Arr(json_rows))]) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ksplus_best_or_near_best_throughput() {
+        let cfg = ExpConfig { seeds: vec![1], ..Default::default() };
+        let rows = collect(&cfg, 2).unwrap();
+        let ks = rows.iter().find(|r| r.method == "ksplus").unwrap();
+        let best = rows.iter().map(|r| r.throughput_per_h).fold(0.0, f64::max);
+        assert!(
+            ks.throughput_per_h >= best * 0.9,
+            "KS+ {:.1} vs best {best:.1} tasks/h",
+            ks.throughput_per_h
+        );
+        // And strictly the best memory efficiency.
+        let ks_eff = ks.efficiency;
+        for r in &rows {
+            if r.method != "ksplus" {
+                assert!(ks_eff >= r.efficiency, "{} beats KS+ efficiency", r.method);
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let cfg = ExpConfig { seeds: vec![1], ..Default::default() };
+        let out = run(&cfg).unwrap();
+        assert!(out.text.contains("Throughput"));
+        assert!(out.json.get("throughput").is_some());
+    }
+}

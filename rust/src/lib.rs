@@ -1,0 +1,31 @@
+//! # KS+ — Predicting Workflow Task Memory Usage Over Time
+//!
+//! Production-grade reproduction of *KS+: Predicting Workflow Task Memory
+//! Usage Over Time* (e-Science 2024). KS+ models a workflow task's memory
+//! consumption as a monotonically increasing step function with `k`
+//! variable-sized segments, predicts segment start times and peaks from
+//! the task's input size, and rescales segment starts on OOM instead of
+//! blindly doubling memory.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3 (this crate)**: trace substrate, segmentation, predictors
+//!   (KS+ and all paper baselines), OOM/retry simulator, discrete-event
+//!   cluster scheduler, experiment harness, and an online prediction
+//!   service (`coordinator`).
+//! - **L2/L1 (python/, build-time)**: batched OLS fit/predict and wastage
+//!   scoring as JAX + Pallas kernels, AOT-lowered to HLO text artifacts.
+//! - **runtime**: loads `artifacts/*.hlo.txt` via the PJRT CPU client
+//!   (`xla` crate) and executes them from the coordinator's hot path.
+//!
+//! Quickstart: see `examples/quickstart.rs`; experiments: `repro
+//! experiment fig6 --workflow eager`.
+
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod segments;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,253 @@
+//! `repro` — KS+ reproduction CLI.
+//!
+//! Subcommands:
+//!   experiment <figN|all>  regenerate a paper figure's data
+//!   trace-gen              write a synthetic workflow trace as CSV
+//!   segment                segment a trace's executions (Algorithm 1)
+//!   simulate               cluster simulation with a chosen method
+//!   serve                  smoke-run the online coordinator
+//!
+//! Run `repro <cmd> --help` for flags.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::BackendSpec;
+use ksplus::experiments::{self, ExpConfig};
+use ksplus::predictor;
+use ksplus::segments::algorithm::get_segments;
+use ksplus::sim::cluster::{run_cluster, ClusterConfig, PredictorSource};
+use ksplus::trace::workflow::Workflow;
+use ksplus::trace::{io as trace_io, split_train_test};
+use ksplus::util::cli::Command;
+use ksplus::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print_help();
+        return;
+    }
+    let cmd = args[0].clone();
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "trace-gen" => cmd_trace_gen(rest),
+        "segment" => cmd_segment(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — KS+ (e-Science 2024) reproduction\n\n\
+         USAGE: repro <command> [flags]\n\n\
+         COMMANDS:\n\
+           experiment <fig1a..fig8|all>   regenerate a figure (see DESIGN.md)\n\
+           trace-gen                      synthesize a workflow trace (CSV)\n\
+           segment                        run Algorithm 1 on a trace\n\
+           simulate                       discrete-event cluster simulation\n\
+           serve                          coordinator service smoke run\n"
+    );
+}
+
+fn exp_config(a: &ksplus::util::cli::Args) -> Result<ExpConfig> {
+    let seeds: Vec<u64> = (1..=a.get_usize("seeds")? as u64).collect();
+    Ok(ExpConfig {
+        seeds,
+        k: a.get_usize("k")?,
+        capacity_gb: a.get_f64("capacity")?,
+        trace_seed: a.get_u64("trace-seed")?,
+        ..Default::default()
+    })
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro experiment <id>", "Regenerate a paper figure")
+        .flag("seeds", "number of train/test split seeds", Some("10"))
+        .flag("k", "segment count for segment methods", Some("4"))
+        .flag("capacity", "node memory capacity in GB", Some("128"))
+        .flag("trace-seed", "trace generation seed", Some("42"))
+        .flag("out", "directory for JSON results", Some("results"));
+    let a = cmd.parse(argv)?;
+    let Some(id) = a.positional.first() else {
+        bail!("missing experiment id\n\n{}", cmd.usage());
+    };
+    let cfg = exp_config(&a)?;
+    let out_dir = a.get("out").map(PathBuf::from);
+    let text = experiments::run(id, &cfg, out_dir.as_deref())?;
+    print!("{text}");
+    Ok(())
+}
+
+fn cmd_trace_gen(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro trace-gen", "Synthesize a workflow trace")
+        .flag("workflow", "eager or sarek", Some("eager"))
+        .flag("seed", "generation seed", Some("42"))
+        .flag("samples", "target samples per execution", Some("200"))
+        .flag("out", "output CSV path", Some("trace.csv"));
+    let a = cmd.parse(argv)?;
+    let name = a.get("workflow").unwrap();
+    let wf = Workflow::by_name(name).with_context(|| format!("unknown workflow '{name}'"))?;
+    let trace = wf.generate(a.get_u64("seed")?, a.get_usize("samples")?);
+    let out = PathBuf::from(a.get("out").unwrap());
+    trace_io::write_csv(&out, &trace)?;
+    println!(
+        "wrote {} executions of {} task types to {}",
+        trace.total_instances(),
+        trace.tasks.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_segment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro segment", "Segment a trace (Algorithm 1)")
+        .flag("trace", "input CSV (from trace-gen)", None)
+        .flag("task", "task type to segment", Some("bwa"))
+        .flag("k", "number of segments", Some("4"))
+        .flag("limit", "max executions to print", Some("5"));
+    let a = cmd.parse(argv)?;
+    let Some(path) = a.get("trace") else {
+        bail!("--trace is required\n\n{}", cmd.usage());
+    };
+    let trace = trace_io::read_csv(Path::new(path), "input")?;
+    let task = a.get("task").unwrap();
+    let traces = trace.task(task).with_context(|| format!("no task '{task}' in trace"))?;
+    let k = a.get_usize("k")?;
+    for (i, e) in traces.executions.iter().take(a.get_usize("limit")?).enumerate() {
+        let seg = get_segments(&e.samples, k);
+        let plan = seg.to_plan(e.dt);
+        println!(
+            "exec {i}: input {:.0} MB, duration {:.0} s -> {} segments",
+            e.input_mb,
+            e.duration(),
+            seg.peaks.len()
+        );
+        for j in 0..seg.peaks.len() {
+            println!(
+                "  segment {j}: start {:>7.1} s  peak {:>6.2} GB",
+                plan.starts[j], plan.peaks[j]
+            );
+        }
+    }
+    Ok(())
+}
+
+struct Trained(std::collections::BTreeMap<String, Box<dyn predictor::Predictor>>);
+
+impl PredictorSource for Trained {
+    fn get(&self, task: &str) -> Option<&dyn predictor::Predictor> {
+        self.0.get(task).map(|p| p.as_ref())
+    }
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro simulate", "Cluster simulation")
+        .flag("workflow", "eager or sarek", Some("eager"))
+        .flag("method", "prediction method", Some("ksplus"))
+        .flag("k", "segments", Some("4"))
+        .flag("nodes", "cluster nodes", Some("4"))
+        .flag("capacity", "GB per node", Some("128"))
+        .flag("seed", "trace + split seed", Some("42"))
+        .flag("train-frac", "training fraction", Some("0.5"));
+    let a = cmd.parse(argv)?;
+    let wf = Workflow::by_name(a.get("workflow").unwrap()).context("unknown workflow")?;
+    let trace = wf.generate(a.get_u64("seed")?, 200);
+    let method = a.get("method").unwrap();
+    let k = a.get_usize("k")?;
+    let capacity = a.get_f64("capacity")?;
+    let frac = a.get_f64("train-frac")?;
+
+    // Train per task; simulate the concatenated test sets.
+    let mut predictors = Trained(Default::default());
+    let mut test_executions = Vec::new();
+    for (idx, t) in trace.tasks.iter().enumerate() {
+        let mut rng = Rng::new(a.get_u64("seed")?).fork(idx as u64 + 1);
+        let (train, test) = split_train_test(t, frac, &mut rng);
+        let pred =
+            experiments::trained_predictor(method, k, capacity, &wf, &t.task, &train)?;
+        predictors.0.insert(t.task.clone(), pred);
+        test_executions.extend(test);
+    }
+    let cfg = ClusterConfig { nodes: a.get_usize("nodes")?, node_capacity_gb: capacity };
+    let r = run_cluster(&cfg, &predictors, &test_executions);
+    println!("== cluster simulation: {} / {} ==", wf.name, method);
+    println!("tasks          : {}", r.outcomes.len());
+    println!("makespan       : {:.0} s", r.makespan_s);
+    println!("throughput     : {:.1} tasks/h", r.throughput_per_h);
+    println!("mean wait      : {:.1} s", r.mean_wait_s);
+    println!("total wastage  : {:.0} GBs", r.report.total_wastage_gbs());
+    println!("failures       : {}", r.report.total_failures());
+    println!("efficiency     : {:.1}% of allocated GBs used", r.report.efficiency() * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
+        .flag("backend", "native or pjrt", Some("pjrt"))
+        .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
+        .flag("k", "segments", Some("4"))
+        .flag("workflow", "training workflow", Some("eager"))
+        .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None);
+    let a = cmd.parse(argv)?;
+    let spec = match a.get("backend").unwrap() {
+        "native" => BackendSpec::Native,
+        "pjrt" => BackendSpec::Pjrt(None),
+        other => bail!("unknown backend '{other}'"),
+    };
+    let wf = Workflow::by_name(a.get("workflow").unwrap()).context("unknown workflow")?;
+    let trace = wf.generate(42, 150);
+    let coord = Coordinator::start(
+        CoordinatorConfig { k: a.get_usize("k")?, ..Default::default() },
+        spec,
+    );
+    let client = coord.client();
+    for t in &trace.tasks {
+        client.train(&t.task, t.executions.clone());
+    }
+    if let Some(addr) = a.get("listen") {
+        // Server mode: expose the newline-JSON wire protocol and block.
+        let server = ksplus::coordinator::server::Server::start(addr, coord.client())?;
+        println!(
+            "serving KS+ predictions on {} ({} task models pre-trained)\n\
+             protocol: one JSON object per line — op: train | plan | failure | stats\n\
+             Ctrl-C to stop.",
+            server.addr(),
+            trace.tasks.len()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let n = a.get_usize("requests")?;
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let task = &trace.tasks[rng.below(trace.tasks.len())];
+        let input = task.executions[rng.below(task.executions.len())].input_mb;
+        let plan = client.plan(&task.task, input);
+        assert!(plan.is_valid());
+    }
+    let elapsed = t0.elapsed();
+    let stats = client.stats();
+    println!("== coordinator smoke run ({}) ==", a.get("backend").unwrap());
+    println!("requests       : {}", stats.requests);
+    println!("batches        : {} (mean size {:.1})", stats.batches, stats.mean_batch_size());
+    println!("throughput     : {:.0} plans/s", n as f64 / elapsed.as_secs_f64());
+    println!("latency p50    : {:.0} us", stats.latency_percentile_us(50.0));
+    println!("latency p99    : {:.0} us", stats.latency_percentile_us(99.0));
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Wastage accounting (the paper's evaluation metric) and aggregation.
+//!
+//! Wastage of one task execution, in GB-seconds (Section III-A):
+//!   * successful attempt: integral of (requested - used) over time;
+//!   * each failed attempt: the *entire* allocated memory over time up to
+//!     the failure, since the work is discarded on restart.
+
+use std::collections::BTreeMap;
+
+/// Outcome of simulating one task instance under one predictor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskOutcome {
+    pub task: String,
+    pub input_mb: f64,
+    /// Total attempts (1 = no failure).
+    pub attempts: usize,
+    pub success: bool,
+    /// Total wastage over all attempts, GB*s.
+    pub wastage_gbs: f64,
+    /// Allocation integral of the successful attempt, GB*s.
+    pub alloc_gbs: f64,
+    /// Usage integral of the task itself, GB*s.
+    pub used_gbs: f64,
+}
+
+/// Aggregated per-task and total statistics over many outcomes.
+#[derive(Debug, Clone, Default)]
+pub struct WastageReport {
+    pub per_task: BTreeMap<String, TaskAgg>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TaskAgg {
+    pub instances: usize,
+    pub failures: usize,
+    pub unfinished: usize,
+    pub wastage_gbs: f64,
+    pub alloc_gbs: f64,
+    pub used_gbs: f64,
+}
+
+impl WastageReport {
+    pub fn add(&mut self, o: &TaskOutcome) {
+        let agg = self.per_task.entry(o.task.clone()).or_default();
+        agg.instances += 1;
+        agg.failures += o.attempts - 1;
+        if !o.success {
+            agg.unfinished += 1;
+        }
+        agg.wastage_gbs += o.wastage_gbs;
+        agg.alloc_gbs += o.alloc_gbs;
+        agg.used_gbs += o.used_gbs;
+    }
+
+    pub fn from_outcomes<'a>(outcomes: impl IntoIterator<Item = &'a TaskOutcome>) -> Self {
+        let mut r = WastageReport::default();
+        for o in outcomes {
+            r.add(o);
+        }
+        r
+    }
+
+    /// Total wastage across tasks, GB*s (Fig 6 quantity).
+    pub fn total_wastage_gbs(&self) -> f64 {
+        self.per_task.values().map(|a| a.wastage_gbs).sum()
+    }
+
+    pub fn total_failures(&self) -> usize {
+        self.per_task.values().map(|a| a.failures).sum()
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.per_task.values().map(|a| a.instances).sum()
+    }
+
+    /// Fraction of allocated GB*s that was actually used (efficiency).
+    pub fn efficiency(&self) -> f64 {
+        let alloc: f64 = self.per_task.values().map(|a| a.alloc_gbs).sum();
+        let used: f64 = self.per_task.values().map(|a| a.used_gbs).sum();
+        if alloc <= 0.0 {
+            0.0
+        } else {
+            used / alloc
+        }
+    }
+
+    pub fn task_wastage(&self, task: &str) -> f64 {
+        self.per_task.get(task).map(|a| a.wastage_gbs).unwrap_or(0.0)
+    }
+}
+
+/// Relative reduction of `ours` vs `baseline`, as a fraction in [-inf, 1].
+/// (0.38 == "38 % less wastage than the baseline".)
+pub fn relative_reduction(ours: f64, baseline: f64) -> f64 {
+    if baseline <= 0.0 {
+        0.0
+    } else {
+        1.0 - ours / baseline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(task: &str, attempts: usize, wastage: f64) -> TaskOutcome {
+        TaskOutcome {
+            task: task.into(),
+            input_mb: 1.0,
+            attempts,
+            success: true,
+            wastage_gbs: wastage,
+            alloc_gbs: wastage + 10.0,
+            used_gbs: 10.0,
+        }
+    }
+
+    #[test]
+    fn report_aggregates_by_task() {
+        let outs =
+            vec![outcome("a", 1, 5.0), outcome("a", 2, 7.0), outcome("b", 1, 3.0)];
+        let r = WastageReport::from_outcomes(&outs);
+        assert_eq!(r.total_instances(), 3);
+        assert_eq!(r.total_failures(), 1);
+        assert!((r.total_wastage_gbs() - 15.0).abs() < 1e-12);
+        assert!((r.task_wastage("a") - 12.0).abs() < 1e-12);
+        assert_eq!(r.task_wastage("zzz"), 0.0);
+    }
+
+    #[test]
+    fn efficiency_ratio() {
+        let outs = vec![outcome("a", 1, 10.0)]; // alloc 20, used 10
+        let r = WastageReport::from_outcomes(&outs);
+        assert!((r.efficiency() - 0.5).abs() < 1e-12);
+        assert_eq!(WastageReport::default().efficiency(), 0.0);
+    }
+
+    #[test]
+    fn unfinished_counted() {
+        let mut o = outcome("a", 3, 50.0);
+        o.success = false;
+        let r = WastageReport::from_outcomes(&[o]);
+        assert_eq!(r.per_task["a"].unfinished, 1);
+    }
+
+    #[test]
+    fn relative_reduction_matches_paper_usage() {
+        assert!((relative_reduction(62.0, 100.0) - 0.38).abs() < 1e-12);
+        assert_eq!(relative_reduction(10.0, 0.0), 0.0);
+        assert!(relative_reduction(150.0, 100.0) < 0.0);
+    }
+}

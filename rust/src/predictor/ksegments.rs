@@ -1,0 +1,253 @@
+//! k-Segments baseline [19]: equally sized segments over a predicted
+//! runtime, per-segment peak regressions, and the Selective / Partial
+//! failure-offset strategies.
+
+use crate::predictor::regression::{LinModel, NativeFit, FitEngine};
+use crate::predictor::{sanitize_plan, Predictor};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+
+/// Offsets mirroring the original method's safety strategy.
+const MEM_OVERPREDICT: f64 = 1.10;
+const RUNTIME_UNDERPREDICT: f64 = 0.85;
+/// Multiplicative offset applied by the retry strategies.
+const RETRY_OFFSET: f64 = 2.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetryMode {
+    /// Offset only the failed segment (k-Segments Selective).
+    Selective,
+    /// Offset the failed segment and everything after (k-Segments Partial).
+    Partial,
+}
+
+pub struct KSegments {
+    k: usize,
+    capacity: f64,
+    mode: RetryMode,
+    runtime_model: Option<LinModel>,
+    peak_models: Vec<LinModel>,
+    fallback_peak: f64,
+}
+
+impl KSegments {
+    pub fn new(k: usize, capacity: f64, mode: RetryMode) -> Self {
+        assert!(k >= 1);
+        KSegments {
+            k,
+            capacity,
+            mode,
+            runtime_model: None,
+            peak_models: Vec::new(),
+            fallback_peak: 2.0,
+        }
+    }
+
+    /// Peak of each of the k equal slices of an execution.
+    fn slice_peaks(&self, e: &Execution) -> Vec<f64> {
+        let n = e.samples.len();
+        let mut out = Vec::with_capacity(self.k);
+        for j in 0..self.k {
+            let lo = j * n / self.k;
+            let hi = ((j + 1) * n / self.k).max(lo + 1).min(n.max(1));
+            let peak = e.samples[lo.min(n.saturating_sub(1))..hi]
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            out.push(peak);
+        }
+        out
+    }
+}
+
+impl Predictor for KSegments {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            RetryMode::Selective => "ksegments-selective",
+            RetryMode::Partial => "ksegments-partial",
+        }
+    }
+
+    fn train(&mut self, history: &[Execution]) {
+        if history.is_empty() {
+            self.runtime_model = None;
+            return;
+        }
+        let inputs: Vec<f64> = history.iter().map(|e| e.input_mb).collect();
+        let durations: Vec<f64> = history.iter().map(|e| e.duration()).collect();
+        let mut rows: Vec<(Vec<f64>, Vec<f64>)> = vec![(inputs.clone(), durations)];
+        let per_exec: Vec<Vec<f64>> = history.iter().map(|e| self.slice_peaks(e)).collect();
+        for j in 0..self.k {
+            let peaks: Vec<f64> = per_exec.iter().map(|p| p[j]).collect();
+            rows.push((inputs.clone(), peaks));
+        }
+        let models = NativeFit.fit_batch(&rows);
+        self.runtime_model = Some(models[0]);
+        self.peak_models = models[1..].to_vec();
+        self.fallback_peak =
+            history.iter().map(|e| e.peak()).fold(0.0, f64::max).max(0.1);
+    }
+
+    fn plan(&self, input_mb: f64) -> StepPlan {
+        let Some(rt) = self.runtime_model else {
+            return StepPlan::flat(self.fallback_peak.min(self.capacity));
+        };
+        // Underpredicted runtime split into k equal segments.
+        let runtime = (rt.predict(input_mb) * RUNTIME_UNDERPREDICT).max(1.0);
+        let seg = runtime / self.k as f64;
+        let starts: Vec<f64> = (0..self.k).map(|j| j as f64 * seg).collect();
+        let peaks: Vec<f64> = self
+            .peak_models
+            .iter()
+            .map(|m| (m.predict(input_mb) * MEM_OVERPREDICT).max(1e-3))
+            .collect();
+        // Monotonicity is enforced (running max) like KS+ — equal-sized
+        // segments otherwise release memory mid-run and fail instantly
+        // for any later-peaking task.
+        sanitize_plan(starts, peaks, self.capacity)
+    }
+
+    fn on_failure(&self, prev: &StepPlan, fail_time: f64, _attempt: usize) -> StepPlan {
+        let i = prev.segment_at(fail_time);
+        let mut peaks = prev.peaks.clone();
+        match self.mode {
+            RetryMode::Selective => {
+                peaks[i] = (peaks[i] * RETRY_OFFSET).min(self.capacity);
+            }
+            RetryMode::Partial => {
+                for p in peaks.iter_mut().skip(i) {
+                    *p = (*p * RETRY_OFFSET).min(self.capacity);
+                }
+            }
+        }
+        sanitize_plan(prev.starts.clone(), peaks, self.capacity)
+    }
+
+    fn capacity(&self) -> f64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn exec(input: f64, rng: &mut Rng) -> Execution {
+        // Linear in input: duration input*0.02 s, two plateaus.
+        let n = ((input * 0.02) as usize).max(4);
+        let half = n / 2;
+        let mut s = vec![input * 0.0004; half];
+        s.extend(vec![input * 0.0009; n - half]);
+        for v in s.iter_mut() {
+            *v *= 1.0 - 0.02 * rng.f64();
+        }
+        Execution::new("t", input, 1.0, s)
+    }
+
+    fn trained(mode: RetryMode) -> KSegments {
+        let mut rng = Rng::new(2);
+        let hist: Vec<Execution> =
+            (0..40).map(|_| exec(rng.uniform(2000.0, 10000.0), &mut rng)).collect();
+        let mut p = KSegments::new(4, 128.0, mode);
+        p.train(&hist);
+        p
+    }
+
+    #[test]
+    fn plan_has_equal_sized_segments() {
+        let p = trained(RetryMode::Selective);
+        let plan = p.plan(8000.0);
+        assert!(plan.is_valid());
+        // sanitize may merge equal-peak neighbours; check spacing of the
+        // surviving boundaries is a multiple of the base segment size.
+        let runtime = plan.starts.last().unwrap() * 4.0 / 3.0; // k=4
+        let seg = runtime / 4.0;
+        for w in plan.starts.windows(2) {
+            let gap = w[1] - w[0];
+            let ratio = gap / seg;
+            assert!((ratio - ratio.round()).abs() < 0.05, "gap {gap} vs seg {seg}");
+        }
+    }
+
+    #[test]
+    fn untrained_fallback() {
+        let p = KSegments::new(4, 128.0, RetryMode::Partial);
+        assert_eq!(p.plan(1000.0).k(), 1);
+    }
+
+    #[test]
+    fn selective_offsets_only_failed_segment() {
+        let p = trained(RetryMode::Selective);
+        let prev = StepPlan::new(vec![0.0, 30.0, 60.0], vec![2.0, 4.0, 8.0]);
+        let retry = p.on_failure(&prev, 35.0, 1);
+        // Failed segment 1: 4 -> 8; segment 2 stays 8 (merged by equal
+        // peak or kept).
+        assert_eq!(retry.alloc_at(0.0), 2.0);
+        assert_eq!(retry.alloc_at(35.0), 8.0);
+        assert_eq!(retry.alloc_at(100.0), 8.0);
+    }
+
+    #[test]
+    fn partial_offsets_failed_and_following() {
+        let p = trained(RetryMode::Partial);
+        let prev = StepPlan::new(vec![0.0, 30.0, 60.0], vec![2.0, 4.0, 8.0]);
+        let retry = p.on_failure(&prev, 35.0, 1);
+        assert_eq!(retry.alloc_at(0.0), 2.0);
+        assert_eq!(retry.alloc_at(35.0), 8.0);
+        assert_eq!(retry.alloc_at(100.0), 16.0);
+    }
+
+    #[test]
+    fn retry_clamps_to_capacity() {
+        let p = trained(RetryMode::Partial);
+        let prev = StepPlan::new(vec![0.0, 10.0], vec![70.0, 90.0]);
+        let retry = p.on_failure(&prev, 15.0, 1);
+        assert!(retry.peaks.iter().all(|&x| x <= 128.0));
+    }
+
+    #[test]
+    fn covers_most_unseen_executions() {
+        let p = trained(RetryMode::Selective);
+        let mut rng = Rng::new(77);
+        let total = 40;
+        let covered = (0..total)
+            .filter(|_| {
+                let e = exec(rng.uniform(2500.0, 9500.0), &mut rng);
+                p.plan(e.input_mb).covers(&e)
+            })
+            .count();
+        assert!(covered >= total * 7 / 10, "{covered}/{total}");
+    }
+
+    #[test]
+    fn prop_plans_and_retries_valid() {
+        run_prop("ksegments_valid", 100, |rng| {
+            let k = 1 + rng.below(6);
+            let mode = if rng.below(2) == 0 { RetryMode::Selective } else { RetryMode::Partial };
+            let hist: Vec<Execution> = (0..4 + rng.below(15))
+                .map(|_| {
+                    let n = 4 + rng.below(50);
+                    Execution::new(
+                        "t",
+                        rng.uniform(100.0, 8000.0),
+                        1.0,
+                        (0..n).map(|_| rng.uniform(0.1, 10.0)).collect(),
+                    )
+                })
+                .collect();
+            let mut p = KSegments::new(k, 128.0, mode);
+            p.train(&hist);
+            let plan = p.plan(rng.uniform(50.0, 16000.0));
+            assert!(plan.is_valid());
+            let retry = p.on_failure(&plan, rng.uniform(0.0, 300.0), 1);
+            assert!(retry.is_valid());
+            // Retry never lowers allocation anywhere.
+            for i in 0..50 {
+                let t = i as f64 * 7.0;
+                assert!(retry.alloc_at(t) + 1e-9 >= plan.alloc_at(t));
+            }
+        });
+    }
+}

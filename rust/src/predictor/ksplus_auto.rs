@@ -1,0 +1,216 @@
+//! KS+ with per-task dynamic segment-count selection — the paper's
+//! stated future work ("we plan to dynamically determine the optimal
+//! number of segments for each task").
+//!
+//! Selection is leave-some-out cross-validation on the training set: for
+//! each candidate k, train KS+ on a subset and replay the held-out
+//! executions through the OOM/retry loop (the same cost the evaluation
+//! metric charges), then pick the k with the lowest CV wastage. Ties go
+//! to the smaller k (fewer boundaries = fewer timing failure modes).
+
+use crate::predictor::ksplus::KsPlus;
+use crate::predictor::Predictor;
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::rng::Rng;
+
+/// Candidate segment counts, bounded to keep training cheap.
+pub const DEFAULT_CANDIDATES: &[usize] = &[1, 2, 3, 4, 6, 8];
+/// CV folds.
+const FOLDS: usize = 3;
+
+pub struct KsPlusAuto {
+    capacity: f64,
+    candidates: Vec<usize>,
+    inner: KsPlus,
+    chosen_k: usize,
+    /// CV wastage per candidate, for inspection/ablation.
+    pub cv_wastage: Vec<(usize, f64)>,
+}
+
+impl KsPlusAuto {
+    pub fn new(capacity: f64) -> Self {
+        Self::with_candidates(capacity, DEFAULT_CANDIDATES.to_vec())
+    }
+
+    pub fn with_candidates(capacity: f64, candidates: Vec<usize>) -> Self {
+        assert!(!candidates.is_empty());
+        let k0 = candidates[0];
+        KsPlusAuto {
+            capacity,
+            candidates,
+            inner: KsPlus::new(k0, capacity),
+            chosen_k: k0,
+            cv_wastage: Vec::new(),
+        }
+    }
+
+    pub fn chosen_k(&self) -> usize {
+        self.chosen_k
+    }
+
+    /// CV wastage of candidate k on `history`.
+    fn cv_cost(&self, k: usize, history: &[Execution]) -> f64 {
+        let n = history.len();
+        if n < 4 {
+            // Too little data for CV; prefer the smallest k.
+            return f64::INFINITY;
+        }
+        // Deterministic fold assignment (seeded by k-independent hash of
+        // n so every candidate sees identical folds).
+        let mut idx: Vec<usize> = (0..n).collect();
+        Rng::new(0xC5EED ^ n as u64).shuffle(&mut idx);
+        let mut total = 0.0;
+        for fold in 0..FOLDS {
+            let test_idx: Vec<usize> =
+                idx.iter().copied().filter(|i| i % FOLDS == fold).collect();
+            let train_set: Vec<Execution> = idx
+                .iter()
+                .filter(|i| *i % FOLDS != fold)
+                .map(|&i| history[i].clone())
+                .collect();
+            if train_set.is_empty() || test_idx.is_empty() {
+                continue;
+            }
+            let mut p = KsPlus::new(k, self.capacity);
+            p.train(&train_set);
+            for &i in &test_idx {
+                let (o, _) = crate::sim::run_task(&p, &history[i], 6);
+                total += o.wastage_gbs;
+            }
+        }
+        total
+    }
+}
+
+impl Predictor for KsPlusAuto {
+    fn name(&self) -> &'static str {
+        "ksplus-auto"
+    }
+
+    fn train(&mut self, history: &[Execution]) {
+        self.cv_wastage.clear();
+        let mut best = (self.candidates[0], f64::INFINITY);
+        for &k in &self.candidates {
+            let cost = self.cv_cost(k, history);
+            self.cv_wastage.push((k, cost));
+            // Strictly-better keeps the smaller k on ties.
+            if cost < best.1 {
+                best = (k, cost);
+            }
+        }
+        // All-infinite (tiny history): fall back to a small fixed k.
+        self.chosen_k = if best.1.is_finite() { best.0 } else { 2 };
+        self.inner = KsPlus::new(self.chosen_k, self.capacity);
+        self.inner.train(history);
+    }
+
+    fn plan(&self, input_mb: f64) -> StepPlan {
+        self.inner.plan(input_mb)
+    }
+
+    fn on_failure(&self, prev: &StepPlan, fail_time: f64, attempt: usize) -> StepPlan {
+        self.inner.on_failure(prev, fail_time, attempt)
+    }
+
+    fn capacity(&self) -> f64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::eager_archetypes;
+
+    fn two_phase_exec(input: f64, rng: &mut Rng) -> Execution {
+        let d1 = ((input * 0.01) as usize).max(2);
+        let d2 = ((input * 0.003) as usize).max(1);
+        let mut s = vec![input * 0.0005; d1];
+        s.extend(vec![input * 0.001; d2]);
+        for v in s.iter_mut() {
+            *v *= 1.0 - 0.01 * rng.f64();
+        }
+        Execution::new("t", input, 1.0, s)
+    }
+
+    #[test]
+    fn selects_small_k_for_two_phase_task() {
+        let mut rng = Rng::new(1);
+        let hist: Vec<Execution> =
+            (0..30).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect();
+        let mut p = KsPlusAuto::new(128.0);
+        p.train(&hist);
+        // A clean two-plateau profile needs no more than ~4 segments.
+        assert!(
+            (2..=4).contains(&p.chosen_k()),
+            "chose k={} for a two-phase task",
+            p.chosen_k()
+        );
+        assert!(p.plan(5000.0).is_valid());
+    }
+
+    #[test]
+    fn flat_task_selects_k1_or_2() {
+        let mut rng = Rng::new(2);
+        let hist: Vec<Execution> = (0..24)
+            .map(|_| {
+                let input = rng.uniform(500.0, 2000.0);
+                let n = ((input * 0.02) as usize).max(3);
+                Execution::new("t", input, 1.0, vec![input * 0.001; n])
+            })
+            .collect();
+        let mut p = KsPlusAuto::new(128.0);
+        p.train(&hist);
+        assert!(p.chosen_k() <= 2, "flat task chose k={}", p.chosen_k());
+    }
+
+    #[test]
+    fn tiny_history_falls_back() {
+        let mut rng = Rng::new(3);
+        let hist = vec![two_phase_exec(3000.0, &mut rng)];
+        let mut p = KsPlusAuto::new(128.0);
+        p.train(&hist);
+        assert!(p.plan(3000.0).is_valid());
+        assert_eq!(p.chosen_k(), 2);
+    }
+
+    #[test]
+    fn cv_wastage_recorded_per_candidate() {
+        let mut rng = Rng::new(4);
+        let hist: Vec<Execution> =
+            (0..20).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut p = KsPlusAuto::new(128.0);
+        p.train(&hist);
+        assert_eq!(p.cv_wastage.len(), DEFAULT_CANDIDATES.len());
+        assert!(p.cv_wastage.iter().all(|(_, c)| c.is_finite()));
+    }
+
+    #[test]
+    fn auto_not_worse_than_bad_fixed_k_on_bwa() {
+        // On the bwa archetype, auto-k should beat a deliberately poor
+        // fixed choice (k=10: many boundaries, many timing failures).
+        let a = eager_archetypes().into_iter().find(|a| a.name == "bwa").unwrap();
+        let mut rng = Rng::new(5);
+        let hist: Vec<Execution> = (0..40).map(|_| a.generate(&mut rng, 200)).collect();
+        let test: Vec<Execution> = (0..25).map(|_| a.generate(&mut rng, 200)).collect();
+        let mut auto = KsPlusAuto::new(128.0);
+        auto.train(&hist);
+        let mut fixed = KsPlus::new(10, 128.0);
+        fixed.train(&hist);
+        let w = |p: &dyn Predictor| -> f64 {
+            test.iter().map(|e| crate::sim::run_task(p, e, 10).0.wastage_gbs).sum()
+        };
+        let wa = w(&auto);
+        let wf = w(&fixed);
+        assert!(wa <= wf * 1.15, "auto {wa:.0} much worse than fixed-10 {wf:.0}");
+    }
+
+    #[test]
+    fn retry_delegates_to_inner() {
+        let p = KsPlusAuto::new(128.0);
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        let retry = p.on_failure(&prev, 60.0, 1);
+        assert_eq!(retry.starts, vec![0.0, 60.0]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Predictors: KS+ and every baseline of the paper's evaluation, behind
+//! one trait.
+//!
+//! | name                  | allocation over time | retry strategy |
+//! |-----------------------|----------------------|----------------|
+//! | `ksplus`              | k variable segments  | rescale segment starts; +20 % last peak |
+//! | `ksegments-selective` | k equal segments     | offset only the failed segment |
+//! | `ksegments-partial`   | k equal segments     | offset failed segment and all after |
+//! | `tovar-ppm`           | flat peak            | allocate machine maximum |
+//! | `ppm-improved`        | flat peak            | double |
+//! | `witt-lr-mean`        | flat peak (LR+sigma) | double |
+//! | `witt-lr-max`         | flat peak (LR+max under-prediction) | double |
+//! | `default`             | flat developer limit | double |
+//!
+//! All predictors clamp to the node capacity (128 GB on the paper's
+//! testbed) and are trained per task type on that task's history only.
+
+pub mod ksegments;
+pub mod ksplus;
+pub mod ksplus_auto;
+pub mod regression;
+pub mod tovar;
+pub mod witt;
+
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+
+/// Node memory capacity of the paper's testbed, GB.
+pub const DEFAULT_CAPACITY_GB: f64 = 128.0;
+
+/// A memory predictor for a single task type.
+pub trait Predictor: Send {
+    /// Stable identifier used in reports and figures.
+    fn name(&self) -> &'static str;
+
+    /// Fit internal models from historical executions of this task.
+    fn train(&mut self, history: &[Execution]);
+
+    /// Allocation plan for a new execution with the given input size.
+    fn plan(&self, input_mb: f64) -> StepPlan;
+
+    /// Revised plan after an OOM at `fail_time` seconds into an attempt
+    /// running `prev`. `attempt` counts failures so far (1 = first).
+    fn on_failure(&self, prev: &StepPlan, fail_time: f64, attempt: usize) -> StepPlan;
+
+    /// Node capacity the predictor clamps to.
+    fn capacity(&self) -> f64 {
+        DEFAULT_CAPACITY_GB
+    }
+}
+
+/// Construct a predictor by report name. `k` applies to the segment
+/// methods; `capacity` to all.
+pub fn by_name(name: &str, k: usize, capacity: f64) -> Option<Box<dyn Predictor>> {
+    match name {
+        "ksplus" => Some(Box::new(ksplus::KsPlus::new(k, capacity))),
+        "ksplus-auto" => Some(Box::new(ksplus_auto::KsPlusAuto::new(capacity))),
+        "ksegments-selective" => Some(Box::new(ksegments::KSegments::new(
+            k,
+            capacity,
+            ksegments::RetryMode::Selective,
+        ))),
+        "ksegments-partial" => Some(Box::new(ksegments::KSegments::new(
+            k,
+            capacity,
+            ksegments::RetryMode::Partial,
+        ))),
+        "tovar-ppm" => Some(Box::new(tovar::TovarPpm::new(capacity, tovar::RetryMode::MachineMax))),
+        "ppm-improved" => Some(Box::new(tovar::TovarPpm::new(capacity, tovar::RetryMode::Double))),
+        "witt-lr-mean" => Some(Box::new(witt::WittLr::new(capacity, witt::Offset::MeanSigma))),
+        "witt-lr-max" => Some(Box::new(witt::WittLr::new(capacity, witt::Offset::MaxUnder))),
+        "default" => Some(Box::new(DefaultLimits::new(capacity))),
+        _ => None,
+    }
+}
+
+/// The method set of Fig 6 in paper order, plus our Witt extensions.
+pub fn paper_methods() -> Vec<&'static str> {
+    vec![
+        "ksplus",
+        "ksegments-selective",
+        "ksegments-partial",
+        "tovar-ppm",
+        "ppm-improved",
+        "default",
+    ]
+}
+
+pub fn all_methods() -> Vec<&'static str> {
+    let mut m = paper_methods();
+    m.extend(["witt-lr-mean", "witt-lr-max", "ksplus-auto"]);
+    m
+}
+
+/// Sanity baseline: the workflow developers' static task limits.
+///
+/// The limit is taken from the task archetype (like nf-core `process`
+/// labels); training only records the fallback peak in case no limit is
+/// registered. Retry doubles, as Nextflow's `errorStrategy = 'retry'`
+/// idiom does.
+pub struct DefaultLimits {
+    capacity: f64,
+    limit_gb: f64,
+}
+
+impl DefaultLimits {
+    pub fn new(capacity: f64) -> Self {
+        DefaultLimits { capacity, limit_gb: 4.0 }
+    }
+
+    pub fn with_limit(capacity: f64, limit_gb: f64) -> Self {
+        DefaultLimits { capacity, limit_gb }
+    }
+
+    /// Set the developer limit (called by the harness per task type).
+    pub fn set_limit(&mut self, limit_gb: f64) {
+        self.limit_gb = limit_gb;
+    }
+}
+
+impl Predictor for DefaultLimits {
+    fn name(&self) -> &'static str {
+        "default"
+    }
+
+    fn train(&mut self, history: &[Execution]) {
+        // Developers set limits a priori; nothing is learned. Keep a
+        // defensive fallback when no limit was registered: generous 2x
+        // max observed peak, the way a user would size it after one run.
+        if self.limit_gb <= 0.0 {
+            let max_peak = history.iter().map(|e| e.peak()).fold(0.0, f64::max);
+            self.limit_gb = (2.0 * max_peak).max(1.0);
+        }
+    }
+
+    fn plan(&self, _input_mb: f64) -> StepPlan {
+        StepPlan::flat(self.limit_gb.min(self.capacity))
+    }
+
+    fn on_failure(&self, prev: &StepPlan, _fail_time: f64, _attempt: usize) -> StepPlan {
+        StepPlan::flat((prev.peaks.last().unwrap() * 2.0).min(self.capacity))
+    }
+
+    fn capacity(&self) -> f64 {
+        self.capacity
+    }
+}
+
+/// Shared helper: clamp a plan to capacity and re-establish validity by
+/// merging segments whose starts collapsed.
+pub(crate) fn sanitize_plan(mut starts: Vec<f64>, mut peaks: Vec<f64>, capacity: f64) -> StepPlan {
+    debug_assert_eq!(starts.len(), peaks.len());
+    if starts.is_empty() {
+        return StepPlan::flat(capacity);
+    }
+    starts[0] = 0.0;
+    // Enforce monotone peaks and capacity clamp.
+    for i in 0..peaks.len() {
+        if i > 0 && peaks[i] < peaks[i - 1] {
+            peaks[i] = peaks[i - 1];
+        }
+        peaks[i] = peaks[i].min(capacity).max(1e-3);
+    }
+    // Merge segments with non-increasing starts (keep the later peak,
+    // which is >= by monotonicity).
+    let mut out_s = vec![starts[0]];
+    let mut out_p = vec![peaks[0]];
+    for i in 1..starts.len() {
+        if starts[i] <= *out_s.last().unwrap() + 1e-9 {
+            *out_p.last_mut().unwrap() = peaks[i].max(*out_p.last().unwrap());
+        } else if (peaks[i] - *out_p.last().unwrap()).abs() < 1e-12 {
+            // Equal peak: extending the previous segment, skip the split.
+            continue;
+        } else {
+            out_s.push(starts[i]);
+            out_p.push(peaks[i]);
+        }
+    }
+    StepPlan::new(out_s, out_p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn by_name_covers_all_methods() {
+        for m in all_methods() {
+            let p = by_name(m, 4, 128.0).unwrap_or_else(|| panic!("missing {m}"));
+            assert_eq!(p.name(), m);
+        }
+        assert!(by_name("nope", 4, 128.0).is_none());
+    }
+
+    #[test]
+    fn default_limits_plan_and_retry() {
+        let mut p = DefaultLimits::with_limit(128.0, 16.0);
+        p.train(&[]);
+        let plan = p.plan(1000.0);
+        assert_eq!(plan, StepPlan::flat(16.0));
+        let retry = p.on_failure(&plan, 5.0, 1);
+        assert_eq!(retry, StepPlan::flat(32.0));
+        // Doubling saturates at capacity.
+        let big = p.on_failure(&StepPlan::flat(100.0), 5.0, 2);
+        assert_eq!(big, StepPlan::flat(128.0));
+    }
+
+    #[test]
+    fn default_limits_fallback_from_history() {
+        let mut p = DefaultLimits::with_limit(128.0, 0.0);
+        let e = Execution::new("t", 1.0, 1.0, vec![1.0, 3.0]);
+        p.train(&[e]);
+        assert_eq!(p.plan(0.0), StepPlan::flat(6.0));
+    }
+
+    #[test]
+    fn sanitize_merges_collapsed_starts() {
+        let p = sanitize_plan(vec![0.0, 5.0, 5.0, 9.0], vec![1.0, 2.0, 3.0, 4.0], 128.0);
+        assert!(p.is_valid());
+        assert_eq!(p.starts, vec![0.0, 5.0, 9.0]);
+        assert_eq!(p.peaks, vec![1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sanitize_enforces_monotone_peaks() {
+        // Peak 2.0 is raised to 4.0, then merged with its equal-peak
+        // predecessor; allocation over time is the running max.
+        let p = sanitize_plan(vec![0.0, 5.0, 10.0], vec![4.0, 2.0, 8.0], 128.0);
+        assert!(p.is_valid());
+        assert_eq!(p.starts, vec![0.0, 10.0]);
+        assert_eq!(p.peaks, vec![4.0, 8.0]);
+        assert_eq!(p.alloc_at(7.0), 4.0);
+    }
+
+    #[test]
+    fn sanitize_clamps_capacity() {
+        let p = sanitize_plan(vec![0.0, 1.0], vec![100.0, 400.0], 128.0);
+        assert_eq!(p.peaks.last(), Some(&128.0));
+        assert!(p.is_valid());
+    }
+
+    #[test]
+    fn prop_sanitize_always_valid() {
+        run_prop("sanitize_valid", 300, |rng| {
+            let k = 1 + rng.below(8);
+            let mut starts = vec![0.0];
+            let mut peaks = vec![rng.uniform(0.1, 200.0)];
+            for _ in 1..k {
+                // Deliberately messy: may repeat starts, decrease peaks.
+                starts.push(starts.last().unwrap() + rng.uniform(0.0, 20.0));
+                peaks.push(rng.uniform(0.1, 200.0));
+            }
+            let p = sanitize_plan(starts, peaks, 128.0);
+            assert!(p.is_valid(), "invalid after sanitize: {p:?}");
+            assert!(p.peaks.iter().all(|&x| x <= 128.0));
+        });
+    }
+}

@@ -1,0 +1,92 @@
+//! Regression backend for the segment predictors.
+//!
+//! `FitEngine` abstracts where the batched OLS runs: `NativeFit` computes
+//! the closed form in-process (used by the offline experiment harness);
+//! the PJRT-backed engine in `runtime::PjrtFitEngine` executes the AOT
+//! Pallas kernel instead (used by the online coordinator). Both implement
+//! the *same* closed form — `runtime::tests` asserts parity.
+
+use crate::util::stats;
+
+/// One fitted affine model y = slope * x + intercept.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinModel {
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl LinModel {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+
+    pub fn fit(xs: &[f64], ys: &[f64]) -> LinModel {
+        let (slope, intercept) = stats::ols(xs, ys);
+        LinModel { slope, intercept }
+    }
+}
+
+/// A batch of independent OLS problems: each row is (xs, ys).
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT engine wraps thread-affine
+/// FFI handles; the coordinator owns its engine on one worker thread.
+pub trait FitEngine {
+    fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel>;
+}
+
+/// In-process closed-form OLS.
+#[derive(Debug, Default, Clone)]
+pub struct NativeFit;
+
+impl FitEngine for NativeFit {
+    fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+        rows.iter().map(|(xs, ys)| LinModel::fit(xs, ys)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn fit_exact_line() {
+        let xs = [1.0, 2.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| -0.5 * x + 3.0).collect();
+        let m = LinModel::fit(&xs, &ys);
+        assert!((m.slope + 0.5).abs() < 1e-9);
+        assert!((m.intercept - 3.0).abs() < 1e-9);
+        assert!((m.predict(10.0) + 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_matches_individual() {
+        let rows = vec![
+            (vec![1.0, 2.0, 3.0], vec![2.0, 4.0, 6.0]),
+            (vec![0.0, 1.0], vec![5.0, 5.0]),
+            (vec![7.0], vec![3.0]),
+        ];
+        let batch = NativeFit.fit_batch(&rows);
+        for (i, (xs, ys)) in rows.iter().enumerate() {
+            assert_eq!(batch[i], LinModel::fit(xs, ys));
+        }
+    }
+
+    #[test]
+    fn prop_fit_residuals_sum_to_zero() {
+        // OLS with intercept has zero mean residual.
+        run_prop("ols_residual_zero", 150, |rng| {
+            let n = 2 + rng.below(30);
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + rng.normal_ms(0.0, 5.0)).collect();
+            let m = LinModel::fit(&xs, &ys);
+            let mean_resid = xs
+                .iter()
+                .zip(&ys)
+                .map(|(x, y)| y - m.predict(*x))
+                .sum::<f64>()
+                / n as f64;
+            assert!(mean_resid.abs() < 1e-6, "mean residual {mean_resid}");
+        });
+    }
+}

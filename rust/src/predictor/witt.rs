@@ -1,0 +1,138 @@
+//! Witt et al. linear-regression peak predictors [14], [15]: peak memory
+//! as a linear function of input size plus an offset strategy, with a
+//! doubling retry. Implemented as extension baselines (related work).
+
+use crate::predictor::regression::LinModel;
+use crate::predictor::Predictor;
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Offset {
+    /// LR mean +- : add one standard deviation of the residuals.
+    MeanSigma,
+    /// LR max: add the largest observed underprediction.
+    MaxUnder,
+}
+
+pub struct WittLr {
+    capacity: f64,
+    offset_mode: Offset,
+    model: Option<LinModel>,
+    offset: f64,
+    fallback_peak: f64,
+}
+
+impl WittLr {
+    pub fn new(capacity: f64, offset_mode: Offset) -> Self {
+        WittLr { capacity, offset_mode, model: None, offset: 0.0, fallback_peak: 2.0 }
+    }
+}
+
+impl Predictor for WittLr {
+    fn name(&self) -> &'static str {
+        match self.offset_mode {
+            Offset::MeanSigma => "witt-lr-mean",
+            Offset::MaxUnder => "witt-lr-max",
+        }
+    }
+
+    fn train(&mut self, history: &[Execution]) {
+        if history.is_empty() {
+            self.model = None;
+            return;
+        }
+        let xs: Vec<f64> = history.iter().map(|e| e.input_mb).collect();
+        let ys: Vec<f64> = history.iter().map(|e| e.peak()).collect();
+        let m = LinModel::fit(&xs, &ys);
+        let resid = stats::residuals(&xs, &ys, m.slope, m.intercept);
+        self.offset = match self.offset_mode {
+            Offset::MeanSigma => stats::stddev(&resid),
+            // Largest underprediction: max positive residual (actual
+            // above prediction), zero if the model never underpredicts.
+            Offset::MaxUnder => resid.iter().cloned().fold(0.0, f64::max),
+        };
+        self.model = Some(m);
+        self.fallback_peak = ys.iter().cloned().fold(0.0, f64::max).max(0.1);
+    }
+
+    fn plan(&self, input_mb: f64) -> StepPlan {
+        let Some(m) = self.model else {
+            return StepPlan::flat(self.fallback_peak.min(self.capacity));
+        };
+        let peak = (m.predict(input_mb) + self.offset).max(1e-3);
+        StepPlan::flat(peak.min(self.capacity))
+    }
+
+    fn on_failure(&self, prev: &StepPlan, _fail_time: f64, _attempt: usize) -> StepPlan {
+        StepPlan::flat((prev.peaks.last().unwrap() * 2.0).min(self.capacity))
+    }
+
+    fn capacity(&self) -> f64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn hist(rng: &mut Rng, n: usize, noise: f64) -> Vec<Execution> {
+        (0..n)
+            .map(|_| {
+                let input = rng.uniform(1000.0, 9000.0);
+                let p = 0.001 * input + 1.0 + rng.normal_ms(0.0, noise);
+                Execution::new("t", input, 1.0, vec![p.max(0.1)])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_linear_relation() {
+        let mut rng = Rng::new(1);
+        let mut p = WittLr::new(128.0, Offset::MeanSigma);
+        p.train(&hist(&mut rng, 100, 0.0));
+        // noise-free: offset ~0, prediction ~exact
+        let plan = p.plan(5000.0);
+        assert!((plan.peaks[0] - 6.0).abs() < 0.1, "{:?}", plan.peaks);
+    }
+
+    #[test]
+    fn max_under_offset_covers_training_set() {
+        let mut rng = Rng::new(2);
+        let h = hist(&mut rng, 80, 0.4);
+        let mut p = WittLr::new(128.0, Offset::MaxUnder);
+        p.train(&h);
+        // By construction every training execution is covered.
+        for e in &h {
+            assert!(
+                p.plan(e.input_mb).peaks[0] + 1e-9 >= e.peak(),
+                "training execution not covered"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_sigma_offset_positive_with_noise() {
+        let mut rng = Rng::new(3);
+        let mut p = WittLr::new(128.0, Offset::MeanSigma);
+        p.train(&hist(&mut rng, 80, 0.5));
+        let noiseless_pred = 0.001 * 5000.0 + 1.0;
+        assert!(p.plan(5000.0).peaks[0] > noiseless_pred, "offset not applied");
+    }
+
+    #[test]
+    fn retry_doubles_and_clamps() {
+        let p = WittLr::new(128.0, Offset::MeanSigma);
+        assert_eq!(p.on_failure(&StepPlan::flat(5.0), 1.0, 1), StepPlan::flat(10.0));
+        assert_eq!(p.on_failure(&StepPlan::flat(90.0), 1.0, 1), StepPlan::flat(128.0));
+    }
+
+    #[test]
+    fn untrained_fallback_flat() {
+        let p = WittLr::new(128.0, Offset::MaxUnder);
+        assert_eq!(p.plan(100.0).k(), 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact inventory and bucket shapes.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Fit/fit_predict/wastage batch bucket.
+    pub fit_b: usize,
+    /// Observation-axis bucket.
+    pub fit_n: usize,
+    /// Predict batch bucket.
+    pub predict_b: usize,
+    /// Max plan segments for the plan_wastage artifact.
+    pub plan_k: usize,
+    /// Pallas batch block size (for roofline estimates, not execution).
+    pub block_b: usize,
+    /// (name, file) pairs.
+    pub entries: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let b = j.get("buckets").context("manifest missing 'buckets'")?;
+        let get = |k: &str| -> Result<usize> {
+            b.get(k).and_then(Json::as_usize).with_context(|| format!("bucket '{k}'"))
+        };
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'entries'")?
+            .iter()
+            .map(|e| -> Result<(String, String)> {
+                let name = e.get("name").and_then(Json::as_str).context("entry name")?;
+                let file = e.get("file").and_then(Json::as_str).context("entry file")?;
+                Ok((name.to_string(), file.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            fit_b: get("fit_b")?,
+            fit_n: get("fit_n")?,
+            predict_b: get("predict_b")?,
+            // Optional for manifests written before the plan_wastage
+            // artifact existed.
+            plan_k: b.get("plan_k").and_then(Json::as_usize).unwrap_or(8),
+            block_b: j.get("block_b").and_then(Json::as_usize).unwrap_or(128),
+            entries,
+        })
+    }
+
+    /// File name of the entry whose name starts with `prefix` and is the
+    /// exact kernel kind (`fit` must not match `fit_predict`). With
+    /// multiple observation buckets, returns the largest.
+    pub fn entry_file(&self, kind: &str) -> Result<String> {
+        let files = self.entry_files(kind);
+        files
+            .into_iter()
+            .max_by_key(|(n, _)| *n)
+            .map(|(_, f)| f)
+            .with_context(|| format!("no artifact entry of kind '{kind}'"))
+    }
+
+    /// All (observation-bucket, file) variants of a kernel kind, sorted
+    /// ascending by bucket size. Kinds without an `_n{N}` suffix report
+    /// bucket 0.
+    pub fn entry_files(&self, kind: &str) -> Vec<(usize, String)> {
+        let mut out = Vec::new();
+        for (name, file) in &self.entries {
+            let rest = match name.strip_prefix(kind) {
+                Some(r) => r,
+                None => continue,
+            };
+            // After the kind, only the bucket suffix may follow.
+            if !rest.starts_with("_b") {
+                continue;
+            }
+            let n = rest
+                .split("_n")
+                .nth(1)
+                .and_then(|s| s.split('_').next())
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(0);
+            out.push((n, file.clone()));
+        }
+        out.sort_by_key(|(n, _)| *n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "buckets": {"fit_b": 256, "fit_n": 512, "predict_b": 1024, "plan_k": 8},
+      "block_b": 128,
+      "entries": [
+        {"name": "fit_b256_n512", "file": "fit_b256_n512.hlo.txt"},
+        {"name": "predict_b1024", "file": "predict_b1024.hlo.txt"},
+        {"name": "fit_predict_b256_n512", "file": "fit_predict_b256_n512.hlo.txt"},
+        {"name": "wastage_b256_n512", "file": "wastage_b256_n512.hlo.txt"},
+        {"name": "plan_wastage_b256_n512_k8", "file": "plan_wastage_b256_n512_k8.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_buckets_and_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!((m.fit_b, m.fit_n, m.predict_b, m.block_b), (256, 512, 1024, 128));
+        assert_eq!(m.plan_k, 8);
+        assert_eq!(m.entries.len(), 5);
+    }
+
+    #[test]
+    fn plan_k_defaults_when_missing() {
+        let old = r#"{"buckets": {"fit_b": 1, "fit_n": 1, "predict_b": 1}, "entries": []}"#;
+        let m = Manifest::parse(old).unwrap();
+        assert_eq!(m.plan_k, 8);
+    }
+
+    #[test]
+    fn entry_kind_disambiguation() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entry_file("fit").unwrap(), "fit_b256_n512.hlo.txt");
+        assert_eq!(m.entry_file("fit_predict").unwrap(), "fit_predict_b256_n512.hlo.txt");
+        assert_eq!(m.entry_file("wastage").unwrap(), "wastage_b256_n512.hlo.txt");
+        assert!(m.entry_file("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_buckets() {
+        assert!(Manifest::parse(r#"{"entries": []}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        let p = dir.join("manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.fit_b >= 1 && m.fit_n >= 1 && m.predict_b >= 1);
+            assert!(m.entry_file("fit").is_ok());
+        }
+    }
+}

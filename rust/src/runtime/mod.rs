@@ -1,0 +1,553 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! This is the only place Python output is consumed; after `make
+//! artifacts` the binary is self-contained. Interchange is HLO *text*
+//! (not serialized protos): jax >= 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+//!
+//! Entry points mirror the L2 model:
+//!   - `fit_batch`      -> fit_b{B}_n{N}.hlo.txt
+//!   - `predict_batch`  -> predict_b{B}.hlo.txt
+//!   - `fit_predict`    -> fit_predict_b{B}_n{N}.hlo.txt (fused hot path)
+//!   - `wastage_batch`  -> wastage_b{B}_n{N}.hlo.txt
+//!
+//! Inputs are padded/masked to the bucket shapes and chunked when they
+//! exceed the batch bucket; results are unpadded before returning.
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::predictor::regression::{FitEngine, LinModel};
+use manifest::Manifest;
+
+/// A loaded PJRT executable plus its entry metadata.
+struct Entry {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed numeric runtime.
+///
+/// `fit`/`fit_predict` carry one executable per observation bucket
+/// (ascending); calls pick the smallest bucket that holds the longest
+/// row, so typical training histories (< 64 executions) run on the
+/// small artifact at ~1/8 the cost of the 512-wide one (§Perf).
+pub struct Runtime {
+    manifest: Manifest,
+    fit: Vec<(usize, Entry)>,
+    predict: Entry,
+    fit_predict: Vec<(usize, Entry)>,
+    wastage: Entry,
+    plan_wastage: Entry,
+}
+
+/// Resolve the artifacts directory: `KSPLUS_ARTIFACTS` env var, else
+/// `<manifest dir>/artifacts`, else `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("KSPLUS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let candidate = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if candidate.exists() {
+        return candidate;
+    }
+    PathBuf::from("artifacts")
+}
+
+impl Runtime {
+    /// Load and compile all artifacts. One PJRT client, one compiled
+    /// executable per model — compile happens once at startup, never on
+    /// the request path.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |file: &str| -> Result<Entry> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {file}"))?;
+            Ok(Entry { exe })
+        };
+        let compile_buckets = |kind: &str| -> Result<Vec<(usize, Entry)>> {
+            let files = manifest.entry_files(kind);
+            anyhow::ensure!(!files.is_empty(), "no artifact entry of kind '{kind}'");
+            files.into_iter().map(|(n, f)| Ok((n, compile(&f)?))).collect()
+        };
+        Ok(Runtime {
+            fit: compile_buckets("fit")?,
+            predict: compile(&manifest.entry_file("predict")?)?,
+            fit_predict: compile_buckets("fit_predict")?,
+            wastage: compile(&manifest.entry_file("wastage")?)?,
+            plan_wastage: compile(&manifest.entry_file("plan_wastage")?)?,
+            manifest,
+        })
+    }
+
+    /// Convenience: load from the default location.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    // ---- shape helpers ---------------------------------------------------
+
+    fn lit2(data: &[f32], b: usize, n: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[b as i64, n as i64])?)
+    }
+
+    fn lit1(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// Pad `rows` of (xs, ys) into x/y/mask buckets of shape [b, n].
+    fn pack_rows(
+        rows: &[(Vec<f64>, Vec<f64>)],
+        b: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut x = vec![0f32; b * n];
+        let mut y = vec![0f32; b * n];
+        let mut m = vec![0f32; b * n];
+        for (i, (xs, ys)) in rows.iter().enumerate() {
+            let len = xs.len().min(n);
+            for j in 0..len {
+                x[i * n + j] = xs[j] as f32;
+                y[i * n + j] = ys[j] as f32;
+                m[i * n + j] = 1.0;
+            }
+        }
+        (x, y, m)
+    }
+
+    fn exec1(entry: &Entry, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = entry.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result)
+    }
+
+    /// Smallest observation bucket holding `max_obs` (else the largest;
+    /// longer rows are truncated by `pack_rows`).
+    fn pick_bucket<'a>(buckets: &'a [(usize, Entry)], max_obs: usize) -> (usize, &'a Entry) {
+        for (n, e) in buckets {
+            if *n >= max_obs {
+                return (*n, e);
+            }
+        }
+        let (n, e) = buckets.last().expect("no buckets");
+        (*n, e)
+    }
+
+    // ---- public ops ------------------------------------------------------
+
+    /// Batched masked OLS on the PJRT device. Chunks beyond the bucket;
+    /// per chunk, runs on the smallest observation bucket that fits.
+    pub fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Result<Vec<LinModel>> {
+        let b = self.manifest.fit_b;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let max_obs = chunk.iter().map(|(xs, _)| xs.len()).max().unwrap_or(0);
+            let (n, entry) = Self::pick_bucket(&self.fit, max_obs);
+            let (x, y, m) = Self::pack_rows(chunk, b, n);
+            let lits = [
+                Self::lit2(&x, b, n)?,
+                Self::lit2(&y, b, n)?,
+                Self::lit2(&m, b, n)?,
+            ];
+            let coef = Self::exec1(entry, &lits)?.to_tuple1()?;
+            let v = coef.to_vec::<f32>()?;
+            if v.len() != b * 2 {
+                bail!("fit artifact returned {} values, want {}", v.len(), b * 2);
+            }
+            for i in 0..chunk.len() {
+                out.push(LinModel { slope: v[i * 2] as f64, intercept: v[i * 2 + 1] as f64 });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Batched affine predict with per-row safety scale.
+    pub fn predict_batch(
+        &self,
+        models: &[LinModel],
+        xq: &[f64],
+        scale: &[f64],
+    ) -> Result<Vec<f64>> {
+        assert_eq!(models.len(), xq.len());
+        assert_eq!(models.len(), scale.len());
+        let b = self.manifest.predict_b;
+        let mut out = Vec::with_capacity(xq.len());
+        let idx: Vec<usize> = (0..models.len()).collect();
+        for chunk in idx.chunks(b) {
+            let mut coef = vec![0f32; b * 2];
+            let mut x = vec![0f32; b];
+            let mut s = vec![0f32; b];
+            for (i, &r) in chunk.iter().enumerate() {
+                coef[i * 2] = models[r].slope as f32;
+                coef[i * 2 + 1] = models[r].intercept as f32;
+                x[i] = xq[r] as f32;
+                s[i] = scale[r] as f32;
+            }
+            let lits = [Self::lit2(&coef, b, 2)?, Self::lit1(&x), Self::lit1(&s)];
+            let y = Self::exec1(&self.predict, &lits)?.to_tuple1()?;
+            let v = y.to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                out.push(v[i] as f64);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fused fit + predict: one device round trip per bucket. Returns
+    /// (predictions, fitted models).
+    pub fn fit_predict(
+        &self,
+        rows: &[(Vec<f64>, Vec<f64>)],
+        xq: &[f64],
+        scale: &[f64],
+    ) -> Result<(Vec<f64>, Vec<LinModel>)> {
+        assert_eq!(rows.len(), xq.len());
+        assert_eq!(rows.len(), scale.len());
+        let b = self.manifest.fit_b;
+        let mut preds = Vec::with_capacity(rows.len());
+        let mut models = Vec::with_capacity(rows.len());
+        let mut offset = 0usize;
+        for chunk in rows.chunks(b) {
+            let max_obs = chunk.iter().map(|(xs, _)| xs.len()).max().unwrap_or(0);
+            let (n, entry) = Self::pick_bucket(&self.fit_predict, max_obs);
+            let (x, y, m) = Self::pack_rows(chunk, b, n);
+            let mut q = vec![0f32; b];
+            let mut s = vec![0f32; b];
+            for i in 0..chunk.len() {
+                q[i] = xq[offset + i] as f32;
+                s[i] = scale[offset + i] as f32;
+            }
+            let lits = [
+                Self::lit2(&x, b, n)?,
+                Self::lit2(&y, b, n)?,
+                Self::lit2(&m, b, n)?,
+                Self::lit1(&q),
+                Self::lit1(&s),
+            ];
+            let (yhat, coef) = Self::exec1(entry, &lits)?.to_tuple2()?;
+            let yv = yhat.to_vec::<f32>()?;
+            let cv = coef.to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                preds.push(yv[i] as f64);
+                models.push(LinModel {
+                    slope: cv[i * 2] as f64,
+                    intercept: cv[i * 2 + 1] as f64,
+                });
+            }
+            offset += chunk.len();
+        }
+        Ok((preds, models))
+    }
+
+    /// Batched plan-vs-trace wastage in GB*s: rows of
+    /// (alloc samples, used samples, dt).
+    pub fn wastage_batch(&self, rows: &[(Vec<f64>, Vec<f64>, f64)]) -> Result<Vec<f64>> {
+        let (b, n) = (self.manifest.fit_b, self.manifest.fit_n);
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut alloc = vec![0f32; b * n];
+            let mut used = vec![0f32; b * n];
+            let mut m = vec![0f32; b * n];
+            let mut dt = vec![0f32; b];
+            for (i, (a, u, d)) in chunk.iter().enumerate() {
+                let len = a.len().min(n);
+                for j in 0..len {
+                    alloc[i * n + j] = a[j] as f32;
+                    used[i * n + j] = u[j] as f32;
+                    m[i * n + j] = 1.0;
+                }
+                dt[i] = *d as f32;
+            }
+            let lits = [
+                Self::lit2(&alloc, b, n)?,
+                Self::lit2(&used, b, n)?,
+                Self::lit2(&m, b, n)?,
+                Self::lit1(&dt),
+            ];
+            let w = Self::exec1(&self.wastage, &lits)?.to_tuple1()?;
+            let v = w.to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                out.push(v[i] as f64);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Runtime {
+    /// Batched step-plan scoring: wastage of `plan` against the usage
+    /// trace, per row, without materialising the allocation host-side.
+    /// Plans with more than `manifest.plan_k` segments are rejected.
+    pub fn plan_wastage_batch(
+        &self,
+        rows: &[(crate::segments::StepPlan, Vec<f64>, f64)],
+    ) -> Result<Vec<f64>> {
+        let (b, n, k) = (self.manifest.fit_b, self.manifest.fit_n, self.manifest.plan_k);
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut starts = vec![0f32; b * k];
+            let mut peaks = vec![0f32; b * k];
+            let mut used = vec![0f32; b * n];
+            let mut m = vec![0f32; b * n];
+            let mut dt = vec![0f32; b];
+            for (i, (plan, u, d)) in chunk.iter().enumerate() {
+                if plan.k() > k {
+                    bail!("plan has {} segments, artifact supports {k}", plan.k());
+                }
+                for j in 0..k {
+                    // Pad by repeating the last segment.
+                    let src = j.min(plan.k() - 1);
+                    starts[i * k + j] = plan.starts[src] as f32;
+                    peaks[i * k + j] = plan.peaks[src] as f32;
+                }
+                let len = u.len().min(n);
+                for j in 0..len {
+                    used[i * n + j] = u[j] as f32;
+                    m[i * n + j] = 1.0;
+                }
+                dt[i] = *d as f32;
+            }
+            let lits = [
+                Self::lit2(&starts, b, k)?,
+                Self::lit2(&peaks, b, k)?,
+                Self::lit2(&used, b, n)?,
+                Self::lit2(&m, b, n)?,
+                Self::lit1(&dt),
+            ];
+            let w = Self::exec1(&self.plan_wastage, &lits)?.to_tuple1()?;
+            let v = w.to_vec::<f32>()?;
+            for i in 0..chunk.len() {
+                out.push(v[i] as f64);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `FitEngine` adapter so predictors can train on the PJRT path.
+/// `Rc`, not `Arc`: the PJRT handles are thread-affine.
+pub struct PjrtFitEngine(pub std::rc::Rc<Runtime>);
+
+impl FitEngine for PjrtFitEngine {
+    fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+        self.0.fit_batch(rows).expect("PJRT fit failed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::regression::NativeFit;
+    use crate::util::rng::Rng;
+
+    // PJRT handles are thread-affine, so each test loads its own
+    // runtime (compile cost is small on the CPU client).
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    fn rand_rows(rng: &mut Rng, count: usize, max_n: usize) -> Vec<(Vec<f64>, Vec<f64>)> {
+        (0..count)
+            .map(|_| {
+                let n = 1 + rng.below(max_n);
+                let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1000.0)).collect();
+                let ys: Vec<f64> =
+                    xs.iter().map(|x| 0.003 * x + 2.0 + rng.normal_ms(0.0, 0.3)).collect();
+                (xs, ys)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fit_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(1);
+        let rows = rand_rows(&mut rng, 40, 100);
+        let pjrt = rt.fit_batch(&rows).unwrap();
+        let native = NativeFit.fit_batch(&rows);
+        for (p, n) in pjrt.iter().zip(&native) {
+            assert!((p.slope - n.slope).abs() < 1e-3, "{p:?} vs {n:?}");
+            assert!((p.intercept - n.intercept).abs() < 5e-2, "{p:?} vs {n:?}");
+        }
+    }
+
+    #[test]
+    fn fit_chunks_beyond_bucket() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(2);
+        let b = rt.manifest().fit_b;
+        let rows = rand_rows(&mut rng, b + 17, 20);
+        let pjrt = rt.fit_batch(&rows).unwrap();
+        assert_eq!(pjrt.len(), b + 17);
+        let native = NativeFit.fit_batch(&rows);
+        for (p, n) in pjrt.iter().zip(&native) {
+            assert!((p.slope - n.slope).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn predict_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(3);
+        let models: Vec<LinModel> = (0..50)
+            .map(|_| LinModel { slope: rng.uniform(-2.0, 2.0), intercept: rng.uniform(-5.0, 5.0) })
+            .collect();
+        let xq: Vec<f64> = (0..50).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let scale: Vec<f64> =
+            (0..50).map(|_| if rng.below(2) == 0 { 1.1 } else { 0.85 }).collect();
+        let got = rt.predict_batch(&models, &xq, &scale).unwrap();
+        for i in 0..50 {
+            let want = (models[i].predict(xq[i]) * scale[i]).max(0.0);
+            assert!((got[i] - want).abs() < 1e-3, "row {i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn fused_matches_two_step() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(4);
+        let rows = rand_rows(&mut rng, 30, 60);
+        let xq: Vec<f64> = (0..30).map(|_| rng.uniform(0.0, 1000.0)).collect();
+        let scale = vec![1.1; 30];
+        let (preds, models) = rt.fit_predict(&rows, &xq, &scale).unwrap();
+        let models2 = rt.fit_batch(&rows).unwrap();
+        let preds2 = rt.predict_batch(&models2, &xq, &scale).unwrap();
+        for i in 0..30 {
+            assert!((preds[i] - preds2[i]).abs() < 2e-2, "{} vs {}", preds[i], preds2[i]);
+            assert!((models[i].slope - models2[i].slope).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn wastage_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Rng::new(5);
+        let rows: Vec<(Vec<f64>, Vec<f64>, f64)> = (0..20)
+            .map(|_| {
+                let n = 1 + rng.below(200);
+                let alloc: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 32.0)).collect();
+                let used: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 32.0)).collect();
+                (alloc, used, rng.uniform(0.2, 10.0))
+            })
+            .collect();
+        let got = rt.wastage_batch(&rows).unwrap();
+        for (i, (a, u, dt)) in rows.iter().enumerate() {
+            let want: f64 =
+                a.iter().zip(u).map(|(x, y)| (x - y).max(0.0)).sum::<f64>() * dt;
+            let tol = want.abs().max(1.0) * 1e-4;
+            assert!((got[i] - want).abs() < tol, "row {i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn plan_wastage_matches_host_side() {
+        let Some(rt) = runtime() else { return };
+        use crate::segments::StepPlan;
+        let mut rng = Rng::new(9);
+        let rows: Vec<(StepPlan, Vec<f64>, f64)> = (0..30)
+            .map(|_| {
+                let segs = 1 + rng.below(rt.manifest().plan_k);
+                let mut starts = vec![0.0];
+                let mut peaks = vec![rng.uniform(0.5, 4.0)];
+                for _ in 1..segs {
+                    starts.push(starts.last().unwrap() + rng.uniform(1.0, 30.0));
+                    peaks.push(peaks.last().unwrap() + rng.uniform(0.0, 4.0));
+                }
+                let plan = StepPlan::new(starts, peaks);
+                let n = 1 + rng.below(300);
+                let dt = rng.uniform(0.2, 4.0);
+                let used: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 12.0)).collect();
+                (plan, used, dt)
+            })
+            .collect();
+        let got = rt.plan_wastage_batch(&rows).unwrap();
+        for (i, (plan, used, dt)) in rows.iter().enumerate() {
+            let e = crate::trace::Execution::new("t", 1.0, *dt, used.clone());
+            let want = plan.wastage_gbs(&e);
+            let tol = want.abs().max(1.0) * 1e-3;
+            assert!((got[i] - want).abs() < tol, "row {i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn plan_wastage_rejects_oversized_plans() {
+        let Some(rt) = runtime() else { return };
+        use crate::segments::StepPlan;
+        let k = rt.manifest().plan_k;
+        let starts: Vec<f64> = (0..=k).map(|i| i as f64).collect();
+        let peaks: Vec<f64> = (1..=k + 1).map(|i| i as f64).collect();
+        let plan = StepPlan::new(starts, peaks);
+        assert!(rt.plan_wastage_batch(&[(plan, vec![1.0], 1.0)]).is_err());
+    }
+
+    #[test]
+    fn degenerate_rows_handled() {
+        let Some(rt) = runtime() else { return };
+        // Empty, single-point, constant-x rows.
+        let rows = vec![
+            (vec![], vec![]),
+            (vec![4.0], vec![12.0]),
+            (vec![3.0, 3.0, 3.0], vec![1.0, 2.0, 3.0]),
+        ];
+        let got = rt.fit_batch(&rows).unwrap();
+        assert_eq!(got[0], LinModel { slope: 0.0, intercept: 0.0 });
+        assert!((got[1].intercept - 12.0).abs() < 1e-4);
+        assert!(got[1].slope.abs() < 1e-6);
+        assert!(got[2].slope.abs() < 1e-6);
+        assert!((got[2].intercept - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pjrt_engine_trains_ksplus_like_native() {
+        let Some(rt) = runtime() else { return };
+        use crate::predictor::ksplus::KsPlus;
+        use crate::predictor::Predictor;
+        use crate::trace::Execution;
+        let mut rng = Rng::new(6);
+        let hist: Vec<Execution> = (0..25)
+            .map(|_| {
+                let input = rng.uniform(1000.0, 9000.0);
+                let n = ((input * 0.01) as usize).max(4);
+                let half = n / 2;
+                let mut s = vec![input * 0.0004; half];
+                s.extend(vec![input * 0.0009; n - half]);
+                Execution::new("t", input, 1.0, s)
+            })
+            .collect();
+        let mut native = KsPlus::new(3, 128.0);
+        native.train(&hist);
+        let mut viapjrt = KsPlus::new(3, 128.0);
+        struct Borrowed<'a>(&'a Runtime);
+        impl FitEngine for Borrowed<'_> {
+            fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+                self.0.fit_batch(rows).unwrap()
+            }
+        }
+        viapjrt.train_with_engine(&hist, &Borrowed(&rt));
+        let a = native.plan(5000.0);
+        let b = viapjrt.plan(5000.0);
+        assert_eq!(a.k(), b.k());
+        for i in 0..a.k() {
+            assert!((a.starts[i] - b.starts[i]).abs() < 0.5, "{a:?} vs {b:?}");
+            assert!((a.peaks[i] - b.peaks[i]).abs() < 0.05, "{a:?} vs {b:?}");
+        }
+    }
+}

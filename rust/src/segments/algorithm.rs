@@ -1,0 +1,364 @@
+//! Algorithm 1: greedy variable-size segmentation of one memory series,
+//! plus an exact O(n^2 k) DP used as an ablation baseline.
+//!
+//! Step 1 builds the minimal *monotone envelope* of the series: scanning
+//! front to back, every sample that does not exceed the current segment's
+//! peak merges into it; a larger sample opens a new segment ("merge every
+//! segment with its predecessor if its peak is smaller than the
+//! predecessor's"). The result is the running-max step function — the
+//! tightest monotonically increasing upper bound of the series.
+//!
+//! Step 2 greedily merges adjacent segments until only `k` remain, always
+//! removing the merge with the smallest introduced error
+//! `e_i = (P_{i+1} - P_i) * S_i` (Eq. 1): merging segment `i` into its
+//! successor re-allocates `S_i` samples at the higher peak `P_{i+1}`.
+
+use crate::segments::StepPlan;
+
+/// Segmentation result in sample units: `sizes[i]` samples at `peaks[i]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segmentation {
+    pub sizes: Vec<usize>,
+    pub peaks: Vec<f64>,
+}
+
+impl Segmentation {
+    /// Convert to a time-domain plan given the sampling interval.
+    pub fn to_plan(&self, dt: f64) -> StepPlan {
+        let mut starts = Vec::with_capacity(self.sizes.len());
+        let mut acc = 0usize;
+        for &s in &self.sizes {
+            starts.push(acc as f64 * dt);
+            acc += s;
+        }
+        StepPlan::new(starts, self.peaks.clone())
+    }
+
+    /// Segment start *offsets* in samples.
+    pub fn start_offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.sizes.len());
+        let mut acc = 0;
+        for &s in &self.sizes {
+            out.push(acc);
+            acc += s;
+        }
+        out
+    }
+
+    /// Total extra GB*samples this segmentation allocates above the
+    /// monotone envelope of `samples`.
+    pub fn envelope_error(&self, samples: &[f64]) -> f64 {
+        let env = monotone_envelope(samples);
+        let mut err = 0.0;
+        let mut idx = 0usize;
+        for (seg, &size) in self.sizes.iter().enumerate() {
+            for _ in 0..size {
+                err += self.peaks[seg] - env[idx];
+                idx += 1;
+            }
+        }
+        err
+    }
+}
+
+/// Running-max envelope of a series.
+pub fn monotone_envelope(samples: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(samples.len());
+    let mut m = f64::NEG_INFINITY;
+    for &s in samples {
+        m = m.max(s);
+        out.push(m);
+    }
+    out
+}
+
+/// Algorithm 1 (paper): greedy `k`-segmentation of a memory series.
+///
+/// Returns fewer than `k` segments when the envelope has fewer steps.
+/// Panics on an empty series.
+pub fn get_segments(samples: &[f64], k: usize) -> Segmentation {
+    assert!(!samples.is_empty(), "cannot segment an empty series");
+    assert!(k >= 1);
+    // Step 1: monotone envelope as (size, peak) runs.
+    let mut sizes: Vec<usize> = vec![1];
+    let mut peaks: Vec<f64> = vec![samples[0]];
+    for &m in &samples[1..] {
+        if m <= *peaks.last().unwrap() {
+            *sizes.last_mut().unwrap() += 1;
+        } else {
+            sizes.push(1);
+            peaks.push(m);
+        }
+    }
+    // Step 2: greedy merges, smallest e_i = (P_{i+1} - P_i) * S_i first.
+    while peaks.len() > k {
+        let mut best = 0usize;
+        let mut best_e = f64::INFINITY;
+        for i in 0..peaks.len() - 1 {
+            let e = (peaks[i + 1] - peaks[i]) * sizes[i] as f64;
+            if e < best_e {
+                best_e = e;
+                best = i;
+            }
+        }
+        sizes[best + 1] += sizes[best];
+        sizes.remove(best);
+        peaks.remove(best);
+    }
+    Segmentation { sizes, peaks }
+}
+
+/// Exact DP segmentation minimising total over-allocation above the
+/// monotone envelope with at most `k` segments. O(n^2 k) — used only by
+/// the greedy-vs-optimal ablation (DESIGN.md design-choice bench), not on
+/// any hot path.
+pub fn optimal_segments(samples: &[f64], k: usize) -> Segmentation {
+    assert!(!samples.is_empty());
+    assert!(k >= 1);
+    let env = monotone_envelope(samples);
+    let n = env.len();
+    let k = k.min(n);
+    // Collapse equal runs first: segment boundaries only make sense at
+    // envelope steps.
+    let mut run_sizes: Vec<usize> = vec![1];
+    let mut run_peaks: Vec<f64> = vec![env[0]];
+    for &v in &env[1..] {
+        if v == *run_peaks.last().unwrap() {
+            *run_sizes.last_mut().unwrap() += 1;
+        } else {
+            run_sizes.push(1);
+            run_peaks.push(v);
+        }
+    }
+    let m = run_peaks.len();
+    let k = k.min(m);
+    // cost(a, b): runs a..=b as one segment at peak run_peaks[b].
+    let mut prefix_gbsamples = vec![0.0f64; m + 1]; // sum(size*peak)
+    let mut prefix_sizes = vec![0usize; m + 1];
+    for i in 0..m {
+        prefix_gbsamples[i + 1] = prefix_gbsamples[i] + run_sizes[i] as f64 * run_peaks[i];
+        prefix_sizes[i + 1] = prefix_sizes[i] + run_sizes[i];
+    }
+    let cost = |a: usize, b: usize| -> f64 {
+        let sz = (prefix_sizes[b + 1] - prefix_sizes[a]) as f64;
+        sz * run_peaks[b] - (prefix_gbsamples[b + 1] - prefix_gbsamples[a])
+    };
+    // dp[j][b] = min cost covering runs 0..=b with j+1 segments.
+    let mut dp = vec![vec![f64::INFINITY; m]; k];
+    let mut arg = vec![vec![0usize; m]; k];
+    for b in 0..m {
+        dp[0][b] = cost(0, b);
+    }
+    for j in 1..k {
+        for b in j..m {
+            for a in j..=b {
+                let c = dp[j - 1][a - 1] + cost(a, b);
+                if c < dp[j][b] {
+                    dp[j][b] = c;
+                    arg[j][b] = a;
+                }
+            }
+        }
+    }
+    // Pick the best segment count <= k (more segments never hurt).
+    let mut best_j = 0;
+    for j in 0..k {
+        if dp[j][m - 1] < dp[best_j][m - 1] - 1e-15 {
+            best_j = j;
+        }
+    }
+    // Backtrack.
+    let mut bounds = Vec::new();
+    let mut b = m - 1;
+    let mut j = best_j;
+    loop {
+        let a = if j == 0 { 0 } else { arg[j][b] };
+        bounds.push((a, b));
+        if j == 0 {
+            break;
+        }
+        b = a - 1;
+        j -= 1;
+    }
+    bounds.reverse();
+    let sizes = bounds
+        .iter()
+        .map(|&(a, b)| prefix_sizes[b + 1] - prefix_sizes[a])
+        .collect();
+    let peaks = bounds.iter().map(|&(_, b)| run_peaks[b]).collect();
+    Segmentation { sizes, peaks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn envelope_is_running_max() {
+        assert_eq!(
+            monotone_envelope(&[1.0, 3.0, 2.0, 5.0, 4.0]),
+            vec![1.0, 3.0, 3.0, 5.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn bwa_like_two_segments() {
+        // Fig 2: low plateau then high plateau -> two variable segments.
+        let mut s = vec![5.0; 80];
+        s.extend(vec![10.5; 20]);
+        let seg = get_segments(&s, 2);
+        assert_eq!(seg.peaks, vec![5.0, 10.5]);
+        assert_eq!(seg.sizes, vec![80, 20]);
+    }
+
+    #[test]
+    fn k_one_is_flat_peak() {
+        let s = [1.0, 7.0, 3.0, 2.0];
+        let seg = get_segments(&s, 1);
+        assert_eq!(seg.peaks, vec![7.0]);
+        assert_eq!(seg.sizes, vec![4]);
+    }
+
+    #[test]
+    fn fewer_steps_than_k() {
+        let s = [2.0, 2.0, 2.0];
+        let seg = get_segments(&s, 5);
+        assert_eq!(seg.peaks, vec![2.0]);
+        assert_eq!(seg.sizes, vec![3]);
+    }
+
+    #[test]
+    fn greedy_merges_smallest_error() {
+        // Envelope steps: (1 sample @1), (1 @2), (1 @10).
+        // e_0 = (2-1)*1 = 1, e_1 = (10-2)*1 = 8 -> merge 0 into 1 first.
+        let s = [1.0, 2.0, 10.0];
+        let seg = get_segments(&s, 2);
+        assert_eq!(seg.peaks, vec![2.0, 10.0]);
+        assert_eq!(seg.sizes, vec![2, 1]);
+    }
+
+    #[test]
+    fn to_plan_time_domain() {
+        let seg = Segmentation { sizes: vec![80, 20], peaks: vec![5.0, 10.5] };
+        let plan = seg.to_plan(2.0);
+        assert_eq!(plan.starts, vec![0.0, 160.0]);
+        assert!(plan.is_valid());
+        assert_eq!(plan.alloc_at(159.9), 5.0);
+        assert_eq!(plan.alloc_at(160.0), 10.5);
+    }
+
+    #[test]
+    fn start_offsets_cumulative() {
+        let seg = Segmentation { sizes: vec![3, 4, 5], peaks: vec![1.0, 2.0, 3.0] };
+        assert_eq!(seg.start_offsets(), vec![0, 3, 7]);
+    }
+
+    #[test]
+    fn optimal_matches_greedy_on_plateaus() {
+        let mut s = vec![5.0; 80];
+        s.extend(vec![10.5; 20]);
+        let g = get_segments(&s, 2);
+        let o = optimal_segments(&s, 2);
+        assert_eq!(g, o);
+    }
+
+    #[test]
+    fn optimal_never_worse_than_greedy() {
+        run_prop("dp_beats_greedy", 150, |rng| {
+            let n = 10 + rng.below(120);
+            let mut level = rng.uniform(0.5, 2.0);
+            let mut s = Vec::with_capacity(n);
+            for _ in 0..n {
+                if rng.f64() < 0.15 {
+                    level += rng.uniform(0.0, 3.0);
+                }
+                s.push(level * (1.0 - 0.05 * rng.f64()));
+            }
+            let k = 1 + rng.below(6);
+            let g = get_segments(&s, k);
+            let o = optimal_segments(&s, k);
+            let ge = g.envelope_error(&s);
+            let oe = o.envelope_error(&s);
+            assert!(
+                oe <= ge + 1e-9,
+                "optimal {oe} worse than greedy {ge} (n={n}, k={k})"
+            );
+            assert!(o.peaks.len() <= k && g.peaks.len() <= k);
+        });
+    }
+
+    #[test]
+    fn prop_segmentation_invariants() {
+        run_prop("segmentation_invariants", 200, |rng| {
+            let n = 1 + rng.below(200);
+            let s: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 16.0)).collect();
+            let k = 1 + rng.below(8);
+            let seg = get_segments(&s, k);
+            // 1. at most k segments
+            assert!(seg.peaks.len() <= k);
+            // 2. sizes partition the series
+            assert_eq!(seg.sizes.iter().sum::<usize>(), n);
+            // 3. peaks strictly increasing (variable segments never repeat)
+            for w in seg.peaks.windows(2) {
+                assert!(w[0] < w[1], "peaks not increasing: {:?}", seg.peaks);
+            }
+            // 4. the plan covers every sample (allocation >= usage)
+            let plan = seg.to_plan(1.0);
+            for (i, &u) in s.iter().enumerate() {
+                assert!(
+                    plan.alloc_at(i as f64) >= u - 1e-12,
+                    "sample {i} above allocation"
+                );
+            }
+            // 5. last peak equals the global max
+            let max = s.iter().cloned().fold(f64::MIN, f64::max);
+            assert!((seg.peaks.last().unwrap() - max).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn prop_monotone_pass_is_envelope() {
+        run_prop("pass1_envelope", 100, |rng| {
+            let n = 1 + rng.below(100);
+            let s: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+            // With k = n no merging happens in step 2.
+            let seg = get_segments(&s, n);
+            // Reconstruct the step function and compare to the envelope.
+            let env = monotone_envelope(&s);
+            let mut idx = 0;
+            for (seg_i, &size) in seg.sizes.iter().enumerate() {
+                for _ in 0..size {
+                    assert!(
+                        seg.peaks[seg_i] >= env[idx] - 1e-12,
+                        "segment peak below envelope"
+                    );
+                    idx += 1;
+                }
+            }
+            // Peak of each segment equals envelope at the segment end.
+            let mut acc = 0;
+            for (seg_i, &size) in seg.sizes.iter().enumerate() {
+                acc += size;
+                assert!((seg.peaks[seg_i] - env[acc - 1]).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_rng_fixture() {
+        // Pin one realistic case end-to-end.
+        let mut rng = Rng::new(42);
+        let s: Vec<f64> = (0..100)
+            .map(|i| if i < 70 { 5.0 + 0.1 * rng.f64() } else { 10.0 + 0.2 * rng.f64() })
+            .collect();
+        let seg = get_segments(&s, 2);
+        assert_eq!(seg.sizes.iter().sum::<usize>(), 100);
+        assert_eq!(seg.peaks.len(), 2);
+        assert!(seg.peaks[0] < 5.2 && seg.peaks[0] >= 5.0);
+        assert!(seg.peaks[1] >= 10.0);
+        // Boundary near sample 70.
+        assert!((seg.sizes[0] as i64 - 70).unsigned_abs() <= 2);
+    }
+}

@@ -1,0 +1,253 @@
+//! Segment model: monotonically increasing step functions over time.
+//!
+//! A `StepPlan` is the allocation strategy KS+ produces: `k` segments,
+//! segment `i` starting at `starts[i]` (seconds, `starts[0] == 0`) with
+//! allocation `peaks[i]` GB, monotone non-decreasing (Section II-A of the
+//! paper: monotonicity avoids failures from releasing memory too early).
+//! Beyond the last start the final peak holds forever, so a plan is total
+//! over time even when the task runs longer than predicted.
+
+pub mod algorithm;
+
+use crate::trace::Execution;
+
+/// Monotone step-function allocation plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepPlan {
+    /// Segment start times, seconds; starts[0] == 0, strictly increasing.
+    pub starts: Vec<f64>,
+    /// Per-segment allocation, GB; non-decreasing.
+    pub peaks: Vec<f64>,
+}
+
+impl StepPlan {
+    pub fn new(starts: Vec<f64>, peaks: Vec<f64>) -> StepPlan {
+        assert_eq!(starts.len(), peaks.len());
+        assert!(!starts.is_empty(), "plan needs at least one segment");
+        StepPlan { starts, peaks }
+    }
+
+    /// Single-segment (peak-only) plan — what all peak-prediction
+    /// baselines produce.
+    pub fn flat(peak: f64) -> StepPlan {
+        StepPlan { starts: vec![0.0], peaks: vec![peak] }
+    }
+
+    pub fn k(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Allocation at time `t` (seconds).
+    pub fn alloc_at(&self, t: f64) -> f64 {
+        // Last segment whose start <= t; before t=0 clamp to first.
+        let mut idx = 0;
+        for (i, &s) in self.starts.iter().enumerate() {
+            if s <= t {
+                idx = i;
+            } else {
+                break;
+            }
+        }
+        self.peaks[idx]
+    }
+
+    /// Segment index active at time `t`.
+    pub fn segment_at(&self, t: f64) -> usize {
+        let mut idx = 0;
+        for (i, &s) in self.starts.iter().enumerate() {
+            if s <= t {
+                idx = i;
+            } else {
+                break;
+            }
+        }
+        idx
+    }
+
+    /// Structural validity: starts strictly increasing from 0, peaks
+    /// non-decreasing and positive.
+    pub fn is_valid(&self) -> bool {
+        if self.starts.is_empty() || self.starts[0] != 0.0 {
+            return false;
+        }
+        let starts_ok = self.starts.windows(2).all(|w| w[0] < w[1]);
+        let peaks_ok = self.peaks.windows(2).all(|w| w[0] <= w[1] + 1e-12);
+        let pos = self.peaks.iter().all(|&p| p > 0.0 && p.is_finite());
+        starts_ok && peaks_ok && pos
+    }
+
+    /// Whether the plan covers the execution: alloc(t) >= usage(t) at
+    /// every sample (strictly: usage must not exceed allocation).
+    pub fn covers(&self, e: &Execution) -> bool {
+        e.samples
+            .iter()
+            .enumerate()
+            .all(|(i, &u)| self.alloc_at(i as f64 * e.dt) >= u)
+    }
+
+    /// First failure time (seconds) if the execution exceeds the plan,
+    /// plus the usage at that moment.
+    pub fn first_oom(&self, e: &Execution) -> Option<(f64, f64)> {
+        for (i, &u) in e.samples.iter().enumerate() {
+            let t = i as f64 * e.dt;
+            if u > self.alloc_at(t) {
+                return Some((t, u));
+            }
+        }
+        None
+    }
+
+    /// Integral of the allocation over [0, horizon], GB*s.
+    pub fn alloc_gbs(&self, horizon: f64) -> f64 {
+        let mut total = 0.0;
+        for i in 0..self.starts.len() {
+            let s = self.starts[i].min(horizon);
+            let e = if i + 1 < self.starts.len() { self.starts[i + 1].min(horizon) } else { horizon };
+            if e > s {
+                total += self.peaks[i] * (e - s);
+            }
+        }
+        total
+    }
+
+    /// Wastage vs a *successful* execution: sum over samples of
+    /// (alloc - used) * dt. Assumes `covers(e)`; failure-attempt cost is
+    /// accounted by the simulator (`sim::run_task`).
+    pub fn wastage_gbs(&self, e: &Execution) -> f64 {
+        e.samples
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| (self.alloc_at(i as f64 * e.dt) - u).max(0.0))
+            .sum::<f64>()
+            * e.dt
+    }
+
+    /// Clamp every peak to at most `cap` (node capacity), preserving shape.
+    pub fn clamped(&self, cap: f64) -> StepPlan {
+        StepPlan {
+            starts: self.starts.clone(),
+            peaks: self.peaks.iter().map(|p| p.min(cap)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn plan2() -> StepPlan {
+        StepPlan::new(vec![0.0, 10.0], vec![2.0, 5.0])
+    }
+
+    #[test]
+    fn alloc_at_steps() {
+        let p = plan2();
+        assert_eq!(p.alloc_at(0.0), 2.0);
+        assert_eq!(p.alloc_at(9.99), 2.0);
+        assert_eq!(p.alloc_at(10.0), 5.0);
+        assert_eq!(p.alloc_at(1e9), 5.0);
+        assert_eq!(p.alloc_at(-1.0), 2.0);
+    }
+
+    #[test]
+    fn segment_at_matches_alloc() {
+        let p = StepPlan::new(vec![0.0, 5.0, 20.0], vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.segment_at(0.0), 0);
+        assert_eq!(p.segment_at(5.0), 1);
+        assert_eq!(p.segment_at(19.0), 1);
+        assert_eq!(p.segment_at(25.0), 2);
+    }
+
+    #[test]
+    fn validity_checks() {
+        assert!(plan2().is_valid());
+        assert!(!StepPlan::new(vec![1.0, 2.0], vec![1.0, 2.0]).is_valid()); // no 0 start
+        assert!(!StepPlan::new(vec![0.0, 0.0], vec![1.0, 2.0]).is_valid()); // dup start
+        assert!(!StepPlan::new(vec![0.0, 1.0], vec![2.0, 1.0]).is_valid()); // decreasing
+        assert!(StepPlan::flat(4.0).is_valid());
+    }
+
+    #[test]
+    fn covers_and_first_oom() {
+        let e = Execution::new("t", 1.0, 1.0, vec![1.0, 1.5, 4.0, 4.5]);
+        let good = StepPlan::new(vec![0.0, 2.0], vec![2.0, 5.0]);
+        assert!(good.covers(&e));
+        assert_eq!(good.first_oom(&e), None);
+        let bad = StepPlan::new(vec![0.0, 3.0], vec![2.0, 5.0]);
+        assert!(!bad.covers(&e));
+        let (t, u) = bad.first_oom(&e).unwrap();
+        assert_eq!(t, 2.0);
+        assert_eq!(u, 4.0);
+    }
+
+    #[test]
+    fn alloc_gbs_piecewise() {
+        let p = plan2();
+        // 10s at 2.0 + 5s at 5.0
+        assert!((p.alloc_gbs(15.0) - 45.0).abs() < 1e-12);
+        // horizon inside first segment
+        assert!((p.alloc_gbs(4.0) - 8.0).abs() < 1e-12);
+        assert_eq!(p.alloc_gbs(0.0), 0.0);
+    }
+
+    #[test]
+    fn wastage_exact() {
+        let e = Execution::new("t", 1.0, 2.0, vec![1.0, 1.0, 4.0]);
+        let p = StepPlan::new(vec![0.0, 4.0], vec![2.0, 5.0]);
+        // samples at t=0,2,4; alloc 2,2,5; waste (1+1+1)*2 = 6
+        assert!((p.wastage_gbs(&e) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_preserves_validity() {
+        let p = StepPlan::new(vec![0.0, 5.0], vec![100.0, 200.0]);
+        let c = p.clamped(128.0);
+        assert_eq!(c.peaks, vec![100.0, 128.0]);
+        assert!(c.is_valid());
+    }
+
+    #[test]
+    fn prop_alloc_is_monotone_over_time() {
+        run_prop("plan_monotone_time", 200, |rng| {
+            let k = 1 + rng.below(6);
+            let mut starts = vec![0.0];
+            let mut peaks = vec![rng.uniform(0.1, 4.0)];
+            for _ in 1..k {
+                starts.push(starts.last().unwrap() + rng.uniform(0.5, 30.0));
+                peaks.push(peaks.last().unwrap() + rng.uniform(0.0, 4.0));
+            }
+            let p = StepPlan::new(starts, peaks);
+            assert!(p.is_valid());
+            let mut prev = 0.0f64;
+            for i in 0..100 {
+                let a = p.alloc_at(i as f64 * 1.3);
+                assert!(a + 1e-12 >= prev, "alloc decreased over time");
+                prev = a;
+            }
+        });
+    }
+
+    #[test]
+    fn prop_alloc_gbs_matches_riemann_sum() {
+        run_prop("plan_gbs_riemann", 100, |rng| {
+            let k = 1 + rng.below(5);
+            let mut starts = vec![0.0];
+            let mut peaks = vec![rng.uniform(0.1, 4.0)];
+            for _ in 1..k {
+                starts.push(starts.last().unwrap() + rng.uniform(1.0, 20.0));
+                peaks.push(peaks.last().unwrap() + rng.uniform(0.0, 2.0));
+            }
+            let p = StepPlan::new(starts.clone(), peaks);
+            let horizon = starts.last().unwrap() + rng.uniform(0.0, 40.0);
+            let dt = 1e-3;
+            let n = (horizon / dt) as usize;
+            let riemann: f64 = (0..n).map(|i| p.alloc_at(i as f64 * dt) * dt).sum();
+            let exact = p.alloc_gbs(horizon);
+            assert!(
+                (riemann - exact).abs() < exact.max(1.0) * 1e-2,
+                "riemann {riemann} vs exact {exact}"
+            );
+        });
+    }
+}

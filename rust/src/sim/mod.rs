@@ -1,0 +1,231 @@
+//! Execution simulator: replays recorded/synthetic memory traces against
+//! allocation plans with Linux-OOM-killer semantics and the predictor's
+//! retry loop — the substrate behind every Fig 6/7/8 number.
+//!
+//! `cluster` adds the discrete-event multi-node scheduler used by the
+//! `simulate` subcommand and the online example to translate memory
+//! efficiency into cluster throughput.
+
+pub mod cluster;
+pub mod dag;
+
+use crate::metrics::TaskOutcome;
+use crate::predictor::Predictor;
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+
+/// Maximum retries before the simulator falls back to a full-capacity
+/// allocation (a real SWMS would page an operator at this point).
+pub const MAX_RETRIES: usize = 10;
+
+/// One attempt's outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attempt {
+    pub plan: StepPlan,
+    /// OOM time, seconds; `None` == success.
+    pub fail_time: Option<f64>,
+    /// Wastage contributed by this attempt, GB*s.
+    pub wastage_gbs: f64,
+}
+
+/// Simulate one task instance: run the predictor's plan against the
+/// trace, applying the OOM killer (usage > allocation at any sample) and
+/// the predictor's retry strategy until success or `max_retries`.
+///
+/// The trace is replayed identically on retry — the paper's evaluation
+/// (and any deterministic task) behaves the same way.
+pub fn run_task(pred: &dyn Predictor, e: &Execution, max_retries: usize) -> (TaskOutcome, Vec<Attempt>) {
+    let mut attempts = Vec::new();
+    let mut plan = pred.plan(e.input_mb).clamped(pred.capacity());
+    let mut wastage = 0.0;
+    let mut success = false;
+    let mut alloc_gbs = 0.0;
+
+    for attempt_no in 0..=max_retries {
+        match plan.first_oom(e) {
+            None => {
+                let w = plan.wastage_gbs(e);
+                wastage += w;
+                alloc_gbs = plan.alloc_gbs(e.duration());
+                attempts.push(Attempt { plan: plan.clone(), fail_time: None, wastage_gbs: w });
+                success = true;
+                break;
+            }
+            Some((t_fail, _used)) => {
+                // A failed attempt wastes everything it allocated until
+                // the OOM kill (the partial work is discarded).
+                let w = plan.alloc_gbs(t_fail.max(e.dt));
+                wastage += w;
+                attempts.push(Attempt {
+                    plan: plan.clone(),
+                    fail_time: Some(t_fail),
+                    wastage_gbs: w,
+                });
+                if attempt_no == max_retries {
+                    break;
+                }
+                plan = if attempt_no + 1 == max_retries {
+                    // Last resort: machine maximum.
+                    StepPlan::flat(pred.capacity())
+                } else {
+                    pred.on_failure(&plan, t_fail, attempt_no + 1).clamped(pred.capacity())
+                };
+            }
+        }
+    }
+
+    let outcome = TaskOutcome {
+        task: e.task.clone(),
+        input_mb: e.input_mb,
+        attempts: attempts.len(),
+        success,
+        wastage_gbs: wastage,
+        alloc_gbs,
+        used_gbs: e.used_gbs(),
+    };
+    (outcome, attempts)
+}
+
+/// Run a whole test set through a trained predictor.
+pub fn run_all(pred: &dyn Predictor, test: &[Execution]) -> Vec<TaskOutcome> {
+    test.iter().map(|e| run_task(pred, e, MAX_RETRIES).0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::DefaultLimits;
+    use crate::util::prop::run_prop;
+
+    /// Minimal scripted predictor for testing the loop mechanics.
+    struct Scripted {
+        first: StepPlan,
+        retries: Vec<StepPlan>,
+    }
+
+    impl Predictor for Scripted {
+        fn name(&self) -> &'static str {
+            "scripted"
+        }
+        fn train(&mut self, _h: &[Execution]) {}
+        fn plan(&self, _i: f64) -> StepPlan {
+            self.first.clone()
+        }
+        fn on_failure(&self, _p: &StepPlan, _t: f64, attempt: usize) -> StepPlan {
+            self.retries[(attempt - 1).min(self.retries.len() - 1)].clone()
+        }
+    }
+
+    fn exec(samples: Vec<f64>, dt: f64) -> Execution {
+        Execution::new("t", 100.0, dt, samples)
+    }
+
+    #[test]
+    fn success_first_try_wastage() {
+        let e = exec(vec![1.0, 1.0, 3.0], 1.0);
+        let p = Scripted { first: StepPlan::flat(4.0), retries: vec![] };
+        let (o, attempts) = run_task(&p, &e, 5);
+        assert!(o.success);
+        assert_eq!(o.attempts, 1);
+        // waste = (3 + 3 + 1) * 1 = 7
+        assert!((o.wastage_gbs - 7.0).abs() < 1e-12);
+        assert_eq!(attempts[0].fail_time, None);
+        assert!((o.alloc_gbs - 12.0).abs() < 1e-12);
+        assert!((o.used_gbs - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_costs_full_allocation() {
+        let e = exec(vec![1.0, 5.0, 5.0], 1.0);
+        let p = Scripted {
+            first: StepPlan::flat(2.0),
+            retries: vec![StepPlan::flat(6.0)],
+        };
+        let (o, attempts) = run_task(&p, &e, 5);
+        assert!(o.success);
+        assert_eq!(o.attempts, 2);
+        assert_eq!(attempts[0].fail_time, Some(1.0));
+        // Attempt 1: OOM at t=1, alloc 2 GB for 1 s = 2 GBs wasted.
+        assert!((attempts[0].wastage_gbs - 2.0).abs() < 1e-12);
+        // Attempt 2: alloc 6, used 1+5+5 -> waste (5+1+1)*1 = 7.
+        assert!((attempts[1].wastage_gbs - 7.0).abs() < 1e-12);
+        assert!((o.wastage_gbs - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oom_at_t0_charges_at_least_one_sample() {
+        let e = exec(vec![5.0, 5.0], 1.0);
+        let p = Scripted { first: StepPlan::flat(1.0), retries: vec![StepPlan::flat(8.0)] };
+        let (o, attempts) = run_task(&p, &e, 5);
+        assert!(o.success);
+        assert!(attempts[0].wastage_gbs > 0.0, "zero-cost failed attempt");
+    }
+
+    #[test]
+    fn gives_up_after_max_retries() {
+        // Usage exceeds even capacity: never succeeds.
+        let e = exec(vec![500.0], 1.0);
+        let p = DefaultLimits::with_limit(128.0, 4.0);
+        let (o, attempts) = run_task(&p, &e, 3);
+        assert!(!o.success);
+        assert_eq!(o.attempts, 4); // initial + 3 retries
+        assert!(attempts.iter().all(|a| a.fail_time.is_some()));
+    }
+
+    #[test]
+    fn penultimate_retry_falls_back_to_capacity() {
+        // A predictor whose retries never help must still succeed via the
+        // capacity fallback as long as the task fits the machine.
+        let e = exec(vec![100.0, 100.0], 1.0);
+        let p = Scripted {
+            first: StepPlan::flat(1.0),
+            retries: vec![StepPlan::flat(1.1); 20],
+        };
+        let (o, _) = run_task(&p, &e, 5);
+        assert!(o.success, "capacity fallback must cover a 100 GB task");
+    }
+
+    #[test]
+    fn monotone_retry_makes_progress() {
+        // Doubling retry on a tall narrow spike converges quickly.
+        let e = exec(vec![1.0, 1.0, 30.0, 1.0], 1.0);
+        let p = DefaultLimits::with_limit(128.0, 4.0);
+        let (o, _) = run_task(&p, &e, 10);
+        assert!(o.success);
+        assert_eq!(o.attempts, 4); // 4 -> 8 -> 16 -> 32
+    }
+
+    #[test]
+    fn prop_wastage_nonnegative_and_consistent() {
+        run_prop("sim_wastage_consistency", 150, |rng| {
+            let n = 1 + rng.below(100);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 20.0)).collect();
+            let e = exec(samples, rng.uniform(0.5, 3.0));
+            let limit = rng.uniform(0.5, 24.0);
+            let p = DefaultLimits::with_limit(128.0, limit);
+            let (o, attempts) = run_task(&p, &e, MAX_RETRIES);
+            assert!(o.wastage_gbs >= -1e-9);
+            assert!(o.success, "must succeed under 128 GB capacity");
+            // Total equals sum of attempts.
+            let sum: f64 = attempts.iter().map(|a| a.wastage_gbs).sum();
+            assert!((sum - o.wastage_gbs).abs() < 1e-9);
+            // The successful attempt covers the trace.
+            assert!(attempts.last().unwrap().plan.covers(&e));
+            // Success wastage >= alloc - used exactly.
+            let last = attempts.last().unwrap();
+            let expect = last.plan.wastage_gbs(&e);
+            assert!((last.wastage_gbs - expect).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn run_all_matches_individual() {
+        let e1 = exec(vec![1.0, 2.0], 1.0);
+        let e2 = exec(vec![3.0, 8.0], 1.0);
+        let p = DefaultLimits::with_limit(128.0, 4.0);
+        let all = run_all(&p, &[e1.clone(), e2.clone()]);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0], run_task(&p, &e1, MAX_RETRIES).0);
+        assert_eq!(all[1], run_task(&p, &e2, MAX_RETRIES).0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Trace (de)serialisation: a compact CSV form for interchange with
+//! external monitoring data, plus JSON summaries for reports.
+//!
+//! CSV schema (one row per execution):
+//!   task,input_mb,dt,samples
+//! where `samples` is a ';'-joined list of GB values. The format is
+//! intentionally trivial so real nf-core monitoring exports can be
+//! converted with a one-line awk script.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::{Execution, TaskTraces, WorkflowTrace};
+
+pub const CSV_HEADER: &str = "task,input_mb,dt,samples";
+
+pub fn write_csv(path: &Path, trace: &WorkflowTrace) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    writeln!(f, "{CSV_HEADER}")?;
+    for t in &trace.tasks {
+        for e in &t.executions {
+            let samples: Vec<String> =
+                e.samples.iter().map(|s| format!("{s:.4}")).collect();
+            writeln!(f, "{},{:.2},{:.3},{}", e.task, e.input_mb, e.dt, samples.join(";"))?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_csv(path: &Path, name: &str) -> Result<WorkflowTrace> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(f).lines();
+    match lines.next() {
+        Some(Ok(h)) if h.trim() == CSV_HEADER => {}
+        other => bail!("bad CSV header: {other:?}"),
+    }
+    let mut trace = WorkflowTrace { name: name.to_string(), tasks: Vec::new() };
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, ',').collect();
+        if parts.len() != 4 {
+            bail!("line {}: expected 4 fields, got {}", lineno + 2, parts.len());
+        }
+        let task = parts[0].to_string();
+        let input_mb: f64 = parts[1].parse().with_context(|| format!("line {}", lineno + 2))?;
+        let dt: f64 = parts[2].parse().with_context(|| format!("line {}", lineno + 2))?;
+        let samples: Result<Vec<f64>, _> =
+            parts[3].split(';').filter(|s| !s.is_empty()).map(|s| s.parse::<f64>()).collect();
+        let samples = samples.with_context(|| format!("line {}: bad samples", lineno + 2))?;
+        let exec = Execution::new(task.clone(), input_mb, dt, samples);
+        match trace.tasks.iter_mut().find(|t| t.task == task) {
+            Some(t) => t.executions.push(exec),
+            None => trace.tasks.push(TaskTraces { task, executions: vec![exec] }),
+        }
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workflow::Workflow;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("ksplus_io_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let wf = Workflow::eager();
+        let trace = wf.generate(1, 50);
+        let path = tmp("roundtrip.csv");
+        write_csv(&path, &trace).unwrap();
+        let back = read_csv(&path, "eager").unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.total_instances(), trace.total_instances());
+        assert_eq!(back.tasks.len(), trace.tasks.len());
+        let a = &trace.tasks[0].executions[0];
+        let b = &back.tasks[0].executions[0];
+        assert_eq!(a.task, b.task);
+        assert!((a.input_mb - b.input_mb).abs() < 0.01);
+        assert_eq!(a.samples.len(), b.samples.len());
+        assert!((a.peak() - b.peak()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let path = tmp("badheader.csv");
+        std::fs::write(&path, "nope\n1,2,3,4\n").unwrap();
+        assert!(read_csv(&path, "x").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_row() {
+        let path = tmp("badrow.csv");
+        std::fs::write(&path, format!("{CSV_HEADER}\nbwa,notanumber,1.0,1;2\n")).unwrap();
+        assert!(read_csv(&path, "x").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let path = tmp("blank.csv");
+        std::fs::write(&path, format!("{CSV_HEADER}\n\nbwa,10.0,1.0,1;2;3\n\n")).unwrap();
+        let t = read_csv(&path, "x").unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t.total_instances(), 1);
+        assert_eq!(t.tasks[0].executions[0].samples, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Trace substrate: memory-over-time observations of workflow task
+//! executions.
+//!
+//! The paper's evaluation consumes traces of two nf-core workflows (eager,
+//! sarek) published with the original k-Segments paper. Those traces are
+//! not shipped here, so `synth` provides parametric generators whose
+//! archetypes reproduce the statistics the paper reports (see DESIGN.md
+//! Section 5 for the substitution argument). Everything downstream —
+//! segmentation, predictors, simulator, experiments — only sees the types
+//! in this module and is agnostic to trace provenance; `io` can load
+//! externally recorded traces in the same CSV shape.
+
+pub mod io;
+pub mod nextflow;
+pub mod synth;
+pub mod workflow;
+
+/// Units used throughout the crate:
+/// memory = GB, time = seconds, input size = MB, wastage = GB*s.
+pub const GB: f64 = 1.0;
+
+/// One monitored execution of one task instance: a fixed-interval memory
+/// time series plus the aggregated input file size that drives prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Execution {
+    /// Task type name (e.g. "bwa").
+    pub task: String,
+    /// Aggregated size of all input files, MB.
+    pub input_mb: f64,
+    /// Sampling interval, seconds.
+    pub dt: f64,
+    /// Memory usage in GB at t = i * dt.
+    pub samples: Vec<f64>,
+}
+
+impl Execution {
+    pub fn new(task: impl Into<String>, input_mb: f64, dt: f64, samples: Vec<f64>) -> Self {
+        Execution { task: task.into(), input_mb, dt, samples }
+    }
+
+    /// Wall-clock duration covered by the samples.
+    pub fn duration(&self) -> f64 {
+        self.samples.len() as f64 * self.dt
+    }
+
+    /// Peak memory over the whole execution, GB.
+    pub fn peak(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Memory usage at time `t` (seconds); clamps to the series bounds.
+    pub fn usage_at(&self, t: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let idx = (t / self.dt).floor() as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    /// Integral of usage over the execution, GB*s.
+    pub fn used_gbs(&self) -> f64 {
+        self.samples.iter().sum::<f64>() * self.dt
+    }
+}
+
+/// All recorded executions of one task type.
+#[derive(Debug, Clone, Default)]
+pub struct TaskTraces {
+    pub task: String,
+    pub executions: Vec<Execution>,
+}
+
+impl TaskTraces {
+    pub fn peaks(&self) -> Vec<f64> {
+        self.executions.iter().map(|e| e.peak()).collect()
+    }
+
+    pub fn input_sizes(&self) -> Vec<f64> {
+        self.executions.iter().map(|e| e.input_mb).collect()
+    }
+}
+
+/// A full workflow trace: one `TaskTraces` per task type.
+#[derive(Debug, Clone, Default)]
+pub struct WorkflowTrace {
+    pub name: String,
+    pub tasks: Vec<TaskTraces>,
+}
+
+impl WorkflowTrace {
+    pub fn task(&self, name: &str) -> Option<&TaskTraces> {
+        self.tasks.iter().find(|t| t.task == name)
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.tasks.iter().map(|t| t.executions.len()).sum()
+    }
+
+    /// Mean peak memory over all task instances (the Fig 5 statistic).
+    pub fn mean_peak(&self) -> f64 {
+        let peaks: Vec<f64> =
+            self.tasks.iter().flat_map(|t| t.peaks()).collect();
+        crate::util::stats::mean(&peaks)
+    }
+}
+
+/// Deterministic train/test split of one task's executions.
+///
+/// `train_frac` in (0,1); mirrors the paper's 25/50/75 % splits with a
+/// fresh shuffle per seed (10 seeds per experiment).
+pub fn split_train_test(
+    traces: &TaskTraces,
+    train_frac: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> (Vec<Execution>, Vec<Execution>) {
+    let n = traces.executions.len();
+    let n_train = ((n as f64 * train_frac).round() as usize).clamp(1, n.saturating_sub(1).max(1));
+    let idx = rng.sample_indices(n, n);
+    let mut train = Vec::with_capacity(n_train);
+    let mut test = Vec::with_capacity(n - n_train);
+    for (pos, &i) in idx.iter().enumerate() {
+        if pos < n_train {
+            train.push(traces.executions[i].clone());
+        } else {
+            test.push(traces.executions[i].clone());
+        }
+    }
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exec(samples: Vec<f64>, dt: f64) -> Execution {
+        Execution::new("t", 100.0, dt, samples)
+    }
+
+    #[test]
+    fn duration_and_peak() {
+        let e = exec(vec![1.0, 2.0, 5.0, 3.0], 2.0);
+        assert_eq!(e.duration(), 8.0);
+        assert_eq!(e.peak(), 5.0);
+    }
+
+    #[test]
+    fn usage_at_clamps() {
+        let e = exec(vec![1.0, 2.0, 3.0], 1.0);
+        assert_eq!(e.usage_at(0.0), 1.0);
+        assert_eq!(e.usage_at(1.5), 2.0);
+        assert_eq!(e.usage_at(99.0), 3.0);
+    }
+
+    #[test]
+    fn used_gbs_integral() {
+        let e = exec(vec![2.0, 2.0, 4.0], 0.5);
+        assert!((e.used_gbs() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_execution_safe() {
+        let e = exec(vec![], 1.0);
+        assert_eq!(e.peak(), 0.0);
+        assert_eq!(e.usage_at(3.0), 0.0);
+        assert_eq!(e.used_gbs(), 0.0);
+    }
+
+    #[test]
+    fn split_sizes() {
+        let traces = TaskTraces {
+            task: "t".into(),
+            executions: (0..40).map(|i| exec(vec![i as f64], 1.0)).collect(),
+        };
+        let mut rng = Rng::new(1);
+        let (train, test) = split_train_test(&traces, 0.25, &mut rng);
+        assert_eq!(train.len(), 10);
+        assert_eq!(test.len(), 30);
+    }
+
+    #[test]
+    fn split_partitions_without_overlap() {
+        let traces = TaskTraces {
+            task: "t".into(),
+            executions: (0..20).map(|i| exec(vec![i as f64], 1.0)).collect(),
+        };
+        let mut rng = Rng::new(5);
+        let (train, test) = split_train_test(&traces, 0.5, &mut rng);
+        let mut all: Vec<f64> =
+            train.iter().chain(&test).map(|e| e.samples[0]).collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..20).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_differs_across_seeds() {
+        let traces = TaskTraces {
+            task: "t".into(),
+            executions: (0..30).map(|i| exec(vec![i as f64], 1.0)).collect(),
+        };
+        let (a, _) = split_train_test(&traces, 0.5, &mut Rng::new(1));
+        let (b, _) = split_train_test(&traces, 0.5, &mut Rng::new(2));
+        let av: Vec<f64> = a.iter().map(|e| e.samples[0]).collect();
+        let bv: Vec<f64> = b.iter().map(|e| e.samples[0]).collect();
+        assert_ne!(av, bv);
+    }
+
+    #[test]
+    fn mean_peak_aggregates() {
+        let wf = WorkflowTrace {
+            name: "w".into(),
+            tasks: vec![
+                TaskTraces { task: "a".into(), executions: vec![exec(vec![1.0], 1.0)] },
+                TaskTraces { task: "b".into(), executions: vec![exec(vec![3.0], 1.0)] },
+            ],
+        };
+        assert_eq!(wf.mean_peak(), 2.0);
+        assert_eq!(wf.total_instances(), 2);
+    }
+}

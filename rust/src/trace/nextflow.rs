@@ -1,0 +1,211 @@
+//! Importer for nf-core/Nextflow-style monitoring exports.
+//!
+//! Real deployments record one row per monitoring sample (the format the
+//! original k-Segments dataset uses): long-form CSV
+//!
+//! ```text
+//! process,task_id,input_bytes,timestamp_ms,rss_bytes
+//! BWA_ALIGN,17,8388608000,1000,5476083712
+//! BWA_ALIGN,17,8388608000,3000,5478180864
+//! ...
+//! ```
+//!
+//! Rows may be unsorted and interleaved across task ids; timestamps are
+//! absolute milliseconds. This module groups rows by (process, task_id),
+//! sorts by timestamp, resamples to the per-execution median interval,
+//! and emits the crate's `Execution` type (memory GB, input MB).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::trace::{Execution, TaskTraces, WorkflowTrace};
+
+pub const HEADER: &str = "process,task_id,input_bytes,timestamp_ms,rss_bytes";
+
+#[derive(Debug, Clone, Copy)]
+struct Row {
+    input_bytes: f64,
+    t_ms: f64,
+    rss_bytes: f64,
+}
+
+/// Parse a long-form monitoring CSV into a `WorkflowTrace`.
+pub fn read_long_csv(path: &Path, workflow_name: &str) -> Result<WorkflowTrace> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    parse_long_csv(BufReader::new(f), workflow_name)
+}
+
+pub fn parse_long_csv<R: BufRead>(reader: R, workflow_name: &str) -> Result<WorkflowTrace> {
+    let mut lines = reader.lines();
+    match lines.next() {
+        Some(Ok(h)) if h.trim() == HEADER => {}
+        other => bail!("bad header: expected '{HEADER}', got {other:?}"),
+    }
+    // (process, task_id) -> rows
+    let mut groups: BTreeMap<(String, u64), Vec<Row>> = BTreeMap::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ctx = || format!("line {}", lineno + 2);
+        let mut it = line.split(',');
+        let process = it.next().with_context(ctx)?.trim().to_string();
+        let task_id: u64 = it.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let input_bytes: f64 = it.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let t_ms: f64 = it.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        let rss_bytes: f64 = it.next().with_context(ctx)?.trim().parse().with_context(ctx)?;
+        if it.next().is_some() {
+            bail!("line {}: too many fields", lineno + 2);
+        }
+        if !(input_bytes >= 0.0 && rss_bytes >= 0.0) {
+            bail!("line {}: negative sizes", lineno + 2);
+        }
+        groups.entry((process, task_id)).or_default().push(Row {
+            input_bytes,
+            t_ms,
+            rss_bytes,
+        });
+    }
+
+    let mut trace = WorkflowTrace { name: workflow_name.to_string(), tasks: Vec::new() };
+    for ((process, _id), mut rows) in groups {
+        rows.sort_by(|a, b| a.t_ms.total_cmp(&b.t_ms));
+        let exec = rows_to_execution(&process, &rows)?;
+        match trace.tasks.iter_mut().find(|t| t.task == process) {
+            Some(t) => t.executions.push(exec),
+            None => trace
+                .tasks
+                .push(TaskTraces { task: process, executions: vec![exec] }),
+        }
+    }
+    Ok(trace)
+}
+
+/// Convert one task instance's sorted rows to a fixed-interval series.
+fn rows_to_execution(process: &str, rows: &[Row]) -> Result<Execution> {
+    anyhow::ensure!(!rows.is_empty(), "empty group");
+    let input_mb = rows[0].input_bytes / 1e6;
+    if rows.len() == 1 {
+        return Ok(Execution::new(process, input_mb, 1.0, vec![rows[0].rss_bytes / 1e9]));
+    }
+    // Median sampling interval for resampling.
+    let mut gaps: Vec<f64> = rows.windows(2).map(|w| w[1].t_ms - w[0].t_ms).collect();
+    gaps.retain(|g| *g > 0.0);
+    anyhow::ensure!(!gaps.is_empty(), "all timestamps identical for {process}");
+    let dt_ms = crate::util::stats::median(&gaps);
+    let t0 = rows[0].t_ms;
+    let t_end = rows[rows.len() - 1].t_ms;
+    let n = ((t_end - t0) / dt_ms).round() as usize + 1;
+    // Nearest-earlier sample for each grid point (step interpolation,
+    // matching how RSS monitoring behaves).
+    let mut samples = Vec::with_capacity(n);
+    let mut j = 0usize;
+    for i in 0..n {
+        let t = t0 + i as f64 * dt_ms;
+        while j + 1 < rows.len() && rows[j + 1].t_ms <= t + 1e-9 {
+            j += 1;
+        }
+        samples.push(rows[j].rss_bytes / 1e9);
+    }
+    Ok(Execution::new(process, input_mb, dt_ms / 1e3, samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn csv(body: &str) -> String {
+        format!("{HEADER}\n{body}")
+    }
+
+    #[test]
+    fn parses_basic_file() {
+        let src = csv("BWA,1,8000000000,0,5000000000\n\
+                       BWA,1,8000000000,1000,5100000000\n\
+                       BWA,1,8000000000,2000,10700000000\n\
+                       FASTQC,2,1000000000,0,400000000\n\
+                       FASTQC,2,1000000000,1000,450000000\n");
+        let t = parse_long_csv(Cursor::new(src), "eager").unwrap();
+        assert_eq!(t.tasks.len(), 2);
+        let bwa = t.task("BWA").unwrap();
+        assert_eq!(bwa.executions.len(), 1);
+        let e = &bwa.executions[0];
+        assert_eq!(e.samples.len(), 3);
+        assert!((e.input_mb - 8000.0).abs() < 1e-9);
+        assert!((e.dt - 1.0).abs() < 1e-9);
+        assert!((e.peak() - 10.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsorted_and_interleaved_rows() {
+        let src = csv("BWA,1,8e9,2000,3e9\n\
+                       BWA,2,4e9,0,1e9\n\
+                       BWA,1,8e9,0,1e9\n\
+                       BWA,2,4e9,1000,2e9\n\
+                       BWA,1,8e9,1000,2e9\n");
+        let t = parse_long_csv(Cursor::new(src), "x").unwrap();
+        let bwa = t.task("BWA").unwrap();
+        assert_eq!(bwa.executions.len(), 2);
+        // Instance 1 sorted: 1,2,3 GB.
+        let e1 = &bwa.executions[0];
+        assert_eq!(e1.samples, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn resamples_irregular_intervals() {
+        // Gaps 1s,1s,4s -> median 1s; the 4s hole is filled with the
+        // last value (step interpolation).
+        let src = csv("T,1,1e9,0,1e9\nT,1,1e9,1000,2e9\nT,1,1e9,2000,3e9\nT,1,1e9,6000,4e9\n");
+        let t = parse_long_csv(Cursor::new(src), "x").unwrap();
+        let e = &t.task("T").unwrap().executions[0];
+        assert_eq!(e.samples.len(), 7);
+        assert_eq!(e.samples[3], 3.0); // hole
+        assert_eq!(e.samples[6], 4.0);
+    }
+
+    #[test]
+    fn single_sample_instance() {
+        let src = csv("T,1,5e8,1000,2e9\n");
+        let t = parse_long_csv(Cursor::new(src), "x").unwrap();
+        let e = &t.task("T").unwrap().executions[0];
+        assert_eq!(e.samples, vec![2.0]);
+        assert!((e.input_mb - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(parse_long_csv(Cursor::new("wrong header\n"), "x").is_err());
+        assert!(parse_long_csv(Cursor::new(csv("T,notanum,1,2,3\n")), "x").is_err());
+        assert!(parse_long_csv(Cursor::new(csv("T,1,1,2\n")), "x").is_err());
+        assert!(parse_long_csv(Cursor::new(csv("T,1,1,2,3,4\n")), "x").is_err());
+        assert!(parse_long_csv(Cursor::new(csv("T,1,-5,0,3\n")), "x").is_err());
+        // identical timestamps
+        assert!(parse_long_csv(Cursor::new(csv("T,1,1e9,5,1\nT,1,1e9,5,2\n")), "x").is_err());
+    }
+
+    #[test]
+    fn imported_trace_feeds_predictor() {
+        // End-to-end: long CSV -> Execution -> KS+ training.
+        use crate::predictor::by_name;
+        let mut body = String::new();
+        for id in 0..12 {
+            let input = 2e9 + id as f64 * 5e8;
+            for t in 0..10 {
+                let rss = if t < 7 { input * 0.4 } else { input * 0.9 };
+                body.push_str(&format!("BWA,{id},{input},{},{rss}\n", t * 1000));
+            }
+        }
+        let trace = parse_long_csv(Cursor::new(csv(&body)), "x").unwrap();
+        let bwa = trace.task("BWA").unwrap();
+        let mut p = by_name("ksplus", 2, 128.0).unwrap();
+        p.train(&bwa.executions);
+        let plan = p.plan(3000.0);
+        assert!(plan.is_valid());
+        assert!(plan.k() == 2, "{plan:?}");
+    }
+}

@@ -1,0 +1,553 @@
+//! Synthetic trace generators (DESIGN.md Section 5 substitution).
+//!
+//! The paper evaluates on recorded traces of two nf-core workflows. We
+//! reproduce their *relevant statistics* with parametric task archetypes:
+//!
+//! - multi-phase plateau memory profiles (Fig 1b: BWA holds ~5.1 GB for
+//!   ~80 % of its runtime, then jumps to ~10.7 GB),
+//! - peak memory and phase durations that scale linearly with the
+//!   aggregated input size plus heteroscedastic noise (Figs 1a, 3),
+//! - per-execution global timing noise with occasional strong outliers
+//!   (the red-cross execution of Fig 3),
+//! - workflow-level statistics (Fig 5: eager mean peak ~2.31 GB over 9
+//!   predicted task types; sarek more instances, mean peak ~1.67 GB).
+//!
+//! All draws come from an explicit `Rng`, so every workflow trace is a
+//! pure function of its seed.
+
+use crate::trace::{Execution, TaskTraces};
+use crate::util::rng::Rng;
+
+/// How memory behaves within a phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Ramp {
+    /// Constant plateau at the phase level.
+    Plateau,
+    /// Linear climb from the previous phase's level to this level
+    /// (e.g. an input-loading phase).
+    Linear,
+}
+
+/// One phase of a task's execution profile.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Duration model: seconds = dur_base_s + dur_per_mb * input_mb.
+    pub dur_base_s: f64,
+    pub dur_per_mb: f64,
+    /// Lognormal sigma on the phase duration.
+    pub dur_noise: f64,
+    /// Memory plateau model: GB = mem_base_gb + mem_per_mb * input_mb.
+    pub mem_base_gb: f64,
+    pub mem_per_mb: f64,
+    /// Lognormal sigma on the plateau level.
+    pub mem_noise: f64,
+    pub ramp: Ramp,
+}
+
+impl Phase {
+    pub fn plateau(
+        dur_base_s: f64,
+        dur_per_mb: f64,
+        mem_base_gb: f64,
+        mem_per_mb: f64,
+    ) -> Phase {
+        Phase {
+            dur_base_s,
+            dur_per_mb,
+            dur_noise: 0.10,
+            mem_base_gb,
+            mem_per_mb,
+            mem_noise: 0.05,
+            ramp: Ramp::Plateau,
+        }
+    }
+
+    pub fn linear(
+        dur_base_s: f64,
+        dur_per_mb: f64,
+        mem_base_gb: f64,
+        mem_per_mb: f64,
+    ) -> Phase {
+        Phase { ramp: Ramp::Linear, ..Phase::plateau(dur_base_s, dur_per_mb, mem_base_gb, mem_per_mb) }
+    }
+}
+
+/// A task type's generative model.
+#[derive(Debug, Clone)]
+pub struct Archetype {
+    pub name: &'static str,
+    /// Median aggregated input size, MB (lognormal).
+    pub input_median_mb: f64,
+    /// Lognormal sigma of the input size distribution.
+    pub input_sigma: f64,
+    pub phases: Vec<Phase>,
+    /// Workflow developers' default memory limit (the Default baseline).
+    pub default_limit_gb: f64,
+    /// Per-execution global timing factor sigma (Fig 3 spread).
+    pub slowdown_sigma: f64,
+    /// Probability of a strong timing outlier (Fig 3 red cross).
+    pub outlier_prob: f64,
+    /// Relative downward within-phase sample jitter.
+    pub sample_jitter: f64,
+}
+
+impl Archetype {
+    fn base(name: &'static str, input_median_mb: f64, phases: Vec<Phase>, default_limit_gb: f64) -> Self {
+        Archetype {
+            name,
+            input_median_mb,
+            input_sigma: 0.20,
+            phases,
+            default_limit_gb,
+            slowdown_sigma: 0.12,
+            outlier_prob: 0.03,
+            sample_jitter: 0.04,
+        }
+    }
+
+    /// Expected peak memory for a given input size (no noise), GB.
+    pub fn expected_peak(&self, input_mb: f64) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| p.mem_base_gb + p.mem_per_mb * input_mb)
+            .fold(0.0, f64::max)
+    }
+
+    /// Generate one execution. `target_samples` bounds the series length
+    /// so traces fit the AOT wastage bucket (N = 512) without truncation.
+    pub fn generate(&self, rng: &mut Rng, target_samples: usize) -> Execution {
+        let input_mb = self.input_median_mb * rng.log_normal(0.0, self.input_sigma);
+        self.generate_with_input(rng, input_mb, target_samples)
+    }
+
+    pub fn generate_with_input(
+        &self,
+        rng: &mut Rng,
+        input_mb: f64,
+        target_samples: usize,
+    ) -> Execution {
+        // Global timing factor: lognormal plus rare strong outliers.
+        let mut speed = rng.log_normal(0.0, self.slowdown_sigma);
+        if rng.f64() < self.outlier_prob {
+            speed *= if rng.f64() < 0.5 { rng.uniform(0.35, 0.6) } else { rng.uniform(1.7, 2.4) };
+        }
+
+        // Realised per-phase durations and levels.
+        let mut durs = Vec::with_capacity(self.phases.len());
+        let mut levels = Vec::with_capacity(self.phases.len());
+        for p in &self.phases {
+            let d = (p.dur_base_s + p.dur_per_mb * input_mb)
+                * speed
+                * rng.log_normal(0.0, p.dur_noise);
+            let l = (p.mem_base_gb + p.mem_per_mb * input_mb) * rng.log_normal(0.0, p.mem_noise);
+            durs.push(d.max(1.0));
+            levels.push(l.max(0.01));
+        }
+        let total: f64 = durs.iter().sum();
+        let dt = (total / target_samples as f64).max(0.25);
+        let n = (total / dt).ceil() as usize;
+
+        let mut samples = Vec::with_capacity(n);
+        let mut phase_idx = 0usize;
+        let mut phase_start = 0.0f64;
+        for i in 0..n {
+            let t = i as f64 * dt;
+            while phase_idx + 1 < durs.len() && t >= phase_start + durs[phase_idx] {
+                phase_start += durs[phase_idx];
+                phase_idx += 1;
+            }
+            let level = levels[phase_idx];
+            let base = match self.phases[phase_idx].ramp {
+                Ramp::Plateau => level,
+                Ramp::Linear => {
+                    let prev = if phase_idx == 0 { 0.05 } else { levels[phase_idx - 1] };
+                    let frac = ((t - phase_start) / durs[phase_idx]).clamp(0.0, 1.0);
+                    prev + (level - prev) * frac
+                }
+            };
+            // Jitter dips below the plateau (heap peaks define the level).
+            samples.push(base * (1.0 - self.sample_jitter * rng.f64()));
+        }
+        // Ensure the realised peak equals the top plateau (monitoring
+        // always captures the high-water mark).
+        let peak_level = levels.iter().copied().fold(0.0, f64::max);
+        if let Some(last_phase_peak_idx) = (0..samples.len()).rev().find(|&i| {
+            let t = i as f64 * dt;
+            t >= total - durs.last().unwrap()
+        }) {
+            let max_level_phase =
+                levels.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+            if max_level_phase == levels.len() - 1 {
+                samples[last_phase_peak_idx] = peak_level;
+            }
+        }
+        Execution::new(self.name, input_mb, dt, samples)
+    }
+
+    /// Generate `n` executions as a `TaskTraces`.
+    pub fn generate_many(&self, rng: &mut Rng, n: usize, target_samples: usize) -> TaskTraces {
+        TaskTraces {
+            task: self.name.to_string(),
+            executions: (0..n).map(|_| self.generate(rng, target_samples)).collect(),
+        }
+    }
+}
+
+/// The nine predicted eager task types (Fig 8), parameterised to match the
+/// published statistics: bwa is the two-phase heavyweight of Fig 1
+/// (median peak ~10.6 GB, ~5.1 GB plateau for ~80 % of the runtime);
+/// workflow mean peak ~2.31 GB.
+pub fn eager_archetypes() -> Vec<Archetype> {
+    vec![
+        // BWA: load index (ramp to ~5.1 GB), align for the bulk of the
+        // runtime, then a sort/merge phase that doubles memory to ~10.6 GB.
+        Archetype {
+            slowdown_sigma: 0.15,
+            ..Archetype::base(
+                "bwa",
+                8000.0,
+                vec![
+                    Phase::linear(40.0, 0.004, 0.30, 0.000600),
+                    Phase::plateau(120.0, 0.110, 0.30, 0.000600),
+                    Phase::plateau(30.0, 0.028, 0.50, 0.001263),
+                ],
+                20.0,
+            )
+        },
+        Archetype::base(
+            "adapter_removal",
+            6000.0,
+            vec![
+                Phase::plateau(20.0, 0.030, 0.15, 0.000060),
+                Phase::plateau(10.0, 0.012, 0.25, 0.000160),
+            ],
+            4.0,
+        ),
+        Archetype::base(
+            "fastqc",
+            6000.0,
+            vec![Phase::plateau(15.0, 0.020, 0.30, 0.000033)],
+            2.0,
+        ),
+        Archetype::base(
+            "samtools",
+            5000.0,
+            vec![
+                Phase::plateau(10.0, 0.015, 0.20, 0.000050),
+                Phase::plateau(20.0, 0.000, 0.35, 0.000090), // constant-duration 2nd process
+            ],
+            4.0,
+        ),
+        Archetype::base(
+            "mtnucratio",
+            1500.0,
+            vec![Phase::plateau(25.0, 0.008, 0.10, 0.000200)],
+            2.0,
+        ),
+        Archetype::base(
+            "dedup",
+            5500.0,
+            vec![
+                Phase::linear(20.0, 0.010, 0.20, 0.000330),
+                Phase::plateau(25.0, 0.020, 0.30, 0.000400),
+            ],
+            8.0,
+        ),
+        Archetype::base(
+            "damageprofiler",
+            2500.0,
+            vec![Phase::plateau(30.0, 0.025, 0.25, 0.000500)],
+            8.0,
+        ),
+        Archetype::base(
+            "preseq",
+            2000.0,
+            vec![Phase::plateau(15.0, 0.012, 0.15, 0.000275)],
+            4.0,
+        ),
+        Archetype::base(
+            "qualimap",
+            3500.0,
+            vec![
+                Phase::plateau(20.0, 0.018, 0.30, 0.000300),
+                Phase::plateau(15.0, 0.006, 0.50, 0.000371),
+            ],
+            8.0,
+        ),
+    ]
+}
+
+/// Per-task instance counts for eager (more bwa/adapter/fastqc instances,
+/// fewer QC-type tasks), ~460 instances total.
+pub fn eager_counts() -> Vec<(&'static str, usize)> {
+    vec![
+        ("bwa", 60),
+        ("adapter_removal", 60),
+        ("fastqc", 60),
+        ("samtools", 60),
+        ("mtnucratio", 40),
+        ("dedup", 60),
+        ("damageprofiler", 40),
+        ("preseq", 40),
+        ("qualimap", 40),
+    ]
+}
+
+/// Twelve sarek task types; more instances than eager, mean peak ~1.67 GB.
+pub fn sarek_archetypes() -> Vec<Archetype> {
+    vec![
+        Archetype {
+            slowdown_sigma: 0.15,
+            ..Archetype::base(
+                "bwamem2",
+                9000.0,
+                vec![
+                    Phase::linear(30.0, 0.003, 0.30, 0.000380),
+                    Phase::plateau(90.0, 0.080, 0.30, 0.000380),
+                    Phase::plateau(25.0, 0.020, 0.40, 0.000733),
+                ],
+                16.0,
+            )
+        },
+        Archetype::base(
+            "markduplicates",
+            7000.0,
+            vec![
+                Phase::linear(15.0, 0.008, 0.25, 0.000260),
+                Phase::plateau(20.0, 0.018, 0.40, 0.000414),
+            ],
+            8.0,
+        ),
+        Archetype::base(
+            "baserecalibrator",
+            6000.0,
+            vec![Phase::plateau(25.0, 0.020, 0.40, 0.000183)],
+            4.0,
+        ),
+        Archetype::base(
+            "applybqsr",
+            6000.0,
+            vec![Phase::plateau(20.0, 0.015, 0.30, 0.000117)],
+            4.0,
+        ),
+        Archetype::base(
+            "strelka",
+            4000.0,
+            vec![
+                Phase::plateau(20.0, 0.012, 0.30, 0.000150),
+                Phase::plateau(15.0, 0.000, 0.40, 0.000200),
+            ],
+            4.0,
+        ),
+        Archetype::base(
+            "mutect2",
+            4500.0,
+            vec![
+                Phase::plateau(30.0, 0.025, 0.40, 0.000250),
+                Phase::plateau(20.0, 0.010, 0.60, 0.000422),
+            ],
+            8.0,
+        ),
+        Archetype::base(
+            "fastqc",
+            5000.0,
+            vec![Phase::plateau(15.0, 0.018, 0.25, 0.000030)],
+            2.0,
+        ),
+        Archetype::base(
+            "samtools_stats",
+            5000.0,
+            vec![Phase::plateau(12.0, 0.010, 0.20, 0.000080)],
+            2.0,
+        ),
+        Archetype::base(
+            "mosdepth",
+            5500.0,
+            vec![Phase::plateau(15.0, 0.012, 0.25, 0.000100)],
+            4.0,
+        ),
+        Archetype::base(
+            "snpeff",
+            1200.0,
+            vec![
+                Phase::linear(10.0, 0.005, 0.40, 0.000300),
+                Phase::plateau(20.0, 0.015, 0.60, 0.000750),
+            ],
+            6.0,
+        ),
+        Archetype::base(
+            "vep",
+            1200.0,
+            vec![
+                Phase::linear(12.0, 0.006, 0.50, 0.000500),
+                Phase::plateau(25.0, 0.020, 0.80, 0.001833),
+            ],
+            8.0,
+        ),
+        Archetype::base(
+            "tabix",
+            800.0,
+            vec![Phase::plateau(8.0, 0.005, 0.10, 0.000125)],
+            1.0,
+        ),
+    ]
+}
+
+/// Per-task instance counts for sarek, ~1060 instances total.
+pub fn sarek_counts() -> Vec<(&'static str, usize)> {
+    vec![
+        ("bwamem2", 80),
+        ("markduplicates", 80),
+        ("baserecalibrator", 100),
+        ("applybqsr", 100),
+        ("strelka", 80),
+        ("mutect2", 80),
+        ("fastqc", 120),
+        ("samtools_stats", 100),
+        ("mosdepth", 100),
+        ("snpeff", 60),
+        ("vep", 60),
+        ("tabix", 100),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn bwa() -> Archetype {
+        eager_archetypes().into_iter().find(|a| a.name == "bwa").unwrap()
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = bwa();
+        let e1 = a.generate(&mut Rng::new(9), 200);
+        let e2 = a.generate(&mut Rng::new(9), 200);
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn bwa_matches_fig1_statistics() {
+        // Median peak ~10.6 GB; first plateau ~5.1 GB holding ~80 % of
+        // the runtime (Fig 1a/1b). Allow generous tolerances.
+        let a = bwa();
+        let mut rng = Rng::new(1);
+        let traces = a.generate_many(&mut rng, 200, 200);
+        let peaks = traces.peaks();
+        let med = stats::median(&peaks);
+        assert!((med - 10.6).abs() < 1.6, "median peak {med}");
+        // Time share below 70% of peak should be the majority.
+        let e = &traces.executions[0];
+        let peak = e.peak();
+        let below: usize = e.samples.iter().filter(|&&s| s < 0.7 * peak).count();
+        let frac = below as f64 / e.samples.len() as f64;
+        assert!(frac > 0.6, "low-plateau fraction {frac}");
+    }
+
+    #[test]
+    fn peaks_scale_with_input() {
+        let a = bwa();
+        let mut rng = Rng::new(2);
+        let small = a.generate_with_input(&mut rng, 4000.0, 200);
+        let big = a.generate_with_input(&mut rng, 16000.0, 200);
+        assert!(big.peak() > small.peak() * 1.8, "{} vs {}", big.peak(), small.peak());
+        assert!(big.duration() > small.duration() * 1.5);
+    }
+
+    #[test]
+    fn samples_bounded_by_bucket() {
+        for a in eager_archetypes().iter().chain(sarek_archetypes().iter()) {
+            let mut rng = Rng::new(3);
+            for _ in 0..20 {
+                let e = a.generate(&mut rng, 200);
+                assert!(
+                    e.samples.len() <= 512,
+                    "{}: {} samples exceeds wastage bucket",
+                    a.name,
+                    e.samples.len()
+                );
+                assert!(!e.samples.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn eager_mean_peak_near_paper() {
+        let mut rng = Rng::new(4);
+        let mut peaks = Vec::new();
+        let arch = eager_archetypes();
+        for (name, n) in eager_counts() {
+            let a = arch.iter().find(|a| a.name == name).unwrap();
+            let t = a.generate_many(&mut rng, n, 150);
+            peaks.extend(t.peaks());
+        }
+        let mean = stats::mean(&peaks);
+        assert!((mean - 2.31).abs() < 0.45, "eager mean peak {mean} (paper: 2.31)");
+    }
+
+    #[test]
+    fn sarek_mean_peak_near_paper() {
+        let mut rng = Rng::new(5);
+        let mut peaks = Vec::new();
+        let arch = sarek_archetypes();
+        for (name, n) in sarek_counts() {
+            let a = arch.iter().find(|a| a.name == name).unwrap();
+            let t = a.generate_many(&mut rng, n, 150);
+            peaks.extend(t.peaks());
+        }
+        let mean = stats::mean(&peaks);
+        assert!((mean - 1.67).abs() < 0.35, "sarek mean peak {mean} (paper: 1.67)");
+    }
+
+    #[test]
+    fn sarek_has_more_instances_than_eager() {
+        let e: usize = eager_counts().iter().map(|(_, n)| n).sum();
+        let s: usize = sarek_counts().iter().map(|(_, n)| n).sum();
+        assert!(s > e);
+    }
+
+    #[test]
+    fn defaults_cover_typical_peaks() {
+        // The developer default should cover the expected peak at the
+        // median input for every archetype (it is an overestimate).
+        for a in eager_archetypes().iter().chain(sarek_archetypes().iter()) {
+            let p = a.expected_peak(a.input_median_mb);
+            assert!(
+                a.default_limit_gb > p * 1.2,
+                "{}: default {} vs expected peak {p}",
+                a.name,
+                a.default_limit_gb
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_ramp_phase_climbs() {
+        let a = Archetype::base(
+            "ramp",
+            1000.0,
+            vec![Phase::linear(100.0, 0.0, 1.0, 0.001), Phase::plateau(50.0, 0.0, 2.0, 0.001)],
+            8.0,
+        );
+        let e = a.generate(&mut Rng::new(7), 150);
+        // First-phase samples should be increasing on average.
+        let q1 = e.samples[e.samples.len() / 8];
+        let q3 = e.samples[e.samples.len() / 3];
+        assert!(q3 > q1, "ramp should climb: {q1} vs {q3}");
+    }
+
+    #[test]
+    fn input_sizes_lognormal_spread() {
+        let a = bwa();
+        let mut rng = Rng::new(11);
+        let t = a.generate_many(&mut rng, 300, 100);
+        let inputs = t.input_sizes();
+        let med = stats::median(&inputs);
+        assert!((med / 8000.0 - 1.0).abs() < 0.15, "median input {med}");
+        let max = inputs.iter().cloned().fold(0.0, f64::max);
+        let min = inputs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 1.5, "spread too small: {min}..{max}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Workflow definitions: task types, instance counts, DAG structure.
+//!
+//! The evaluation treats task instances independently (as the paper does),
+//! but the DAG is retained so the online coordinator example can submit
+//! tasks in dependency order like a real SWMS engine would.
+
+use crate::trace::synth::{self, Archetype};
+use crate::trace::{TaskTraces, WorkflowTrace};
+use crate::util::rng::Rng;
+
+/// A workflow = named task types with instance counts and dependencies.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: &'static str,
+    pub archetypes: Vec<Archetype>,
+    pub counts: Vec<(&'static str, usize)>,
+    /// DAG edges between task types: (upstream, downstream).
+    pub edges: Vec<(&'static str, &'static str)>,
+}
+
+impl Workflow {
+    pub fn eager() -> Workflow {
+        Workflow {
+            name: "eager",
+            archetypes: synth::eager_archetypes(),
+            counts: synth::eager_counts(),
+            edges: vec![
+                ("fastqc", "adapter_removal"),
+                ("adapter_removal", "bwa"),
+                ("bwa", "samtools"),
+                ("samtools", "dedup"),
+                ("dedup", "damageprofiler"),
+                ("dedup", "mtnucratio"),
+                ("dedup", "preseq"),
+                ("dedup", "qualimap"),
+            ],
+        }
+    }
+
+    pub fn sarek() -> Workflow {
+        Workflow {
+            name: "sarek",
+            archetypes: synth::sarek_archetypes(),
+            counts: synth::sarek_counts(),
+            edges: vec![
+                ("fastqc", "bwamem2"),
+                ("bwamem2", "markduplicates"),
+                ("markduplicates", "baserecalibrator"),
+                ("baserecalibrator", "applybqsr"),
+                ("applybqsr", "strelka"),
+                ("applybqsr", "mutect2"),
+                ("applybqsr", "samtools_stats"),
+                ("applybqsr", "mosdepth"),
+                ("strelka", "snpeff"),
+                ("mutect2", "vep"),
+                ("snpeff", "tabix"),
+                ("vep", "tabix"),
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Workflow> {
+        match name {
+            "eager" => Some(Workflow::eager()),
+            "sarek" => Some(Workflow::sarek()),
+            _ => None,
+        }
+    }
+
+    pub fn archetype(&self, task: &str) -> Option<&Archetype> {
+        self.archetypes.iter().find(|a| a.name == task)
+    }
+
+    /// Generate the full workflow trace; pure function of the seed.
+    pub fn generate(&self, seed: u64, target_samples: usize) -> WorkflowTrace {
+        let mut root = Rng::new(seed);
+        let mut tasks = Vec::new();
+        for (i, (name, n)) in self.counts.iter().enumerate() {
+            let a = self.archetype(name).expect("count refers to unknown archetype");
+            let mut rng = root.fork(i as u64 + 1);
+            tasks.push(a.generate_many(&mut rng, *n, target_samples));
+        }
+        WorkflowTrace { name: self.name.to_string(), tasks }
+    }
+
+    /// Task types in topological order (Kahn). Panics on cycles, which
+    /// would be a bug in the static definitions above.
+    pub fn topo_order(&self) -> Vec<&'static str> {
+        let names: Vec<&'static str> = self.counts.iter().map(|(n, _)| *n).collect();
+        let mut indeg: Vec<usize> = names
+            .iter()
+            .map(|n| self.edges.iter().filter(|(_, d)| d == n).count())
+            .collect();
+        let mut order = Vec::with_capacity(names.len());
+        let mut ready: Vec<usize> =
+            (0..names.len()).filter(|&i| indeg[i] == 0).collect();
+        while let Some(i) = ready.pop() {
+            order.push(names[i]);
+            for (u, d) in &self.edges {
+                if *u == names[i] {
+                    let j = names.iter().position(|n| n == d).expect("edge to unknown task");
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        ready.push(j);
+                    }
+                }
+            }
+        }
+        assert_eq!(order.len(), names.len(), "workflow DAG has a cycle");
+        order
+    }
+
+    /// Upstream dependencies of a task type.
+    pub fn deps(&self, task: &str) -> Vec<&'static str> {
+        self.edges.iter().filter(|(_, d)| *d == task).map(|(u, _)| *u).collect()
+    }
+}
+
+/// Fig 5 summary row: per-task instance counts and peak statistics.
+#[derive(Debug, Clone)]
+pub struct TaskSummary {
+    pub task: String,
+    pub instances: usize,
+    pub mean_peak_gb: f64,
+    pub median_peak_gb: f64,
+    pub max_peak_gb: f64,
+}
+
+pub fn summarize(trace: &WorkflowTrace) -> Vec<TaskSummary> {
+    trace
+        .tasks
+        .iter()
+        .map(|t: &TaskTraces| {
+            let peaks = t.peaks();
+            TaskSummary {
+                task: t.task.clone(),
+                instances: t.executions.len(),
+                mean_peak_gb: crate::util::stats::mean(&peaks),
+                median_peak_gb: crate::util::stats::median(&peaks),
+                max_peak_gb: peaks.iter().cloned().fold(0.0, f64::max),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eager_has_nine_tasks() {
+        let wf = Workflow::eager();
+        assert_eq!(wf.counts.len(), 9);
+        assert!(wf.archetype("bwa").is_some());
+    }
+
+    #[test]
+    fn sarek_has_twelve_tasks() {
+        assert_eq!(Workflow::sarek().counts.len(), 12);
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic() {
+        let wf = Workflow::eager();
+        let a = wf.generate(7, 100);
+        let b = wf.generate(7, 100);
+        assert_eq!(a.total_instances(), b.total_instances());
+        assert_eq!(a.tasks[0].executions[0], b.tasks[0].executions[0]);
+        let c = wf.generate(8, 100);
+        assert_ne!(a.tasks[0].executions[0], c.tasks[0].executions[0]);
+    }
+
+    #[test]
+    fn counts_match_generated() {
+        let wf = Workflow::sarek();
+        let tr = wf.generate(1, 80);
+        for (name, n) in &wf.counts {
+            assert_eq!(tr.task(name).unwrap().executions.len(), *n);
+        }
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        for wf in [Workflow::eager(), Workflow::sarek()] {
+            let order = wf.topo_order();
+            for (u, d) in &wf.edges {
+                let pu = order.iter().position(|n| n == u).unwrap();
+                let pd = order.iter().position(|n| n == d).unwrap();
+                assert!(pu < pd, "{u} must precede {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn deps_lookup() {
+        let wf = Workflow::eager();
+        assert_eq!(wf.deps("bwa"), vec!["adapter_removal"]);
+        assert!(wf.deps("fastqc").is_empty());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert!(Workflow::by_name("eager").is_some());
+        assert!(Workflow::by_name("sarek").is_some());
+        assert!(Workflow::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn summarize_covers_all_tasks() {
+        let wf = Workflow::eager();
+        let tr = wf.generate(3, 80);
+        let s = summarize(&tr);
+        assert_eq!(s.len(), 9);
+        let bwa = s.iter().find(|r| r.task == "bwa").unwrap();
+        assert!(bwa.mean_peak_gb > 5.0);
+        assert!(bwa.max_peak_gb >= bwa.median_peak_gb);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal wall-clock bench harness (no `criterion` offline).
+//!
+//! Used by the `cargo bench` targets (all `harness = false`): warmup,
+//! fixed repetition count, median/p95/mean reporting, and a trivial
+//! throughput helper. Results print in a stable grep-friendly format:
+//!
+//! ```text
+//! bench <name>: median 1.234 ms  p95 1.456 ms  mean 1.300 ms  (20 iters)
+//! ```
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Outcome of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "bench {}: median {}  p95 {}  mean {}  ({} iters)",
+            self.name,
+            fmt_t(self.median_s),
+            fmt_t(self.p95_s),
+            fmt_t(self.mean_s),
+            self.iters
+        )
+    }
+
+    pub fn throughput_line(&self, items: f64, unit: &str) -> String {
+        format!(
+            "bench {}: {:.0} {unit}/s (median over {} iters)",
+            self.name,
+            items / self.median_s,
+            self.iters
+        )
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unrecorded runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: stats::median(&samples),
+        p95_s: stats::percentile(&samples, 95.0),
+        mean_s: stats::mean(&samples),
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Guard against the optimizer discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12); // warmup + iters
+        assert_eq!(r.iters, 10);
+        assert!(r.median_s >= 0.0 && r.p95_s >= r.median_s);
+    }
+
+    #[test]
+    fn formats_scale() {
+        assert!(fmt_t(2.0).ends_with(" s"));
+        assert!(fmt_t(0.002).ends_with(" ms"));
+        assert!(fmt_t(0.0000002).ends_with(" us"));
+    }
+
+    #[test]
+    fn throughput_line_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            median_s: 0.5,
+            p95_s: 0.6,
+            mean_s: 0.5,
+        };
+        assert!(r.throughput_line(100.0, "tasks").contains("200 tasks/s"));
+    }
+}

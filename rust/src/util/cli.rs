@@ -1,0 +1,191 @@
+//! Declarative flag parser for the `repro` binary (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, default, boolean: false });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\n  {}\n\nFlags:\n", self.about, self.name);
+        for f in &self.flags {
+            let d = f.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            let v = if f.boolean { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse raw argv (without the subcommand itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.flags.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                let value = if spec.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                args.flags.insert(name, value);
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.flags.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone()))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.flags.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.flags.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone()))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .flag("seed", "rng seed", Some("42"))
+            .flag("out", "output path", None)
+            .bool_flag("verbose", "chatty")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&[]).unwrap();
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&sv(&["--seed", "7", "--out=x.json"])).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 7);
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn boolean_flag() {
+        let a = cmd().parse(&sv(&["--verbose"])).unwrap();
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&sv(&["fig6", "--seed", "1", "extra"])).unwrap();
+        assert_eq!(a.positional, vec!["fig6".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(cmd().parse(&sv(&["--nope"])), Err(CliError::UnknownFlag(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(cmd().parse(&sv(&["--out"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = cmd().parse(&sv(&["--seed", "abc"])).unwrap();
+        assert!(matches!(a.get_u64("seed"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cmd().usage();
+        assert!(u.contains("--seed"));
+        assert!(u.contains("default: 42"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Offline-build substrates: RNG, JSON, CLI, stats, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

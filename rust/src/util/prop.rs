@@ -1,0 +1,91 @@
+//! Seeded property-test harness (no `proptest` offline).
+//!
+//! `run_prop("name", cases, |rng| { ... })` executes the closure `cases`
+//! times with independent deterministic RNG streams and reports the first
+//! failing seed so a counterexample can be replayed exactly with
+//! `PROP_SEED=<seed> cargo test <name>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases used by most invariant suites.
+pub const DEFAULT_CASES: u64 = 200;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed.
+pub fn run_prop<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng),
+{
+    // Replay hook: PROP_SEED pins a single case.
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = seed.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+            return;
+        }
+    }
+    for case in 0..cases {
+        // Stable per-(name, case) seed so adding cases elsewhere does not
+        // shift this property's stream.
+        let seed = fnv1a(name) ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay: PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0u64;
+        run_prop("count", 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            run_prop("fail", 10, |rng| {
+                let x = rng.f64();
+                assert!(x < 2.0); // never fails
+                assert!(x >= 0.0);
+                if rng.below(3) == 1 {
+                    panic!("boom");
+                }
+            })
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let mut first = Vec::new();
+        run_prop("det", 5, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        run_prop("det", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

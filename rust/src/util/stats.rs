@@ -1,0 +1,146 @@
+//! Small statistics toolkit shared by predictors, metrics, and reports.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for fewer than 2 points.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copy + sort).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100]; 0.0 for empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() == 1 {
+        return v[0];
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+/// Simple OLS over (x, y) pairs: returns (slope, intercept).
+///
+/// Mirrors the closed form of the L1 Pallas `fit` kernel exactly
+/// (including the degenerate fallbacks) so native and PJRT backends agree.
+pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let denom = n * sxx - sx * sx;
+    if xs.len() < 2 || denom.abs() < 1e-12 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Residuals y - (a*x + b).
+pub fn residuals(xs: &[f64], ys: &[f64], slope: f64, intercept: f64) -> Vec<f64> {
+    xs.iter().zip(ys).map(|(x, y)| y - (slope * x + intercept)).collect()
+}
+
+/// Coefficient of determination R^2; 1.0 when total variance is zero.
+pub fn r_squared(xs: &[f64], ys: &[f64], slope: f64, intercept: f64) -> f64 {
+    let m = mean(ys);
+    let ss_tot: f64 = ys.iter().map(|y| (y - m) * (y - m)).sum();
+    if ss_tot < 1e-12 {
+        return 1.0;
+    }
+    let ss_res: f64 =
+        residuals(xs, ys, slope, intercept).iter().map(|r| r * r).sum();
+    1.0 - ss_res / ss_tot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x - 1.0).collect();
+        let (a, b) = ols(&xs, &ys);
+        assert!((a - 2.5).abs() < 1e-9);
+        assert!((b + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_degenerate_single_point() {
+        let (a, b) = ols(&[4.0], &[12.0]);
+        assert_eq!((a, b), (0.0, 12.0));
+    }
+
+    #[test]
+    fn ols_degenerate_constant_x() {
+        let (a, b) = ols(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(a, 0.0);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_empty() {
+        assert_eq!(ols(&[], &[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn r_squared_perfect_and_flat() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        let (a, b) = ols(&xs, &ys);
+        assert!((r_squared(&xs, &ys, a, b) - 1.0).abs() < 1e-9);
+        let flat = [5.0, 5.0, 5.0];
+        let (a2, b2) = ols(&xs, &flat);
+        assert_eq!(r_squared(&xs, &flat, a2, b2), 1.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Failure-injection / fuzz tests for every parser and boundary surface:
+//! the JSON substrate, the trace CSV readers, the wire protocol, and the
+//! plan sanitizer. None of these may panic on arbitrary input — they
+//! must return errors (or valid structures) deterministically.
+
+use ksplus::segments::StepPlan;
+use ksplus::trace::nextflow;
+use ksplus::util::json::Json;
+use ksplus::util::prop::run_prop;
+use ksplus::util::rng::Rng;
+
+/// Random bytes / mutated-valid-JSON never panic the JSON parser.
+#[test]
+fn json_parser_never_panics() {
+    run_prop("json_fuzz_random", 500, |rng| {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| {
+                // Bias toward JSON-relevant bytes.
+                const ALPHABET: &[u8] = b"{}[]\",:0123456789.eE+-truefalsn \\u00ff";
+                ALPHABET[rng.below(ALPHABET.len())]
+            })
+            .collect();
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must not panic
+        }
+    });
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    // Generate random JSON values, print, reparse: must be identical.
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            const CHARS: &[char] =
+                                &['a', 'b', '"', '\\', '\n', '\t', 'é', '→', ' '];
+                            CHARS[rng.below(CHARS.len())]
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run_prop("json_roundtrip", 300, |rng| {
+        let doc = gen(rng, 3);
+        let printed = doc.to_string();
+        let back = Json::parse(&printed)
+            .unwrap_or_else(|e| panic!("reparse failed: {e} for {printed}"));
+        assert_eq!(back, doc, "roundtrip mismatch for {printed}");
+    });
+}
+
+#[test]
+fn trace_csv_reader_never_panics() {
+    run_prop("trace_csv_fuzz", 300, |rng| {
+        let mut content = String::from("task,input_mb,dt,samples\n");
+        for _ in 0..rng.below(6) {
+            let line_len = rng.below(60);
+            let line: String = (0..line_len)
+                .map(|_| {
+                    const ALPHABET: &[u8] = b"abc,;.0123456789-e\n\t ";
+                    ALPHABET[rng.below(ALPHABET.len())] as char
+                })
+                .collect();
+            content.push_str(&line);
+            content.push('\n');
+        }
+        let path = std::env::temp_dir().join(format!(
+            "ksplus_fuzz_{}_{}.csv",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        std::fs::write(&path, &content).unwrap();
+        let _ = ksplus::trace::io::read_csv(&path, "fuzz"); // must not panic
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn nextflow_reader_never_panics() {
+    run_prop("nextflow_fuzz", 300, |rng| {
+        let mut content = String::from("process,task_id,input_bytes,timestamp_ms,rss_bytes\n");
+        for _ in 0..rng.below(8) {
+            let fields = rng.below(7);
+            let line: Vec<String> = (0..fields)
+                .map(|_| match rng.below(3) {
+                    0 => format!("{}", rng.uniform(-10.0, 1e12)),
+                    1 => "proc".to_string(),
+                    _ => String::new(),
+                })
+                .collect();
+            content.push_str(&line.join(","));
+            content.push('\n');
+        }
+        let _ = nextflow::parse_long_csv(std::io::Cursor::new(content), "fuzz");
+    });
+}
+
+#[test]
+fn wire_protocol_never_kills_connection() {
+    use ksplus::coordinator::server::Server;
+    use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+    use ksplus::coordinator::BackendSpec;
+    use std::io::{BufRead, BufReader, Write};
+
+    let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+    let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rng = Rng::new(99);
+    for _ in 0..100 {
+        let len = rng.below(80);
+        let line: String = (0..len)
+            .map(|_| {
+                const ALPHABET: &[u8] = b"{}[]\",:0123456789optranfilues ";
+                ALPHABET[rng.below(ALPHABET.len())] as char
+            })
+            .collect();
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let j = Json::parse(&resp).expect("server must answer JSON");
+        assert!(j.get("ok").is_some(), "malformed response: {resp}");
+    }
+    // Still serves valid requests afterwards.
+    writeln!(stream, r#"{{"op":"stats"}}"#).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(Json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn segmentation_handles_adversarial_series() {
+    use ksplus::segments::algorithm::get_segments;
+    run_prop("segmentation_adversarial", 200, |rng| {
+        let n = 1 + rng.below(300);
+        let samples: Vec<f64> = (0..n)
+            .map(|_| match rng.below(5) {
+                0 => 0.0,
+                1 => 1e-12,
+                2 => 1e6,
+                3 => rng.uniform(0.0, 1.0),
+                _ => rng.uniform(0.0, 128.0),
+            })
+            .collect();
+        let k = 1 + rng.below(12);
+        let seg = get_segments(&samples, k);
+        assert_eq!(seg.sizes.iter().sum::<usize>(), n);
+        assert!(seg.peaks.len() <= k);
+        // Constant series, all-zeros series etc. stay well-formed.
+        let flat = get_segments(&vec![samples[0]; n], k);
+        assert_eq!(flat.peaks.len(), 1);
+    });
+}
+
+#[test]
+fn predictor_handles_pathological_histories() {
+    use ksplus::predictor::{all_methods, by_name};
+    use ksplus::trace::Execution;
+    // Single execution, zero-memory traces, identical inputs, huge
+    // outliers: every method must still produce a valid plan and a valid
+    // retry.
+    let pathological: Vec<Vec<Execution>> = vec![
+        vec![Execution::new("t", 100.0, 1.0, vec![1.0])],
+        (0..5).map(|_| Execution::new("t", 50.0, 1.0, vec![1e-9, 1e-9])).collect(),
+        (0..5).map(|i| Execution::new("t", 100.0, 1.0, vec![i as f64 + 0.1])).collect(),
+        vec![
+            Execution::new("t", 1.0, 1.0, vec![0.1]),
+            Execution::new("t", 1e9, 1.0, vec![120.0; 400]),
+        ],
+    ];
+    for hist in &pathological {
+        for m in all_methods() {
+            let mut p = by_name(m, 4, 128.0).unwrap();
+            p.train(hist);
+            let plan = p.plan(123.0);
+            assert!(plan.is_valid(), "{m} produced invalid plan for {hist:?}");
+            let retry = p.on_failure(&plan, 0.5, 1);
+            assert!(retry.is_valid(), "{m} produced invalid retry");
+        }
+    }
+}
+
+#[test]
+fn step_plan_extreme_queries() {
+    let p = StepPlan::new(vec![0.0, 1e-9, 1e9], vec![1e-9, 1.0, 127.9]);
+    assert!(p.is_valid());
+    assert_eq!(p.alloc_at(f64::MAX), 127.9);
+    assert_eq!(p.alloc_at(-1e300), 1e-9);
+    assert!(p.alloc_gbs(0.0) == 0.0);
+    assert!(p.alloc_gbs(1e12).is_finite());
+}

@@ -1,0 +1,261 @@
+//! Cross-module integration tests: the full pipeline from trace
+//! generation through training, simulation, the PJRT runtime, and the
+//! coordinator wire protocol.
+
+use std::collections::BTreeMap;
+
+use ksplus::coordinator::server::Server;
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::BackendSpec;
+use ksplus::experiments::{evaluate_method, trained_predictor};
+use ksplus::metrics::WastageReport;
+use ksplus::predictor::{by_name, paper_methods, Predictor};
+use ksplus::runtime::{default_artifacts_dir, Runtime};
+use ksplus::sim::cluster::{run_cluster, ClusterConfig, PredictorSource};
+use ksplus::sim::{run_all, run_task, MAX_RETRIES};
+use ksplus::trace::workflow::Workflow;
+use ksplus::trace::{io as trace_io, split_train_test};
+use ksplus::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn full_pipeline_method_ordering() {
+    // trace-gen -> split -> train -> simulate for every paper method;
+    // the paper's ordering must hold on both workflows.
+    for wf in [Workflow::eager(), Workflow::sarek()] {
+        let trace = wf.generate(42, 150);
+        let mut totals: BTreeMap<&str, f64> = BTreeMap::new();
+        for method in paper_methods() {
+            let r = evaluate_method(method, 4, 128.0, &wf, &trace, 0.5, 1).unwrap();
+            totals.insert(method, r.total_wastage_gbs());
+        }
+        assert!(totals["ksplus"] < totals["ksegments-selective"], "{totals:?}");
+        assert!(totals["ksegments-selective"] <= totals["ksegments-partial"], "{totals:?}");
+        assert!(totals["ksplus"] < totals["ppm-improved"], "{totals:?}");
+        assert!(totals["ppm-improved"] < totals["tovar-ppm"], "{totals:?}");
+    }
+}
+
+#[test]
+fn csv_roundtrip_feeds_training() {
+    // Write a generated trace to CSV, read it back, train, and verify
+    // the plans match plans trained on the in-memory trace.
+    let wf = Workflow::eager();
+    let trace = wf.generate(7, 100);
+    let path = std::env::temp_dir().join(format!("ksplus_int_{}.csv", std::process::id()));
+    trace_io::write_csv(&path, &trace).unwrap();
+    let back = trace_io::read_csv(&path, "eager").unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let bwa_mem = trace.task("bwa").unwrap();
+    let bwa_csv = back.task("bwa").unwrap();
+    let mut p_mem = by_name("ksplus", 3, 128.0).unwrap();
+    p_mem.train(&bwa_mem.executions);
+    let mut p_csv = by_name("ksplus", 3, 128.0).unwrap();
+    p_csv.train(&bwa_csv.executions);
+    let a = p_mem.plan(8000.0);
+    let b = p_csv.plan(8000.0);
+    assert_eq!(a.k(), b.k());
+    for i in 0..a.k() {
+        // CSV stores 4 decimals; tolerances accordingly.
+        assert!((a.starts[i] - b.starts[i]).abs() < 1.0, "{a:?} vs {b:?}");
+        assert!((a.peaks[i] - b.peaks[i]).abs() < 0.05, "{a:?} vs {b:?}");
+    }
+}
+
+#[test]
+fn every_method_finishes_every_task() {
+    // No predictor may leave a feasible task unfinished after retries.
+    let wf = Workflow::sarek();
+    let trace = wf.generate(9, 120);
+    for method in paper_methods() {
+        for t in trace.tasks.iter().take(4) {
+            let mut rng = Rng::new(3);
+            let (train, test) = split_train_test(t, 0.5, &mut rng);
+            let pred = trained_predictor(method, 4, 128.0, &wf, &t.task, &train).unwrap();
+            for o in run_all(pred.as_ref(), &test[..test.len().min(10)]) {
+                assert!(o.success, "{method}/{}: unfinished task", t.task);
+                assert!(o.wastage_gbs.is_finite() && o.wastage_gbs >= 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_plan_scoring_matches_simulator() {
+    // The experiment metric computed host-side must equal the AOT
+    // plan_wastage kernel's result for covering plans.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let wf = Workflow::eager();
+    let trace = wf.generate(11, 150);
+    let bwa = trace.task("bwa").unwrap();
+    let mut rng = Rng::new(5);
+    let (train, test) = split_train_test(bwa, 0.5, &mut rng);
+    let mut pred = by_name("ksplus", 4, 128.0).unwrap();
+    pred.train(&train);
+
+    let mut rows = Vec::new();
+    let mut host = Vec::new();
+    for e in &test {
+        let (outcome, attempts) = run_task(pred.as_ref(), e, MAX_RETRIES);
+        assert!(outcome.success);
+        // Score only the successful attempt (failures are host-side
+        // bookkeeping of a partial run).
+        let plan = &attempts.last().unwrap().plan;
+        rows.push((plan.clone(), e.samples.clone(), e.dt));
+        host.push(plan.wastage_gbs(e));
+    }
+    let device = rt.plan_wastage_batch(&rows).unwrap();
+    for (i, (d, h)) in device.iter().zip(&host).enumerate() {
+        let tol = h.max(1.0) * 2e-3;
+        assert!((d - h).abs() < tol, "row {i}: device {d} vs host {h}");
+    }
+}
+
+#[test]
+fn wire_protocol_end_to_end_with_pjrt() {
+    // TCP server -> coordinator -> PJRT artifacts -> plan -> simulate ->
+    // failure report -> retry covers.
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::start(
+        CoordinatorConfig { k: 4, ..Default::default() },
+        BackendSpec::Pjrt(Some(dir)),
+    );
+    let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut roundtrip = |req: &str| -> ksplus::util::json::Json {
+        writeln!(stream, "{req}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        ksplus::util::json::Json::parse(&line).unwrap()
+    };
+
+    let wf = Workflow::eager();
+    let trace = wf.generate(13, 120);
+    let bwa = trace.task("bwa").unwrap();
+    // Train over the wire.
+    let hist_json: Vec<String> = bwa
+        .executions
+        .iter()
+        .take(30)
+        .map(|e| {
+            let samples: Vec<String> = e.samples.iter().map(|s| format!("{s:.4}")).collect();
+            format!(
+                r#"{{"input_mb":{:.2},"dt":{:.3},"samples":[{}]}}"#,
+                e.input_mb,
+                e.dt,
+                samples.join(",")
+            )
+        })
+        .collect();
+    let r = roundtrip(&format!(
+        r#"{{"op":"train","task":"bwa","history":[{}]}}"#,
+        hist_json.join(",")
+    ));
+    assert_eq!(r.get("ok").and_then(|j| j.as_bool()), Some(true), "{r}");
+
+    // Plan for a held-out execution; simulate; report failures until done.
+    let e = &bwa.executions[35];
+    let r = roundtrip(&format!(
+        r#"{{"op":"plan","task":"bwa","input_mb":{:.2}}}"#,
+        e.input_mb
+    ));
+    assert_eq!(r.get("ok").and_then(|j| j.as_bool()), Some(true), "{r}");
+    let to_plan = |j: &ksplus::util::json::Json| -> ksplus::segments::StepPlan {
+        let v = |k: &str| -> Vec<f64> {
+            j.get(k).unwrap().as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect()
+        };
+        ksplus::segments::StepPlan::new(v("starts"), v("peaks"))
+    };
+    let mut plan = to_plan(r.get("plan").unwrap());
+    assert!(plan.is_valid());
+    for _ in 0..10 {
+        match plan.first_oom(e) {
+            None => break,
+            Some((t, _)) => {
+                let r = roundtrip(&format!(
+                    r#"{{"op":"failure","plan":{{"starts":{},"peaks":{}}},"fail_time":{t}}}"#,
+                    ksplus::util::json::Json::arr_f64(&plan.starts),
+                    ksplus::util::json::Json::arr_f64(&plan.peaks),
+                ));
+                assert_eq!(r.get("ok").and_then(|j| j.as_bool()), Some(true), "{r}");
+                plan = to_plan(r.get("plan").unwrap());
+            }
+        }
+    }
+    assert!(plan.covers(e), "retry loop over the wire never converged");
+}
+
+#[test]
+fn cluster_simulation_all_methods_complete() {
+    let wf = Workflow::eager();
+    let trace = wf.generate(17, 100);
+    struct Trained(BTreeMap<String, Box<dyn Predictor>>);
+    impl PredictorSource for Trained {
+        fn get(&self, task: &str) -> Option<&dyn Predictor> {
+            self.0.get(task).map(|p| p.as_ref())
+        }
+    }
+    for method in ["ksplus", "ppm-improved"] {
+        let mut preds = Trained(BTreeMap::new());
+        let mut test = Vec::new();
+        for (idx, t) in trace.tasks.iter().enumerate() {
+            let mut rng = Rng::new(1).fork(idx as u64);
+            let (train_set, test_set) = split_train_test(t, 0.5, &mut rng);
+            preds
+                .0
+                .insert(t.task.clone(), trained_predictor(method, 4, 128.0, &wf, &t.task, &train_set).unwrap());
+            test.extend(test_set.into_iter().take(5));
+        }
+        let r = run_cluster(&ClusterConfig { nodes: 2, node_capacity_gb: 128.0 }, &preds, &test);
+        assert_eq!(r.outcomes.len(), test.len(), "{method}");
+        assert!(r.outcomes.iter().all(|o| o.success), "{method}");
+        assert!(r.makespan_s > 0.0);
+        // Reservations never exceeded capacity.
+        assert!(r.peak_reserved_gb.iter().all(|&p| p <= 128.0 + 1e-6));
+    }
+}
+
+#[test]
+fn auto_k_competitive_in_harness() {
+    // ksplus-auto should be within 1.4x of fixed-k ksplus on eager
+    // (selection noise allowed) and strictly better than ppm-improved.
+    let wf = Workflow::eager();
+    let trace = wf.generate(42, 150);
+    let auto = evaluate_method("ksplus-auto", 4, 128.0, &wf, &trace, 0.5, 2).unwrap();
+    let fixed = evaluate_method("ksplus", 4, 128.0, &wf, &trace, 0.5, 2).unwrap();
+    let ppm = evaluate_method("ppm-improved", 4, 128.0, &wf, &trace, 0.5, 2).unwrap();
+    let (a, f, p) =
+        (auto.total_wastage_gbs(), fixed.total_wastage_gbs(), ppm.total_wastage_gbs());
+    assert!(a < f * 1.4, "auto {a:.0} vs fixed {f:.0}");
+    assert!(a < p, "auto {a:.0} vs ppm {p:.0}");
+}
+
+#[test]
+fn report_aggregation_is_consistent() {
+    // WastageReport totals equal the sum over tasks for a real run.
+    let wf = Workflow::sarek();
+    let trace = wf.generate(23, 100);
+    let r = evaluate_method("ksplus", 4, 128.0, &wf, &trace, 0.25, 1).unwrap();
+    let sum: f64 = trace
+        .tasks
+        .iter()
+        .map(|t| r.task_wastage(&t.task))
+        .sum();
+    assert!((sum - r.total_wastage_gbs()).abs() < 1e-6);
+    let rebuilt = WastageReport::from_outcomes(&[]);
+    assert_eq!(rebuilt.total_instances(), 0);
+}
