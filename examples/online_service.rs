@@ -23,9 +23,27 @@ use std::time::Instant;
 
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
 use ksplus::coordinator::BackendSpec;
-use ksplus::runtime::default_artifacts_dir;
 use ksplus::trace::workflow::Workflow;
 use ksplus::trace::Execution;
+
+/// PJRT when compiled in and artifacts exist, else the native backend.
+#[cfg(feature = "pjrt")]
+fn backend_spec() -> BackendSpec {
+    let dir = ksplus::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        println!("backend: PJRT (artifacts from {})", dir.display());
+        BackendSpec::Pjrt(Some(dir))
+    } else {
+        println!("backend: native (artifacts not built; run `make artifacts`)");
+        BackendSpec::Native
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn backend_spec() -> BackendSpec {
+    println!("backend: native (built without the 'pjrt' feature)");
+    BackendSpec::Native
+}
 
 fn main() -> anyhow::Result<()> {
     // --- 1. historical traces + live workload ---------------------------
@@ -33,16 +51,8 @@ fn main() -> anyhow::Result<()> {
     let history: Vec<_> = workflows.iter().map(|wf| wf.generate(42, 200)).collect();
     let live: Vec<_> = workflows.iter().map(|wf| wf.generate(1337, 200)).collect();
 
-    // --- 2. coordinator with the PJRT backend ---------------------------
-    let dir = default_artifacts_dir();
-    let spec = if dir.join("manifest.json").exists() {
-        println!("backend: PJRT (artifacts from {})", dir.display());
-        BackendSpec::Pjrt(Some(dir))
-    } else {
-        println!("backend: native (artifacts not built; run `make artifacts`)");
-        BackendSpec::Native
-    };
-    let coord = Coordinator::start(CoordinatorConfig::default(), spec);
+    // --- 2. coordinator with the best available backend -----------------
+    let coord = Coordinator::start(CoordinatorConfig::default(), backend_spec());
     let client = coord.client();
 
     // --- 3. train all task types ----------------------------------------

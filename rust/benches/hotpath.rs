@@ -11,7 +11,6 @@ use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
 use ksplus::coordinator::BackendSpec;
 use ksplus::predictor::regression::{FitEngine, NativeFit};
 use ksplus::predictor::by_name;
-use ksplus::runtime::{default_artifacts_dir, Runtime};
 use ksplus::segments::algorithm::get_segments;
 use ksplus::sim::run_task;
 use ksplus::trace::workflow::Workflow;
@@ -67,7 +66,19 @@ fn main() {
     println!("== L3 coordinator (native backend) ==");
     coordinator_bench(BackendSpec::Native, &trace);
 
-    // ---- PJRT artifacts ---------------------------------------------------
+    // ---- PJRT sections (feature-gated) ----------------------------------
+    pjrt_sections(&trace, &bwa);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_sections(_trace: &ksplus::trace::WorkflowTrace, _bwa: &ksplus::trace::TaskTraces) {
+    println!("SKIP PJRT section: built without the 'pjrt' feature");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_sections(trace: &ksplus::trace::WorkflowTrace, bwa: &ksplus::trace::TaskTraces) {
+    use ksplus::runtime::{default_artifacts_dir, Runtime};
+
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         println!("SKIP PJRT section: artifacts not built (make artifacts)");
@@ -135,7 +146,7 @@ fn main() {
 
     // ---- coordinator service (PJRT backend) -----------------------------
     println!("== L3 coordinator (PJRT backend) ==");
-    coordinator_bench(BackendSpec::Pjrt(Some(dir)), &trace);
+    coordinator_bench(BackendSpec::Pjrt(Some(dir)), trace);
 }
 
 fn coordinator_bench(spec: BackendSpec, trace: &ksplus::trace::WorkflowTrace) {

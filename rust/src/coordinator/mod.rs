@@ -15,33 +15,40 @@
 //!                        └─ Failure  : KS+ segment-rescaling retry
 //! ```
 //!
-//! The batcher is the L3 hot path: every flush is a single PJRT
-//! execution of `predict_b{B}.hlo.txt` covering every queued request's
-//! 2k regression evaluations. The Python stack is never invoked.
+//! The batcher is the L3 hot path: with the `pjrt` cargo feature every
+//! flush is a single PJRT execution of `predict_b{B}.hlo.txt` covering
+//! every queued request's 2k regression evaluations; in default
+//! (native-only) builds the same flush runs the closed-form OLS
+//! in-process. The Python stack is never invoked either way.
 
 pub mod server;
 pub mod service;
 
-use std::rc::Rc;
-
 use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
 use crate::predictor::regression::{FitEngine, LinModel, NativeFit};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 
 /// Numeric backend for the coordinator. PJRT handles are thread-affine
 /// (`Rc`): the service constructs its backend *inside* the worker thread
-/// from a `BackendSpec`.
+/// from a `BackendSpec`. The PJRT variant only exists when the crate is
+/// compiled with the `pjrt` feature; `Backend::Native` is always there.
 #[derive(Clone)]
 pub enum Backend {
     /// In-process closed form (tests, environments without artifacts).
     Native,
-    /// AOT Pallas kernels through PJRT (production path).
-    Pjrt(Rc<Runtime>),
+    /// AOT Pallas kernels through PJRT (production path, `pjrt` feature).
+    #[cfg(feature = "pjrt")]
+    Pjrt(std::rc::Rc<Runtime>),
 }
 
 /// Send-able description of a backend, resolved on the worker thread.
+///
+/// `BackendSpec::Pjrt` is always available to *describe* — callers such
+/// as the CLI and the wire protocol compile unchanged either way — but
+/// `build()` returns a runtime error in a native-only build.
 #[derive(Debug, Clone)]
 pub enum BackendSpec {
     Native,
@@ -50,15 +57,30 @@ pub enum BackendSpec {
 }
 
 impl BackendSpec {
+    /// Whether this spec can be built in this binary (the native backend
+    /// always can; PJRT needs the `pjrt` cargo feature).
+    pub fn available(&self) -> bool {
+        match self {
+            BackendSpec::Native => true,
+            BackendSpec::Pjrt(_) => cfg!(feature = "pjrt"),
+        }
+    }
+
     pub fn build(&self) -> anyhow::Result<Backend> {
         match self {
             BackendSpec::Native => Ok(Backend::Native),
+            #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt(dir) => {
                 let dir = dir
                     .clone()
                     .unwrap_or_else(crate::runtime::default_artifacts_dir);
-                Ok(Backend::Pjrt(Rc::new(Runtime::load(&dir)?)))
+                Ok(Backend::Pjrt(std::rc::Rc::new(Runtime::load(&dir)?)))
             }
+            #[cfg(not(feature = "pjrt"))]
+            BackendSpec::Pjrt(_) => anyhow::bail!(
+                "the PJRT backend was not compiled into this binary; rebuild \
+                 with `cargo build --features pjrt`, or use BackendSpec::Native"
+            ),
         }
     }
 }
@@ -67,6 +89,7 @@ impl Backend {
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
         }
     }
@@ -74,6 +97,7 @@ impl Backend {
     fn fit(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
         match self {
             Backend::Native => NativeFit.fit_batch(rows),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(rt) => rt.fit_batch(rows).expect("PJRT fit"),
         }
     }
@@ -85,6 +109,7 @@ impl Backend {
                 .zip(xq.iter().zip(scale))
                 .map(|(m, (x, s))| (m.predict(*x) * s).max(0.0))
                 .collect(),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(rt) => rt.predict_batch(models, xq, scale).expect("PJRT predict"),
         }
     }
@@ -216,6 +241,20 @@ mod tests {
             *v *= 1.0 - 0.01 * rng.f64();
         }
         Execution::new("bwa", input, 1.0, s)
+    }
+
+    #[test]
+    fn backend_spec_availability_tracks_feature() {
+        assert!(BackendSpec::Native.available());
+        assert_eq!(BackendSpec::Pjrt(None).available(), cfg!(feature = "pjrt"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_spec_is_runtime_error_without_feature() {
+        let err = BackendSpec::Pjrt(None).build().err().expect("must not build");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
     }
 
     #[test]

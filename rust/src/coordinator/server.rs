@@ -13,7 +13,8 @@
 //!
 //! One OS thread per connection; every connection shares the single
 //! coordinator worker (and thus its dynamic batcher), so concurrent
-//! clients' plan requests are batched into single PJRT executions.
+//! clients' plan requests are batched into single backend executions
+//! (one PJRT dispatch per flush when built with the `pjrt` feature).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

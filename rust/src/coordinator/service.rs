@@ -35,6 +35,70 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// How many recent plan latencies the service retains. A long-running
+/// service must not grow a sample per request forever; percentiles are
+/// computed over this sliding window of the most recent requests.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Bounded ring buffer of the most recent latency samples. Replaces an
+/// unbounded `Vec<f64>` that grew by one `f64` per request for the
+/// lifetime of the service.
+#[derive(Debug, Clone)]
+pub struct LatencyWindow {
+    buf: Vec<f64>,
+    cap: usize,
+    /// Next overwrite position once the buffer is full.
+    next: usize,
+    /// Samples ever recorded (not capped).
+    total: u64,
+}
+
+impl Default for LatencyWindow {
+    fn default() -> Self {
+        LatencyWindow::with_capacity(LATENCY_WINDOW)
+    }
+}
+
+impl LatencyWindow {
+    pub fn with_capacity(cap: usize) -> LatencyWindow {
+        assert!(cap > 0, "latency window needs capacity");
+        LatencyWindow { buf: Vec::new(), cap, next: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// Samples currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Samples recorded over the service lifetime.
+    pub fn total_recorded(&self) -> u64 {
+        self.total
+    }
+
+    /// Percentile over the retained window.
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::util::stats::percentile(&self.buf, p)
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
 /// Service-side counters, exposed via `Client::stats`.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
@@ -42,8 +106,9 @@ pub struct ServiceStats {
     pub batches: u64,
     pub failures_handled: u64,
     pub tasks_trained: u64,
-    /// Plan-request latencies, microseconds (enqueue -> response send).
-    pub latencies_us: Vec<f64>,
+    /// Recent plan-request latencies, microseconds (enqueue -> response
+    /// send), bounded to the last `LATENCY_WINDOW` requests.
+    pub latencies_us: LatencyWindow,
 }
 
 impl ServiceStats {
@@ -56,7 +121,7 @@ impl ServiceStats {
     }
 
     pub fn latency_percentile_us(&self, p: f64) -> f64 {
-        crate::util::stats::percentile(&self.latencies_us, p)
+        self.latencies_us.percentile(p)
     }
 }
 
@@ -230,11 +295,11 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                         if let Ok(m) = rx.recv_timeout(cfg.batch_delay.min(
                             Duration::from_micros(100),
                         )) {
-                            next = Some(m);
-                            if let Some(Msg::Plan { task, input_mb, enqueued, resp }) =
-                                next.take_if(|m| matches!(m, Msg::Plan { .. }))
-                            {
-                                pending.push(Pending { task, input_mb, enqueued, resp });
+                            match m {
+                                Msg::Plan { task, input_mb, enqueued, resp } => {
+                                    pending.push(Pending { task, input_mb, enqueued, resp });
+                                }
+                                other => next = Some(other),
                             }
                         }
                     }
@@ -372,6 +437,43 @@ mod tests {
         assert!(stats.latency_percentile_us(50.0) > 0.0);
     }
 
+    #[test]
+    fn latency_window_is_bounded() {
+        let mut w = LatencyWindow::with_capacity(8);
+        for i in 0..100 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), 8);
+        assert_eq!(w.total_recorded(), 100);
+        // Only the most recent 8 samples (92..=99) remain.
+        assert!(w.as_slice().iter().all(|&v| v >= 92.0));
+        let p50 = w.percentile(50.0);
+        assert!((92.0..=99.0).contains(&p50), "p50 {p50}");
+        assert_eq!(w.percentile(100.0), 99.0);
+    }
+
+    #[test]
+    fn service_latencies_stay_bounded() {
+        // The stats window must not grow past its capacity no matter how
+        // many requests the service handles.
+        let coord = Coordinator::start(
+            CoordinatorConfig { batch_delay: Duration::ZERO, ..Default::default() },
+            BackendSpec::Native,
+        );
+        let client = coord.client();
+        client.train("bwa", history(5, 10));
+        let n = 64;
+        for _ in 0..n {
+            client.plan("bwa", 4000.0);
+        }
+        let stats = client.stats();
+        assert_eq!(stats.requests, n);
+        assert_eq!(stats.latencies_us.total_recorded(), n);
+        assert!(stats.latencies_us.len() <= LATENCY_WINDOW);
+        assert!(stats.latency_percentile_us(99.0) > 0.0);
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_backend_end_to_end() {
         // The production path: coordinator worker owns a PJRT runtime

@@ -14,8 +14,14 @@
 //!   service (`coordinator`).
 //! - **L2/L1 (python/, build-time)**: batched OLS fit/predict and wastage
 //!   scoring as JAX + Pallas kernels, AOT-lowered to HLO text artifacts.
-//! - **runtime**: loads `artifacts/*.hlo.txt` via the PJRT CPU client
-//!   (`xla` crate) and executes them from the coordinator's hot path.
+//! - **runtime** (behind the `pjrt` cargo feature): loads
+//!   `artifacts/*.hlo.txt` via the PJRT CPU client (`xla` crate) and
+//!   executes them from the coordinator's hot path. Default builds are
+//!   native-only — the coordinator's `Backend::Native` closed-form path —
+//!   and need no XLA libraries; requesting `BackendSpec::Pjrt` in a
+//!   native-only build returns a runtime error, not a compile error.
+//!   Artifact lookup at runtime: `KSPLUS_ARTIFACTS`, else an `artifacts/`
+//!   directory found next to (or above) the executable, else `./artifacts`.
 //!
 //! Quickstart: see `examples/quickstart.rs`; experiments: `repro
 //! experiment fig6 --workflow eager`.
@@ -24,6 +30,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod segments;
 pub mod sim;

@@ -195,9 +195,15 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Default serve backend: PJRT when compiled in, else native.
+#[cfg(feature = "pjrt")]
+const DEFAULT_BACKEND: &str = "pjrt";
+#[cfg(not(feature = "pjrt"))]
+const DEFAULT_BACKEND: &str = "native";
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
-        .flag("backend", "native or pjrt", Some("pjrt"))
+        .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
         .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
         .flag("k", "segments", Some("4"))
         .flag("workflow", "training workflow", Some("eager"))
@@ -208,6 +214,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "pjrt" => BackendSpec::Pjrt(None),
         other => bail!("unknown backend '{other}'"),
     };
+    if !spec.available() {
+        bail!(
+            "this repro binary was built without the 'pjrt' feature; rebuild \
+             with `cargo build --release --features pjrt` or pass --backend native"
+        );
+    }
     let wf = Workflow::by_name(a.get("workflow").unwrap()).context("unknown workflow")?;
     let trace = wf.generate(42, 150);
     let coord = Coordinator::start(

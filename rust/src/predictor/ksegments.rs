@@ -108,6 +108,10 @@ impl Predictor for KSegments {
     }
 
     fn on_failure(&self, prev: &StepPlan, fail_time: f64, _attempt: usize) -> StepPlan {
+        if prev.k() == 0 {
+            // Degenerate empty plan: fall back to a flat allocation.
+            return StepPlan::flat(self.fallback_peak.min(self.capacity));
+        }
         let i = prev.segment_at(fail_time);
         let mut peaks = prev.peaks.clone();
         match self.mode {

@@ -169,6 +169,10 @@ impl Predictor for KsPlus {
     /// failure time. Only when the failure is already in the last segment
     /// is its peak raised (by 20 %).
     fn on_failure(&self, prev: &StepPlan, fail_time: f64, _attempt: usize) -> StepPlan {
+        if prev.k() == 0 {
+            // Degenerate empty plan: fall back to a flat allocation.
+            return StepPlan::flat(self.fallback_peak.min(self.capacity));
+        }
         let i = prev.segment_at(fail_time);
         if i + 1 >= prev.k() {
             // Failure in the last segment: raise the final peak.

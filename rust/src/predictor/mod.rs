@@ -138,7 +138,9 @@ impl Predictor for DefaultLimits {
     }
 
     fn on_failure(&self, prev: &StepPlan, _fail_time: f64, _attempt: usize) -> StepPlan {
-        StepPlan::flat((prev.peaks.last().unwrap() * 2.0).min(self.capacity))
+        // Degenerate (empty) plans fall back to the configured limit.
+        let prev_peak = prev.last_peak_or(self.limit_gb.max(1.0));
+        StepPlan::flat((prev_peak * 2.0).min(self.capacity))
     }
 
     fn capacity(&self) -> f64 {

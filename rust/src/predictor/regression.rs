@@ -1,10 +1,11 @@
 //! Regression backend for the segment predictors.
 //!
 //! `FitEngine` abstracts where the batched OLS runs: `NativeFit` computes
-//! the closed form in-process (used by the offline experiment harness);
-//! the PJRT-backed engine in `runtime::PjrtFitEngine` executes the AOT
-//! Pallas kernel instead (used by the online coordinator). Both implement
-//! the *same* closed form — `runtime::tests` asserts parity.
+//! the closed form in-process (always available; used by the offline
+//! experiment harness and native-only builds); with the `pjrt` cargo
+//! feature, `runtime::PjrtFitEngine` executes the AOT Pallas kernel
+//! instead (used by the online coordinator). Both implement the *same*
+//! closed form — `runtime::tests` asserts parity when artifacts exist.
 
 use crate::util::stats;
 

@@ -100,7 +100,8 @@ impl Predictor for TovarPpm {
         match self.mode {
             RetryMode::MachineMax => StepPlan::flat(self.capacity),
             RetryMode::Double => {
-                StepPlan::flat((prev.peaks.last().unwrap() * 2.0).min(self.capacity))
+                let prev_peak = prev.last_peak_or(self.first_alloc);
+                StepPlan::flat((prev_peak * 2.0).min(self.capacity))
             }
         }
     }

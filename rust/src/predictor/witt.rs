@@ -66,7 +66,8 @@ impl Predictor for WittLr {
     }
 
     fn on_failure(&self, prev: &StepPlan, _fail_time: f64, _attempt: usize) -> StepPlan {
-        StepPlan::flat((prev.peaks.last().unwrap() * 2.0).min(self.capacity))
+        let prev_peak = prev.last_peak_or(self.fallback_peak);
+        StepPlan::flat((prev_peak * 2.0).min(self.capacity))
     }
 
     fn capacity(&self) -> f64 {

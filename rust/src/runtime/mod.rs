@@ -14,6 +14,12 @@
 //!
 //! Inputs are padded/masked to the bucket shapes and chunked when they
 //! exceed the batch bucket; results are unpadded before returning.
+//!
+//! This module only exists behind the `pjrt` cargo feature. The offline
+//! workspace resolves the `xla` dependency to the in-tree API stub
+//! (`vendor/xla`), which type-checks this whole path and returns clear
+//! runtime errors for device operations; swap the dependency for the
+//! real xla-rs bindings to execute artifacts.
 
 pub mod manifest;
 
@@ -44,15 +50,38 @@ pub struct Runtime {
     plan_wastage: Entry,
 }
 
-/// Resolve the artifacts directory: `KSPLUS_ARTIFACTS` env var, else
-/// `<manifest dir>/artifacts`, else `./artifacts`.
+/// Resolve the artifacts directory at *runtime*: the `KSPLUS_ARTIFACTS`
+/// env var wins; otherwise search for an `artifacts/manifest.json` next
+/// to the executable and in its ancestor directories (so a binary in
+/// `target/release/` finds a checkout-level `artifacts/`, and a deployed
+/// binary finds a sibling directory); finally fall back to `./artifacts`.
+///
+/// Deliberately NOT `env!("CARGO_MANIFEST_DIR")`: that constant is the
+/// build machine's absolute path and would be baked into release
+/// binaries, pointing at a directory that does not exist on any other
+/// host.
 pub fn default_artifacts_dir() -> PathBuf {
-    if let Ok(p) = std::env::var("KSPLUS_ARTIFACTS") {
-        return PathBuf::from(p);
+    resolve_artifacts_dir(
+        std::env::var_os("KSPLUS_ARTIFACTS").map(PathBuf::from),
+        std::env::current_exe().ok(),
+    )
+}
+
+/// Pure resolution core of [`default_artifacts_dir`], separated so tests
+/// can drive it without mutating process-global environment state.
+fn resolve_artifacts_dir(override_dir: Option<PathBuf>, exe: Option<PathBuf>) -> PathBuf {
+    if let Some(p) = override_dir {
+        return p;
     }
-    let candidate = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if candidate.exists() {
-        return candidate;
+    if let Some(exe) = exe {
+        let mut dir: Option<&Path> = exe.parent();
+        while let Some(d) = dir {
+            let candidate = d.join("artifacts");
+            if candidate.join("manifest.json").exists() {
+                return candidate;
+            }
+            dir = d.parent();
+        }
     }
     PathBuf::from("artifacts")
 }
@@ -362,6 +391,32 @@ mod tests {
             return None;
         }
         Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn artifacts_dir_env_override_wins() {
+        // Drives the pure resolver directly — no process-global env
+        // mutation, so parallel tests cannot race.
+        let got = resolve_artifacts_dir(
+            Some(PathBuf::from("/opt/ksplus-override")),
+            Some(PathBuf::from("/ignored/bin/repro")),
+        );
+        assert_eq!(got, PathBuf::from("/opt/ksplus-override"));
+    }
+
+    #[test]
+    fn artifacts_dir_is_not_baked_from_build_machine() {
+        // Without an override the result is either an artifacts dir with
+        // a manifest discovered near the executable, or the relative
+        // ./artifacts fallback — never a baked-in absolute build path.
+        let dir = resolve_artifacts_dir(None, std::env::current_exe().ok());
+        if dir.is_absolute() {
+            assert!(dir.join("manifest.json").exists(), "{dir:?}");
+        } else {
+            assert_eq!(dir, PathBuf::from("artifacts"));
+        }
+        // No executable context at all degrades to the cwd fallback.
+        assert_eq!(resolve_artifacts_dir(None, None), PathBuf::from("artifacts"));
     }
 
     fn rand_rows(rng: &mut Rng, count: usize, max_n: usize) -> Vec<(Vec<f64>, Vec<f64>)> {

@@ -122,6 +122,15 @@ impl StepPlan {
             * e.dt
     }
 
+    /// Final (highest) peak, or `default` for a degenerate empty plan.
+    ///
+    /// Retry strategies scale the previous attempt's last peak; routing
+    /// them through this accessor keeps the degenerate-plan policy in one
+    /// place instead of a `last().unwrap()` panic at every call site.
+    pub fn last_peak_or(&self, default: f64) -> f64 {
+        self.peaks.last().copied().unwrap_or(default)
+    }
+
     /// Clamp every peak to at most `cap` (node capacity), preserving shape.
     pub fn clamped(&self, cap: f64) -> StepPlan {
         StepPlan {

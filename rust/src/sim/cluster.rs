@@ -400,7 +400,7 @@ mod tests {
                 StepPlan::new(vec![0.0, 90.0], vec![2.5, 62.0])
             }
             fn on_failure(&self, p: &StepPlan, _t: f64, _a: usize) -> StepPlan {
-                StepPlan::flat(p.peaks.last().unwrap() * 2.0)
+                StepPlan::flat(p.last_peak_or(1.0) * 2.0)
             }
         }
         struct FlatPred;
@@ -413,7 +413,7 @@ mod tests {
                 StepPlan::flat(62.0)
             }
             fn on_failure(&self, p: &StepPlan, _t: f64, _a: usize) -> StepPlan {
-                StepPlan::flat(p.peaks.last().unwrap() * 2.0)
+                StepPlan::flat(p.last_peak_or(1.0) * 2.0)
             }
         }
         let mut samples = vec![2.0; 90];
@@ -429,6 +429,26 @@ mod tests {
             step_r.makespan_s,
             flat_r.makespan_s
         );
+    }
+
+    #[test]
+    fn on_failure_survives_empty_step_plan() {
+        // Regression: `p.peaks.last().unwrap()` aborted on a degenerate
+        // (empty) plan. An empty plan cannot come out of StepPlan::new —
+        // it asserts — but the fields are public, so a buggy caller (or
+        // deserialized garbage) could still hand one to a retry path.
+        // Every retry strategy must fall back to a default allocation.
+        use crate::predictor::{all_methods, by_name};
+        let empty = StepPlan { starts: vec![], peaks: vec![] };
+        for m in all_methods() {
+            let p = by_name(m, 4, 128.0).unwrap();
+            let retry = p.on_failure(&empty, 10.0, 1);
+            assert!(retry.is_valid(), "{m}: invalid fallback {retry:?}");
+            assert!(retry.peaks.iter().all(|&x| x <= 128.0));
+        }
+        // The shared accessor behind those fallbacks.
+        assert_eq!(empty.last_peak_or(3.5), 3.5);
+        assert_eq!(StepPlan::flat(7.0).last_peak_or(3.5), 7.0);
     }
 
     #[test]

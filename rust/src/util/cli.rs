@@ -19,15 +19,24 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(n) => write!(f, "unknown flag --{n}"),
+            CliError::MissingValue(n) => write!(f, "flag --{n} requires a value"),
+            CliError::BadValue(n, v) => write!(f, "invalid value for --{n}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 pub struct Command {
     pub name: &'static str,

@@ -24,12 +24,17 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, p in [0, 100]; 0.0 for empty input.
+///
+/// NaN samples are ignored (a NaN latency from a degenerate timestamp
+/// must not poison — or, worse, abort — the service stats path), and the
+/// sort uses `total_cmp`, which is total over all floats, instead of
+/// `partial_cmp(..).unwrap()`, which panics on NaN.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     if v.len() == 1 {
         return v[0];
     }
@@ -98,6 +103,20 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 50.0), 5.0);
         assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_without_panicking() {
+        // Regression: partial_cmp(..).unwrap() aborted on NaN input.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!(median(&xs).is_finite());
+        // All-NaN behaves like empty input.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        // Infinities are legitimate values and still sort.
+        assert_eq!(percentile(&[f64::INFINITY, 1.0], 0.0), 1.0);
     }
 
     #[test]

@@ -4,19 +4,26 @@
 
 use std::collections::BTreeMap;
 
+#[cfg(feature = "pjrt")]
 use ksplus::coordinator::server::Server;
+#[cfg(feature = "pjrt")]
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+#[cfg(feature = "pjrt")]
 use ksplus::coordinator::BackendSpec;
 use ksplus::experiments::{evaluate_method, trained_predictor};
 use ksplus::metrics::WastageReport;
 use ksplus::predictor::{by_name, paper_methods, Predictor};
+#[cfg(feature = "pjrt")]
 use ksplus::runtime::{default_artifacts_dir, Runtime};
 use ksplus::sim::cluster::{run_cluster, ClusterConfig, PredictorSource};
-use ksplus::sim::{run_all, run_task, MAX_RETRIES};
+use ksplus::sim::run_all;
+#[cfg(feature = "pjrt")]
+use ksplus::sim::{run_task, MAX_RETRIES};
 use ksplus::trace::workflow::Workflow;
 use ksplus::trace::{io as trace_io, split_train_test};
 use ksplus::util::rng::Rng;
 
+#[cfg(feature = "pjrt")]
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
@@ -90,6 +97,7 @@ fn every_method_finishes_every_task() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_plan_scoring_matches_simulator() {
     // The experiment metric computed host-side must equal the AOT
@@ -122,6 +130,7 @@ fn pjrt_plan_scoring_matches_simulator() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn wire_protocol_end_to_end_with_pjrt() {
     // TCP server -> coordinator -> PJRT artifacts -> plan -> simulate ->

@@ -1,0 +1,165 @@
+//! API-compatible stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The container has no XLA/PJRT shared libraries and no network access,
+//! so the real FFI crate cannot be built here. This stub keeps the exact
+//! call surface `ksplus::runtime` uses so the `pjrt` cargo feature
+//! type-checks everywhere (`cargo check --features pjrt`), while every
+//! operation that would need a real PJRT client returns a clear runtime
+//! error instead of crashing or silently computing nothing.
+//!
+//! Deploying against real XLA is a dependency swap in `rust/Cargo.toml`
+//! (point `xla` at the upstream bindings); no `ksplus` source changes.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs: one displayable message.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: this binary links the bundled XLA API stub \
+         (no PJRT shared library in the build environment); swap the `xla` \
+         dependency in rust/Cargo.toml for the real xla-rs bindings to \
+         execute AOT artifacts"
+    ))
+}
+
+/// Element types a `Literal` can be read back as.
+pub trait Element: Copy + 'static {}
+impl Element for f32 {}
+impl Element for f64 {}
+impl Element for i32 {}
+impl Element for i64 {}
+
+/// Host-side tensor value. Construction and reshape work (they are pure
+/// host bookkeeping); device readbacks error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module text (parsing is deferred to the real backend; the
+/// stub only checks the file is readable).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_host_ops_work() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.shape(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.shape(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn device_ops_error_clearly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(Literal::vec1(&[1.0]).to_vec::<f32>().is_err());
+    }
+}
