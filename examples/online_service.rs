@@ -52,7 +52,20 @@ fn main() -> anyhow::Result<()> {
     let live: Vec<_> = workflows.iter().map(|wf| wf.generate(1337, 200)).collect();
 
     // --- 2. coordinator with the best available backend -----------------
-    let coord = Coordinator::start(CoordinatorConfig::default(), backend_spec());
+    // KSPLUS_SHARDS widens the worker pool (default 1); backend build
+    // errors surface here instead of killing a detached worker thread.
+    let shards: usize = match std::env::var("KSPLUS_SHARDS") {
+        Err(_) => 1,
+        Ok(s) => s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid KSPLUS_SHARDS value '{s}'"))?,
+    };
+    println!("coordinator shards: {shards}");
+    let coord = Coordinator::start(
+        CoordinatorConfig { shards, ..Default::default() },
+        backend_spec(),
+    )?;
     let client = coord.client();
 
     // --- 3. train all task types ----------------------------------------

@@ -62,9 +62,27 @@ fn main() {
     });
     println!("  -> {}", r.throughput_line(512.0, "fits"));
 
-    // ---- coordinator service (native backend) ---------------------------
+    // ---- coordinator service (native backend, shipped defaults) ---------
+    // Comparable to the PJRT L3 section below: identical config, only the
+    // backend differs.
     println!("== L3 coordinator (native backend) ==");
-    coordinator_bench(BackendSpec::Native, &trace);
+    coordinator_bench(
+        BackendSpec::Native,
+        &trace,
+        1,
+        CoordinatorConfig::default().batch_delay,
+    );
+
+    // ---- coordinator service: sharded vs single-worker contention -------
+    // Same closed-loop client count at every width: the sharded pool
+    // should sustain a multiple of the single worker's plans/sec on
+    // multi-core (shards=1 is the original single-worker coordinator).
+    // Linger disabled for this sweep only, so it measures pool capacity
+    // rather than the single-request straggler poll.
+    println!("== L3 coordinator sharded vs single (native backend) ==");
+    for shards in [1, 2, 4] {
+        coordinator_bench(BackendSpec::Native, &trace, shards, std::time::Duration::ZERO);
+    }
 
     // ---- PJRT sections (feature-gated) ----------------------------------
     pjrt_sections(&trace, &bwa);
@@ -146,19 +164,33 @@ fn pjrt_sections(trace: &ksplus::trace::WorkflowTrace, bwa: &ksplus::trace::Task
 
     // ---- coordinator service (PJRT backend) -----------------------------
     println!("== L3 coordinator (PJRT backend) ==");
-    coordinator_bench(BackendSpec::Pjrt(Some(dir)), trace);
+    coordinator_bench(
+        BackendSpec::Pjrt(Some(dir)),
+        trace,
+        1,
+        CoordinatorConfig::default().batch_delay,
+    );
 }
 
-fn coordinator_bench(spec: BackendSpec, trace: &ksplus::trace::WorkflowTrace) {
-    let coord = Coordinator::start(CoordinatorConfig::default(), spec);
+fn coordinator_bench(
+    spec: BackendSpec,
+    trace: &ksplus::trace::WorkflowTrace,
+    shards: usize,
+    batch_delay: std::time::Duration,
+) {
+    let coord = Coordinator::start(
+        CoordinatorConfig { shards, batch_delay, ..Default::default() },
+        spec,
+    )
+    .expect("start coordinator");
     let client = coord.client();
     for t in &trace.tasks {
         client.train(&t.task, t.executions.clone());
     }
-    // Closed-loop from 8 threads to exercise the batcher.
+    // Closed-loop from 8 threads to exercise the per-shard batchers.
     let n_per_thread = 200;
     let threads = 8;
-    let r = bench("coordinator/plan-closed-loop", 1, 5, || {
+    let r = bench(&format!("coordinator/plan-closed-loop/shards{shards}"), 1, 5, || {
         let mut handles = Vec::new();
         for t in 0..threads {
             let c = coord.client();

@@ -2,24 +2,35 @@
 //! engine (Nextflow/Airflow/Snakemake) would call before submitting each
 //! task to the resource manager.
 //!
-//! Architecture (std threads + channels; see DESIGN.md Section 5b):
+//! Architecture (std threads + channels; see DESIGN.md Section 5b). The
+//! coordinator is a pool of `shards` identical workers; every worker
+//! owns its own model store, numeric backend, and dynamic batcher:
 //!
 //! ```text
-//!   clients ──mpsc──▶ worker thread (owns model store + backend)
-//!                        ├─ Train    : batched OLS fit (2k rows/task)
-//!                        ├─ Plan     : dynamic batcher — collects up to
-//!                        │             `batch_max` requests or
-//!                        │             `batch_delay`, then ONE batched
-//!                        │             predict over all task×segment
-//!                        │             models (PJRT artifact exec)
-//!                        └─ Failure  : KS+ segment-rescaling retry
+//!                ┌─hash(task)──▶ worker 0 (store + backend + batcher)
+//!   clients ──┬──┤              worker 1 (store + backend + batcher)
+//!             │  └─hash(task)──▶ ...
+//!             │                 worker N-1 (store + backend + batcher)
+//!             │   each worker:
+//!             │     ├─ Train    : batched OLS fit (2k rows/task)
+//!             │     ├─ Plan     : dynamic batcher — collects up to
+//!             │     │             `batch_max` requests or `batch_delay`,
+//!             │     │             then ONE batched predict over the
+//!             │     │             queued task×segment models
+//!             │     └─ Failure  : KS+ segment-rescaling retry
+//!             │                   (stateless; round-robin over shards)
+//!             └──fan-out───────▶ Stats : merged across every shard
 //! ```
 //!
-//! The batcher is the L3 hot path: with the `pjrt` cargo feature every
-//! flush is a single PJRT execution of `predict_b{B}.hlo.txt` covering
-//! every queued request's 2k regression evaluations; in default
-//! (native-only) builds the same flush runs the closed-form OLS
-//! in-process. The Python stack is never invoked either way.
+//! `Train` and `Plan` route by a deterministic FNV-1a hash of the task
+//! name (`service::shard_for`), so one shard owns each task's models and
+//! its plan traffic; `shards: 1` (the default) reproduces the original
+//! single-worker coordinator. Each per-shard batcher is the L3 hot path:
+//! with the `pjrt` cargo feature every flush is a single PJRT execution
+//! of `predict_b{B}.hlo.txt` covering every queued request's 2k
+//! regression evaluations; in default (native-only) builds the same
+//! flush runs the closed-form OLS in-process. The Python stack is never
+//! invoked either way.
 
 pub mod server;
 pub mod service;

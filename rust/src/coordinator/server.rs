@@ -11,10 +11,12 @@
 //!   {"ok":true, ...}            on success (fields depend on op)
 //!   {"ok":false,"error":"..."}  on failure
 //!
-//! One OS thread per connection; every connection shares the single
-//! coordinator worker (and thus its dynamic batcher), so concurrent
-//! clients' plan requests are batched into single backend executions
-//! (one PJRT dispatch per flush when built with the `pjrt` feature).
+//! One OS thread per connection; every connection shares the coordinator
+//! worker pool (and thus its per-shard dynamic batchers), so concurrent
+//! clients' plan requests for tasks on the same shard are batched into
+//! single backend executions (one PJRT dispatch per flush when built
+//! with the `pjrt` feature). The `stats` op reports the merge across all
+//! shards.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -23,7 +25,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::service::Client;
+use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig};
+use crate::coordinator::BackendSpec;
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 use crate::util::json::Json;
@@ -61,6 +64,19 @@ impl Server {
                 }
             })?;
         Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+    }
+
+    /// Build a coordinator pool and a server over it in one call. Backend
+    /// construction failures (e.g. a PJRT spec in a native-only build)
+    /// surface as `Err` here, before anything is bound or detached.
+    pub fn start_with_backend(
+        addr: &str,
+        cfg: CoordinatorConfig,
+        spec: BackendSpec,
+    ) -> Result<(Coordinator, Server)> {
+        let coord = Coordinator::start(cfg, spec).context("start coordinator")?;
+        let server = Server::start(addr, coord.client())?;
+        Ok((coord, server))
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -177,6 +193,7 @@ fn handle_request(line: &str, client: &Client) -> Result<Json> {
             let s = client.stats();
             Ok(Json::obj(vec![
                 ("ok", true.into()),
+                ("shards", client.shards().into()),
                 ("requests", (s.requests as usize).into()),
                 ("batches", (s.batches as usize).into()),
                 ("failures_handled", (s.failures_handled as usize).into()),
@@ -197,12 +214,12 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn start() -> (Coordinator, Server) {
-        let coord = Coordinator::start(
+        Server::start_with_backend(
+            "127.0.0.1:0",
             CoordinatorConfig { k: 2, ..Default::default() },
             BackendSpec::Native,
-        );
-        let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
-        (coord, server)
+        )
+        .unwrap()
     }
 
     fn roundtrip(stream: &mut TcpStream, req: &str) -> Json {
@@ -313,5 +330,36 @@ mod tests {
     fn stop_unblocks_accept() {
         let (_coord, mut server) = start();
         server.stop(); // must not hang
+    }
+
+    #[test]
+    fn stats_reports_shard_count() {
+        let (_coord, server) = Server::start_with_backend(
+            "127.0.0.1:0",
+            CoordinatorConfig { k: 2, shards: 3, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("shards").and_then(Json::as_usize), Some(3));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn backend_build_error_propagates_through_server_start() {
+        // The startup seam end-to-end: an unbuildable backend spec fails
+        // the combined constructor before any socket is bound, instead of
+        // panicking a detached worker thread.
+        let err = Server::start_with_backend(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+            BackendSpec::Pjrt(None),
+        )
+        .err()
+        .expect("pjrt spec must not serve in a native-only build");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
     }
 }

@@ -1,13 +1,25 @@
-//! Threaded coordinator service: dynamic batcher + request router over
-//! the `ModelStore`.
+//! Threaded coordinator service: a sharded pool of workers, each with a
+//! dynamic batcher + request router over its own shard-local `ModelStore`.
 //!
-//! One worker thread owns the store and the numeric backend. Plan
-//! requests are coalesced — a flush happens when `batch_max` requests
-//! are pending or the oldest has waited `batch_delay` — so each flush
-//! costs one batched predict regardless of the number of clients.
+//! `CoordinatorConfig::shards` controls the pool width (default 1, which
+//! preserves the original single-worker behavior exactly). Each worker
+//! thread owns its own `ModelStore` and numeric backend — the backend is
+//! built *inside* the worker thread because PJRT handles are thread-affine
+//! — and runs an independent dynamic batcher: plan requests coalesce per
+//! shard, so a flush costs one batched predict regardless of the number of
+//! clients on that shard.
+//!
+//! Routing: `Train` and `Plan` go to `shard_for(task) = fnv1a(task) %
+//! shards`, so a task's models and all its plan traffic live on exactly
+//! one shard. `Failure` carries no task and is distributed round-robin.
+//! `Stats` fans out to every shard and the per-shard counters/latency
+//! windows are merged into one aggregate `ServiceStats`.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+use anyhow::Context;
 
 use crate::coordinator::{BackendSpec, ModelStore};
 use crate::segments::StepPlan;
@@ -22,6 +34,10 @@ pub struct CoordinatorConfig {
     pub batch_max: usize,
     /// ... or when the oldest pending request is this old.
     pub batch_delay: Duration,
+    /// Worker shards. Each shard owns its own model store, backend, and
+    /// batcher; tasks are routed by a deterministic name hash. `1`
+    /// reproduces the original single-worker coordinator.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -31,11 +47,29 @@ impl Default for CoordinatorConfig {
             capacity_gb: 128.0,
             batch_max: 64,
             batch_delay: Duration::from_millis(1),
+            shards: 1,
         }
     }
 }
 
-/// How many recent plan latencies the service retains. A long-running
+/// Deterministic task-to-shard routing: FNV-1a over the task name with a
+/// murmur3-style avalanche finalizer. Both `train` and `plan` use this,
+/// so a trained task is always found by the shard its plan requests land
+/// on. The finalizer matters: raw FNV-1a has weak low bits on short,
+/// similar names (all nine eager-workflow tasks share one parity), which
+/// would collapse small shard counts onto a single worker.
+pub fn shard_for(task: &str, shards: usize) -> usize {
+    assert!(shards > 0, "shard_for with zero shards");
+    let mut h = crate::util::fnv1a(task);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ceb9fe1a85ec53);
+    h ^= h >> 33;
+    (h % shards as u64) as usize
+}
+
+/// How many recent plan latencies each shard retains. A long-running
 /// service must not grow a sample per request forever; percentiles are
 /// computed over this sliding window of the most recent requests.
 pub const LATENCY_WINDOW: usize = 4096;
@@ -97,9 +131,37 @@ impl LatencyWindow {
     pub fn as_slice(&self) -> &[f64] {
         &self.buf
     }
+
+    /// Retained samples in arrival order (oldest first). The ring stores
+    /// samples in overwrite order once wrapped; this re-linearizes.
+    pub fn chronological(&self) -> Vec<f64> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut v = Vec::with_capacity(self.buf.len());
+            v.extend_from_slice(&self.buf[self.next..]);
+            v.extend_from_slice(&self.buf[..self.next]);
+            v
+        }
+    }
+
+    /// Absorb another window. The merged window keeps *every* retained
+    /// sample from both sides (capacity grows as needed), so aggregating
+    /// N shards never silently drops samples any one shard retained, and
+    /// percentiles over the merge are exact over the union.
+    pub fn merge(&mut self, other: &LatencyWindow) {
+        let mut all = self.chronological();
+        all.extend(other.chronological());
+        let cap = self.cap.max(all.len()).max(1);
+        let next = all.len() % cap;
+        let total = self.total + other.total;
+        *self = LatencyWindow { buf: all, cap, next, total };
+    }
 }
 
-/// Service-side counters, exposed via `Client::stats`.
+/// Service-side counters, exposed via `Client::stats`. For a sharded
+/// coordinator this is either one shard's view (`Client::shard_stats`) or
+/// the merge across all shards (`Client::stats`).
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     pub requests: u64,
@@ -107,11 +169,31 @@ pub struct ServiceStats {
     pub failures_handled: u64,
     pub tasks_trained: u64,
     /// Recent plan-request latencies, microseconds (enqueue -> response
-    /// send), bounded to the last `LATENCY_WINDOW` requests.
+    /// send), bounded to the last `LATENCY_WINDOW` requests per shard.
     pub latencies_us: LatencyWindow,
 }
 
 impl ServiceStats {
+    /// Fold another shard's counters and latency window into this one.
+    /// After merging, `mean_batch_size` and `latency_percentile_us` are
+    /// computed over the union (summed counters, concatenated windows).
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.failures_handled += other.failures_handled;
+        self.tasks_trained += other.tasks_trained;
+        self.latencies_us.merge(&other.latencies_us);
+    }
+
+    /// Aggregate view over a set of per-shard stats.
+    pub fn merged(parts: &[ServiceStats]) -> ServiceStats {
+        let mut out = ServiceStats::default();
+        for p in parts {
+            out.merge(p);
+        }
+        out
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -148,16 +230,19 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to a running coordinator; cheap to clone via `client()`.
+/// Handle to a running coordinator pool; cheap to clone via `client()`.
 pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    txs: Vec<mpsc::Sender<Msg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Round-robin cursor for task-less messages (`Failure`).
+    rr: Arc<AtomicUsize>,
 }
 
-/// Client endpoint (clonable, thread-safe sender).
+/// Client endpoint (clonable, thread-safe senders to every shard).
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::Sender<Msg>,
+    txs: Vec<mpsc::Sender<Msg>>,
+    rr: Arc<AtomicUsize>,
 }
 
 struct Pending {
@@ -168,48 +253,108 @@ struct Pending {
 }
 
 impl Coordinator {
-    /// Spawn the worker. The backend is *built inside* the worker thread
-    /// because PJRT handles are thread-affine.
-    pub fn start(cfg: CoordinatorConfig, spec: BackendSpec) -> Coordinator {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::Builder::new()
-            .name("ksplus-coordinator".into())
-            .spawn(move || {
-                let backend = spec.build().expect("backend construction failed");
-                worker(cfg, backend, rx)
-            })
-            .expect("spawn coordinator");
-        Coordinator { tx, handle: Some(handle) }
+    /// Spawn `cfg.shards` workers. Each backend is *built inside* its
+    /// worker thread because PJRT handles are thread-affine, but build
+    /// failures are reported back over a readiness channel so the caller
+    /// gets an `Err` here instead of clients later dying on a dead
+    /// channel ("coordinator gone").
+    pub fn start(cfg: CoordinatorConfig, spec: BackendSpec) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(cfg.shards >= 1, "coordinator needs at least one shard");
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        let mut readies = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), String>>(1);
+            let shard_cfg = cfg.clone();
+            let shard_spec = spec.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ksplus-coordinator-{i}"))
+                .spawn(move || {
+                    let backend = match shard_spec.build() {
+                        Ok(b) => {
+                            let _ = ready_tx.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    worker(shard_cfg, backend, rx)
+                })
+                .with_context(|| format!("spawn coordinator shard {i}"))?;
+            txs.push(tx);
+            handles.push(handle);
+            readies.push(ready_rx);
+        }
+        for (i, ready) in readies.into_iter().enumerate() {
+            let built = ready
+                .recv()
+                .unwrap_or_else(|_| Err("worker died before reporting readiness".into()));
+            if let Err(msg) = built {
+                // Wind down whatever did start before surfacing the error.
+                for tx in &txs {
+                    let _ = tx.send(Msg::Shutdown);
+                }
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(anyhow::anyhow!("coordinator shard {i}: {msg}"));
+            }
+        }
+        Ok(Coordinator { txs, handles, rr: Arc::new(AtomicUsize::new(0)) })
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
+        Client { txs: self.txs.clone(), rr: self.rr.clone() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 impl Client {
+    fn tx_for(&self, task: &str) -> &mpsc::Sender<Msg> {
+        &self.txs[shard_for(task, self.txs.len())]
+    }
+
+    /// Any shard, for messages that carry no task (round-robin so the
+    /// load spreads).
+    fn any_tx(&self) -> &mpsc::Sender<Msg> {
+        &self.txs[self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len()]
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
     /// Fit (or refit) the task's segment models; blocks until stored.
     pub fn train(&self, task: &str, history: Vec<Execution>) {
         let (done_tx, done_rx) = mpsc::sync_channel(1);
-        self.tx
+        self.tx_for(task)
             .send(Msg::Train { task: task.to_string(), history, done: done_tx })
             .expect("coordinator gone");
         let _ = done_rx.recv();
     }
 
-    /// Request an allocation plan; blocks until the batcher flushes.
+    /// Request an allocation plan; blocks until the shard's batcher
+    /// flushes.
     pub fn plan(&self, task: &str, input_mb: f64) -> StepPlan {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx
+        self.tx_for(task)
             .send(Msg::Plan {
                 task: task.to_string(),
                 input_mb,
@@ -220,19 +365,38 @@ impl Client {
         resp_rx.recv().expect("coordinator dropped request")
     }
 
-    /// Report an OOM; returns the rescaled retry plan.
+    /// Report an OOM; returns the rescaled retry plan. Stateless, so any
+    /// shard can serve it.
     pub fn report_failure(&self, prev: &StepPlan, fail_time: f64) -> StepPlan {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx
+        self.any_tx()
             .send(Msg::Failure { prev: prev.clone(), fail_time, resp: resp_tx })
             .expect("coordinator gone");
         resp_rx.recv().expect("coordinator dropped request")
     }
 
+    /// Aggregate counters across every shard.
     pub fn stats(&self) -> ServiceStats {
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.tx.send(Msg::Stats { resp: resp_tx }).expect("coordinator gone");
-        resp_rx.recv().expect("coordinator dropped request")
+        ServiceStats::merged(&self.shard_stats())
+    }
+
+    /// Per-shard counters, in shard order. The fan-out is pipelined —
+    /// every shard is queried before any reply is awaited — so the
+    /// aggregate costs the slowest shard's queue delay, not the sum.
+    pub fn shard_stats(&self) -> Vec<ServiceStats> {
+        let pending: Vec<mpsc::Receiver<ServiceStats>> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+                tx.send(Msg::Stats { resp: resp_tx }).expect("coordinator gone");
+                resp_rx
+            })
+            .collect();
+        pending
+            .into_iter()
+            .map(|rx| rx.recv().expect("coordinator dropped request"))
+            .collect()
     }
 }
 
@@ -334,6 +498,7 @@ mod tests {
     use super::*;
     use crate::predictor::ksplus::KsPlus;
     use crate::predictor::Predictor;
+    use crate::util::prop::run_prop;
     use crate::util::rng::Rng;
 
     fn two_phase_exec(input: f64, rng: &mut Rng) -> Execution {
@@ -352,13 +517,29 @@ mod tests {
         (0..n).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect()
     }
 
+    /// Two task names guaranteed to route to different shards.
+    fn two_tasks_on_distinct_shards(shards: usize) -> (String, String) {
+        assert!(shards > 1, "needs at least two shards to find distinct routes");
+        let a = "task-a".to_string();
+        let sa = shard_for(&a, shards);
+        let mut i = 0u64;
+        loop {
+            let b = format!("task-b{i}");
+            if shard_for(&b, shards) != sa {
+                return (a, b);
+            }
+            i += 1;
+        }
+    }
+
     #[test]
     fn end_to_end_plan_matches_offline_predictor() {
         let hist = history(1, 30);
         let coord = Coordinator::start(
             CoordinatorConfig { k: 2, ..Default::default() },
             BackendSpec::Native,
-        );
+        )
+        .unwrap();
         let client = coord.client();
         client.train("bwa", hist.clone());
         let got = client.plan("bwa", 8000.0);
@@ -382,7 +563,8 @@ mod tests {
                 ..Default::default()
             },
             BackendSpec::Native,
-        );
+        )
+        .unwrap();
         let client = coord.client();
         client.train("bwa", history(2, 20));
         let mut handles = Vec::new();
@@ -406,7 +588,8 @@ mod tests {
         let coord = Coordinator::start(
             CoordinatorConfig { k: 2, ..Default::default() },
             BackendSpec::Native,
-        );
+        )
+        .unwrap();
         let client = coord.client();
         let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
         let retry = client.report_failure(&prev, 60.0);
@@ -416,7 +599,8 @@ mod tests {
 
     #[test]
     fn unknown_task_served_with_fallback() {
-        let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+        let coord =
+            Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native).unwrap();
         let plan = coord.client().plan("never-trained", 123.0);
         assert!(plan.is_valid());
     }
@@ -426,7 +610,8 @@ mod tests {
         let coord = Coordinator::start(
             CoordinatorConfig { batch_delay: Duration::from_micros(200), ..Default::default() },
             BackendSpec::Native,
-        );
+        )
+        .unwrap();
         let client = coord.client();
         client.train("bwa", history(3, 10));
         for _ in 0..5 {
@@ -459,7 +644,8 @@ mod tests {
         let coord = Coordinator::start(
             CoordinatorConfig { batch_delay: Duration::ZERO, ..Default::default() },
             BackendSpec::Native,
-        );
+        )
+        .unwrap();
         let client = coord.client();
         client.train("bwa", history(5, 10));
         let n = 64;
@@ -471,6 +657,247 @@ mod tests {
         assert_eq!(stats.latencies_us.total_recorded(), n);
         assert!(stats.latencies_us.len() <= LATENCY_WINDOW);
         assert!(stats.latency_percentile_us(99.0) > 0.0);
+    }
+
+    #[test]
+    fn latency_window_merge_exact_percentiles() {
+        // Merging two windows of known samples must yield the exact
+        // percentiles of the union (linear interpolation over 1..=8).
+        let mut a = LatencyWindow::with_capacity(8);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            a.push(v);
+        }
+        let mut b = LatencyWindow::with_capacity(8);
+        for v in [5.0, 6.0, 7.0, 8.0] {
+            b.push(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a.total_recorded(), 8);
+        assert_eq!(a.percentile(0.0), 1.0);
+        assert_eq!(a.percentile(100.0), 8.0);
+        // rank 0.5 * 7 = 3.5 -> 4 + 0.5 * (5 - 4) = 4.5
+        assert_eq!(a.percentile(50.0), 4.5);
+        // rank 0.25 * 7 = 1.75 -> 2 + 0.75 * (3 - 2) = 2.75
+        assert_eq!(a.percentile(25.0), 2.75);
+    }
+
+    #[test]
+    fn latency_window_merge_preserves_order_after_wrap() {
+        let mut a = LatencyWindow::with_capacity(4);
+        for i in 0..6 {
+            a.push(i as f64);
+        }
+        assert_eq!(a.chronological(), vec![2.0, 3.0, 4.0, 5.0]);
+        let mut b = LatencyWindow::with_capacity(2);
+        for i in 0..5 {
+            b.push(10.0 + i as f64);
+        }
+        assert_eq!(b.chronological(), vec![13.0, 14.0]);
+        a.merge(&b);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a.total_recorded(), 11);
+        assert_eq!(a.chronological(), vec![2.0, 3.0, 4.0, 5.0, 13.0, 14.0]);
+        // The merged window stays a well-formed ring: more pushes rotate
+        // out the oldest sample first.
+        a.push(99.0);
+        assert_eq!(a.chronological(), vec![3.0, 4.0, 5.0, 13.0, 14.0, 99.0]);
+    }
+
+    #[test]
+    fn service_stats_merge_counters_and_mean_batch() {
+        let mut a = ServiceStats::default();
+        a.requests = 10;
+        a.batches = 2;
+        a.failures_handled = 1;
+        a.tasks_trained = 3;
+        a.latencies_us.push(100.0);
+        let mut b = ServiceStats::default();
+        b.requests = 30;
+        b.batches = 8;
+        b.tasks_trained = 1;
+        b.latencies_us.push(300.0);
+        let m = ServiceStats::merged(&[a, b]);
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.batches, 10);
+        assert_eq!(m.failures_handled, 1);
+        assert_eq!(m.tasks_trained, 4);
+        // Mean batch size comes from the merged counters, not an average
+        // of per-shard means: (10 + 30) / (2 + 8).
+        assert_eq!(m.mean_batch_size(), 4.0);
+        assert_eq!(m.latencies_us.len(), 2);
+        assert_eq!(m.latency_percentile_us(50.0), 200.0);
+    }
+
+    #[test]
+    fn prop_shard_routing_deterministic_and_total() {
+        run_prop("shard_routing", 50, |rng| {
+            let shards = 1 + rng.below(8);
+            // Deterministic: the same name always lands on the same shard.
+            for _ in 0..32 {
+                let len = 1 + rng.below(12);
+                let name: String =
+                    (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                let s = shard_for(&name, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for(&name, shards));
+            }
+            // Total: distinct names reach every shard (256 >= 64 names).
+            let mut hit = vec![false; shards];
+            for i in 0..256 {
+                let name = format!("task-{}-{i}", rng.next_u64());
+                hit[shard_for(&name, shards)] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "unreachable shard among {shards}");
+        });
+    }
+
+    #[test]
+    fn trained_task_never_gets_fallback_on_any_shard() {
+        // Because train and plan route by the same hash, a plan after a
+        // train on the same task must always find the model — for every
+        // task name, whichever shard it hashes to.
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards: 4, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        for i in 0..64u64 {
+            let task = format!("task-{i}");
+            let before = client.plan(&task, 5000.0);
+            assert_eq!(before.k(), 1, "untrained task must get the flat fallback");
+            client.train(&task, history(100 + i, 12));
+            // Plan through a *clone* of the client: routing must agree
+            // across client handles, not just within one.
+            let after = client.clone().plan(&task, 5000.0);
+            assert!(
+                !(after.starts == before.starts && after.peaks == before.peaks),
+                "{task} still served the untrained fallback after train()"
+            );
+        }
+        let stats = client.stats();
+        assert_eq!(stats.tasks_trained, 64);
+        assert_eq!(stats.requests, 128);
+    }
+
+    #[test]
+    fn stats_fan_out_and_merge_across_shards() {
+        let shards = 3;
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        assert_eq!(client.shards(), shards);
+        let n_tasks = 12u64;
+        for i in 0..n_tasks {
+            let task = format!("task-{i}");
+            client.train(&task, history(200 + i, 10));
+            client.plan(&task, 4000.0);
+            client.plan(&task, 8000.0);
+        }
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        client.report_failure(&prev, 60.0);
+        let per = client.shard_stats();
+        assert_eq!(per.len(), shards);
+        let merged = client.stats();
+        assert_eq!(merged.requests, 2 * n_tasks);
+        assert_eq!(merged.tasks_trained, n_tasks);
+        assert_eq!(merged.failures_handled, 1);
+        // The aggregate is exactly the sum of the per-shard views.
+        assert_eq!(per.iter().map(|s| s.requests).sum::<u64>(), merged.requests);
+        assert_eq!(per.iter().map(|s| s.tasks_trained).sum::<u64>(), merged.tasks_trained);
+        assert_eq!(
+            per.iter().map(|s| s.latencies_us.len()).sum::<usize>(),
+            merged.latencies_us.len()
+        );
+        // With 12 distinct tasks over 3 shards, more than one shard must
+        // have seen traffic (FNV spreads these names).
+        assert!(per.iter().filter(|s| s.requests > 0).count() > 1);
+    }
+
+    #[test]
+    fn per_shard_batchers_run_independently() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                k: 2,
+                batch_max: 16,
+                batch_delay: Duration::from_millis(4),
+                shards: 2,
+                ..Default::default()
+            },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        let (t0, t1) = two_tasks_on_distinct_shards(2);
+        client.train(&t0, history(2, 20));
+        client.train(&t1, history(3, 20));
+        let mut handles = Vec::new();
+        for i in 0..32usize {
+            let c = coord.client();
+            let task = if i % 2 == 0 { t0.clone() } else { t1.clone() };
+            handles.push(std::thread::spawn(move || {
+                c.plan(&task, 3000.0 + i as f64 * 100.0)
+            }));
+        }
+        let plans: Vec<StepPlan> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(plans.iter().all(|p| p.is_valid()));
+        let per = client.shard_stats();
+        assert_eq!(per.len(), 2);
+        // Both shards saw their half of the traffic and batched it
+        // themselves.
+        assert!(per.iter().all(|s| s.requests == 16), "{per:?}");
+        assert_eq!(client.stats().requests, 32);
+    }
+
+    #[test]
+    fn failure_round_robin_spreads_across_shards() {
+        let shards = 4;
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        for _ in 0..shards * 3 {
+            let retry = client.report_failure(&prev, 60.0);
+            assert!(retry.is_valid());
+        }
+        let per = client.shard_stats();
+        assert!(per.iter().all(|s| s.failures_handled == 3), "{per:?}");
+    }
+
+    #[test]
+    fn zero_shards_is_a_startup_error() {
+        let err = Coordinator::start(
+            CoordinatorConfig { shards: 0, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .err()
+        .expect("zero shards must not start");
+        assert!(format!("{err:#}").contains("shard"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_start_errors_instead_of_panicking_worker() {
+        // The startup seam: a backend that cannot be built in this binary
+        // must surface as Err from start(), not as a detached worker
+        // thread panic that clients discover via "coordinator gone".
+        for shards in [1, 4] {
+            let err = Coordinator::start(
+                CoordinatorConfig { shards, ..Default::default() },
+                BackendSpec::Pjrt(None),
+            )
+            .err()
+            .expect("pjrt spec must not start in a native-only build");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
+        }
     }
 
     #[cfg(feature = "pjrt")]
@@ -486,8 +913,8 @@ mod tests {
         }
         let hist = history(7, 25);
         let cfg = CoordinatorConfig { k: 3, ..Default::default() };
-        let pjrt = Coordinator::start(cfg.clone(), BackendSpec::Pjrt(Some(dir)));
-        let native = Coordinator::start(cfg, BackendSpec::Native);
+        let pjrt = Coordinator::start(cfg.clone(), BackendSpec::Pjrt(Some(dir))).unwrap();
+        let native = Coordinator::start(cfg, BackendSpec::Native).unwrap();
         pjrt.client().train("bwa", hist.clone());
         native.client().train("bwa", hist);
         for input in [2500.0, 6000.0, 11000.0] {
@@ -503,10 +930,14 @@ mod tests {
 
     #[test]
     fn shutdown_flushes_cleanly() {
-        let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+        let coord = Coordinator::start(
+            CoordinatorConfig { shards: 3, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
         let client = coord.client();
         client.train("bwa", history(4, 10));
-        drop(coord); // must not hang or panic
+        drop(coord); // must not hang or panic, across all shards
         // Client calls after shutdown fail loudly (panic) — we only
         // check drop-order safety here.
         let _ = client;

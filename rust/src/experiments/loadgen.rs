@@ -1,0 +1,219 @@
+//! Closed-loop service load generator: measures the sharded coordinator
+//! the way a workflow engine would drive it — M client threads, each
+//! blocking on its previous plan before submitting the next — and reports
+//! plans/sec and latency percentiles per shard count.
+//!
+//! This is the scaling proof for the worker pool: at equal client count,
+//! `shards: N` on an N-core machine should sustain a multiple of the
+//! single-shard throughput because every shard owns an independent model
+//! store, backend, and batcher. Exposed as `repro loadgen`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::service::{Coordinator, CoordinatorConfig, ServiceStats};
+use crate::coordinator::BackendSpec;
+use crate::trace::workflow::Workflow;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Coordinator worker shards.
+    pub shards: usize,
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    /// Total plan requests (split across clients, rounded up per client).
+    pub requests: usize,
+    /// Segments per task model.
+    pub k: usize,
+    /// Workflow whose task mix drives the request stream.
+    pub workflow: String,
+    /// Numeric backend for every shard.
+    pub spec: BackendSpec,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            shards: 1,
+            clients: 8,
+            requests: 5000,
+            k: 4,
+            workflow: "eager".to_string(),
+            spec: BackendSpec::Native,
+        }
+    }
+}
+
+/// One load-generation run's measurements.
+#[derive(Debug, Clone)]
+pub struct LoadGenReport {
+    pub shards: usize,
+    pub clients: usize,
+    /// Plan requests actually issued (>= the configured total after
+    /// per-client rounding).
+    pub requests: u64,
+    pub elapsed_s: f64,
+    pub plans_per_s: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    /// Plan requests each shard served, in shard order.
+    pub per_shard_requests: Vec<u64>,
+}
+
+impl LoadGenReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", self.shards.into()),
+            ("clients", self.clients.into()),
+            ("requests", (self.requests as usize).into()),
+            ("elapsed_s", self.elapsed_s.into()),
+            ("plans_per_s", self.plans_per_s.into()),
+            ("p50_us", self.p50_us.into()),
+            ("p99_us", self.p99_us.into()),
+            ("batches", (self.batches as usize).into()),
+            ("mean_batch_size", self.mean_batch_size.into()),
+            (
+                "per_shard_requests",
+                Json::Arr(
+                    self.per_shard_requests.iter().map(|&r| (r as usize).into()).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Train every task of the workflow, then hammer the coordinator from
+/// `clients` closed-loop threads and collect the merged service stats.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
+    anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
+    anyhow::ensure!(cfg.requests >= 1, "loadgen needs at least one request");
+    let wf = Workflow::by_name(&cfg.workflow)
+        .with_context(|| format!("unknown workflow '{}'", cfg.workflow))?;
+    let trace = wf.generate(42, 150);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            k: cfg.k,
+            shards: cfg.shards,
+            // No straggler linger: closed-loop clients would otherwise
+            // serialize on the poll whenever a shard has one pending
+            // request, and the sweep would measure the linger knob
+            // instead of pool capacity. The drain loop still batches.
+            batch_delay: Duration::ZERO,
+            ..Default::default()
+        },
+        cfg.spec.clone(),
+    )
+    .context("start coordinator")?;
+    let client = coord.client();
+    for t in &trace.tasks {
+        client.train(&t.task, t.executions.clone());
+    }
+    // The request mix: every task type with a spread of real input sizes.
+    let mix: Vec<(String, f64)> = trace
+        .tasks
+        .iter()
+        .flat_map(|t| {
+            t.executions.iter().take(8).map(move |e| (t.task.clone(), e.input_mb))
+        })
+        .collect();
+    anyhow::ensure!(!mix.is_empty(), "workflow produced no tasks");
+
+    let per_client = cfg.requests.div_ceil(cfg.clients);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let cl = coord.client();
+        let mix = mix.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC0FFEE ^ c as u64);
+            let mut invalid = 0u64;
+            for _ in 0..per_client {
+                let (task, input) = &mix[rng.below(mix.len())];
+                if !cl.plan(task, *input).is_valid() {
+                    invalid += 1;
+                }
+            }
+            invalid
+        }));
+    }
+    let mut invalid = 0u64;
+    for h in handles {
+        invalid += h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))?;
+    }
+    // A trained (or fallback) plan is always well-formed; an invalid one
+    // is a service bug, not a load characteristic — fail loudly rather
+    // than skewing throughput.
+    anyhow::ensure!(invalid == 0, "coordinator returned {invalid} invalid plans");
+    let served = (per_client * cfg.clients) as u64;
+    let elapsed = t0.elapsed().max(Duration::from_nanos(1));
+
+    let per_shard = client.shard_stats();
+    let stats = ServiceStats::merged(&per_shard);
+    Ok(LoadGenReport {
+        shards: cfg.shards,
+        clients: cfg.clients,
+        requests: served,
+        elapsed_s: elapsed.as_secs_f64(),
+        plans_per_s: served as f64 / elapsed.as_secs_f64(),
+        p50_us: stats.latency_percentile_us(50.0),
+        p99_us: stats.latency_percentile_us(99.0),
+        batches: stats.batches,
+        mean_batch_size: stats.mean_batch_size(),
+        per_shard_requests: per_shard.iter().map(|s| s.requests).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loadgen_smoke_single_shard() {
+        let r = run(&LoadGenConfig {
+            clients: 4,
+            requests: 64,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.shards, 1);
+        assert_eq!(r.requests, 64);
+        assert_eq!(r.per_shard_requests, vec![64]);
+        assert!(r.plans_per_s > 0.0);
+        assert!(r.p99_us >= r.p50_us);
+    }
+
+    #[test]
+    fn loadgen_sharded_spreads_requests() {
+        let r = run(&LoadGenConfig {
+            shards: 4,
+            clients: 4,
+            requests: 200,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.per_shard_requests.len(), 4);
+        // Every plan request is accounted for by exactly one shard.
+        assert_eq!(r.per_shard_requests.iter().sum::<u64>(), r.requests);
+        // The eager workflow's task names spread over multiple shards.
+        assert!(
+            r.per_shard_requests.iter().filter(|&&n| n > 0).count() > 1,
+            "{:?}",
+            r.per_shard_requests
+        );
+        let j = r.to_json();
+        assert_eq!(j.get("shards").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn loadgen_rejects_degenerate_configs() {
+        assert!(run(&LoadGenConfig { clients: 0, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { requests: 0, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { workflow: "nope".into(), ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { shards: 0, ..Default::default() }).is_err());
+    }
+}

@@ -10,6 +10,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod figs;
+pub mod loadgen;
 pub mod report;
 pub mod throughput;
 

@@ -6,6 +6,7 @@
 //!   segment                segment a trace's executions (Algorithm 1)
 //!   simulate               cluster simulation with a chosen method
 //!   serve                  smoke-run the online coordinator
+//!   loadgen                closed-loop load test over shard counts
 //!
 //! Run `repro <cmd> --help` for flags.
 
@@ -38,6 +39,7 @@ fn main() {
         "segment" => cmd_segment(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         other => {
             eprintln!("unknown command '{other}'\n");
             print_help();
@@ -59,7 +61,8 @@ fn print_help() {
            trace-gen                      synthesize a workflow trace (CSV)\n\
            segment                        run Algorithm 1 on a trace\n\
            simulate                       discrete-event cluster simulation\n\
-           serve                          coordinator service smoke run\n"
+           serve                          coordinator service smoke run\n\
+           loadgen                        closed-loop coordinator load test\n"
     );
 }
 
@@ -201,15 +204,10 @@ const DEFAULT_BACKEND: &str = "pjrt";
 #[cfg(not(feature = "pjrt"))]
 const DEFAULT_BACKEND: &str = "native";
 
-fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
-        .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
-        .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
-        .flag("k", "segments", Some("4"))
-        .flag("workflow", "training workflow", Some("eager"))
-        .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None);
-    let a = cmd.parse(argv)?;
-    let spec = match a.get("backend").unwrap() {
+/// Resolve a `--backend` flag value into a spec, failing fast when the
+/// binary lacks the feature it needs.
+fn backend_spec_from_flag(backend: &str) -> Result<BackendSpec> {
+    let spec = match backend {
         "native" => BackendSpec::Native,
         "pjrt" => BackendSpec::Pjrt(None),
         other => bail!("unknown backend '{other}'"),
@@ -220,12 +218,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              with `cargo build --release --features pjrt` or pass --backend native"
         );
     }
+    Ok(spec)
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
+        .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
+        .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
+        .flag("k", "segments", Some("4"))
+        .flag("shards", "coordinator worker shards", Some("1"))
+        .flag("workflow", "training workflow", Some("eager"))
+        .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None);
+    let a = cmd.parse(argv)?;
+    let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
     let wf = Workflow::by_name(a.get("workflow").unwrap()).context("unknown workflow")?;
     let trace = wf.generate(42, 150);
+    let shards = a.get_usize("shards")?;
     let coord = Coordinator::start(
-        CoordinatorConfig { k: a.get_usize("k")?, ..Default::default() },
+        CoordinatorConfig { k: a.get_usize("k")?, shards, ..Default::default() },
         spec,
-    );
+    )?;
     let client = coord.client();
     for t in &trace.tasks {
         client.train(&t.task, t.executions.clone());
@@ -234,11 +246,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         // Server mode: expose the newline-JSON wire protocol and block.
         let server = ksplus::coordinator::server::Server::start(addr, coord.client())?;
         println!(
-            "serving KS+ predictions on {} ({} task models pre-trained)\n\
+            "serving KS+ predictions on {} ({} task models pre-trained, {} shard(s))\n\
              protocol: one JSON object per line — op: train | plan | failure | stats\n\
              Ctrl-C to stop.",
             server.addr(),
-            trace.tasks.len()
+            trace.tasks.len(),
+            shards
         );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -256,10 +269,77 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let elapsed = t0.elapsed();
     let stats = client.stats();
     println!("== coordinator smoke run ({}) ==", a.get("backend").unwrap());
+    println!("shards         : {shards}");
     println!("requests       : {}", stats.requests);
     println!("batches        : {} (mean size {:.1})", stats.batches, stats.mean_batch_size());
     println!("throughput     : {:.0} plans/s", n as f64 / elapsed.as_secs_f64());
     println!("latency p50    : {:.0} us", stats.latency_percentile_us(50.0));
     println!("latency p99    : {:.0} us", stats.latency_percentile_us(99.0));
+    Ok(())
+}
+
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "repro loadgen",
+        "Closed-loop load generator: plans/sec and latency per shard count",
+    )
+    .flag("shards", "comma-separated shard counts to sweep (e.g. 1,2,4)", Some("1"))
+    .flag("clients", "concurrent closed-loop client threads", Some("8"))
+    .flag("requests", "total plan requests per shard count", Some("5000"))
+    .flag("k", "segments", Some("4"))
+    .flag("workflow", "training workflow", Some("eager"))
+    .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
+    .flag("out", "write per-run JSON reports to this directory", None);
+    let a = cmd.parse(argv)?;
+    let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
+    let shard_counts = a.get_usize_list("shards")?;
+    let clients = a.get_usize("clients")?;
+    let requests = a.get_usize("requests")?;
+
+    println!(
+        "== loadgen: {} clients, {} requests per run, backend {} ==",
+        clients,
+        requests,
+        a.get("backend").unwrap()
+    );
+    println!(
+        "{:>6}  {:>10}  {:>9}  {:>9}  {:>10}  shard spread",
+        "shards", "plans/s", "p50 (us)", "p99 (us)", "mean batch"
+    );
+    let mut baseline: Option<f64> = None;
+    for &shards in &shard_counts {
+        let report = experiments::loadgen::run(&experiments::loadgen::LoadGenConfig {
+            shards,
+            clients,
+            requests,
+            k: a.get_usize("k")?,
+            workflow: a.get("workflow").unwrap().to_string(),
+            spec: spec.clone(),
+        })?;
+        let speedup = match baseline {
+            None => {
+                baseline = Some(report.plans_per_s);
+                String::new()
+            }
+            Some(base) if base > 0.0 => format!("  ({:.2}x)", report.plans_per_s / base),
+            Some(_) => String::new(),
+        };
+        println!(
+            "{:>6}  {:>10.0}  {:>9.0}  {:>9.0}  {:>10.1}  {:?}{}",
+            report.shards,
+            report.plans_per_s,
+            report.p50_us,
+            report.p99_us,
+            report.mean_batch_size,
+            report.per_shard_requests,
+            speedup
+        );
+        if let Some(dir) = a.get("out") {
+            let dir = PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)?;
+            let path = dir.join(format!("loadgen_shards{shards}.json"));
+            std::fs::write(&path, report.to_json().to_string())?;
+        }
+    }
     Ok(())
 }

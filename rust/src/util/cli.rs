@@ -128,6 +128,19 @@ impl Args {
         v.parse().map_err(|_| CliError::BadValue(name.into(), v.clone()))
     }
 
+    /// Comma-separated list of integers (e.g. `--shards 1,2,4`). Empty
+    /// items are rejected, so trailing commas are flagged, not ignored.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        let v = self.flags.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.split(',')
+            .map(|item| {
+                item.trim()
+                    .parse()
+                    .map_err(|_| CliError::BadValue(name.into(), v.clone()))
+            })
+            .collect()
+    }
+
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
     }
@@ -189,6 +202,19 @@ mod tests {
     fn bad_numeric_value() {
         let a = cmd().parse(&sv(&["--seed", "abc"])).unwrap();
         assert!(matches!(a.get_u64("seed"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects() {
+        let c = Command::new("test", "t").flag("shards", "shard sweep", Some("1"));
+        let a = c.parse(&sv(&["--shards", "1,2,4"])).unwrap();
+        assert_eq!(a.get_usize_list("shards").unwrap(), vec![1, 2, 4]);
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.get_usize_list("shards").unwrap(), vec![1]);
+        let a = c.parse(&sv(&["--shards", "1,,4"])).unwrap();
+        assert!(matches!(a.get_usize_list("shards"), Err(CliError::BadValue(_, _))));
+        let a = c.parse(&sv(&["--shards", "2,x"])).unwrap();
+        assert!(matches!(a.get_usize_list("shards"), Err(CliError::BadValue(_, _))));
     }
 
     #[test]

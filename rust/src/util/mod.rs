@@ -6,3 +6,15 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// FNV-1a over a string: the shared cheap string hash (shard routing,
+/// property-test seed derivation). Deterministic across runs and
+/// platforms; not cryptographic.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -5,6 +5,7 @@
 //! failing seed so a counterexample can be replayed exactly with
 //! `PROP_SEED=<seed> cargo test <name>`.
 
+use crate::util::fnv1a;
 use crate::util::rng::Rng;
 
 /// Number of cases used by most invariant suites.
@@ -40,15 +41,6 @@ where
             );
         }
     }
-}
-
-fn fnv1a(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

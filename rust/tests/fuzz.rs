@@ -117,7 +117,7 @@ fn wire_protocol_never_kills_connection() {
     use ksplus::coordinator::BackendSpec;
     use std::io::{BufRead, BufReader, Write};
 
-    let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native);
+    let coord = Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native).unwrap();
     let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
     let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -141,6 +141,104 @@ fn wire_protocol_never_kills_connection() {
     let mut resp = String::new();
     reader.read_line(&mut resp).unwrap();
     assert_eq!(Json::parse(&resp).unwrap().get("ok"), Some(&Json::Bool(true)));
+}
+
+/// Sharded stress variant: 8 concurrent connections fire a mix of valid
+/// and garbage ops at a `shards: 4` server. Every written line must get
+/// exactly one JSON reply, no connection may die, and the final
+/// aggregated `stats` must equal the sum of successful plans across all
+/// clients — i.e. the shard merge loses nothing under contention.
+#[test]
+fn wire_protocol_sharded_under_stress() {
+    use ksplus::coordinator::server::Server;
+    use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+    use ksplus::coordinator::BackendSpec;
+    use std::io::{BufRead, BufReader, Write};
+
+    let coord = Coordinator::start(
+        CoordinatorConfig { shards: 4, ..Default::default() },
+        BackendSpec::Native,
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
+    let addr = server.addr();
+
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut rng = Rng::new(1000 + t);
+            let mut ok_plans = 0u64;
+            for i in 0..120u64 {
+                let (line, is_plan) = match rng.below(5) {
+                    // Valid plan op on one of 32 (untrained) task names —
+                    // enough distinct names that every one of the 4 shards
+                    // receives plan traffic (the fallback path still
+                    // counts as a request).
+                    0 | 1 => (
+                        format!(
+                            r#"{{"op":"plan","task":"t{}","input_mb":{}}}"#,
+                            rng.below(32),
+                            1000 + i
+                        ),
+                        true,
+                    ),
+                    // Valid failure op (stateless, any shard serves it).
+                    2 => (
+                        r#"{"op":"failure","plan":{"starts":[0,50],"peaks":[2,8]},"fail_time":20}"#
+                            .to_string(),
+                        false,
+                    ),
+                    // Valid stats op mid-stream.
+                    3 => (r#"{"op":"stats"}"#.to_string(), false),
+                    // Garbage bytes. Never whitespace-only: the server
+                    // skips blank lines without replying.
+                    _ => {
+                        let len = rng.below(60);
+                        let mut g: String = (0..len)
+                            .map(|_| {
+                                const ALPHABET: &[u8] = b"{}[]\",:0123456789optranfilues ";
+                                ALPHABET[rng.below(ALPHABET.len())] as char
+                            })
+                            .collect();
+                        if g.trim().is_empty() {
+                            g.push('#');
+                        }
+                        (g, false)
+                    }
+                };
+                writeln!(stream, "{line}").unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                let j = Json::parse(&resp).expect("server must answer JSON");
+                let ok = j.get("ok").expect("response missing 'ok'");
+                if is_plan {
+                    assert_eq!(ok, &Json::Bool(true), "valid plan rejected: {resp}");
+                    ok_plans += 1;
+                }
+            }
+            ok_plans
+        }));
+    }
+    let total_ok: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total_ok > 0);
+
+    // The aggregated stats must account for every successful plan, across
+    // all four shards.
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"op":"stats"}}"#).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(j.get("shards").and_then(Json::as_usize), Some(4));
+    assert_eq!(
+        j.get("requests").and_then(Json::as_usize),
+        Some(total_ok as usize),
+        "merged shard stats disagree with the clients' successful plans: {resp}"
+    );
 }
 
 #[test]

@@ -6,9 +6,7 @@ use std::collections::BTreeMap;
 
 #[cfg(feature = "pjrt")]
 use ksplus::coordinator::server::Server;
-#[cfg(feature = "pjrt")]
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-#[cfg(feature = "pjrt")]
 use ksplus::coordinator::BackendSpec;
 use ksplus::experiments::{evaluate_method, trained_predictor};
 use ksplus::metrics::WastageReport;
@@ -139,7 +137,8 @@ fn wire_protocol_end_to_end_with_pjrt() {
     let coord = Coordinator::start(
         CoordinatorConfig { k: 4, ..Default::default() },
         BackendSpec::Pjrt(Some(dir)),
-    );
+    )
+    .unwrap();
     let server = Server::start("127.0.0.1:0", coord.client()).unwrap();
 
     use std::io::{BufRead, BufReader, Write};
@@ -206,6 +205,41 @@ fn wire_protocol_end_to_end_with_pjrt() {
         }
     }
     assert!(plan.covers(e), "retry loop over the wire never converged");
+}
+
+#[test]
+fn sharded_coordinator_matches_single_shard_plans() {
+    // Sharding is a pure scaling change: given identical training data,
+    // the sharded pool must emit bit-identical plans to a single worker,
+    // for every task of a real workflow (each task exercises whichever
+    // shard its name hashes to).
+    let wf = Workflow::eager();
+    let trace = wf.generate(21, 100);
+    let start = |shards: usize| {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 3, shards, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        for t in &trace.tasks {
+            client.train(&t.task, t.executions.clone());
+        }
+        coord
+    };
+    let single = start(1);
+    let sharded = start(4);
+    for t in &trace.tasks {
+        for input in [t.executions[0].input_mb, t.executions[1].input_mb * 1.5] {
+            let a = single.client().plan(&t.task, input);
+            let b = sharded.client().plan(&t.task, input);
+            assert_eq!(a.starts, b.starts, "task {} input {input}", t.task);
+            assert_eq!(a.peaks, b.peaks, "task {} input {input}", t.task);
+        }
+    }
+    // The sharded pool actually used more than one worker for this mix.
+    let per = sharded.client().shard_stats();
+    assert!(per.iter().filter(|s| s.requests > 0).count() > 1, "{per:?}");
 }
 
 #[test]
