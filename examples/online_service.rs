@@ -2,13 +2,15 @@
 //! on a realistic serving workload.
 //!
 //! 1. Build traces for both nf-core workflows (the "historical runs").
-//! 2. Start the coordinator with the **PJRT backend**: batched OLS
-//!    training and prediction execute the AOT-compiled Pallas kernels
-//!    (`artifacts/*.hlo.txt`) — Python is never invoked.
+//! 2. Start the coordinator with the **PJRT backend**: batched plan
+//!    prediction executes the AOT-compiled Pallas kernels
+//!    (`artifacts/*.hlo.txt`) — Python is never invoked. (Training is
+//!    incremental sufficient-statistics OLS and always runs in-process.)
 //! 3. Train models for all 21 task types.
 //! 4. Replay both workflows in DAG order from 8 concurrent submitter
 //!    threads: request a plan per instance, simulate the execution
-//!    against its trace, report OOMs back, retry until success.
+//!    against its trace, report OOMs back, retry until success, then
+//!    `observe` the finished execution back into the models.
 //! 5. Report end-to-end latency percentiles, plan throughput, batching
 //!    efficiency, and total wastage vs a peak-only strategy.
 //!
@@ -120,6 +122,11 @@ fn main() -> anyhow::Result<()> {
                                 }
                             }
                         }
+                        // Close the loop: the execution is finished and
+                        // fully monitored — fold it into the task's
+                        // models (O(k) incremental update), exactly what
+                        // a workflow engine does as tasks complete.
+                        c.observe(&e.task, e.clone());
                     }
                     wastage
                 }));
@@ -153,6 +160,7 @@ fn main() -> anyhow::Result<()> {
         stats.latency_percentile_us(99.0)
     );
     println!("OOM reports handled : {}", oom_reports.load(Ordering::Relaxed));
+    println!("observations folded : {}", stats.observations);
     println!("KS+ wastage         : {wastage_ks:.0} GBs");
 
     // Baseline comparison: peak-only (max historic peak + 10 %).

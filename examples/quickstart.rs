@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use ksplus::predictor::by_name;
+use ksplus::predictor::{by_name, Predictor};
 use ksplus::sim::run_task;
 use ksplus::trace::workflow::Workflow;
 use ksplus::trace::split_train_test;

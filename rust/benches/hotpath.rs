@@ -1,21 +1,55 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf):
 //!
-//!   L3 native  : segmentation, plan math, simulator step rate
+//!   L3 native  : segmentation (heap vs quadratic oracle), observe vs
+//!                retrain, plan math, simulator step rate
 //!   L3 service : coordinator plan throughput/latency, native vs PJRT
 //!   L1/L2 PJRT : batched fit / predict / fused / wastage artifact cost
 //!
 //! Run: `cargo bench --bench hotpath` (artifacts required for the PJRT
 //! section; it is skipped with a notice when absent).
+//!
+//! Machine-readable output: set `KSPLUS_BENCH_JSON=BENCH_hotpath.json`
+//! to write the headline numbers (segmentation ns/op + speedup,
+//! observe/s, plans/s p50/p99 per shard count) in the
+//! `ksplus-bench-hotpath/v1` schema. Set `KSPLUS_BENCH_QUICK=1` for a
+//! reduced-iteration CI smoke run.
 
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-use ksplus::coordinator::BackendSpec;
+use ksplus::coordinator::{Backend, BackendSpec, ModelStore};
 use ksplus::predictor::regression::{FitEngine, NativeFit};
-use ksplus::predictor::by_name;
-use ksplus::segments::algorithm::get_segments;
+use ksplus::predictor::{by_name, Predictor};
+use ksplus::segments::algorithm::{get_segments, get_segments_quadratic};
 use ksplus::sim::run_task;
 use ksplus::trace::workflow::Workflow;
 use ksplus::util::bench::{bench, black_box};
+use ksplus::util::json::Json;
 use ksplus::util::rng::Rng;
+
+fn quick() -> bool {
+    std::env::var_os("KSPLUS_BENCH_QUICK").is_some()
+}
+
+/// (warmup, iters) scaled down for CI smoke runs.
+fn reps(warmup: usize, iters: usize) -> (usize, usize) {
+    if quick() {
+        (1, iters.div_ceil(10).max(2))
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// A 10k-step noisy rising envelope: the adversarial shape for the merge
+/// loop — thousands of envelope runs (a fresh maximum every few samples).
+fn noisy_envelope_10k() -> Vec<f64> {
+    let mut rng = Rng::new(7);
+    let mut trend = 1.0f64;
+    (0..10_000)
+        .map(|_| {
+            trend += rng.uniform(0.0, 0.002);
+            trend * (1.0 - 0.005 * rng.f64())
+        })
+        .collect()
+}
 
 fn main() {
     let wf = Workflow::eager();
@@ -26,30 +60,77 @@ fn main() {
     println!("== L3 native ==");
     let series: Vec<&Vec<f64>> = bwa.executions.iter().map(|e| &e.samples).collect();
     let total_samples: usize = series.iter().map(|s| s.len()).sum();
-    let r = bench("segmentation/k4/60-traces", 3, 20, || {
+    let (w, i) = reps(3, 20);
+    let r = bench("segmentation/k4/60-traces", w, i, || {
         for s in &series {
             black_box(get_segments(s, 4));
         }
     });
     println!("  -> {}", r.throughput_line(total_samples as f64, "samples"));
 
+    // Acceptance bench: the heap merge vs the retained quadratic oracle
+    // on a 10k-step noisy envelope at k=4 (thousands of merge steps).
+    let noisy = noisy_envelope_10k();
+    let (w, i) = reps(3, 20);
+    let r_heap = bench("segmentation/10k-noisy/k4/heap", w, i, || {
+        black_box(get_segments(&noisy, 4));
+    });
+    let (w, i) = reps(1, 5);
+    let r_quad = bench("segmentation/10k-noisy/k4/quadratic-oracle", w, i, || {
+        black_box(get_segments_quadratic(&noisy, 4));
+    });
+    let seg_speedup = r_quad.median_s / r_heap.median_s;
+    println!(
+        "  -> heap {:.0} ns/op vs quadratic {:.0} ns/op: {:.1}x speedup",
+        r_heap.ns_per_op(1.0),
+        r_quad.ns_per_op(1.0),
+        seg_speedup
+    );
+
+    // Incremental observe vs batch retrain: the observe path segments
+    // only the new execution and updates 2k O(1) accumulators, so its
+    // per-execution cost must not grow with history size.
+    let mut store = ModelStore::new(4, 128.0, Backend::Native);
+    store.train("bwa", &bwa.executions);
+    let (w, i) = reps(5, 50);
+    let r_observe = bench("store/observe/60-fold", w, i, || {
+        for e in &bwa.executions {
+            black_box(store.observe("bwa", e));
+        }
+    });
+    let observe_per_s = r_observe.per_s(bwa.executions.len() as f64);
+    println!("  -> {}", r_observe.throughput_line(bwa.executions.len() as f64, "observes"));
+    let (w, i) = reps(3, 20);
+    let r_retrain = bench("store/train-from-scratch/60", w, i, || {
+        store.train("bwa", &bwa.executions);
+        black_box(&store);
+    });
+    println!(
+        "  -> one observe {:.0} ns vs full retrain {:.0} ns",
+        r_observe.ns_per_op(bwa.executions.len() as f64),
+        r_retrain.ns_per_op(1.0)
+    );
+
     let mut pred = by_name("ksplus", 4, 128.0).unwrap();
     pred.train(&bwa.executions);
-    let r = bench("ksplus/plan", 10, 50, || {
+    let (w, i) = reps(10, 50);
+    let r = bench("ksplus/plan", w, i, || {
         for e in bwa.executions.iter().take(32) {
             black_box(pred.plan(e.input_mb));
         }
     });
     println!("  -> {}", r.throughput_line(32.0, "plans"));
 
-    let r = bench("sim/run_task/60-traces", 3, 20, || {
+    let (w, i) = reps(3, 20);
+    let r = bench("sim/run_task/60-traces", w, i, || {
         for e in &bwa.executions {
             black_box(run_task(pred.as_ref(), e, 10));
         }
     });
     println!("  -> {}", r.throughput_line(total_samples as f64, "trace-samples"));
 
-    let r = bench("native-ols/512rows-x-128obs", 3, 20, || {
+    let (w, i) = reps(3, 20);
+    let r = bench("native-ols/512rows-x-128obs", w, i, || {
         let mut rng = Rng::new(1);
         let rows: Vec<(Vec<f64>, Vec<f64>)> = (0..512)
             .map(|_| {
@@ -80,8 +161,63 @@ fn main() {
     // Linger disabled for this sweep only, so it measures pool capacity
     // rather than the single-request straggler poll.
     println!("== L3 coordinator sharded vs single (native backend) ==");
+    let mut plan_rows = Vec::new();
     for shards in [1, 2, 4] {
-        coordinator_bench(BackendSpec::Native, &trace, shards, std::time::Duration::ZERO);
+        plan_rows.push(coordinator_bench(
+            BackendSpec::Native,
+            &trace,
+            shards,
+            std::time::Duration::ZERO,
+        ));
+    }
+
+    // ---- machine-readable summary ---------------------------------------
+    if let Some(path) = std::env::var_os("KSPLUS_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("schema", "ksplus-bench-hotpath/v1".into()),
+            ("source", "bench-hotpath".into()),
+            ("quick", quick().into()),
+            (
+                "segmentation",
+                Json::obj(vec![
+                    ("series_len", 10_000usize.into()),
+                    ("k", 4usize.into()),
+                    ("heap_ns_per_op", r_heap.ns_per_op(1.0).into()),
+                    ("quadratic_ns_per_op", r_quad.ns_per_op(1.0).into()),
+                    ("speedup", seg_speedup.into()),
+                ]),
+            ),
+            (
+                "observe",
+                Json::obj(vec![
+                    ("per_s", observe_per_s.into()),
+                    (
+                        "ns_per_op",
+                        r_observe.ns_per_op(bwa.executions.len() as f64).into(),
+                    ),
+                    ("retrain_60_ns", r_retrain.ns_per_op(1.0).into()),
+                ]),
+            ),
+            (
+                "plans",
+                Json::Arr(
+                    plan_rows
+                        .iter()
+                        .map(|&(shards, plans_per_s, p50, p99)| {
+                            Json::obj(vec![
+                                ("shards", shards.into()),
+                                ("plans_per_s", plans_per_s.into()),
+                                ("p50_us", p50.into()),
+                                ("p99_us", p99.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = std::path::PathBuf::from(path);
+        std::fs::write(&path, doc.to_string()).expect("write KSPLUS_BENCH_JSON");
+        println!("wrote {}", path.display());
     }
 
     // ---- PJRT sections (feature-gated) ----------------------------------
@@ -172,12 +308,13 @@ fn pjrt_sections(trace: &ksplus::trace::WorkflowTrace, bwa: &ksplus::trace::Task
     );
 }
 
+/// Returns (shards, plans_per_s, p50_us, p99_us) for the JSON summary.
 fn coordinator_bench(
     spec: BackendSpec,
     trace: &ksplus::trace::WorkflowTrace,
     shards: usize,
     batch_delay: std::time::Duration,
-) {
+) -> (usize, f64, f64, f64) {
     let coord = Coordinator::start(
         CoordinatorConfig { shards, batch_delay, ..Default::default() },
         spec,
@@ -188,9 +325,10 @@ fn coordinator_bench(
         client.train(&t.task, t.executions.clone());
     }
     // Closed-loop from 8 threads to exercise the per-shard batchers.
-    let n_per_thread = 200;
+    let n_per_thread = if quick() { 50 } else { 200 };
     let threads = 8;
-    let r = bench(&format!("coordinator/plan-closed-loop/shards{shards}"), 1, 5, || {
+    let (w, i) = reps(1, 5);
+    let r = bench(&format!("coordinator/plan-closed-loop/shards{shards}"), w, i, || {
         let mut handles = Vec::new();
         for t in 0..threads {
             let c = coord.client();
@@ -221,4 +359,10 @@ fn coordinator_bench(
         stats.latency_percentile_us(50.0),
         stats.latency_percentile_us(99.0)
     );
+    (
+        shards,
+        r.per_s((n_per_thread * threads) as f64),
+        stats.latency_percentile_us(50.0),
+        stats.latency_percentile_us(99.0),
+    )
 }

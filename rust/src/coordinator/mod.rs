@@ -12,7 +12,11 @@
 //!             │  └─hash(task)──▶ ...
 //!             │                 worker N-1 (store + backend + batcher)
 //!             │   each worker:
-//!             │     ├─ Train    : batched OLS fit (2k rows/task)
+//!             │     ├─ Train    : fold of Observe over the history
+//!             │     ├─ Observe  : O(k) incremental update — segment ONE
+//!             │     │             new execution, fold it into the 2k
+//!             │     │             OLS sufficient-stat accumulators,
+//!             │     │             refit the closed forms
 //!             │     ├─ Plan     : dynamic batcher — collects up to
 //!             │     │             `batch_max` requests or `batch_delay`,
 //!             │     │             then ONE batched predict over the
@@ -22,21 +26,26 @@
 //!             └──fan-out───────▶ Stats : merged across every shard
 //! ```
 //!
-//! `Train` and `Plan` route by a deterministic FNV-1a hash of the task
-//! name (`service::shard_for`), so one shard owns each task's models and
-//! its plan traffic; `shards: 1` (the default) reproduces the original
-//! single-worker coordinator. Each per-shard batcher is the L3 hot path:
-//! with the `pjrt` cargo feature every flush is a single PJRT execution
-//! of `predict_b{B}.hlo.txt` covering every queued request's 2k
-//! regression evaluations; in default (native-only) builds the same
-//! flush runs the closed-form OLS in-process. The Python stack is never
-//! invoked either way.
+//! `Train`, `Observe`, and `Plan` route by a deterministic FNV-1a hash of
+//! the task name (`service::shard_for`), so one shard owns each task's
+//! models and its plan traffic; `shards: 1` (the default) reproduces the
+//! original single-worker coordinator. Training is *incremental*: the
+//! store keeps per-task sufficient statistics (n, Σx, Σy, Σx², Σxy) for
+//! every one of the 2k regressions, so observing a finished execution
+//! costs one segmentation of that execution plus O(k) accumulator
+//! updates — history is never re-segmented — and a batch `Train` is
+//! literally a fold of `Observe`, making the two bit-identical. Each
+//! per-shard batcher is the L3 hot path: with the `pjrt` cargo feature
+//! every flush is a single PJRT execution of `predict_b{B}.hlo.txt`
+//! covering every queued request's 2k regression evaluations; in default
+//! (native-only) builds the same flush runs the closed-form OLS
+//! in-process. The Python stack is never invoked either way.
 
 pub mod server;
 pub mod service;
 
 use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
-use crate::predictor::regression::{FitEngine, LinModel, NativeFit};
+use crate::predictor::regression::{LinModel, OlsStats};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::segments::StepPlan;
@@ -105,34 +114,79 @@ impl Backend {
         }
     }
 
-    fn fit(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+    /// Evaluate `models[i]` at `xq[i]`, scaled by `scale[i]` and clamped
+    /// at zero, into `out` (cleared first). The reusable `out` buffer is
+    /// what lets a steady-state batcher flush avoid fresh allocations.
+    fn predict_into(&self, models: &[LinModel], xq: &[f64], scale: &[f64], out: &mut Vec<f64>) {
+        out.clear();
         match self {
-            Backend::Native => NativeFit.fit_batch(rows),
+            Backend::Native => out.extend(
+                models
+                    .iter()
+                    .zip(xq.iter().zip(scale))
+                    .map(|(m, (x, s))| (m.predict(*x) * s).max(0.0)),
+            ),
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(rt) => rt.fit_batch(rows).expect("PJRT fit"),
-        }
-    }
-
-    fn predict(&self, models: &[LinModel], xq: &[f64], scale: &[f64]) -> Vec<f64> {
-        match self {
-            Backend::Native => models
-                .iter()
-                .zip(xq.iter().zip(scale))
-                .map(|(m, (x, s))| (m.predict(*x) * s).max(0.0))
-                .collect(),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(rt) => rt.predict_batch(models, xq, scale).expect("PJRT predict"),
+            Backend::Pjrt(rt) => {
+                out.extend(rt.predict_batch(models, xq, scale).expect("PJRT predict"))
+            }
         }
     }
 }
 
-/// Per-task fitted segment models.
+/// Per-task model state: the 2k sufficient-statistic accumulators
+/// (k segment starts, then k segment peaks) plus the closed-form models
+/// refit from them after every observation.
 #[derive(Debug, Clone)]
 pub struct TaskModels {
+    /// Sufficient statistics for the 2k regressions.
+    stats: Vec<OlsStats>,
     pub start_models: Vec<LinModel>,
     pub peak_models: Vec<LinModel>,
-    /// Highest peak seen in training (fallback allocation).
+    /// Highest peak seen so far. Exposed for introspection (mirrors the
+    /// KsPlus batch rule max(peaks…, 0.1)); the store's unknown-task
+    /// fallback can never consult it, because an unknown task has no
+    /// `TaskModels` entry at all.
     pub fallback_peak: f64,
+    /// Executions folded in so far.
+    pub observed: u64,
+}
+
+impl TaskModels {
+    fn empty(k: usize) -> TaskModels {
+        TaskModels {
+            stats: vec![OlsStats::default(); 2 * k],
+            start_models: Vec::new(),
+            peak_models: Vec::new(),
+            // Matches the batch rule max(peaks… , 0.1) once peaks fold in.
+            fallback_peak: 0.1,
+            observed: 0,
+        }
+    }
+
+    /// Refit the 2k closed forms from the accumulators. O(k).
+    fn refit(&mut self, k: usize) {
+        self.start_models.clear();
+        self.start_models.extend(self.stats[..k].iter().map(OlsStats::fit));
+        self.peak_models.clear();
+        self.peak_models.extend(self.stats[k..].iter().map(OlsStats::fit));
+    }
+}
+
+/// Reusable buffers for `plan_batch_into`. Each coordinator worker owns
+/// one, so a steady-state batcher flush performs no per-request `String`
+/// clones and reuses every intermediate numeric buffer across flushes
+/// (what remains per flush: one request-tuple `Vec` of borrowed names,
+/// plus the returned plans themselves).
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    models: Vec<LinModel>,
+    xq: Vec<f64>,
+    scale: Vec<f64>,
+    known: Vec<bool>,
+    flat: Vec<f64>,
+    /// Assembled plans, in request order, after `plan_batch_into`.
+    pub plans: Vec<StepPlan>,
 }
 
 /// Model store + pure prediction logic, shared by the threaded service
@@ -161,71 +215,127 @@ impl ModelStore {
         self.models.keys().cloned().collect()
     }
 
-    /// Train (or retrain) one task from its history: one batched fit of
-    /// 2k regression rows.
+    /// Fold one execution's aligned segment rows into the task's
+    /// accumulators WITHOUT refitting the closed forms. Returns whether
+    /// anything was folded (sample-less executions are no-ops).
+    fn fold_observation(&mut self, task: &str, e: &Execution) -> bool {
+        if e.samples.is_empty() {
+            return false;
+        }
+        let k = self.k;
+        // Steady state allocates no task-name String: only the first
+        // observation of a task inserts a key.
+        if !self.models.contains_key(task) {
+            self.models.insert(task.to_string(), TaskModels::empty(k));
+        }
+        let tm = self.models.get_mut(task).expect("inserted above");
+        let (starts, peaks) = KsPlus::aligned_rows(k, e);
+        for j in 0..k {
+            tm.stats[j].push(e.input_mb, starts[j]);
+            tm.stats[k + j].push(e.input_mb, peaks[j]);
+        }
+        tm.fallback_peak = tm.fallback_peak.max(e.peak());
+        tm.observed += 1;
+        true
+    }
+
+    /// Fold ONE finished execution into the task's models: segments only
+    /// the new execution (a single `get_segments` call) and updates the
+    /// 2k sufficient-statistic accumulators + closed-form refits in O(k).
+    /// History is never revisited. Returns `(folded, count)`: whether
+    /// the execution was actually folded in (sample-less executions are
+    /// ignored — nothing to segment) and the task's total observation
+    /// count. `folded` is the single source of truth for "did the models
+    /// change", so callers counting observations never drift from the
+    /// store's skip policy.
+    pub fn observe(&mut self, task: &str, e: &Execution) -> (bool, u64) {
+        let folded = self.fold_observation(task, e);
+        let k = self.k;
+        match self.models.get_mut(task) {
+            None => (false, 0),
+            Some(tm) => {
+                if folded {
+                    tm.refit(k);
+                }
+                (folded, tm.observed)
+            }
+        }
+    }
+
+    /// Train (or retrain) one task from scratch: discards any prior
+    /// state for the task and folds the history into fresh accumulators,
+    /// refitting once at the end — bit-identical to streaming the same
+    /// history through `observe` (the refit is a pure function of the
+    /// accumulators). A history with nothing to learn from (empty, or
+    /// containing only sample-less executions) keeps existing models
+    /// (unchanged empty-history policy).
     pub fn train(&mut self, task: &str, history: &[Execution]) {
-        if history.is_empty() {
+        if !history.iter().any(|e| !e.samples.is_empty()) {
             return;
         }
-        let rows = KsPlus::regression_rows(self.k, history);
-        let fitted = self.backend.fit(&rows);
-        let fallback_peak = history.iter().map(|e| e.peak()).fold(0.0, f64::max).max(0.1);
-        self.models.insert(
-            task.to_string(),
-            TaskModels {
-                start_models: fitted[..self.k].to_vec(),
-                peak_models: fitted[self.k..].to_vec(),
-                fallback_peak,
-            },
-        );
+        self.models.remove(task);
+        for e in history {
+            self.fold_observation(task, e);
+        }
+        let k = self.k;
+        if let Some(tm) = self.models.get_mut(task) {
+            tm.refit(k);
+        }
     }
 
     /// Plan a batch of requests with ONE backend predict call.
-    /// Unknown tasks get a capacity-safe flat fallback.
-    pub fn plan_batch(&self, requests: &[(String, f64)]) -> Vec<StepPlan> {
-        // Gather rows for known tasks.
-        let mut models = Vec::with_capacity(requests.len() * 2 * self.k);
-        let mut xq = Vec::with_capacity(models.capacity());
-        let mut scale = Vec::with_capacity(models.capacity());
-        let mut known = Vec::with_capacity(requests.len());
+    /// Unknown tasks get a capacity-safe flat fallback. Convenience
+    /// wrapper over `plan_batch_into` for callers without a scratch.
+    pub fn plan_batch(&self, requests: &[(&str, f64)]) -> Vec<StepPlan> {
+        let mut scratch = PlanScratch::default();
+        self.plan_batch_into(requests, &mut scratch);
+        scratch.plans
+    }
+
+    /// Allocation-lean batch planning: task names are borrowed and every
+    /// intermediate buffer lives in the caller's reusable `scratch`;
+    /// results land in `scratch.plans` in request order.
+    pub fn plan_batch_into(&self, requests: &[(&str, f64)], s: &mut PlanScratch) {
+        s.models.clear();
+        s.xq.clear();
+        s.scale.clear();
+        s.known.clear();
+        s.plans.clear();
         for (task, input) in requests {
-            match self.models.get(task) {
-                None => known.push(false),
+            match self.models.get(*task) {
+                None => s.known.push(false),
                 Some(tm) => {
-                    known.push(true);
+                    s.known.push(true);
                     for m in &tm.start_models {
-                        models.push(*m);
-                        xq.push(*input);
-                        scale.push(TIME_UNDERPREDICT);
+                        s.models.push(*m);
+                        s.xq.push(*input);
+                        s.scale.push(TIME_UNDERPREDICT);
                     }
                     for m in &tm.peak_models {
-                        models.push(*m);
-                        xq.push(*input);
-                        scale.push(MEM_OVERPREDICT);
+                        s.models.push(*m);
+                        s.xq.push(*input);
+                        s.scale.push(MEM_OVERPREDICT);
                     }
                 }
             }
         }
-        let flat = self.backend.predict(&models, &xq, &scale);
-        let mut out = Vec::with_capacity(requests.len());
+        self.backend.predict_into(&s.models, &s.xq, &s.scale, &mut s.flat);
         let mut off = 0usize;
-        for (i, (task, _)) in requests.iter().enumerate() {
-            if !known[i] {
-                let peak = self
-                    .models
-                    .get(task)
-                    .map(|m| m.fallback_peak)
-                    .unwrap_or(self.capacity_gb / 4.0);
-                out.push(StepPlan::flat(peak.min(self.capacity_gb)));
+        for i in 0..requests.len() {
+            if !s.known[i] {
+                // Absent from the store (known[i] was set under this
+                // same &self borrow): nothing learned, serve the
+                // capacity-safe flat default.
+                let peak = self.capacity_gb / 4.0;
+                s.plans.push(StepPlan::flat(peak.min(self.capacity_gb)));
                 continue;
             }
-            let starts = &flat[off..off + self.k];
-            let peaks = &flat[off + self.k..off + 2 * self.k];
+            let starts = &s.flat[off..off + self.k];
+            let peaks = &s.flat[off + self.k..off + 2 * self.k];
             off += 2 * self.k;
             // Offsets already applied via `scale`; pass identity here.
-            out.push(KsPlus::assemble_plan(starts, peaks, 1.0, 1.0, self.capacity_gb));
+            s.plans.push(KsPlus::assemble_plan(starts, peaks, 1.0, 1.0, self.capacity_gb));
         }
-        out
     }
 
     /// KS+ retry strategy (Section II-C) for a reported OOM.
@@ -277,7 +387,7 @@ mod tests {
         store.train("bwa", &hist);
         let mut pred = KsPlus::new(2, 128.0);
         pred.train(&hist);
-        let plans = store.plan_batch(&[("bwa".into(), 8000.0)]);
+        let plans = store.plan_batch(&[("bwa", 8000.0)]);
         let want = pred.plan(8000.0);
         assert_eq!(plans[0].k(), want.k());
         for i in 0..want.k() {
@@ -289,7 +399,7 @@ mod tests {
     #[test]
     fn unknown_task_gets_fallback() {
         let store = ModelStore::new(2, 128.0, Backend::Native);
-        let plans = store.plan_batch(&[("mystery".into(), 100.0)]);
+        let plans = store.plan_batch(&[("mystery", 100.0)]);
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].k(), 1);
         assert!(plans[0].peaks[0] <= 128.0);
@@ -302,15 +412,135 @@ mod tests {
             (0..20).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
         let mut store = ModelStore::new(2, 128.0, Backend::Native);
         store.train("bwa", &hist);
-        let reqs: Vec<(String, f64)> = vec![
-            ("bwa".into(), 4000.0),
-            ("mystery".into(), 1.0),
-            ("bwa".into(), 8000.0),
-        ];
+        let reqs: Vec<(&str, f64)> =
+            vec![("bwa", 4000.0), ("mystery", 1.0), ("bwa", 8000.0)];
         let plans = store.plan_batch(&reqs);
         assert_eq!(plans.len(), 3);
         assert!(plans[0].peaks.last() < plans[2].peaks.last());
         assert!(plans.iter().all(|p| p.is_valid()));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_plan_batch() {
+        // plan_batch_into over a dirty, reused scratch must produce the
+        // same plans as a fresh plan_batch call, batch after batch.
+        let mut rng = Rng::new(9);
+        let hist: Vec<Execution> =
+            (0..20).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(3, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        let mut scratch = PlanScratch::default();
+        for round in 0..4 {
+            let reqs: Vec<(&str, f64)> = vec![
+                ("bwa", 3000.0 + round as f64 * 500.0),
+                ("mystery", 1.0),
+                ("bwa", 9000.0 - round as f64 * 250.0),
+            ];
+            store.plan_batch_into(&reqs, &mut scratch);
+            let fresh = store.plan_batch(&reqs);
+            assert_eq!(scratch.plans, fresh, "round {round}");
+        }
+    }
+
+    #[test]
+    fn observe_fold_is_bit_identical_to_batch_train() {
+        // The tentpole equivalence: batch train == fold of observe, with
+        // exactly equal (not merely close) model outputs.
+        let mut rng = Rng::new(4);
+        let hist: Vec<Execution> =
+            (0..25).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect();
+        let mut batch = ModelStore::new(3, 128.0, Backend::Native);
+        batch.train("bwa", &hist);
+        let mut incr = ModelStore::new(3, 128.0, Backend::Native);
+        for (i, e) in hist.iter().enumerate() {
+            assert_eq!(incr.observe("bwa", e), (true, i as u64 + 1));
+        }
+        for input in [1500.0, 4000.0, 8000.0, 13000.0] {
+            let a = batch.plan_batch(&[("bwa", input)]);
+            let b = incr.plan_batch(&[("bwa", input)]);
+            assert_eq!(a[0].starts, b[0].starts, "input {input}");
+            assert_eq!(a[0].peaks, b[0].peaks, "input {input}");
+        }
+    }
+
+    #[test]
+    fn observe_interleaved_matches_scratch_retrained_ksplus() {
+        // Observing one execution at a time must track a KsPlus predictor
+        // retrained from scratch on the same prefix, within 1e-9.
+        let mut rng = Rng::new(6);
+        let hist: Vec<Execution> =
+            (0..16).map(|_| two_phase_exec(rng.uniform(2000.0, 12000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        for (i, e) in hist.iter().enumerate() {
+            store.observe("bwa", e);
+            let mut scratch = KsPlus::new(2, 128.0);
+            scratch.train(&hist[..=i]);
+            let want = scratch.plan(6000.0);
+            let got = store.plan_batch(&[("bwa", 6000.0)]);
+            assert_eq!(got[0].k(), want.k(), "after {} observations", i + 1);
+            for j in 0..want.k() {
+                assert!((got[0].starts[j] - want.starts[j]).abs() < 1e-9);
+                assert!((got[0].peaks[j] - want.peaks[j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn observe_segments_only_the_new_execution() {
+        // The O(k) claim, asserted by op count: one observe = exactly one
+        // get_segments call, no matter how much history is accumulated.
+        use crate::segments::algorithm::SEG_CALLS;
+        let mut rng = Rng::new(8);
+        let hist: Vec<Execution> =
+            (0..40).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(4, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        for e in hist.iter().take(5) {
+            let before = SEG_CALLS.with(|c| c.get());
+            store.observe("bwa", e);
+            let after = SEG_CALLS.with(|c| c.get());
+            assert_eq!(after - before, 1, "observe re-segmented history");
+        }
+        // Batch train over n executions segments each exactly once.
+        let before = SEG_CALLS.with(|c| c.get());
+        store.train("bwa", &hist);
+        let after = SEG_CALLS.with(|c| c.get());
+        assert_eq!(after - before, hist.len() as u64);
+    }
+
+    #[test]
+    fn observe_ignores_empty_executions() {
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        assert_eq!(
+            store.observe("bwa", &Execution::new("bwa", 100.0, 1.0, vec![])),
+            (false, 0)
+        );
+        assert!(!store.has_task("bwa"));
+        let mut rng = Rng::new(10);
+        store.observe("bwa", &two_phase_exec(4000.0, &mut rng));
+        assert_eq!(
+            store.observe("bwa", &Execution::new("bwa", 100.0, 1.0, vec![])),
+            (false, 1)
+        );
+        assert!(store.plan_batch(&[("bwa", 4000.0)])[0].is_valid());
+    }
+
+    #[test]
+    fn train_with_nothing_to_learn_keeps_existing_models() {
+        // A retrain whose history carries no usable samples must not
+        // delete the task's learned models (same policy as an empty
+        // history) — neither fully empty nor all-sample-less histories.
+        let mut rng = Rng::new(12);
+        let hist: Vec<Execution> =
+            (0..10).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        let before = store.plan_batch(&[("bwa", 5000.0)]);
+        store.train("bwa", &[]);
+        store.train("bwa", &[Execution::new("bwa", 100.0, 1.0, vec![])]);
+        assert!(store.has_task("bwa"));
+        let after = store.plan_batch(&[("bwa", 5000.0)]);
+        assert_eq!(before, after);
     }
 
     #[test]
@@ -330,9 +560,9 @@ mod tests {
             (0..10).map(|_| two_phase_exec(9000.0, &mut rng)).collect();
         let mut store = ModelStore::new(2, 128.0, Backend::Native);
         store.train("bwa", &h1);
-        let p1 = store.plan_batch(&[("bwa".into(), 5000.0)]);
+        let p1 = store.plan_batch(&[("bwa", 5000.0)]);
         store.train("bwa", &h2);
-        let p2 = store.plan_batch(&[("bwa".into(), 5000.0)]);
+        let p2 = store.plan_batch(&[("bwa", 5000.0)]);
         // Different training data -> different (still valid) plans.
         assert!(p1[0].is_valid() && p2[0].is_valid());
     }

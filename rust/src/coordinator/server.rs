@@ -3,9 +3,16 @@
 //!
 //! Requests (one JSON object per line):
 //!   {"op":"train","task":"bwa","history":[{"input_mb":..,"dt":..,"samples":[..]},..]}
+//!   {"op":"observe","task":"bwa","execution":{"input_mb":..,"dt":..,"samples":[..]}}
 //!   {"op":"plan","task":"bwa","input_mb":8000.0}
 //!   {"op":"failure","plan":{"starts":[..],"peaks":[..]},"fail_time":624.0}
 //!   {"op":"stats"}
+//!
+//! `observe` is the streaming form of `train`: it folds ONE finished
+//! execution into the task's models in O(k) on the owning shard —
+//! exactly what a workflow engine does as tasks complete. A `train` over
+//! a history and the same history streamed through `observe` produce
+//! bit-identical models.
 //!
 //! Responses:
 //!   {"ok":true, ...}            on success (fields depend on op)
@@ -151,7 +158,11 @@ fn execution_from_json(task: &str, j: &Json) -> Result<Execution> {
         .iter()
         .map(|v| v.as_f64().context("non-number sample"))
         .collect();
-    Ok(Execution::new(task, input_mb, dt, samples?))
+    let samples = samples?;
+    // A sample-less execution has nothing to segment; rejecting it here
+    // keeps garbage off the worker threads.
+    anyhow::ensure!(!samples.is_empty(), "execution needs at least one sample");
+    Ok(Execution::new(task, input_mb, dt, samples))
 }
 
 fn handle_request(line: &str, client: &Client) -> Result<Json> {
@@ -177,6 +188,17 @@ fn handle_request(line: &str, client: &Client) -> Result<Json> {
                 ("executions", n.into()),
             ]))
         }
+        "observe" => {
+            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
+            let exec =
+                execution_from_json(task, req.get("execution").context("missing 'execution'")?)?;
+            let count = client.observe(task, exec);
+            Ok(Json::obj(vec![
+                ("ok", true.into()),
+                ("observed", task.into()),
+                ("executions", (count as usize).into()),
+            ]))
+        }
         "plan" => {
             let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
             let input = req.get("input_mb").and_then(Json::as_f64).context("missing 'input_mb'")?;
@@ -198,6 +220,7 @@ fn handle_request(line: &str, client: &Client) -> Result<Json> {
                 ("batches", (s.batches as usize).into()),
                 ("failures_handled", (s.failures_handled as usize).into()),
                 ("tasks_trained", (s.tasks_trained as usize).into()),
+                ("observations", (s.observations as usize).into()),
                 ("latency_p50_us", s.latency_percentile_us(50.0).into()),
                 ("latency_p99_us", s.latency_percentile_us(99.0).into()),
             ]))
@@ -277,6 +300,57 @@ mod tests {
     }
 
     #[test]
+    fn observe_streams_one_execution_at_a_time() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        for i in 0..3usize {
+            let r = roundtrip(
+                &mut s,
+                &format!(
+                    r#"{{"op":"observe","task":"bwa","execution":{{"input_mb":{},"dt":1.0,"samples":[1.0,1.2,{:.1}]}}}}"#,
+                    4000 + i * 1000,
+                    2.0 + i as f64
+                ),
+            );
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+            assert_eq!(r.get("observed").and_then(Json::as_str), Some("bwa"));
+            assert_eq!(r.get("executions").and_then(Json::as_usize), Some(i + 1));
+        }
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":5000}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("observations").and_then(Json::as_usize), Some(3));
+        assert_eq!(r.get("tasks_trained").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn observe_op_equals_train_op() {
+        // The same history, once as a batch `train` and once streamed
+        // through `observe`, must yield identical plans (both paths are
+        // native f64 sufficient statistics).
+        let (_c1, trained) = start();
+        let (_c2, observed) = start();
+        let mut st = TcpStream::connect(trained.addr()).unwrap();
+        let mut so = TcpStream::connect(observed.addr()).unwrap();
+        let r = roundtrip(&mut st, &train_req());
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        // Stream the identical executions one by one.
+        let req = Json::parse(&train_req()).unwrap();
+        for e in req.get("history").unwrap().as_arr().unwrap() {
+            let r = roundtrip(
+                &mut so,
+                &format!(r#"{{"op":"observe","task":"bwa","execution":{e}}}"#),
+            );
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        }
+        for input in [2500, 6000, 9500] {
+            let a = roundtrip(&mut st, &format!(r#"{{"op":"plan","task":"bwa","input_mb":{input}}}"#));
+            let b = roundtrip(&mut so, &format!(r#"{{"op":"plan","task":"bwa","input_mb":{input}}}"#));
+            assert_eq!(a.get("plan"), b.get("plan"), "input {input}");
+        }
+    }
+
+    #[test]
     fn malformed_requests_get_errors_not_disconnects() {
         let (_coord, server) = start();
         let mut s = TcpStream::connect(server.addr()).unwrap();
@@ -286,6 +360,9 @@ mod tests {
             r#"{"op":"plan"}"#,
             r#"{"op":"train","task":"x","history":[]}"#,
             r#"{"op":"failure","plan":{"starts":[],"peaks":[]},"fail_time":1}"#,
+            r#"{"op":"observe","task":"x"}"#,
+            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1.0,"samples":[]}}"#,
+            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":0,"samples":[1.0]}}"#,
         ] {
             let r = roundtrip(&mut s, bad);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "req: {bad}");

@@ -9,11 +9,13 @@
 //! shard, so a flush costs one batched predict regardless of the number of
 //! clients on that shard.
 //!
-//! Routing: `Train` and `Plan` go to `shard_for(task) = fnv1a(task) %
-//! shards`, so a task's models and all its plan traffic live on exactly
-//! one shard. `Failure` carries no task and is distributed round-robin.
-//! `Stats` fans out to every shard and the per-shard counters/latency
-//! windows are merged into one aggregate `ServiceStats`.
+//! Routing: `Train`, `Observe`, and `Plan` go to `shard_for(task) =
+//! fnv1a(task) % shards`, so a task's models and all its plan traffic
+//! live on exactly one shard — an observed execution is visible to the
+//! task's very next plan. `Failure` carries no task and is distributed
+//! round-robin. `Stats` fans out to every shard and the per-shard
+//! counters/latency windows are merged into one aggregate
+//! `ServiceStats`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -21,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::coordinator::{BackendSpec, ModelStore};
+use crate::coordinator::{BackendSpec, ModelStore, PlanScratch};
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 
@@ -168,6 +170,8 @@ pub struct ServiceStats {
     pub batches: u64,
     pub failures_handled: u64,
     pub tasks_trained: u64,
+    /// Single executions folded in via the incremental `Observe` path.
+    pub observations: u64,
     /// Recent plan-request latencies, microseconds (enqueue -> response
     /// send), bounded to the last `LATENCY_WINDOW` requests per shard.
     pub latencies_us: LatencyWindow,
@@ -182,6 +186,7 @@ impl ServiceStats {
         self.batches += other.batches;
         self.failures_handled += other.failures_handled;
         self.tasks_trained += other.tasks_trained;
+        self.observations += other.observations;
         self.latencies_us.merge(&other.latencies_us);
     }
 
@@ -212,6 +217,12 @@ enum Msg {
         task: String,
         history: Vec<Execution>,
         done: mpsc::SyncSender<()>,
+    },
+    Observe {
+        task: String,
+        execution: Execution,
+        /// Replies with the task's total observation count.
+        done: mpsc::SyncSender<u64>,
     },
     Plan {
         task: String,
@@ -350,6 +361,19 @@ impl Client {
         let _ = done_rx.recv();
     }
 
+    /// Fold one finished execution into the task's models — the O(k)
+    /// incremental update on the shard that owns the task (same hash
+    /// route as `train`/`plan`, so the updated models serve the task's
+    /// very next plan request). Returns the task's total observation
+    /// count; blocks until the model swap is visible.
+    pub fn observe(&self, task: &str, execution: Execution) -> u64 {
+        let (done_tx, done_rx) = mpsc::sync_channel(1);
+        self.tx_for(task)
+            .send(Msg::Observe { task: task.to_string(), execution, done: done_tx })
+            .expect("coordinator gone");
+        done_rx.recv().expect("coordinator dropped request")
+    }
+
     /// Request an allocation plan; blocks until the shard's batcher
     /// flushes.
     pub fn plan(&self, task: &str, input_mb: f64) -> StepPlan {
@@ -400,25 +424,38 @@ impl Client {
     }
 }
 
+/// Serve every pending plan request in one batched predict. Task names
+/// are *borrowed* from the pending queue and the intermediate numeric
+/// buffers live in the worker's reusable `scratch`, so a steady-state
+/// flush performs no per-request `String` clones (one `Vec` of borrowed
+/// request tuples is still built per flush — it cannot outlive the
+/// pending queue it borrows from).
+fn flush(
+    pending: &mut Vec<Pending>,
+    store: &ModelStore,
+    stats: &mut ServiceStats,
+    scratch: &mut PlanScratch,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let reqs: Vec<(&str, f64)> =
+        pending.iter().map(|p| (p.task.as_str(), p.input_mb)).collect();
+    store.plan_batch_into(&reqs, scratch);
+    drop(reqs);
+    stats.batches += 1;
+    for (p, plan) in pending.drain(..).zip(scratch.plans.drain(..)) {
+        stats.requests += 1;
+        stats.latencies_us.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
+        let _ = p.resp.send(plan);
+    }
+}
+
 fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc::Receiver<Msg>) {
     let mut store = ModelStore::new(cfg.k, cfg.capacity_gb, backend);
     let mut stats = ServiceStats::default();
     let mut pending: Vec<Pending> = Vec::new();
-
-    let flush = |pending: &mut Vec<Pending>, store: &ModelStore, stats: &mut ServiceStats| {
-        if pending.is_empty() {
-            return;
-        }
-        let reqs: Vec<(String, f64)> =
-            pending.iter().map(|p| (p.task.clone(), p.input_mb)).collect();
-        let plans = store.plan_batch(&reqs);
-        stats.batches += 1;
-        for (p, plan) in pending.drain(..).zip(plans) {
-            stats.requests += 1;
-            stats.latencies_us.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
-            let _ = p.resp.send(plan);
-        }
-    };
+    let mut scratch = PlanScratch::default();
 
     // Continuous ("drain-then-flush") batching: block for the first
     // message, then greedily drain whatever else is already queued —
@@ -449,7 +486,7 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                             }
                             Err(mpsc::TryRecvError::Empty) => break,
                             Err(mpsc::TryRecvError::Disconnected) => {
-                                flush(&mut pending, &store, &mut stats);
+                                flush(&mut pending, &store, &mut stats, &mut scratch);
                                 break 'outer;
                             }
                         }
@@ -467,15 +504,27 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                             }
                         }
                     }
-                    flush(&mut pending, &store, &mut stats);
+                    flush(&mut pending, &store, &mut stats, &mut scratch);
                 }
                 Msg::Train { task, history, done } => {
                     // Train implies a model swap: flush first so
                     // in-flight requests see a consistent store.
-                    flush(&mut pending, &store, &mut stats);
+                    flush(&mut pending, &store, &mut stats, &mut scratch);
                     store.train(&task, &history);
                     stats.tasks_trained += 1;
                     let _ = done.send(());
+                }
+                Msg::Observe { task, execution, done } => {
+                    // Also a model swap, just an O(k) incremental one.
+                    flush(&mut pending, &store, &mut stats, &mut scratch);
+                    // The store decides what counts as folded (e.g.
+                    // sample-less executions are no-ops); the counter
+                    // follows its verdict so the two can never drift.
+                    let (folded, count) = store.observe(&task, &execution);
+                    if folded {
+                        stats.observations += 1;
+                    }
+                    let _ = done.send(count);
                 }
                 Msg::Failure { prev, fail_time, resp } => {
                     stats.failures_handled += 1;
@@ -485,7 +534,7 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                     let _ = resp.send(stats.clone());
                 }
                 Msg::Shutdown => {
-                    flush(&mut pending, &store, &mut stats);
+                    flush(&mut pending, &store, &mut stats, &mut scratch);
                     break 'outer;
                 }
             }
@@ -711,17 +760,20 @@ mod tests {
         a.batches = 2;
         a.failures_handled = 1;
         a.tasks_trained = 3;
+        a.observations = 5;
         a.latencies_us.push(100.0);
         let mut b = ServiceStats::default();
         b.requests = 30;
         b.batches = 8;
         b.tasks_trained = 1;
+        b.observations = 7;
         b.latencies_us.push(300.0);
         let m = ServiceStats::merged(&[a, b]);
         assert_eq!(m.requests, 40);
         assert_eq!(m.batches, 10);
         assert_eq!(m.failures_handled, 1);
         assert_eq!(m.tasks_trained, 4);
+        assert_eq!(m.observations, 12);
         // Mean batch size comes from the merged counters, not an average
         // of per-shard means: (10 + 30) / (2 + 8).
         assert_eq!(m.mean_batch_size(), 4.0);
@@ -779,6 +831,67 @@ mod tests {
         let stats = client.stats();
         assert_eq!(stats.tasks_trained, 64);
         assert_eq!(stats.requests, 128);
+    }
+
+    #[test]
+    fn observe_stream_matches_scratch_retrained_predictor() {
+        // Satellite: interleaved observe/plan on the live coordinator
+        // must match a KsPlus predictor retrained from scratch on the
+        // same prefix, within 1e-9.
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        let hist = history(11, 24);
+        for (i, e) in hist.iter().enumerate() {
+            let n = client.observe("bwa", e.clone());
+            assert_eq!(n, i as u64 + 1);
+            let got = client.plan("bwa", 6000.0);
+            let mut scratch = KsPlus::new(2, 128.0);
+            scratch.train(&hist[..=i]);
+            let want = scratch.plan(6000.0);
+            assert_eq!(got.k(), want.k(), "after {} observations", i + 1);
+            for j in 0..got.k() {
+                assert!((got.starts[j] - want.starts[j]).abs() < 1e-9, "{got:?} vs {want:?}");
+                assert!((got.peaks[j] - want.peaks[j]).abs() < 1e-9, "{got:?} vs {want:?}");
+            }
+        }
+        let stats = client.stats();
+        assert_eq!(stats.observations, 24);
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.tasks_trained, 0);
+    }
+
+    #[test]
+    fn observe_routes_to_the_training_shard() {
+        // Observe must land on the shard that owns the task's models —
+        // for every task name, whichever shard it hashes to.
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards: 4, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        for i in 0..32u64 {
+            let task = format!("task-{i}");
+            let before = client.plan(&task, 5000.0);
+            assert_eq!(before.k(), 1, "unobserved task must get the flat fallback");
+            for e in history(300 + i, 6) {
+                client.observe(&task, e);
+            }
+            let after = client.clone().plan(&task, 5000.0);
+            assert!(
+                !(after.starts == before.starts && after.peaks == before.peaks),
+                "{task} still served the untrained fallback after observe()"
+            );
+        }
+        let stats = client.stats();
+        assert_eq!(stats.observations, 32 * 6);
+        // Observations spread over multiple shards like training does.
+        let per = client.shard_stats();
+        assert!(per.iter().filter(|s| s.observations > 0).count() > 1, "{per:?}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! single-shard throughput because every shard owns an independent model
 //! store, backend, and batcher. Exposed as `repro loadgen`.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -26,6 +27,11 @@ pub struct LoadGenConfig {
     pub clients: usize,
     /// Total plan requests (split across clients, rounded up per client).
     pub requests: usize,
+    /// Probability in [0, 1] that a client folds an `observe` (one
+    /// finished execution, O(k) incremental model update) in front of a
+    /// plan request — the online-retraining mix. 0 reproduces the pure
+    /// plan workload.
+    pub observe_frac: f64,
     /// Segments per task model.
     pub k: usize,
     /// Workflow whose task mix drives the request stream.
@@ -40,6 +46,7 @@ impl Default for LoadGenConfig {
             shards: 1,
             clients: 8,
             requests: 5000,
+            observe_frac: 0.0,
             k: 4,
             workflow: "eager".to_string(),
             spec: BackendSpec::Native,
@@ -61,6 +68,9 @@ pub struct LoadGenReport {
     pub p99_us: f64,
     pub batches: u64,
     pub mean_batch_size: f64,
+    /// `observe` ops issued alongside the plan stream.
+    pub observes: u64,
+    pub observes_per_s: f64,
     /// Plan requests each shard served, in shard order.
     pub per_shard_requests: Vec<u64>,
 }
@@ -77,6 +87,8 @@ impl LoadGenReport {
             ("p99_us", self.p99_us.into()),
             ("batches", (self.batches as usize).into()),
             ("mean_batch_size", self.mean_batch_size.into()),
+            ("observes", (self.observes as usize).into()),
+            ("observes_per_s", self.observes_per_s.into()),
             (
                 "per_shard_requests",
                 Json::Arr(
@@ -87,11 +99,41 @@ impl LoadGenReport {
     }
 }
 
+/// Write the sweep's reports as the machine-readable `BENCH_hotpath.json`
+/// "plans" section (schema shared with `cargo bench --bench hotpath`).
+///
+/// Merges into an existing schema-compatible file instead of clobbering
+/// it, so running the hotpath bench (which owns the segmentation/observe
+/// sections) and then this sweep leaves both sets of numbers in place.
+pub fn write_bench_json(path: &std::path::Path, reports: &[LoadGenReport]) -> Result<()> {
+    const SCHEMA: &str = "ksplus-bench-hotpath/v1";
+    let mut doc = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(existing) if existing.get("schema").and_then(Json::as_str) == Some(SCHEMA) => {
+            existing
+        }
+        _ => Json::obj(vec![("schema", SCHEMA.into())]),
+    };
+    if let Json::Obj(map) = &mut doc {
+        map.insert("source".to_string(), "repro-loadgen".into());
+        map.insert(
+            "plans".to_string(),
+            Json::Arr(reports.iter().map(LoadGenReport::to_json).collect()),
+        );
+    }
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 /// Train every task of the workflow, then hammer the coordinator from
 /// `clients` closed-loop threads and collect the merged service stats.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
     anyhow::ensure!(cfg.requests >= 1, "loadgen needs at least one request");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.observe_frac),
+        "observe_frac must be in [0, 1]"
+    );
     let wf = Workflow::by_name(&cfg.workflow)
         .with_context(|| format!("unknown workflow '{}'", cfg.workflow))?;
     let trace = wf.generate(42, 150);
@@ -110,8 +152,19 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     )
     .context("start coordinator")?;
     let client = coord.client();
+    // With an observe mix, train on a held-out prefix: the tail of each
+    // task's trace is kept back so `observe` streams genuinely unseen
+    // executions (true online retraining, not a duplicate replay). At
+    // observe_frac == 0 the full history is trained, keeping the pure
+    // plan workload identical to earlier sweeps.
+    let holdout = if cfg.observe_frac > 0.0 { 8 } else { 0 };
+    let mut obs_mix: Vec<(String, crate::trace::Execution)> = Vec::new();
     for t in &trace.tasks {
-        client.train(&t.task, t.executions.clone());
+        let split = t.executions.len().saturating_sub(holdout).max(1).min(t.executions.len());
+        client.train(&t.task, t.executions[..split].to_vec());
+        for e in &t.executions[split..] {
+            obs_mix.push((t.task.clone(), e.clone()));
+        }
     }
     // The request mix: every task type with a spread of real input sizes.
     let mix: Vec<(String, f64)> = trace
@@ -122,28 +175,48 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         })
         .collect();
     anyhow::ensure!(!mix.is_empty(), "workflow produced no tasks");
+    anyhow::ensure!(
+        cfg.observe_frac == 0.0 || !obs_mix.is_empty(),
+        "observe mix requested but every task's trace is too short to hold out executions"
+    );
+    // Shared read-only across clients: the held-out executions carry
+    // full sample vectors, so cloning the list per thread would be the
+    // only heavyweight allocation in the setup path.
+    let obs_mix = Arc::new(obs_mix);
 
     let per_client = cfg.requests.div_ceil(cfg.clients);
+    let observe_frac = cfg.observe_frac;
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(cfg.clients);
     for c in 0..cfg.clients {
         let cl = coord.client();
         let mix = mix.clone();
+        let obs_mix = Arc::clone(&obs_mix);
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::new(0xC0FFEE ^ c as u64);
             let mut invalid = 0u64;
+            let mut observes = 0u64;
             for _ in 0..per_client {
+                if observe_frac > 0.0 && rng.f64() < observe_frac {
+                    let (task, exec) = &obs_mix[rng.below(obs_mix.len())];
+                    cl.observe(task, exec.clone());
+                    observes += 1;
+                }
                 let (task, input) = &mix[rng.below(mix.len())];
                 if !cl.plan(task, *input).is_valid() {
                     invalid += 1;
                 }
             }
-            invalid
+            (invalid, observes)
         }));
     }
     let mut invalid = 0u64;
+    let mut observes = 0u64;
     for h in handles {
-        invalid += h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))?;
+        let (i, o) =
+            h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))?;
+        invalid += i;
+        observes += o;
     }
     // A trained (or fallback) plan is always well-formed; an invalid one
     // is a service bug, not a load characteristic — fail loudly rather
@@ -154,6 +227,12 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
 
     let per_shard = client.shard_stats();
     let stats = ServiceStats::merged(&per_shard);
+    anyhow::ensure!(
+        stats.observations == observes,
+        "coordinator lost observations: {} issued, {} recorded",
+        observes,
+        stats.observations
+    );
     Ok(LoadGenReport {
         shards: cfg.shards,
         clients: cfg.clients,
@@ -164,6 +243,8 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         p99_us: stats.latency_percentile_us(99.0),
         batches: stats.batches,
         mean_batch_size: stats.mean_batch_size(),
+        observes,
+        observes_per_s: observes as f64 / elapsed.as_secs_f64(),
         per_shard_requests: per_shard.iter().map(|s| s.requests).collect(),
     })
 }
@@ -210,10 +291,45 @@ mod tests {
     }
 
     #[test]
+    fn loadgen_mixes_observes_into_the_stream() {
+        let r = run(&LoadGenConfig {
+            clients: 4,
+            requests: 128,
+            observe_frac: 0.5,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 128);
+        assert!(r.observes > 0, "no observes issued at frac 0.5");
+        assert!(r.observes_per_s > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("observes").and_then(Json::as_usize), Some(r.observes as usize));
+    }
+
+    #[test]
     fn loadgen_rejects_degenerate_configs() {
         assert!(run(&LoadGenConfig { clients: 0, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { requests: 0, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { workflow: "nope".into(), ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { shards: 0, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { observe_frac: 1.5, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { observe_frac: -0.1, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn bench_json_writes_schema() {
+        let r = run(&LoadGenConfig { clients: 2, requests: 32, ..Default::default() }).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "ksplus_bench_{}.json",
+            std::process::id()
+        ));
+        write_bench_json(&path, &[r]).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(
+            back.get("schema").and_then(Json::as_str),
+            Some("ksplus-bench-hotpath/v1")
+        );
+        assert_eq!(back.get("plans").and_then(Json::as_arr).map(|a| a.len()), Some(1));
     }
 }

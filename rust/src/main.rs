@@ -247,7 +247,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let server = ksplus::coordinator::server::Server::start(addr, coord.client())?;
         println!(
             "serving KS+ predictions on {} ({} task models pre-trained, {} shard(s))\n\
-             protocol: one JSON object per line — op: train | plan | failure | stats\n\
+             protocol: one JSON object per line — op: train | observe | plan | failure | stats\n\
              Ctrl-C to stop.",
             server.addr(),
             trace.tasks.len(),
@@ -286,32 +286,38 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .flag("shards", "comma-separated shard counts to sweep (e.g. 1,2,4)", Some("1"))
     .flag("clients", "concurrent closed-loop client threads", Some("8"))
     .flag("requests", "total plan requests per shard count", Some("5000"))
+    .flag("observe-frac", "probability of an observe op per plan (online retraining mix)", Some("0"))
     .flag("k", "segments", Some("4"))
     .flag("workflow", "training workflow", Some("eager"))
     .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
-    .flag("out", "write per-run JSON reports to this directory", None);
+    .flag("out", "write per-run JSON reports to this directory", None)
+    .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
     let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
     let shard_counts = a.get_usize_list("shards")?;
     let clients = a.get_usize("clients")?;
     let requests = a.get_usize("requests")?;
+    let observe_frac = a.get_f64("observe-frac")?;
 
     println!(
-        "== loadgen: {} clients, {} requests per run, backend {} ==",
+        "== loadgen: {} clients, {} requests per run, observe-frac {}, backend {} ==",
         clients,
         requests,
+        observe_frac,
         a.get("backend").unwrap()
     );
     println!(
-        "{:>6}  {:>10}  {:>9}  {:>9}  {:>10}  shard spread",
-        "shards", "plans/s", "p50 (us)", "p99 (us)", "mean batch"
+        "{:>6}  {:>10}  {:>9}  {:>9}  {:>10}  {:>10}  shard spread",
+        "shards", "plans/s", "p50 (us)", "p99 (us)", "mean batch", "observes/s"
     );
     let mut baseline: Option<f64> = None;
+    let mut reports = Vec::with_capacity(shard_counts.len());
     for &shards in &shard_counts {
         let report = experiments::loadgen::run(&experiments::loadgen::LoadGenConfig {
             shards,
             clients,
             requests,
+            observe_frac,
             k: a.get_usize("k")?,
             workflow: a.get("workflow").unwrap().to_string(),
             spec: spec.clone(),
@@ -325,12 +331,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             Some(_) => String::new(),
         };
         println!(
-            "{:>6}  {:>10.0}  {:>9.0}  {:>9.0}  {:>10.1}  {:?}{}",
+            "{:>6}  {:>10.0}  {:>9.0}  {:>9.0}  {:>10.1}  {:>10.0}  {:?}{}",
             report.shards,
             report.plans_per_s,
             report.p50_us,
             report.p99_us,
             report.mean_batch_size,
+            report.observes_per_s,
             report.per_shard_requests,
             speedup
         );
@@ -340,6 +347,11 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             let path = dir.join(format!("loadgen_shards{shards}.json"));
             std::fs::write(&path, report.to_json().to_string())?;
         }
+        reports.push(report);
+    }
+    if let Some(path) = a.get("bench-json") {
+        experiments::loadgen::write_bench_json(Path::new(path), &reports)?;
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -73,15 +73,17 @@ impl Predictor for KSegments {
             self.runtime_model = None;
             return;
         }
+        // All k+1 regressions (runtime + k slice peaks) share the input
+        // sizes as their x-column — fit them through `fit_shared` so the
+        // x-statistics are computed once instead of cloning the column.
         let inputs: Vec<f64> = history.iter().map(|e| e.input_mb).collect();
         let durations: Vec<f64> = history.iter().map(|e| e.duration()).collect();
-        let mut rows: Vec<(Vec<f64>, Vec<f64>)> = vec![(inputs.clone(), durations)];
+        let mut cols: Vec<Vec<f64>> = vec![durations];
         let per_exec: Vec<Vec<f64>> = history.iter().map(|e| self.slice_peaks(e)).collect();
         for j in 0..self.k {
-            let peaks: Vec<f64> = per_exec.iter().map(|p| p[j]).collect();
-            rows.push((inputs.clone(), peaks));
+            cols.push(per_exec.iter().map(|p| p[j]).collect());
         }
-        let models = NativeFit.fit_batch(&rows);
+        let models = NativeFit.fit_shared(&inputs, &cols);
         self.runtime_model = Some(models[0]);
         self.peak_models = models[1..].to_vec();
         self.fallback_peak =

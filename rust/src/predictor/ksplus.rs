@@ -58,12 +58,17 @@ impl KsPlus {
     /// executions whose envelope has fewer steps repeat their last
     /// segment (start = duration, peak = final peak), so all regressions
     /// see one observation per execution.
-    fn aligned_rows(&self, e: &Execution) -> (Vec<f64>, Vec<f64>) {
-        let seg = get_segments(&e.samples, self.k);
+    ///
+    /// ONE `get_segments` call per execution — shared by batch training
+    /// here and by the coordinator's incremental `ModelStore::observe`,
+    /// which folds the k starts and k peaks into its sufficient-statistic
+    /// accumulators.
+    pub fn aligned_rows(k: usize, e: &Execution) -> (Vec<f64>, Vec<f64>) {
+        let seg = get_segments(&e.samples, k);
         let offsets = seg.start_offsets();
-        let mut starts = Vec::with_capacity(self.k);
-        let mut peaks = Vec::with_capacity(self.k);
-        for j in 0..self.k {
+        let mut starts = Vec::with_capacity(k);
+        let mut peaks = Vec::with_capacity(k);
+        for j in 0..k {
             if j < seg.peaks.len() {
                 starts.push(offsets[j] as f64 * e.dt);
                 peaks.push(seg.peaks[j]);
@@ -75,26 +80,22 @@ impl KsPlus {
         (starts, peaks)
     }
 
-    /// Assemble the 2k regression problems for a training set; shared
-    /// with the PJRT coordinator so both backends fit identical rows.
-    pub fn regression_rows(
-        k: usize,
-        history: &[Execution],
-    ) -> Vec<(Vec<f64>, Vec<f64>)> {
-        let proto = KsPlus::new(k, f64::INFINITY);
-        let inputs: Vec<f64> = history.iter().map(|e| e.input_mb).collect();
+    /// Assemble the 2k regression problems for a training set as one
+    /// shared x-column (the input sizes) plus 2k y-columns (k segment
+    /// starts, then k segment peaks). Each execution is segmented once;
+    /// the x-column is shared instead of cloned per regression.
+    pub fn regression_cols(k: usize, history: &[Execution]) -> (Vec<f64>, Vec<Vec<f64>>) {
+        let xs: Vec<f64> = history.iter().map(|e| e.input_mb).collect();
         let per_exec: Vec<(Vec<f64>, Vec<f64>)> =
-            history.iter().map(|e| proto.aligned_rows(e)).collect();
-        let mut rows = Vec::with_capacity(2 * k);
+            history.iter().map(|e| Self::aligned_rows(k, e)).collect();
+        let mut cols = Vec::with_capacity(2 * k);
         for j in 0..k {
-            let starts: Vec<f64> = per_exec.iter().map(|(s, _)| s[j]).collect();
-            rows.push((inputs.clone(), starts));
+            cols.push(per_exec.iter().map(|(s, _)| s[j]).collect());
         }
         for j in 0..k {
-            let peaks: Vec<f64> = per_exec.iter().map(|(_, p)| p[j]).collect();
-            rows.push((inputs.clone(), peaks));
+            cols.push(per_exec.iter().map(|(_, p)| p[j]).collect());
         }
-        rows
+        (xs, cols)
     }
 
     /// Train using an explicit fit engine (native or PJRT).
@@ -103,8 +104,8 @@ impl KsPlus {
             self.trained = false;
             return;
         }
-        let rows = Self::regression_rows(self.k, history);
-        let models = engine.fit_batch(&rows);
+        let (xs, cols) = Self::regression_cols(self.k, history);
+        let models = engine.fit_shared(&xs, &cols);
         self.start_models = models[..self.k].to_vec();
         self.peak_models = models[self.k..].to_vec();
         self.fallback_peak =
@@ -414,14 +415,19 @@ mod tests {
     }
 
     #[test]
-    fn regression_rows_shape() {
+    fn regression_cols_shape() {
         let mut rng = Rng::new(3);
         let hist: Vec<Execution> =
             (0..7).map(|_| two_phase_exec(rng.uniform(1000.0, 9000.0), &mut rng)).collect();
-        let rows = KsPlus::regression_rows(3, &hist);
-        assert_eq!(rows.len(), 6); // k starts + k peaks
-        assert!(rows.iter().all(|(xs, ys)| xs.len() == 7 && ys.len() == 7));
-        // First start row is all zeros (segment 0 starts at 0).
-        assert!(rows[0].1.iter().all(|&s| s == 0.0));
+        let (xs, cols) = KsPlus::regression_cols(3, &hist);
+        assert_eq!(xs.len(), 7); // one shared x-column
+        assert_eq!(cols.len(), 6); // k start cols + k peak cols
+        assert!(cols.iter().all(|c| c.len() == 7));
+        // First start column is all zeros (segment 0 starts at 0).
+        assert!(cols[0].iter().all(|&s| s == 0.0));
+        // The shared x-column is the input sizes in history order.
+        for (x, e) in xs.iter().zip(&hist) {
+            assert_eq!(*x, e.input_mb);
+        }
     }
 }

@@ -4,8 +4,17 @@
 //! the closed form in-process (always available; used by the offline
 //! experiment harness and native-only builds); with the `pjrt` cargo
 //! feature, `runtime::PjrtFitEngine` executes the AOT Pallas kernel
-//! instead (used by the online coordinator). Both implement the *same*
-//! closed form — `runtime::tests` asserts parity when artifacts exist.
+//! instead. Both implement the *same* closed form — `runtime::tests`
+//! asserts parity when artifacts exist.
+//!
+//! Two shapes matter for the hot paths:
+//!   * `fit_shared` — KS+ fits 2k regressions over ONE shared x-column
+//!     (the input sizes); the shared x-statistics are computed once
+//!     instead of cloning the column per row.
+//!   * `OlsStats` — per-regression sufficient statistics
+//!     (n, Σx, Σy, Σx², Σxy) that make training *incremental*: folding a
+//!     new observation is O(1) and refitting is O(1), so the coordinator
+//!     can `observe` one execution in O(k) without touching history.
 
 use crate::util::stats;
 
@@ -25,14 +34,62 @@ impl LinModel {
         let (slope, intercept) = stats::ols(xs, ys);
         LinModel { slope, intercept }
     }
+
+    /// Fit from accumulated sufficient statistics. Because the sums are
+    /// folded in observation order and the closed form
+    /// (`stats::ols_from_sums`) is shared with `fit`, a fold of
+    /// `OlsStats::push` over a history produces a bit-identical model to
+    /// one batch `fit` over the same history.
+    pub fn from_stats(s: &OlsStats) -> LinModel {
+        let (slope, intercept) = stats::ols_from_sums(s.n, s.sx, s.sy, s.sxx, s.sxy);
+        LinModel { slope, intercept }
+    }
 }
 
-/// A batch of independent OLS problems: each row is (xs, ys).
+/// Sufficient statistics of one OLS problem: everything the closed form
+/// needs, in O(1) space regardless of how many observations were folded.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OlsStats {
+    pub n: f64,
+    pub sx: f64,
+    pub sy: f64,
+    pub sxx: f64,
+    pub sxy: f64,
+}
+
+impl OlsStats {
+    /// Fold one observation. O(1).
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1.0;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.sxy += x * y;
+    }
+
+    /// Closed-form fit of the accumulated statistics. O(1).
+    pub fn fit(&self) -> LinModel {
+        LinModel::from_stats(self)
+    }
+}
+
+/// A batch of independent OLS problems.
 ///
 /// Deliberately NOT `Send`/`Sync`: the PJRT engine wraps thread-affine
 /// FFI handles; the coordinator owns its engine on one worker thread.
 pub trait FitEngine {
+    /// General form: each row is an independent (xs, ys) problem.
     fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel>;
+
+    /// Many regressions sharing ONE x-column (KS+: 2k rows over the same
+    /// input sizes). The default materializes owned rows for engines
+    /// that need the per-row layout (PJRT buckets); `NativeFit`
+    /// overrides it to compute the shared x-statistics exactly once.
+    fn fit_shared(&self, xs: &[f64], ys: &[Vec<f64>]) -> Vec<LinModel> {
+        let rows: Vec<(Vec<f64>, Vec<f64>)> =
+            ys.iter().map(|col| (xs.to_vec(), col.clone())).collect();
+        self.fit_batch(&rows)
+    }
 }
 
 /// In-process closed-form OLS.
@@ -42,6 +99,24 @@ pub struct NativeFit;
 impl FitEngine for NativeFit {
     fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
         rows.iter().map(|(xs, ys)| LinModel::fit(xs, ys)).collect()
+    }
+
+    fn fit_shared(&self, xs: &[f64], ys: &[Vec<f64>]) -> Vec<LinModel> {
+        // Shared x-statistics once, per-column y-statistics per model.
+        // Sum order matches `stats::ols` exactly, so results are
+        // bit-identical to fitting each (xs, col) pair independently.
+        let n = xs.len() as f64;
+        let sx: f64 = xs.iter().sum();
+        let sxx: f64 = xs.iter().map(|x| x * x).sum();
+        ys.iter()
+            .map(|col| {
+                debug_assert_eq!(col.len(), xs.len());
+                let sy: f64 = col.iter().sum();
+                let sxy: f64 = xs.iter().zip(col).map(|(x, y)| x * y).sum();
+                let (slope, intercept) = stats::ols_from_sums(n, sx, sy, sxx, sxy);
+                LinModel { slope, intercept }
+            })
+            .collect()
     }
 }
 
@@ -70,6 +145,73 @@ mod tests {
         let batch = NativeFit.fit_batch(&rows);
         for (i, (xs, ys)) in rows.iter().enumerate() {
             assert_eq!(batch[i], LinModel::fit(xs, ys));
+        }
+    }
+
+    #[test]
+    fn shared_matches_per_row_bitwise() {
+        // fit_shared must be indistinguishable from fitting each column
+        // against the shared xs independently — bit for bit.
+        let xs = vec![10.0, 25.0, 3.5, 40.0, 17.0, 8.25];
+        let cols: Vec<Vec<f64>> = vec![
+            xs.iter().map(|x| 2.0 * x + 1.0).collect(),
+            xs.iter().map(|x| -0.25 * x + 9.0).collect(),
+            vec![4.0; xs.len()],
+            xs.iter().map(|x| x * x * 0.01).collect(),
+        ];
+        let shared = NativeFit.fit_shared(&xs, &cols);
+        assert_eq!(shared.len(), cols.len());
+        for (m, col) in shared.iter().zip(&cols) {
+            assert_eq!(*m, LinModel::fit(&xs, col));
+        }
+    }
+
+    #[test]
+    fn shared_default_impl_matches_override() {
+        // An engine relying on the trait's default fit_shared (row
+        // materialization) must agree with NativeFit's override.
+        struct ViaRows;
+        impl FitEngine for ViaRows {
+            fn fit_batch(&self, rows: &[(Vec<f64>, Vec<f64>)]) -> Vec<LinModel> {
+                NativeFit.fit_batch(rows)
+            }
+        }
+        let xs = vec![1.0, 4.0, 9.0, 16.0];
+        let cols = vec![vec![1.0, 2.0, 3.0, 4.0], vec![0.5, 0.5, 0.5, 0.5]];
+        assert_eq!(ViaRows.fit_shared(&xs, &cols), NativeFit.fit_shared(&xs, &cols));
+    }
+
+    #[test]
+    fn stats_fold_matches_batch_fit_bitwise() {
+        run_prop("ols_stats_fold", 150, |rng| {
+            let n = rng.below(40);
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 5000.0)).collect();
+            let ys: Vec<f64> =
+                xs.iter().map(|x| 0.003 * x + rng.normal_ms(2.0, 1.0)).collect();
+            let mut st = OlsStats::default();
+            for (&x, &y) in xs.iter().zip(&ys) {
+                st.push(x, y);
+            }
+            // Exact equality: same sums in the same order, same closed form.
+            assert_eq!(st.fit(), LinModel::fit(&xs, &ys));
+        });
+    }
+
+    #[test]
+    fn stats_degenerate_cases_match_fit() {
+        // Empty, single point, constant x — every degenerate branch of
+        // the closed form must agree between the two entry points.
+        let cases: Vec<(Vec<f64>, Vec<f64>)> = vec![
+            (vec![], vec![]),
+            (vec![4.0], vec![12.0]),
+            (vec![3.0, 3.0, 3.0], vec![1.0, 2.0, 3.0]),
+        ];
+        for (xs, ys) in cases {
+            let mut st = OlsStats::default();
+            for (&x, &y) in xs.iter().zip(&ys) {
+                st.push(x, y);
+            }
+            assert_eq!(st.fit(), LinModel::fit(&xs, &ys), "case {xs:?}");
         }
     }
 

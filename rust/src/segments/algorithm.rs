@@ -12,8 +12,31 @@
 //! removing the merge with the smallest introduced error
 //! `e_i = (P_{i+1} - P_i) * S_i` (Eq. 1): merging segment `i` into its
 //! successor re-allocates `S_i` samples at the higher peak `P_{i+1}`.
+//!
+//! The merge loop runs in O(m log m) over the m envelope runs: runs live
+//! in a neighbor-linked list (`prev`/`next` index arrays) and merge
+//! candidates in a min-heap keyed on (error, run id), invalidated
+//! *lazily* — a merge changes exactly two candidates (the predecessor's
+//! error, whose successor peak changed, and the merged run's error, whose
+//! size changed), so those two are re-pushed with a bumped version and
+//! stale heap entries are skipped on pop. Ties break on the lower run id,
+//! which equals the lower current position, so the merge sequence — and
+//! therefore the result, bit for bit — matches the original quadratic
+//! rescan loop (`get_segments_quadratic`, retained as the equivalence
+//! oracle and bench baseline).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::segments::StepPlan;
+
+/// Test-only counter of `get_segments` calls on the current thread, used
+/// to assert that the coordinator's incremental `observe` segments
+/// exactly one execution (no re-segmentation of history).
+#[cfg(test)]
+thread_local! {
+    pub(crate) static SEG_CALLS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
 
 /// Segmentation result in sample units: `sizes[i]` samples at `peaks[i]`.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,14 +95,38 @@ pub fn monotone_envelope(samples: &[f64]) -> Vec<f64> {
     out
 }
 
-/// Algorithm 1 (paper): greedy `k`-segmentation of a memory series.
-///
-/// Returns fewer than `k` segments when the envelope has fewer steps.
-/// Panics on an empty series.
-pub fn get_segments(samples: &[f64], k: usize) -> Segmentation {
-    assert!(!samples.is_empty(), "cannot segment an empty series");
-    assert!(k >= 1);
-    // Step 1: monotone envelope as (size, peak) runs.
+/// A pending merge of run `id` into its successor, costing `err`.
+/// Entries are compared (error, id, version) ascending; `ver` lets stale
+/// entries be recognized and skipped after the run's error changed.
+struct MergeCand {
+    err: f64,
+    id: usize,
+    ver: u32,
+}
+
+impl PartialEq for MergeCand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for MergeCand {}
+impl PartialOrd for MergeCand {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MergeCand {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.err
+            .total_cmp(&other.err)
+            .then(self.id.cmp(&other.id))
+            .then(self.ver.cmp(&other.ver))
+    }
+}
+
+/// Step 1 shared by both merge loops: the monotone envelope as
+/// (size, peak) runs.
+fn envelope_runs(samples: &[f64]) -> (Vec<usize>, Vec<f64>) {
     let mut sizes: Vec<usize> = vec![1];
     let mut peaks: Vec<f64> = vec![samples[0]];
     for &m in &samples[1..] {
@@ -90,7 +137,99 @@ pub fn get_segments(samples: &[f64], k: usize) -> Segmentation {
             peaks.push(m);
         }
     }
-    // Step 2: greedy merges, smallest e_i = (P_{i+1} - P_i) * S_i first.
+    (sizes, peaks)
+}
+
+/// Algorithm 1 (paper): greedy `k`-segmentation of a memory series, in
+/// O(n + m log m) where m is the number of envelope steps.
+///
+/// Returns fewer than `k` segments when the envelope has fewer steps.
+/// Panics on an empty series.
+pub fn get_segments(samples: &[f64], k: usize) -> Segmentation {
+    assert!(!samples.is_empty(), "cannot segment an empty series");
+    assert!(k >= 1);
+    #[cfg(test)]
+    SEG_CALLS.with(|c| c.set(c.get() + 1));
+    let (mut sizes, peaks) = envelope_runs(samples);
+    let m = peaks.len();
+    if m <= k {
+        return Segmentation { sizes, peaks };
+    }
+    // Step 2: greedy merges, smallest e_i = (P_{i+1} - P_i) * S_i first,
+    // over a neighbor-linked list with a lazily invalidated min-heap.
+    const NONE: usize = usize::MAX;
+    let mut prev: Vec<usize> = (0..m).map(|i| if i == 0 { NONE } else { i - 1 }).collect();
+    let mut next: Vec<usize> = (0..m).map(|i| if i + 1 == m { NONE } else { i + 1 }).collect();
+    let mut alive = vec![true; m];
+    let mut ver = vec![0u32; m];
+    let mut heap: BinaryHeap<Reverse<MergeCand>> = BinaryHeap::with_capacity(2 * m);
+    for i in 0..m - 1 {
+        heap.push(Reverse(MergeCand {
+            err: (peaks[i + 1] - peaks[i]) * sizes[i] as f64,
+            id: i,
+            ver: 0,
+        }));
+    }
+    let mut remaining = m;
+    while remaining > k {
+        let Reverse(cand) = heap.pop().expect("candidate exists while >k runs remain");
+        let i = cand.id;
+        if !alive[i] || ver[i] != cand.ver {
+            continue; // stale: the run died or its error was re-pushed
+        }
+        // Merge run i into its successor. A current-version candidate
+        // always has a live successor: the tail run never gets one, and
+        // any change to a run's successor or size bumps its version.
+        let n = next[i];
+        debug_assert!(n != NONE && alive[n]);
+        sizes[n] += sizes[i];
+        alive[i] = false;
+        remaining -= 1;
+        let p = prev[i];
+        if p != NONE {
+            next[p] = n;
+        }
+        prev[n] = p;
+        // Exactly two candidates changed: p's (successor peak is now
+        // P_n) and n's (its size grew).
+        if p != NONE {
+            ver[p] += 1;
+            heap.push(Reverse(MergeCand {
+                err: (peaks[n] - peaks[p]) * sizes[p] as f64,
+                id: p,
+                ver: ver[p],
+            }));
+        }
+        let nn = next[n];
+        if nn != NONE {
+            ver[n] += 1;
+            heap.push(Reverse(MergeCand {
+                err: (peaks[nn] - peaks[n]) * sizes[n] as f64,
+                id: n,
+                ver: ver[n],
+            }));
+        }
+    }
+    // Surviving runs, in original order (ids are envelope positions).
+    let mut out_sizes = Vec::with_capacity(remaining);
+    let mut out_peaks = Vec::with_capacity(remaining);
+    for i in 0..m {
+        if alive[i] {
+            out_sizes.push(sizes[i]);
+            out_peaks.push(peaks[i]);
+        }
+    }
+    Segmentation { sizes: out_sizes, peaks: out_peaks }
+}
+
+/// The original quadratic merge loop (full rescan + `Vec::remove` per
+/// merge), retained verbatim as the equivalence oracle for the heap
+/// implementation and as the bench baseline (`cargo bench --bench
+/// hotpath`). Not on any hot path.
+pub fn get_segments_quadratic(samples: &[f64], k: usize) -> Segmentation {
+    assert!(!samples.is_empty(), "cannot segment an empty series");
+    assert!(k >= 1);
+    let (mut sizes, mut peaks) = envelope_runs(samples);
     while peaks.len() > k {
         let mut best = 0usize;
         let mut best_e = f64::INFINITY;
@@ -343,6 +482,69 @@ mod tests {
                 acc += size;
                 assert!((seg.peaks[seg_i] - env[acc - 1]).abs() < 1e-12);
             }
+        });
+    }
+
+    #[test]
+    fn heap_matches_quadratic_on_fixtures() {
+        // The exact cases the paper motivates: plateaus, staircases, and
+        // tie-heavy series where merge order matters.
+        let cases: Vec<(Vec<f64>, usize)> = vec![
+            (vec![5.0; 80].into_iter().chain(vec![10.5; 20]).collect(), 2),
+            (vec![1.0, 2.0, 10.0], 2),
+            (vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3), // all merge errors equal
+            (vec![2.0, 2.0, 2.0], 5),
+            (vec![1.0, 7.0, 3.0, 2.0], 1),
+            ((0..64).map(|i| (i % 7) as f64 + i as f64 * 0.1).collect(), 4),
+        ];
+        for (s, k) in cases {
+            assert_eq!(
+                get_segments(&s, k),
+                get_segments_quadratic(&s, k),
+                "diverged on k={k}, series {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_heap_is_bit_identical_to_quadratic_oracle() {
+        // Satellite: across random series, k, and plateau shapes, the
+        // heap-based merge must reproduce the quadratic loop bit for bit
+        // (same f64 peaks, same sizes) — identical merge sequences
+        // including tie-breaks.
+        run_prop("heap_vs_quadratic_oracle", 300, |rng| {
+            let n = 1 + rng.below(400);
+            let shape = rng.below(4);
+            let mut level = rng.uniform(0.1, 4.0);
+            let s: Vec<f64> = (0..n)
+                .map(|_| match shape {
+                    // Plateau staircase (integer levels force error ties).
+                    0 => {
+                        if rng.f64() < 0.15 {
+                            level += 1.0;
+                        }
+                        level
+                    }
+                    // Noisy plateaus.
+                    1 => {
+                        if rng.f64() < 0.2 {
+                            level += rng.uniform(0.0, 2.0);
+                        }
+                        level * (1.0 - 0.05 * rng.f64())
+                    }
+                    // Noisy ramp: many envelope steps.
+                    2 => {
+                        level += rng.uniform(0.0, 0.05);
+                        level * (1.0 - 0.01 * rng.f64())
+                    }
+                    // White noise.
+                    _ => rng.uniform(0.0, 16.0),
+                })
+                .collect();
+            let k = 1 + rng.below(10);
+            let heap = get_segments(&s, k);
+            let quad = get_segments_quadratic(&s, k);
+            assert_eq!(heap, quad, "diverged on n={n}, k={k}, shape={shape}");
         });
     }
 

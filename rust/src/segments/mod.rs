@@ -39,29 +39,14 @@ impl StepPlan {
 
     /// Allocation at time `t` (seconds).
     pub fn alloc_at(&self, t: f64) -> f64 {
-        // Last segment whose start <= t; before t=0 clamp to first.
-        let mut idx = 0;
-        for (i, &s) in self.starts.iter().enumerate() {
-            if s <= t {
-                idx = i;
-            } else {
-                break;
-            }
-        }
-        self.peaks[idx]
+        self.peaks[self.segment_at(t)]
     }
 
-    /// Segment index active at time `t`.
+    /// Segment index active at time `t`: the last segment whose start is
+    /// <= t (before t=0 this clamps to the first). O(log k) binary
+    /// search — `starts` is strictly increasing.
     pub fn segment_at(&self, t: f64) -> usize {
-        let mut idx = 0;
-        for (i, &s) in self.starts.iter().enumerate() {
-            if s <= t {
-                idx = i;
-            } else {
-                break;
-            }
-        }
-        idx
+        self.starts.partition_point(|&s| s <= t).saturating_sub(1)
     }
 
     /// Structural validity: starts strictly increasing from 0, peaks
@@ -78,19 +63,35 @@ impl StepPlan {
 
     /// Whether the plan covers the execution: alloc(t) >= usage(t) at
     /// every sample (strictly: usage must not exceed allocation).
+    ///
+    /// Single forward sweep, O(n + k): sample times only increase, so
+    /// the active-segment cursor never rewinds (vs. an O(k) `alloc_at`
+    /// scan per sample). Same for `first_oom` and `wastage_gbs` below —
+    /// these three dominate the simulators and every experiment.
     pub fn covers(&self, e: &Execution) -> bool {
-        e.samples
-            .iter()
-            .enumerate()
-            .all(|(i, &u)| self.alloc_at(i as f64 * e.dt) >= u)
+        let mut seg = 0usize;
+        for (i, &u) in e.samples.iter().enumerate() {
+            let t = i as f64 * e.dt;
+            while seg + 1 < self.starts.len() && self.starts[seg + 1] <= t {
+                seg += 1;
+            }
+            if self.peaks[seg] < u {
+                return false;
+            }
+        }
+        true
     }
 
     /// First failure time (seconds) if the execution exceeds the plan,
-    /// plus the usage at that moment.
+    /// plus the usage at that moment. Single sweep, O(n + k).
     pub fn first_oom(&self, e: &Execution) -> Option<(f64, f64)> {
+        let mut seg = 0usize;
         for (i, &u) in e.samples.iter().enumerate() {
             let t = i as f64 * e.dt;
-            if u > self.alloc_at(t) {
+            while seg + 1 < self.starts.len() && self.starts[seg + 1] <= t {
+                seg += 1;
+            }
+            if u > self.peaks[seg] {
                 return Some((t, u));
             }
         }
@@ -112,14 +113,19 @@ impl StepPlan {
 
     /// Wastage vs a *successful* execution: sum over samples of
     /// (alloc - used) * dt. Assumes `covers(e)`; failure-attempt cost is
-    /// accounted by the simulator (`sim::run_task`).
+    /// accounted by the simulator (`sim::run_task`). Single sweep,
+    /// O(n + k).
     pub fn wastage_gbs(&self, e: &Execution) -> f64 {
-        e.samples
-            .iter()
-            .enumerate()
-            .map(|(i, &u)| (self.alloc_at(i as f64 * e.dt) - u).max(0.0))
-            .sum::<f64>()
-            * e.dt
+        let mut seg = 0usize;
+        let mut total = 0.0f64;
+        for (i, &u) in e.samples.iter().enumerate() {
+            let t = i as f64 * e.dt;
+            while seg + 1 < self.starts.len() && self.starts[seg + 1] <= t {
+                seg += 1;
+            }
+            total += (self.peaks[seg] - u).max(0.0);
+        }
+        total * e.dt
     }
 
     /// Final (highest) peak, or `default` for a degenerate empty plan.
@@ -235,6 +241,58 @@ mod tests {
                 prev = a;
             }
         });
+    }
+
+    #[test]
+    fn prop_sweep_matches_alloc_at_reference() {
+        // covers/first_oom/wastage_gbs are single cursor sweeps; they
+        // must agree exactly with the per-sample alloc_at definition.
+        run_prop("plan_sweep_reference", 200, |rng| {
+            let k = 1 + rng.below(6);
+            let mut starts = vec![0.0];
+            let mut peaks = vec![rng.uniform(0.1, 4.0)];
+            for _ in 1..k {
+                starts.push(starts.last().unwrap() + rng.uniform(0.5, 30.0));
+                peaks.push(peaks.last().unwrap() + rng.uniform(0.0, 4.0));
+            }
+            let p = StepPlan::new(starts, peaks);
+            let n = rng.below(80);
+            let dt = rng.uniform(0.1, 3.0);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+            let e = Execution::new("t", 100.0, dt, samples);
+
+            let ref_covers = e
+                .samples
+                .iter()
+                .enumerate()
+                .all(|(i, &u)| p.alloc_at(i as f64 * e.dt) >= u);
+            assert_eq!(p.covers(&e), ref_covers);
+
+            let ref_oom = e.samples.iter().enumerate().find_map(|(i, &u)| {
+                let t = i as f64 * e.dt;
+                (u > p.alloc_at(t)).then_some((t, u))
+            });
+            assert_eq!(p.first_oom(&e), ref_oom);
+
+            let ref_wastage: f64 = e
+                .samples
+                .iter()
+                .enumerate()
+                .map(|(i, &u)| (p.alloc_at(i as f64 * e.dt) - u).max(0.0))
+                .sum::<f64>()
+                * e.dt;
+            // Bit-identical: same additions in the same order.
+            assert_eq!(p.wastage_gbs(&e), ref_wastage);
+        });
+    }
+
+    #[test]
+    fn sweep_handles_empty_execution() {
+        let p = plan2();
+        let e = Execution::new("t", 1.0, 1.0, vec![]);
+        assert!(p.covers(&e));
+        assert_eq!(p.first_oom(&e), None);
+        assert_eq!(p.wastage_gbs(&e), 0.0);
     }
 
     #[test]

@@ -42,6 +42,17 @@ impl BenchResult {
             self.iters
         )
     }
+
+    /// Median nanoseconds per item — the unit `BENCH_hotpath.json`
+    /// records for segmentation and observe.
+    pub fn ns_per_op(&self, items: f64) -> f64 {
+        self.median_s * 1e9 / items
+    }
+
+    /// Median items per second.
+    pub fn per_s(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
 }
 
 fn fmt_t(s: f64) -> String {
@@ -113,5 +124,7 @@ mod tests {
             mean_s: 0.5,
         };
         assert!(r.throughput_line(100.0, "tasks").contains("200 tasks/s"));
+        assert_eq!(r.ns_per_op(100.0), 5_000_000.0);
+        assert_eq!(r.per_s(100.0), 200.0);
     }
 }

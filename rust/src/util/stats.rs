@@ -45,27 +45,36 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[lo] + (v[hi] - v[lo]) * frac
 }
 
-/// Simple OLS over (x, y) pairs: returns (slope, intercept).
+/// OLS closed form from sufficient statistics (n, Σx, Σy, Σx², Σxy):
+/// returns (slope, intercept).
 ///
-/// Mirrors the closed form of the L1 Pallas `fit` kernel exactly
-/// (including the degenerate fallbacks) so native and PJRT backends agree.
-pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64) {
-    assert_eq!(xs.len(), ys.len());
-    let n = xs.len() as f64;
-    if xs.is_empty() {
+/// This is THE closed form of the crate: `ols` sums its inputs and
+/// delegates here, the incremental `OlsStats` accumulators fit through
+/// here, and the L1 Pallas `fit` kernel mirrors the same expression
+/// (including the degenerate fallbacks) so native and PJRT backends
+/// agree. Keeping one implementation is what makes batch training and
+/// incremental observation bit-identical.
+pub fn ols_from_sums(n: f64, sx: f64, sy: f64, sxx: f64, sxy: f64) -> (f64, f64) {
+    if n == 0.0 {
         return (0.0, 0.0);
     }
-    let sx: f64 = xs.iter().sum();
-    let sy: f64 = ys.iter().sum();
-    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
-    let sxx: f64 = xs.iter().map(|x| x * x).sum();
     let denom = n * sxx - sx * sx;
-    if xs.len() < 2 || denom.abs() < 1e-12 {
+    if n < 2.0 || denom.abs() < 1e-12 {
         return (0.0, sy / n);
     }
     let slope = (n * sxy - sx * sy) / denom;
     let intercept = (sy - slope * sx) / n;
     (slope, intercept)
+}
+
+/// Simple OLS over (x, y) pairs: returns (slope, intercept).
+pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    ols_from_sums(xs.len() as f64, sx, sy, sxx, sxy)
 }
 
 /// Residuals y - (a*x + b).
@@ -150,6 +159,24 @@ mod tests {
     #[test]
     fn ols_empty() {
         assert_eq!(ols(&[], &[]), (0.0, 0.0));
+        assert_eq!(ols_from_sums(0.0, 0.0, 0.0, 0.0, 0.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn ols_from_sums_matches_ols_bitwise() {
+        // The pairwise form and the sufficient-statistics form must agree
+        // bit for bit when the sums are accumulated in the same order.
+        let xs = [3.0, 7.5, 1.25, 9.0, 2.0];
+        let ys = [1.0, -2.0, 4.5, 0.25, 8.0];
+        let (mut n, mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for (&x, &y) in xs.iter().zip(&ys) {
+            n += 1.0;
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        assert_eq!(ols(&xs, &ys), ols_from_sums(n, sx, sy, sxx, sxy));
     }
 
     #[test]

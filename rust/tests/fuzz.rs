@@ -144,10 +144,12 @@ fn wire_protocol_never_kills_connection() {
 }
 
 /// Sharded stress variant: 8 concurrent connections fire a mix of valid
-/// and garbage ops at a `shards: 4` server. Every written line must get
+/// ops (plan, observe, failure, stats) and garbage at a `shards: 4`
+/// server — incremental `observe` training mutates the very models the
+/// plan traffic reads, under contention. Every written line must get
 /// exactly one JSON reply, no connection may die, and the final
-/// aggregated `stats` must equal the sum of successful plans across all
-/// clients — i.e. the shard merge loses nothing under contention.
+/// aggregated `stats` must equal the sum of successful plans AND
+/// observations across all clients — i.e. the shard merge loses nothing.
 #[test]
 fn wire_protocol_sharded_under_stress() {
     use ksplus::coordinator::server::Server;
@@ -170,28 +172,39 @@ fn wire_protocol_sharded_under_stress() {
             let mut reader = BufReader::new(stream.try_clone().unwrap());
             let mut rng = Rng::new(1000 + t);
             let mut ok_plans = 0u64;
+            let mut ok_observes = 0u64;
             for i in 0..120u64 {
-                let (line, is_plan) = match rng.below(5) {
-                    // Valid plan op on one of 32 (untrained) task names —
-                    // enough distinct names that every one of the 4 shards
-                    // receives plan traffic (the fallback path still
+                // 0 = plan, 1 = observe, 2 = failure, 3 = stats, 4+ = junk
+                let kind = rng.below(6);
+                let line = match kind {
+                    // Valid plan op on one of 32 task names — enough
+                    // distinct names that every one of the 4 shards
+                    // receives plan traffic (untrained fallback still
                     // counts as a request).
-                    0 | 1 => (
+                    0 => format!(
+                        r#"{{"op":"plan","task":"t{}","input_mb":{}}}"#,
+                        rng.below(32),
+                        1000 + i
+                    ),
+                    // Valid observe op: incremental training mixed into
+                    // the stress stream, hitting the same task names the
+                    // plans use (so models mutate under plan load).
+                    1 => {
+                        let n = 1 + rng.below(4);
+                        let samples: Vec<String> =
+                            (0..n).map(|j| format!("{:.2}", 0.5 + j as f64)).collect();
                         format!(
-                            r#"{{"op":"plan","task":"t{}","input_mb":{}}}"#,
+                            r#"{{"op":"observe","task":"t{}","execution":{{"input_mb":{},"dt":1.0,"samples":[{}]}}}}"#,
                             rng.below(32),
-                            1000 + i
-                        ),
-                        true,
-                    ),
+                            500 + i,
+                            samples.join(",")
+                        )
+                    }
                     // Valid failure op (stateless, any shard serves it).
-                    2 => (
-                        r#"{"op":"failure","plan":{"starts":[0,50],"peaks":[2,8]},"fail_time":20}"#
-                            .to_string(),
-                        false,
-                    ),
+                    2 => r#"{"op":"failure","plan":{"starts":[0,50],"peaks":[2,8]},"fail_time":20}"#
+                        .to_string(),
                     // Valid stats op mid-stream.
-                    3 => (r#"{"op":"stats"}"#.to_string(), false),
+                    3 => r#"{"op":"stats"}"#.to_string(),
                     // Garbage bytes. Never whitespace-only: the server
                     // skips blank lines without replying.
                     _ => {
@@ -205,7 +218,7 @@ fn wire_protocol_sharded_under_stress() {
                         if g.trim().is_empty() {
                             g.push('#');
                         }
-                        (g, false)
+                        g
                     }
                 };
                 writeln!(stream, "{line}").unwrap();
@@ -213,19 +226,32 @@ fn wire_protocol_sharded_under_stress() {
                 reader.read_line(&mut resp).unwrap();
                 let j = Json::parse(&resp).expect("server must answer JSON");
                 let ok = j.get("ok").expect("response missing 'ok'");
-                if is_plan {
-                    assert_eq!(ok, &Json::Bool(true), "valid plan rejected: {resp}");
-                    ok_plans += 1;
+                match kind {
+                    0 => {
+                        assert_eq!(ok, &Json::Bool(true), "valid plan rejected: {resp}");
+                        ok_plans += 1;
+                    }
+                    1 => {
+                        assert_eq!(ok, &Json::Bool(true), "valid observe rejected: {resp}");
+                        ok_observes += 1;
+                    }
+                    _ => {}
                 }
             }
-            ok_plans
+            (ok_plans, ok_observes)
         }));
     }
-    let total_ok: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let (mut total_ok, mut total_observes) = (0u64, 0u64);
+    for h in handles {
+        let (p, o) = h.join().unwrap();
+        total_ok += p;
+        total_observes += o;
+    }
     assert!(total_ok > 0);
+    assert!(total_observes > 0);
 
-    // The aggregated stats must account for every successful plan, across
-    // all four shards.
+    // The aggregated stats must account for every successful plan and
+    // every observation, across all four shards.
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     writeln!(stream, r#"{{"op":"stats"}}"#).unwrap();
@@ -239,11 +265,16 @@ fn wire_protocol_sharded_under_stress() {
         Some(total_ok as usize),
         "merged shard stats disagree with the clients' successful plans: {resp}"
     );
+    assert_eq!(
+        j.get("observations").and_then(Json::as_usize),
+        Some(total_observes as usize),
+        "merged shard stats disagree with the clients' successful observes: {resp}"
+    );
 }
 
 #[test]
 fn segmentation_handles_adversarial_series() {
-    use ksplus::segments::algorithm::get_segments;
+    use ksplus::segments::algorithm::{get_segments, get_segments_quadratic};
     run_prop("segmentation_adversarial", 200, |rng| {
         let n = 1 + rng.below(300);
         let samples: Vec<f64> = (0..n)
@@ -259,6 +290,9 @@ fn segmentation_handles_adversarial_series() {
         let seg = get_segments(&samples, k);
         assert_eq!(seg.sizes.iter().sum::<usize>(), n);
         assert!(seg.peaks.len() <= k);
+        // The heap merge agrees with the quadratic oracle even on
+        // adversarial value mixes (zeros, denormal-scale, 1e6 spikes).
+        assert_eq!(seg, get_segments_quadratic(&samples, k));
         // Constant series, all-zeros series etc. stay well-formed.
         let flat = get_segments(&vec![samples[0]; n], k);
         assert_eq!(flat.peaks.len(), 1);

@@ -208,6 +208,37 @@ fn wire_protocol_end_to_end_with_pjrt() {
 }
 
 #[test]
+fn observe_stream_equals_batch_train_on_real_workflow() {
+    // Incremental training end-to-end on a real trace: a coordinator fed
+    // one `observe` per execution must serve plans bit-identical to a
+    // coordinator batch-trained on the same history — for every task
+    // type, across whichever shards the names hash to.
+    let wf = Workflow::eager();
+    let trace = wf.generate(31, 80);
+    let cfg = |shards| CoordinatorConfig { k: 3, shards, ..Default::default() };
+    let batch = Coordinator::start(cfg(2), BackendSpec::Native).unwrap();
+    let streamed = Coordinator::start(cfg(2), BackendSpec::Native).unwrap();
+    for t in &trace.tasks {
+        batch.client().train(&t.task, t.executions.clone());
+        for (i, e) in t.executions.iter().enumerate() {
+            let n = streamed.client().observe(&t.task, e.clone());
+            assert_eq!(n, i as u64 + 1, "task {}", t.task);
+        }
+    }
+    for t in &trace.tasks {
+        for input in [t.executions[0].input_mb, t.executions[1].input_mb * 1.7] {
+            let a = batch.client().plan(&t.task, input);
+            let b = streamed.client().plan(&t.task, input);
+            assert_eq!(a.starts, b.starts, "task {} input {input}", t.task);
+            assert_eq!(a.peaks, b.peaks, "task {} input {input}", t.task);
+        }
+    }
+    let stats = streamed.client().stats();
+    assert_eq!(stats.observations, trace.total_instances() as u64);
+    assert_eq!(stats.tasks_trained, 0);
+}
+
+#[test]
 fn sharded_coordinator_matches_single_shard_plans() {
     // Sharding is a pure scaling change: given identical training data,
     // the sharded pool must emit bit-identical plans to a single worker,
