@@ -24,7 +24,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-use ksplus::coordinator::BackendSpec;
+use ksplus::coordinator::{BackendSpec, PredictorPolicy};
 use ksplus::trace::workflow::Workflow;
 use ksplus::trace::Execution;
 
@@ -63,9 +63,20 @@ fn main() -> anyhow::Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("invalid KSPLUS_SHARDS value '{s}'"))?,
     };
-    println!("coordinator shards: {shards}");
+    // KSPLUS_POLICY picks the predictor policy every task trains under
+    // (default ksplus) — the same seam `repro serve --policy` exposes.
+    let policy = match std::env::var("KSPLUS_POLICY") {
+        Err(_) => PredictorPolicy::KsPlus,
+        Ok(s) => PredictorPolicy::parse(s.trim()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "invalid KSPLUS_POLICY '{s}' (valid: {})",
+                PredictorPolicy::names().join(", ")
+            )
+        })?,
+    };
+    println!("coordinator shards: {shards}, predictor policy: {}", policy.name());
     let coord = Coordinator::start(
-        CoordinatorConfig { shards, ..Default::default() },
+        CoordinatorConfig { shards, default_policy: policy, ..Default::default() },
         backend_spec(),
     )?;
     let client = coord.client();
@@ -118,7 +129,12 @@ fn main() -> anyhow::Result<()> {
                                     if attempts > 10 {
                                         break;
                                     }
-                                    plan = c.report_failure(&plan, t_fail);
+                                    // Route the retry through the task's
+                                    // bound policy (KS+ rescaling by
+                                    // default, doubling for witt-lr, ...).
+                                    plan = c
+                                        .report_failure_for(Some(&e.task), &plan, t_fail)
+                                        .plan;
                                 }
                             }
                         }
@@ -161,6 +177,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("OOM reports handled : {}", oom_reports.load(Ordering::Relaxed));
     println!("observations folded : {}", stats.observations);
+    println!("fallback plans      : {}", stats.fallbacks);
     println!("KS+ wastage         : {wastage_ks:.0} GBs");
 
     // Baseline comparison: peak-only (max historic peak + 10 %).

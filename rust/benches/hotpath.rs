@@ -15,7 +15,7 @@
 //! reduced-iteration CI smoke run.
 
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-use ksplus::coordinator::{Backend, BackendSpec, ModelStore};
+use ksplus::coordinator::{Backend, BackendSpec, ModelStore, PlanScratch, PredictorPolicy};
 use ksplus::predictor::regression::{FitEngine, NativeFit};
 use ksplus::predictor::{by_name, Predictor};
 use ksplus::segments::algorithm::{get_segments, get_segments_quadratic};
@@ -128,6 +128,33 @@ fn main() {
         }
     });
     println!("  -> {}", r.throughput_line(total_samples as f64, "trace-samples"));
+
+    // Per-task policy plan paths: the KS+ fast path (batched backend
+    // predict over the sufficient-stat models) vs a baseline policy
+    // served through the Predictor seam. Confirms the policy layer adds
+    // no overhead to the KS+ hot path and prices the alternative.
+    {
+        let mut pstore = ModelStore::new(4, 128.0, Backend::Native);
+        pstore.train("bwa", &bwa.executions);
+        pstore.configure("bwa-witt", PredictorPolicy::WittLr);
+        pstore.train("bwa-witt", &bwa.executions);
+        let reqs_ks: Vec<(&str, f64)> =
+            (0..64).map(|i| ("bwa", 2000.0 + i as f64 * 100.0)).collect();
+        let reqs_w: Vec<(&str, f64)> =
+            (0..64).map(|i| ("bwa-witt", 2000.0 + i as f64 * 100.0)).collect();
+        let mut scratch = PlanScratch::default();
+        let (w, i) = reps(5, 50);
+        let r = bench("store/plan_batch/ksplus-64", w, i, || {
+            pstore.plan_batch_into(&reqs_ks, &mut scratch);
+            black_box(&scratch.plans);
+        });
+        println!("  -> {}", r.throughput_line(64.0, "plans"));
+        let r = bench("store/plan_batch/witt-lr-64", w, i, || {
+            pstore.plan_batch_into(&reqs_w, &mut scratch);
+            black_box(&scratch.plans);
+        });
+        println!("  -> {}", r.throughput_line(64.0, "plans"));
+    }
 
     let (w, i) = reps(3, 20);
     let r = bench("native-ols/512rows-x-128obs", w, i, || {

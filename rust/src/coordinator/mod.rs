@@ -29,7 +29,18 @@
 //! `Train`, `Observe`, and `Plan` route by a deterministic FNV-1a hash of
 //! the task name (`service::shard_for`), so one shard owns each task's
 //! models and its plan traffic; `shards: 1` (the default) reproduces the
-//! original single-worker coordinator. Training is *incremental*: the
+//! original single-worker coordinator.
+//!
+//! Every task is bound to a named **predictor policy**
+//! (`PredictorPolicy`): `ksplus` (the default, served by the fast path
+//! below), or one of the paper's baselines — `witt-lr`, `tovar-ppm`,
+//! `ksegments`, `default-limits` — served through the offline
+//! `Predictor` trait with refit-on-observe. Policies are set per task
+//! (or service-wide) via `configure`, and every served plan carries
+//! provenance (`PlanOutcome`): which policy computed it, its model
+//! version, and whether it was an untrained fallback.
+//!
+//! KS+ training is *incremental*: the
 //! store keeps per-task sufficient statistics (n, Σx, Σy, Σx², Σxy) for
 //! every one of the 2k regressions, so observing a finished execution
 //! costs one segmentation of that execution plus O(k) accumulator
@@ -41,15 +52,114 @@
 //! (native-only) builds the same flush runs the closed-form OLS
 //! in-process. The Python stack is never invoked either way.
 
+pub mod protocol;
+pub mod remote;
 pub mod server;
 pub mod service;
 
 use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
 use crate::predictor::regression::{LinModel, OlsStats};
+use crate::predictor::Predictor;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::segments::StepPlan;
 use crate::trace::Execution;
+
+/// Named predictor strategy a task (or the service-wide default) can be
+/// bound to. `ksplus` is the fast default: it is served by the dedicated
+/// 2k sufficient-statistics path in `TaskModels` with O(k) incremental
+/// `observe`. The other strategies go through the offline `Predictor`
+/// trait — their math has no incremental closed form, so an `observe`
+/// refits them from the task's retained history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorPolicy {
+    /// KS+ variable segments (the paper's contribution).
+    KsPlus,
+    /// Witt et al. linear-regression peak predictor (mean + sigma offset).
+    WittLr,
+    /// Tovar et al. peak-probability first allocation (machine-max retry).
+    TovarPpm,
+    /// k equal-sized segments with the selective retry strategy.
+    KSegments,
+    /// The workflow developers' static default limits (doubling retry).
+    DefaultLimits,
+}
+
+impl PredictorPolicy {
+    /// Every policy, in the order `hello` advertises them.
+    pub const ALL: [PredictorPolicy; 5] = [
+        PredictorPolicy::KsPlus,
+        PredictorPolicy::WittLr,
+        PredictorPolicy::TovarPpm,
+        PredictorPolicy::KSegments,
+        PredictorPolicy::DefaultLimits,
+    ];
+
+    /// Stable wire name (`configure.policy`, plan provenance).
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorPolicy::KsPlus => "ksplus",
+            PredictorPolicy::WittLr => "witt-lr",
+            PredictorPolicy::TovarPpm => "tovar-ppm",
+            PredictorPolicy::KSegments => "ksegments",
+            PredictorPolicy::DefaultLimits => "default-limits",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PredictorPolicy> {
+        PredictorPolicy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    pub fn names() -> Vec<&'static str> {
+        PredictorPolicy::ALL.iter().map(|p| p.name()).collect()
+    }
+
+    /// Build the offline predictor implementing this strategy (used for
+    /// every policy except the KS+ sufficient-statistics fast path).
+    fn build(self, k: usize, capacity: f64) -> Box<dyn Predictor> {
+        use crate::predictor::{ksegments, tovar, witt, DefaultLimits};
+        match self {
+            PredictorPolicy::KsPlus => Box::new(KsPlus::new(k, capacity)),
+            PredictorPolicy::WittLr => {
+                Box::new(witt::WittLr::new(capacity, witt::Offset::MeanSigma))
+            }
+            PredictorPolicy::TovarPpm => {
+                Box::new(tovar::TovarPpm::new(capacity, tovar::RetryMode::MachineMax))
+            }
+            PredictorPolicy::KSegments => {
+                Box::new(ksegments::KSegments::new(k, capacity, ksegments::RetryMode::Selective))
+            }
+            PredictorPolicy::DefaultLimits => Box::new(DefaultLimits::new(capacity)),
+        }
+    }
+}
+
+/// `PlanOutcome::fallback_reason` when the bound policy had no trained
+/// model for the task and the capacity-safe flat default was served.
+pub const FALLBACK_UNTRAINED: &str = "untrained-task";
+
+/// A served plan plus its provenance: which policy actually computed it,
+/// how many executions the serving model had folded in, and whether it
+/// was a fallback rather than a trained prediction. This is what the
+/// wire `plan` response carries, so callers can tell a trained KS+ plan
+/// from a default-limits fallback.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanOutcome {
+    pub plan: StepPlan,
+    /// Policy that computed the plan (`"default-limits"` for fallbacks).
+    pub predictor: &'static str,
+    /// Executions folded into the serving model (0 for a fallback).
+    pub model_version: u64,
+    /// `Some(FALLBACK_UNTRAINED)` iff the plan is the untrained default.
+    pub fallback_reason: Option<&'static str>,
+}
+
+/// A retry plan plus the policy whose failure strategy produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryOutcome {
+    pub plan: StepPlan,
+    pub predictor: &'static str,
+}
 
 /// Numeric backend for the coordinator. PJRT handles are thread-affine
 /// (`Rc`): the service constructs its backend *inside* the worker thread
@@ -173,6 +283,19 @@ impl TaskModels {
     }
 }
 
+/// Per-request routing decision of one `plan_batch_into` call. The KS+
+/// variant carries no plan — its 2k model evaluations ride the single
+/// batched backend predict; the others are resolved directly.
+#[derive(Debug)]
+enum PlanMeta {
+    /// Trained KS+ task: consume 2k slots from the batched predict.
+    Ks { version: u64 },
+    /// Plan computed directly by a non-KS+ policy predictor.
+    Direct { plan: StepPlan, predictor: &'static str, version: u64 },
+    /// No trained model under the bound policy: flat capacity-safe default.
+    Fallback,
+}
+
 /// Reusable buffers for `plan_batch_into`. Each coordinator worker owns
 /// one, so a steady-state batcher flush performs no per-request `String`
 /// clones and reuses every intermediate numeric buffer across flushes
@@ -183,24 +306,64 @@ pub struct PlanScratch {
     models: Vec<LinModel>,
     xq: Vec<f64>,
     scale: Vec<f64>,
-    known: Vec<bool>,
+    meta: Vec<PlanMeta>,
     flat: Vec<f64>,
-    /// Assembled plans, in request order, after `plan_batch_into`.
-    pub plans: Vec<StepPlan>,
+    /// Served plans with provenance, in request order, after
+    /// `plan_batch_into`.
+    pub plans: Vec<PlanOutcome>,
+}
+
+/// How many executions a non-KS+ task retains for refitting. These
+/// strategies have no incremental closed form, so the service keeps a
+/// bounded sliding window instead of every execution ever observed —
+/// a long-running coordinator must not grow per-observe memory (the
+/// KS+ path's O(1)-space property, approximated for the baselines).
+pub const ALT_HISTORY_CAP: usize = 512;
+
+/// Trained state for a task bound to a non-KS+ policy: the boxed
+/// predictor plus the (bounded) history window it was fitted from. An
+/// `observe` appends to the window and refits — O(window) per observe,
+/// versus KS+'s O(k). The window is policy-independent, which lets
+/// `configure` switch a task between strategies and refit the new one
+/// from the same data.
+struct AltModel {
+    policy: PredictorPolicy,
+    pred: Box<dyn Predictor>,
+    /// Most recent executions, oldest first, at most `ALT_HISTORY_CAP`.
+    history: Vec<Execution>,
+    /// Executions ever folded in (the task's model version; keeps
+    /// counting past the retention cap).
+    observed: u64,
 }
 
 /// Model store + pure prediction logic, shared by the threaded service
-/// and the batch experiment path.
+/// and the batch experiment path. Every task is bound to a
+/// `PredictorPolicy` (explicitly via `configure`, or pinned to the
+/// store-wide default the first time it is trained/observed); plans,
+/// observes, and failure retries route by that binding.
 pub struct ModelStore {
     pub k: usize,
     pub capacity_gb: f64,
     backend: Backend,
     models: std::collections::BTreeMap<String, TaskModels>,
+    /// Per-task policy bindings; tasks absent here use `default_policy`.
+    policies: std::collections::BTreeMap<String, PredictorPolicy>,
+    /// Trained state for tasks bound to non-KS+ policies.
+    alt: std::collections::BTreeMap<String, AltModel>,
+    default_policy: PredictorPolicy,
 }
 
 impl ModelStore {
     pub fn new(k: usize, capacity_gb: f64, backend: Backend) -> Self {
-        ModelStore { k, capacity_gb, backend, models: Default::default() }
+        ModelStore {
+            k,
+            capacity_gb,
+            backend,
+            models: Default::default(),
+            policies: Default::default(),
+            alt: Default::default(),
+            default_policy: PredictorPolicy::KsPlus,
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -208,11 +371,63 @@ impl ModelStore {
     }
 
     pub fn has_task(&self, task: &str) -> bool {
-        self.models.contains_key(task)
+        self.models.contains_key(task) || self.alt.contains_key(task)
     }
 
     pub fn tasks(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.extend(self.alt.keys().filter(|t| !self.models.contains_key(*t)).cloned());
+        v.sort();
+        v
+    }
+
+    /// Policy that would serve this task right now.
+    pub fn policy_of(&self, task: &str) -> PredictorPolicy {
+        self.policies.get(task).copied().unwrap_or(self.default_policy)
+    }
+
+    /// Policy new (unbound) tasks are pinned to when first trained.
+    pub fn default_policy(&self) -> PredictorPolicy {
+        self.default_policy
+    }
+
+    pub fn set_default_policy(&mut self, policy: PredictorPolicy) {
+        self.default_policy = policy;
+    }
+
+    /// Bind `task` to `policy`, returning the previous effective policy.
+    /// Trained state is kept per strategy family: rebinding back to KS+
+    /// re-serves any existing sufficient-statistics models; rebinding to
+    /// another strategy refits its predictor from the task's retained
+    /// non-KS+ history (if any).
+    pub fn configure(&mut self, task: &str, policy: PredictorPolicy) -> PredictorPolicy {
+        let prev = self.policy_of(task);
+        self.policies.insert(task.to_string(), policy);
+        if policy != PredictorPolicy::KsPlus {
+            if let Some(am) = self.alt.get_mut(task) {
+                if am.policy != policy {
+                    let mut pred = policy.build(self.k, self.capacity_gb);
+                    if !am.history.is_empty() {
+                        pred.train(&am.history);
+                    }
+                    am.policy = policy;
+                    am.pred = pred;
+                }
+            }
+        }
+        prev
+    }
+
+    /// Resolve the task's policy, pinning the current default for a task
+    /// seen for the first time — changing the store default later only
+    /// reroutes tasks that have no recorded binding yet.
+    fn bind_policy(&mut self, task: &str) -> PredictorPolicy {
+        if let Some(p) = self.policies.get(task) {
+            return *p;
+        }
+        let p = self.default_policy;
+        self.policies.insert(task.to_string(), p);
+        p
     }
 
     /// Fold one execution's aligned segment rows into the task's
@@ -239,54 +454,108 @@ impl ModelStore {
         true
     }
 
-    /// Fold ONE finished execution into the task's models: segments only
-    /// the new execution (a single `get_segments` call) and updates the
-    /// 2k sufficient-statistic accumulators + closed-form refits in O(k).
-    /// History is never revisited. Returns `(folded, count)`: whether
-    /// the execution was actually folded in (sample-less executions are
-    /// ignored — nothing to segment) and the task's total observation
-    /// count. `folded` is the single source of truth for "did the models
-    /// change", so callers counting observations never drift from the
-    /// store's skip policy.
+    /// Fold ONE finished execution into the task's models under its
+    /// bound policy. For KS+ this segments only the new execution (a
+    /// single `get_segments` call) and updates the 2k
+    /// sufficient-statistic accumulators + closed-form refits in O(k) —
+    /// history is never revisited. Non-KS+ policies have no incremental
+    /// closed form: the execution is appended to the task's retained
+    /// history and the predictor is refitted. Returns `(folded, count)`:
+    /// whether the execution was actually folded in (sample-less
+    /// executions are ignored — nothing to learn) and the task's total
+    /// observation count. `folded` is the single source of truth for
+    /// "did the models change", so callers counting observations never
+    /// drift from the store's skip policy.
     pub fn observe(&mut self, task: &str, e: &Execution) -> (bool, u64) {
-        let folded = self.fold_observation(task, e);
-        let k = self.k;
-        match self.models.get_mut(task) {
-            None => (false, 0),
-            Some(tm) => {
-                if folded {
-                    tm.refit(k);
+        match self.bind_policy(task) {
+            PredictorPolicy::KsPlus => {
+                let folded = self.fold_observation(task, e);
+                let k = self.k;
+                match self.models.get_mut(task) {
+                    None => (false, 0),
+                    Some(tm) => {
+                        if folded {
+                            tm.refit(k);
+                        }
+                        (folded, tm.observed)
+                    }
                 }
-                (folded, tm.observed)
+            }
+            policy => {
+                if e.samples.is_empty() {
+                    let count = self.alt.get(task).map(|am| am.observed).unwrap_or(0);
+                    return (false, count);
+                }
+                let (k, capacity) = (self.k, self.capacity_gb);
+                let am = self.alt.entry(task.to_string()).or_insert_with(|| AltModel {
+                    policy,
+                    pred: policy.build(k, capacity),
+                    history: Vec::new(),
+                    observed: 0,
+                });
+                am.history.push(e.clone());
+                if am.history.len() > ALT_HISTORY_CAP {
+                    // Sliding retention window: drop the oldest.
+                    am.history.remove(0);
+                }
+                am.observed += 1;
+                am.pred.train(&am.history);
+                (true, am.observed)
             }
         }
     }
 
-    /// Train (or retrain) one task from scratch: discards any prior
-    /// state for the task and folds the history into fresh accumulators,
-    /// refitting once at the end — bit-identical to streaming the same
-    /// history through `observe` (the refit is a pure function of the
-    /// accumulators). A history with nothing to learn from (empty, or
-    /// containing only sample-less executions) keeps existing models
-    /// (unchanged empty-history policy).
+    /// Train (or retrain) one task from scratch under its bound policy:
+    /// discards any prior state for the task and fits the history fresh.
+    /// For KS+ this folds into fresh accumulators and refits once at the
+    /// end — bit-identical to streaming the same history through
+    /// `observe` (the refit is a pure function of the accumulators). A
+    /// history with nothing to learn from (empty, or containing only
+    /// sample-less executions) keeps existing models (unchanged
+    /// empty-history policy).
     pub fn train(&mut self, task: &str, history: &[Execution]) {
         if !history.iter().any(|e| !e.samples.is_empty()) {
             return;
         }
-        self.models.remove(task);
-        for e in history {
-            self.fold_observation(task, e);
-        }
-        let k = self.k;
-        if let Some(tm) = self.models.get_mut(task) {
-            tm.refit(k);
+        match self.bind_policy(task) {
+            PredictorPolicy::KsPlus => {
+                self.models.remove(task);
+                for e in history {
+                    self.fold_observation(task, e);
+                }
+                let k = self.k;
+                if let Some(tm) = self.models.get_mut(task) {
+                    tm.refit(k);
+                }
+            }
+            policy => {
+                let mut filtered: Vec<Execution> =
+                    history.iter().filter(|e| !e.samples.is_empty()).cloned().collect();
+                let observed = filtered.len() as u64;
+                // Retention window: keep (and fit) the most recent cap.
+                if filtered.len() > ALT_HISTORY_CAP {
+                    filtered.drain(..filtered.len() - ALT_HISTORY_CAP);
+                }
+                let mut pred = policy.build(self.k, self.capacity_gb);
+                pred.train(&filtered);
+                self.alt.insert(
+                    task.to_string(),
+                    AltModel { policy, pred, history: filtered, observed },
+                );
+            }
         }
     }
 
-    /// Plan a batch of requests with ONE backend predict call.
-    /// Unknown tasks get a capacity-safe flat fallback. Convenience
-    /// wrapper over `plan_batch_into` for callers without a scratch.
+    /// Plan a batch of requests; all trained-KS+ requests share ONE
+    /// backend predict call. Tasks with no trained model under their
+    /// bound policy get a capacity-safe flat fallback. Convenience
+    /// wrapper over `plan_batch_into` that drops provenance.
     pub fn plan_batch(&self, requests: &[(&str, f64)]) -> Vec<StepPlan> {
+        self.plan_batch_outcomes(requests).into_iter().map(|o| o.plan).collect()
+    }
+
+    /// Like `plan_batch`, but keeps per-plan provenance.
+    pub fn plan_batch_outcomes(&self, requests: &[(&str, f64)]) -> Vec<PlanOutcome> {
         let mut scratch = PlanScratch::default();
         self.plan_batch_into(requests, &mut scratch);
         scratch.plans
@@ -294,56 +563,115 @@ impl ModelStore {
 
     /// Allocation-lean batch planning: task names are borrowed and every
     /// intermediate buffer lives in the caller's reusable `scratch`;
-    /// results land in `scratch.plans` in request order.
+    /// results land in `scratch.plans` in request order. Requests route
+    /// by each task's bound policy: trained KS+ tasks ride the single
+    /// batched backend predict exactly as before the policy seam (the
+    /// model/scale sequence is unchanged, keeping KS+ plans
+    /// bit-identical); non-KS+ tasks are served by their own predictor;
+    /// anything untrained gets the flat capacity-safe default.
     pub fn plan_batch_into(&self, requests: &[(&str, f64)], s: &mut PlanScratch) {
         s.models.clear();
         s.xq.clear();
         s.scale.clear();
-        s.known.clear();
+        s.meta.clear();
         s.plans.clear();
         for (task, input) in requests {
-            match self.models.get(*task) {
-                None => s.known.push(false),
-                Some(tm) => {
-                    s.known.push(true);
-                    for m in &tm.start_models {
-                        s.models.push(*m);
-                        s.xq.push(*input);
-                        s.scale.push(TIME_UNDERPREDICT);
+            match self.policy_of(*task) {
+                PredictorPolicy::KsPlus => match self.models.get(*task) {
+                    None => s.meta.push(PlanMeta::Fallback),
+                    Some(tm) => {
+                        for m in &tm.start_models {
+                            s.models.push(*m);
+                            s.xq.push(*input);
+                            s.scale.push(TIME_UNDERPREDICT);
+                        }
+                        for m in &tm.peak_models {
+                            s.models.push(*m);
+                            s.xq.push(*input);
+                            s.scale.push(MEM_OVERPREDICT);
+                        }
+                        s.meta.push(PlanMeta::Ks { version: tm.observed });
                     }
-                    for m in &tm.peak_models {
-                        s.models.push(*m);
-                        s.xq.push(*input);
-                        s.scale.push(MEM_OVERPREDICT);
-                    }
-                }
+                },
+                policy => match self.alt.get(*task) {
+                    Some(am) if am.observed > 0 => s.meta.push(PlanMeta::Direct {
+                        plan: am.pred.plan(*input),
+                        predictor: policy.name(),
+                        version: am.observed,
+                    }),
+                    _ => s.meta.push(PlanMeta::Fallback),
+                },
             }
         }
         self.backend.predict_into(&s.models, &s.xq, &s.scale, &mut s.flat);
         let mut off = 0usize;
-        for i in 0..requests.len() {
-            if !s.known[i] {
-                // Absent from the store (known[i] was set under this
-                // same &self borrow): nothing learned, serve the
-                // capacity-safe flat default.
-                let peak = self.capacity_gb / 4.0;
-                s.plans.push(StepPlan::flat(peak.min(self.capacity_gb)));
-                continue;
+        for meta in s.meta.drain(..) {
+            match meta {
+                PlanMeta::Ks { version } => {
+                    let starts = &s.flat[off..off + self.k];
+                    let peaks = &s.flat[off + self.k..off + 2 * self.k];
+                    off += 2 * self.k;
+                    // Offsets already applied via `scale`; identity here.
+                    s.plans.push(PlanOutcome {
+                        plan: KsPlus::assemble_plan(starts, peaks, 1.0, 1.0, self.capacity_gb),
+                        predictor: PredictorPolicy::KsPlus.name(),
+                        model_version: version,
+                        fallback_reason: None,
+                    });
+                }
+                PlanMeta::Direct { plan, predictor, version } => s.plans.push(PlanOutcome {
+                    plan,
+                    predictor,
+                    model_version: version,
+                    fallback_reason: None,
+                }),
+                PlanMeta::Fallback => {
+                    // Nothing learned for this task under its policy:
+                    // serve the capacity-safe flat default and say so.
+                    let peak = self.capacity_gb / 4.0;
+                    s.plans.push(PlanOutcome {
+                        plan: StepPlan::flat(peak.min(self.capacity_gb)),
+                        predictor: PredictorPolicy::DefaultLimits.name(),
+                        model_version: 0,
+                        fallback_reason: Some(FALLBACK_UNTRAINED),
+                    });
+                }
             }
-            let starts = &s.flat[off..off + self.k];
-            let peaks = &s.flat[off + self.k..off + 2 * self.k];
-            off += 2 * self.k;
-            // Offsets already applied via `scale`; pass identity here.
-            s.plans.push(KsPlus::assemble_plan(starts, peaks, 1.0, 1.0, self.capacity_gb));
         }
     }
 
-    /// KS+ retry strategy (Section II-C) for a reported OOM.
+    /// KS+ retry strategy (Section II-C) for a reported OOM — the
+    /// policy-agnostic legacy entry point.
     pub fn on_failure(&self, prev: &StepPlan, fail_time: f64) -> StepPlan {
-        // Stateless plan math: delegate to a throwaway KsPlus with our
-        // capacity. (The strategy uses no trained state.)
-        use crate::predictor::Predictor;
-        KsPlus::new(self.k, self.capacity_gb).on_failure(prev, fail_time, 1)
+        self.on_failure_for(None, prev, fail_time).plan
+    }
+
+    /// Retry strategy routed by the failed task's bound policy. A
+    /// task-less report (and any task bound to KS+) gets the KS+
+    /// segment-rescaling strategy; other policies use their own retry
+    /// (Witt/DefaultLimits double, Tovar-PPM jumps to the machine max,
+    /// k-Segments offsets the failed segment).
+    pub fn on_failure_for(
+        &self,
+        task: Option<&str>,
+        prev: &StepPlan,
+        fail_time: f64,
+    ) -> RetryOutcome {
+        let policy = task.map(|t| self.policy_of(t)).unwrap_or(PredictorPolicy::KsPlus);
+        let plan = match policy {
+            // Stateless plan math: delegate to a throwaway KsPlus with
+            // our capacity. (The strategy uses no trained state.)
+            PredictorPolicy::KsPlus => {
+                KsPlus::new(self.k, self.capacity_gb).on_failure(prev, fail_time, 1)
+            }
+            p => match task.and_then(|t| self.alt.get(t)) {
+                // A trained instance may carry state the retry uses
+                // (e.g. Tovar's first allocation as the doubling base).
+                Some(am) => am.pred.on_failure(prev, fail_time, 1),
+                None => p.build(self.k, self.capacity_gb).on_failure(prev, fail_time, 1),
+            },
+        };
+        RetryOutcome { plan, predictor: policy.name() }
     }
 }
 
@@ -438,7 +766,10 @@ mod tests {
             ];
             store.plan_batch_into(&reqs, &mut scratch);
             let fresh = store.plan_batch(&reqs);
-            assert_eq!(scratch.plans, fresh, "round {round}");
+            assert_eq!(scratch.plans.len(), fresh.len(), "round {round}");
+            for (o, f) in scratch.plans.iter().zip(&fresh) {
+                assert_eq!(&o.plan, f, "round {round}");
+            }
         }
     }
 
@@ -549,6 +880,168 @@ mod tests {
         let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
         let next = store.on_failure(&prev, 60.0);
         assert_eq!(next.starts, vec![0.0, 60.0]);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PredictorPolicy::ALL {
+            assert_eq!(PredictorPolicy::parse(p.name()), Some(p), "{p:?}");
+        }
+        assert_eq!(PredictorPolicy::parse("nope"), None);
+        assert_eq!(PredictorPolicy::names().len(), PredictorPolicy::ALL.len());
+        // Default policy is the KS+ fast path.
+        let store = ModelStore::new(2, 128.0, Backend::Native);
+        assert_eq!(store.default_policy(), PredictorPolicy::KsPlus);
+        assert_eq!(store.policy_of("anything"), PredictorPolicy::KsPlus);
+    }
+
+    #[test]
+    fn ksplus_outcome_carries_provenance() {
+        let mut rng = Rng::new(21);
+        let hist: Vec<Execution> =
+            (0..15).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.train("bwa", &hist);
+        let out = store.plan_batch_outcomes(&[("bwa", 5000.0), ("mystery", 10.0)]);
+        assert_eq!(out[0].predictor, "ksplus");
+        assert_eq!(out[0].model_version, 15);
+        assert_eq!(out[0].fallback_reason, None);
+        assert_eq!(out[1].predictor, "default-limits");
+        assert_eq!(out[1].model_version, 0);
+        assert_eq!(out[1].fallback_reason, Some(FALLBACK_UNTRAINED));
+        // Fallback plan stays the capacity-safe flat quarter.
+        assert_eq!(out[1].plan, StepPlan::flat(32.0));
+    }
+
+    #[test]
+    fn witt_policy_trains_plans_and_matches_offline_predictor() {
+        use crate::predictor::witt::{Offset, WittLr};
+        let mut rng = Rng::new(22);
+        let hist: Vec<Execution> =
+            (0..20).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        assert_eq!(store.configure("bwa", PredictorPolicy::WittLr), PredictorPolicy::KsPlus);
+        store.train("bwa", &hist);
+        let out = store.plan_batch_outcomes(&[("bwa", 6000.0)]);
+        assert_eq!(out[0].predictor, "witt-lr");
+        assert_eq!(out[0].model_version, 20);
+        assert_eq!(out[0].fallback_reason, None);
+        let mut want = WittLr::new(128.0, Offset::MeanSigma);
+        want.train(&hist);
+        assert_eq!(out[0].plan, want.plan(6000.0));
+        // KS+ state for other tasks is untouched and still batched.
+        store.train("other", &hist);
+        let both = store.plan_batch_outcomes(&[("other", 6000.0), ("bwa", 6000.0)]);
+        assert_eq!(both[0].predictor, "ksplus");
+        assert_eq!(both[1].predictor, "witt-lr");
+    }
+
+    #[test]
+    fn alt_policy_observe_refits_incrementally() {
+        use crate::predictor::witt::{Offset, WittLr};
+        let mut rng = Rng::new(23);
+        let hist: Vec<Execution> =
+            (0..10).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.configure("bwa", PredictorPolicy::WittLr);
+        for (i, e) in hist.iter().enumerate() {
+            assert_eq!(store.observe("bwa", e), (true, i as u64 + 1));
+            let got = store.plan_batch_outcomes(&[("bwa", 5000.0)]);
+            let mut want = WittLr::new(128.0, Offset::MeanSigma);
+            want.train(&hist[..=i]);
+            assert_eq!(got[0].plan, want.plan(5000.0), "after {} observes", i + 1);
+            assert_eq!(got[0].model_version, i as u64 + 1);
+        }
+        // Sample-less executions are ignored, as on the KS+ path.
+        assert_eq!(
+            store.observe("bwa", &Execution::new("bwa", 1.0, 1.0, vec![])),
+            (false, 10)
+        );
+    }
+
+    #[test]
+    fn alt_history_retention_is_bounded() {
+        use crate::predictor::witt::{Offset, WittLr};
+        // Past the cap, the model version keeps counting but the refit
+        // window slides: the served model matches a predictor trained on
+        // only the most recent ALT_HISTORY_CAP executions.
+        let total = ALT_HISTORY_CAP + 24;
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.configure("bwa", PredictorPolicy::WittLr);
+        let execs: Vec<Execution> = (0..total)
+            .map(|i| {
+                let input = 1000.0 + i as f64;
+                Execution::new("bwa", input, 1.0, vec![0.001 * input, 0.002 * input])
+            })
+            .collect();
+        for (i, e) in execs.iter().enumerate() {
+            assert_eq!(store.observe("bwa", e), (true, i as u64 + 1));
+        }
+        let out = store.plan_batch_outcomes(&[("bwa", 5000.0)]);
+        assert_eq!(out[0].model_version, total as u64);
+        let mut want = WittLr::new(128.0, Offset::MeanSigma);
+        want.train(&execs[total - ALT_HISTORY_CAP..]);
+        assert_eq!(out[0].plan, want.plan(5000.0));
+        // A batch train beyond the cap fits the most recent window too.
+        store.train("bwa", &execs);
+        let retrained = store.plan_batch_outcomes(&[("bwa", 5000.0)]);
+        assert_eq!(retrained[0].model_version, total as u64);
+        assert_eq!(retrained[0].plan, want.plan(5000.0));
+    }
+
+    #[test]
+    fn default_policy_pins_at_first_training() {
+        let mut rng = Rng::new(24);
+        let hist: Vec<Execution> =
+            (0..10).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.set_default_policy(PredictorPolicy::TovarPpm);
+        store.train("bwa", &hist);
+        // Switching the default later must not reroute the trained task.
+        store.set_default_policy(PredictorPolicy::KsPlus);
+        assert_eq!(store.policy_of("bwa"), PredictorPolicy::TovarPpm);
+        let out = store.plan_batch_outcomes(&[("bwa", 5000.0)]);
+        assert_eq!(out[0].predictor, "tovar-ppm");
+        assert_eq!(out[0].plan.k(), 1, "tovar serves a flat first allocation");
+    }
+
+    #[test]
+    fn configure_switch_refits_from_retained_history() {
+        use crate::predictor::tovar::{RetryMode, TovarPpm};
+        let mut rng = Rng::new(25);
+        let hist: Vec<Execution> =
+            (0..12).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.configure("bwa", PredictorPolicy::WittLr);
+        store.train("bwa", &hist);
+        // Rebinding to tovar refits immediately from the retained history.
+        assert_eq!(store.configure("bwa", PredictorPolicy::TovarPpm), PredictorPolicy::WittLr);
+        let out = store.plan_batch_outcomes(&[("bwa", 5000.0)]);
+        assert_eq!(out[0].predictor, "tovar-ppm");
+        assert_eq!(out[0].model_version, 12);
+        let mut want = TovarPpm::new(128.0, RetryMode::MachineMax);
+        want.train(&hist);
+        assert_eq!(out[0].plan, want.plan(5000.0));
+    }
+
+    #[test]
+    fn failure_routed_by_task_policy() {
+        let mut rng = Rng::new(26);
+        let hist: Vec<Execution> =
+            (0..8).map(|_| two_phase_exec(rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.configure("wt", PredictorPolicy::WittLr);
+        store.train("wt", &hist);
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        // Task-less and KS+-bound reports rescale segment starts.
+        let ks = store.on_failure_for(None, &prev, 60.0);
+        assert_eq!(ks.predictor, "ksplus");
+        assert_eq!(ks.plan.starts, vec![0.0, 60.0]);
+        assert_eq!(store.on_failure_for(Some("untrained"), &prev, 60.0).predictor, "ksplus");
+        // A Witt-bound task doubles the failed peak instead.
+        let wt = store.on_failure_for(Some("wt"), &prev, 60.0);
+        assert_eq!(wt.predictor, "witt-lr");
+        assert_eq!(wt.plan, StepPlan::flat(16.0));
     }
 
     #[test]

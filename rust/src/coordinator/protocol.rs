@@ -1,0 +1,926 @@
+//! Typed wire protocol **v1** for the coordinator's TCP front end:
+//! `Request`/`Response` enums plus a structured error type, serialized
+//! as newline-delimited JSON. Both the server (`coordinator::server`)
+//! and the typed TCP client (`coordinator::remote`) speak through these
+//! types, so the two ends cannot drift — a round-trip through
+//! `to_json`/`parse` is identity (asserted by the tests below).
+//!
+//! The full schema of every op, response, and error code is specified in
+//! `docs/PROTOCOL.md`. Headlines:
+//!
+//! * `hello` negotiates the version and advertises ops + policies.
+//! * `configure` binds a task (or the service default) to a
+//!   `PredictorPolicy` at runtime.
+//! * `plan` responses carry provenance (`predictor`, `model_version`,
+//!   `fallback_reason`) so callers can tell a trained KS+ plan from a
+//!   default-limits fallback.
+//! * Errors are structured — `{"ok":false,"error":{"code":...,
+//!   "message":...}}` — with one specific `ErrorCode` per malformed
+//!   request class, never a catch-all string.
+//!
+//! Numbers are serialized via the shortest-roundtrip float formatting of
+//! `util::json`, so plans and executions survive the wire bit-exactly.
+
+use std::fmt;
+
+use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome, FALLBACK_UNTRAINED};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+/// Version this build speaks. `hello` is the negotiation point: servers
+/// refuse clients whose `min_version` is above it (and clients whose
+/// `max_version` is below it), with an `unsupported-version` error.
+pub const WIRE_VERSION: usize = 1;
+
+/// Every op of wire v1, in the order `hello` advertises them.
+pub const OPS: [&str; 7] =
+    ["hello", "configure", "train", "observe", "plan", "failure", "stats"];
+
+/// Client-side placeholder for provenance strings a newer server sent
+/// that this build does not recognize (an unadvertised policy name, a
+/// new `fallback_reason`). Decoding degrades to this instead of failing
+/// the call — provenance is informational, the payload is still valid.
+pub const PROVENANCE_UNKNOWN: &str = "unknown";
+
+/// One specific code per malformed-request class. Stable wire strings —
+/// clients branch on these, not on message text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line was not parseable JSON.
+    InvalidJson,
+    /// `op` names no operation of this protocol version.
+    UnknownOp,
+    /// A required field is absent.
+    MissingField,
+    /// A field is present but has the wrong type or an invalid value.
+    InvalidField,
+    /// `train.history` is an empty array.
+    EmptyHistory,
+    /// An execution carries no samples (nothing to learn from).
+    EmptySamples,
+    /// A plan's `starts`/`peaks` are empty or of mismatched length.
+    InvalidPlan,
+    /// `configure.policy` names no known predictor policy.
+    UnknownPolicy,
+    /// Version negotiation failed (`hello.min_version` above ours, or
+    /// `hello.max_version` below).
+    UnsupportedVersion,
+    /// Server-side fault, or an unrecognized code from a newer peer.
+    Internal,
+}
+
+impl ErrorCode {
+    pub const ALL: [ErrorCode; 10] = [
+        ErrorCode::InvalidJson,
+        ErrorCode::UnknownOp,
+        ErrorCode::MissingField,
+        ErrorCode::InvalidField,
+        ErrorCode::EmptyHistory,
+        ErrorCode::EmptySamples,
+        ErrorCode::InvalidPlan,
+        ErrorCode::UnknownPolicy,
+        ErrorCode::UnsupportedVersion,
+        ErrorCode::Internal,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::InvalidJson => "invalid-json",
+            ErrorCode::UnknownOp => "unknown-op",
+            ErrorCode::MissingField => "missing-field",
+            ErrorCode::InvalidField => "invalid-field",
+            ErrorCode::EmptyHistory => "empty-history",
+            ErrorCode::EmptySamples => "empty-samples",
+            ErrorCode::InvalidPlan => "invalid-plan",
+            ErrorCode::UnknownPolicy => "unknown-policy",
+            ErrorCode::UnsupportedVersion => "unsupported-version",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+}
+
+/// A structured wire error: code plus human-readable context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into() }
+    }
+
+    /// The error-response line: `{"ok":false,"error":{code,message}}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", false.into()),
+            (
+                "error",
+                Json::obj(vec![
+                    ("code", self.code.as_str().into()),
+                    ("message", self.message.as_str().into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Client side: reconstruct from an `"ok":false` response line.
+    /// Unrecognized codes (a newer server) degrade to `Internal` with
+    /// the message preserved.
+    pub fn from_json(j: &Json) -> WireError {
+        match j.get("error") {
+            Some(e) if e.get("code").is_some() => WireError {
+                code: e
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .and_then(ErrorCode::parse)
+                    .unwrap_or(ErrorCode::Internal),
+                message: e
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            },
+            // Pre-v1 servers shipped a bare string.
+            Some(Json::Str(s)) => WireError::new(ErrorCode::Internal, s.clone()),
+            _ => WireError::new(ErrorCode::Internal, "malformed error response"),
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---- field extraction helpers ------------------------------------------
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, WireError> {
+    j.get(key)
+        .ok_or_else(|| WireError::new(ErrorCode::MissingField, format!("missing '{key}'")))
+}
+
+fn str_field(j: &Json, key: &str) -> Result<String, WireError> {
+    field(j, key)?.as_str().map(str::to_string).ok_or_else(|| {
+        WireError::new(ErrorCode::InvalidField, format!("'{key}' must be a string"))
+    })
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64, WireError> {
+    field(j, key)?.as_f64().ok_or_else(|| {
+        WireError::new(ErrorCode::InvalidField, format!("'{key}' must be a number"))
+    })
+}
+
+fn f64_vec_field(j: &Json, key: &str) -> Result<Vec<f64>, WireError> {
+    let arr = field(j, key)?.as_arr().ok_or_else(|| {
+        WireError::new(ErrorCode::InvalidField, format!("'{key}' must be an array"))
+    })?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64().ok_or_else(|| {
+                WireError::new(
+                    ErrorCode::InvalidField,
+                    format!("'{key}' must contain only numbers"),
+                )
+            })
+        })
+        .collect()
+}
+
+/// Optional string field: absent is fine, a wrong type is not.
+fn opt_str_field(j: &Json, key: &str) -> Result<Option<String>, WireError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_str().map(|s| Some(s.to_string())).ok_or_else(|| {
+            WireError::new(ErrorCode::InvalidField, format!("'{key}' must be a string"))
+        }),
+    }
+}
+
+/// Optional non-negative integer field.
+fn opt_usize_field(j: &Json, key: &str) -> Result<Option<usize>, WireError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            WireError::new(
+                ErrorCode::InvalidField,
+                format!("'{key}' must be a non-negative integer"),
+            )
+        }),
+    }
+}
+
+// ---- payload (de)serialization ------------------------------------------
+
+pub fn execution_to_json(e: &Execution) -> Json {
+    Json::obj(vec![
+        ("input_mb", e.input_mb.into()),
+        ("dt", e.dt.into()),
+        ("samples", Json::arr_f64(&e.samples)),
+    ])
+}
+
+pub fn execution_from_json(task: &str, j: &Json) -> Result<Execution, WireError> {
+    let input_mb = f64_field(j, "input_mb")?;
+    let dt = f64_field(j, "dt")?;
+    if !(dt > 0.0) {
+        return Err(WireError::new(ErrorCode::InvalidField, "'dt' must be positive"));
+    }
+    let samples = f64_vec_field(j, "samples")?;
+    if samples.is_empty() {
+        // Nothing to segment or learn from; rejecting here keeps garbage
+        // off the worker threads.
+        return Err(WireError::new(
+            ErrorCode::EmptySamples,
+            "execution needs at least one sample",
+        ));
+    }
+    Ok(Execution::new(task, input_mb, dt, samples))
+}
+
+pub fn plan_to_json(p: &StepPlan) -> Json {
+    Json::obj(vec![
+        ("starts", Json::arr_f64(&p.starts)),
+        ("peaks", Json::arr_f64(&p.peaks)),
+    ])
+}
+
+pub fn plan_from_json(j: &Json) -> Result<StepPlan, WireError> {
+    let starts = f64_vec_field(j, "starts")?;
+    let peaks = f64_vec_field(j, "peaks")?;
+    if starts.is_empty() || starts.len() != peaks.len() {
+        return Err(WireError::new(
+            ErrorCode::InvalidPlan,
+            "plan needs equal-length, non-empty 'starts' and 'peaks'",
+        ));
+    }
+    Ok(StepPlan::new(starts, peaks))
+}
+
+fn policy_from_name(name: &str) -> Result<PredictorPolicy, WireError> {
+    PredictorPolicy::parse(name).ok_or_else(|| {
+        WireError::new(
+            ErrorCode::UnknownPolicy,
+            format!("unknown policy '{name}' (valid: {})", PredictorPolicy::names().join(", ")),
+        )
+    })
+}
+
+// ---- requests ------------------------------------------------------------
+
+/// Every request of wire v1. `parse` maps each malformed-request class
+/// to its specific `ErrorCode`; `to_json` is the client-side encoder.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Hello {
+        /// Free-form client identification, echoed nowhere — logs only.
+        client: Option<String>,
+        min_version: Option<usize>,
+        max_version: Option<usize>,
+    },
+    /// Bind `task` to `policy`; a task-less configure sets the
+    /// service-wide default for tasks not yet pinned to a policy.
+    Configure { task: Option<String>, policy: PredictorPolicy },
+    Train { task: String, history: Vec<Execution> },
+    Observe { task: String, execution: Execution },
+    Plan { task: String, input_mb: f64 },
+    /// Report an OOM. With `task`, the retry uses that task's bound
+    /// policy; without, the KS+ segment-rescaling strategy.
+    Failure { task: Option<String>, plan: StepPlan, fail_time: f64 },
+    Stats,
+}
+
+impl Request {
+    /// Wire op name (the `"op"` field).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Hello { .. } => "hello",
+            Request::Configure { .. } => "configure",
+            Request::Train { .. } => "train",
+            Request::Observe { .. } => "observe",
+            Request::Plan { .. } => "plan",
+            Request::Failure { .. } => "failure",
+            Request::Stats => "stats",
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Request, WireError> {
+        let j = Json::parse(line)
+            .map_err(|e| WireError::new(ErrorCode::InvalidJson, e.to_string()))?;
+        let op = field(&j, "op")?
+            .as_str()
+            .ok_or_else(|| WireError::new(ErrorCode::InvalidField, "'op' must be a string"))?;
+        match op {
+            "hello" => Ok(Request::Hello {
+                client: opt_str_field(&j, "client")?,
+                min_version: opt_usize_field(&j, "min_version")?,
+                max_version: opt_usize_field(&j, "max_version")?,
+            }),
+            "configure" => {
+                let task = opt_str_field(&j, "task")?;
+                // "*" is the response sentinel for the service-wide
+                // default scope; a task literally named "*" would be
+                // indistinguishable in the ack, so reserve it.
+                if task.as_deref() == Some("*") {
+                    return Err(WireError::new(
+                        ErrorCode::InvalidField,
+                        "task name '*' is reserved (omit 'task' to set the default)",
+                    ));
+                }
+                Ok(Request::Configure {
+                    task,
+                    policy: policy_from_name(&str_field(&j, "policy")?)?,
+                })
+            }
+            "train" => {
+                let task = str_field(&j, "task")?;
+                let arr = field(&j, "history")?.as_arr().ok_or_else(|| {
+                    WireError::new(ErrorCode::InvalidField, "'history' must be an array")
+                })?;
+                if arr.is_empty() {
+                    return Err(WireError::new(ErrorCode::EmptyHistory, "empty history"));
+                }
+                let history = arr
+                    .iter()
+                    .map(|e| execution_from_json(&task, e))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Request::Train { task, history })
+            }
+            "observe" => {
+                let task = str_field(&j, "task")?;
+                let execution = execution_from_json(&task, field(&j, "execution")?)?;
+                Ok(Request::Observe { task, execution })
+            }
+            "plan" => Ok(Request::Plan {
+                task: str_field(&j, "task")?,
+                input_mb: f64_field(&j, "input_mb")?,
+            }),
+            "failure" => Ok(Request::Failure {
+                task: opt_str_field(&j, "task")?,
+                plan: plan_from_json(field(&j, "plan")?)?,
+                fail_time: f64_field(&j, "fail_time")?,
+            }),
+            "stats" => Ok(Request::Stats),
+            other => {
+                Err(WireError::new(ErrorCode::UnknownOp, format!("unknown op '{other}'")))
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("op", self.op().into())];
+        match self {
+            Request::Hello { client, min_version, max_version } => {
+                if let Some(c) = client {
+                    pairs.push(("client", c.as_str().into()));
+                }
+                if let Some(v) = min_version {
+                    pairs.push(("min_version", (*v).into()));
+                }
+                if let Some(v) = max_version {
+                    pairs.push(("max_version", (*v).into()));
+                }
+            }
+            Request::Configure { task, policy } => {
+                if let Some(t) = task {
+                    pairs.push(("task", t.as_str().into()));
+                }
+                pairs.push(("policy", policy.name().into()));
+            }
+            Request::Train { task, history } => {
+                pairs.push(("task", task.as_str().into()));
+                pairs.push((
+                    "history",
+                    Json::Arr(history.iter().map(execution_to_json).collect()),
+                ));
+            }
+            Request::Observe { task, execution } => {
+                pairs.push(("task", task.as_str().into()));
+                pairs.push(("execution", execution_to_json(execution)));
+            }
+            Request::Plan { task, input_mb } => {
+                pairs.push(("task", task.as_str().into()));
+                pairs.push(("input_mb", (*input_mb).into()));
+            }
+            Request::Failure { task, plan, fail_time } => {
+                if let Some(t) = task {
+                    pairs.push(("task", t.as_str().into()));
+                }
+                pairs.push(("plan", plan_to_json(plan)));
+                pairs.push(("fail_time", (*fail_time).into()));
+            }
+            Request::Stats => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ---- responses -----------------------------------------------------------
+
+/// `hello` payload: what this server speaks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerInfo {
+    pub version: usize,
+    pub ops: Vec<String>,
+    pub policies: Vec<String>,
+    pub shards: usize,
+}
+
+/// `observe` acknowledgement with provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveAck {
+    pub task: String,
+    /// Executions folded into the task's model so far (its model
+    /// version).
+    pub executions: u64,
+    /// Policy the execution was folded under.
+    pub predictor: &'static str,
+}
+
+/// `stats` payload: merged counters across every shard.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsSummary {
+    pub shards: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub failures_handled: u64,
+    pub tasks_trained: u64,
+    pub observations: u64,
+    /// Plans served by the untrained flat default — silent before this
+    /// counter existed, now visible in every stats read.
+    pub fallbacks: u64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+}
+
+/// Every success response of wire v1, one per op.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello(ServerInfo),
+    Configured { task: Option<String>, policy: PredictorPolicy },
+    Trained { task: String, executions: u64 },
+    Observed(ObserveAck),
+    Planned(PlanOutcome),
+    Retry(RetryOutcome),
+    Stats(StatsSummary),
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("ok", true.into())];
+        match self {
+            Response::Hello(i) => {
+                pairs.push(("version", i.version.into()));
+                pairs.push((
+                    "ops",
+                    Json::Arr(i.ops.iter().map(|s| s.as_str().into()).collect()),
+                ));
+                pairs.push((
+                    "policies",
+                    Json::Arr(i.policies.iter().map(|s| s.as_str().into()).collect()),
+                ));
+                pairs.push(("shards", i.shards.into()));
+            }
+            Response::Configured { task, policy } => {
+                pairs.push(("configured", task.as_deref().unwrap_or("*").into()));
+                pairs.push(("policy", policy.name().into()));
+            }
+            Response::Trained { task, executions } => {
+                pairs.push(("trained", task.as_str().into()));
+                pairs.push(("executions", (*executions as usize).into()));
+            }
+            Response::Observed(a) => {
+                pairs.push(("observed", a.task.as_str().into()));
+                pairs.push(("executions", (a.executions as usize).into()));
+                pairs.push(("predictor", a.predictor.into()));
+            }
+            Response::Planned(o) => {
+                pairs.push(("plan", plan_to_json(&o.plan)));
+                pairs.push(("predictor", o.predictor.into()));
+                pairs.push(("model_version", (o.model_version as usize).into()));
+                if let Some(reason) = o.fallback_reason {
+                    pairs.push(("fallback_reason", reason.into()));
+                }
+            }
+            Response::Retry(r) => {
+                pairs.push(("plan", plan_to_json(&r.plan)));
+                pairs.push(("predictor", r.predictor.into()));
+            }
+            Response::Stats(s) => {
+                pairs.push(("shards", s.shards.into()));
+                pairs.push(("requests", (s.requests as usize).into()));
+                pairs.push(("batches", (s.batches as usize).into()));
+                pairs.push(("failures_handled", (s.failures_handled as usize).into()));
+                pairs.push(("tasks_trained", (s.tasks_trained as usize).into()));
+                pairs.push(("observations", (s.observations as usize).into()));
+                pairs.push(("fallbacks", (s.fallbacks as usize).into()));
+                pairs.push(("latency_p50_us", s.latency_p50_us.into()));
+                pairs.push(("latency_p99_us", s.latency_p99_us.into()));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Client side: decode a response line for the given request op.
+    /// `"ok":false` lines come back as the embedded `WireError`.
+    pub fn from_json(j: &Json, op: &str) -> Result<Response, WireError> {
+        if j.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(WireError::from_json(j));
+        }
+        let inv = |msg: &str| WireError::new(ErrorCode::InvalidField, msg.to_string());
+        let u64_of = |key: &str| -> Result<u64, WireError> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .map(|v| v as u64)
+                .ok_or_else(|| inv(&format!("response missing numeric '{key}'")))
+        };
+        let str_list = |key: &str| -> Result<Vec<String>, WireError> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect::<Vec<_>>()
+                })
+                .ok_or_else(|| inv(&format!("response missing array '{key}'")))
+        };
+        // Provenance-only strings degrade on unrecognized values (a
+        // newer server's policy set) instead of failing the call — the
+        // same stance WireError::from_json takes on unknown error codes.
+        let predictor_of = |key: &str| -> Result<&'static str, WireError> {
+            let name = j
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| inv(&format!("response missing '{key}'")))?;
+            Ok(PredictorPolicy::parse(name)
+                .map(PredictorPolicy::name)
+                .unwrap_or(PROVENANCE_UNKNOWN))
+        };
+        match op {
+            "hello" => Ok(Response::Hello(ServerInfo {
+                version: j
+                    .get("version")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| inv("response missing 'version'"))?,
+                ops: str_list("ops")?,
+                policies: str_list("policies")?,
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| inv("response missing 'shards'"))?,
+            })),
+            "configure" => {
+                let scope = j
+                    .get("configured")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| inv("response missing 'configured'"))?;
+                let task = if scope == "*" { None } else { Some(scope.to_string()) };
+                let policy = policy_from_name(
+                    j.get("policy")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| inv("response missing 'policy'"))?,
+                )?;
+                Ok(Response::Configured { task, policy })
+            }
+            "train" => Ok(Response::Trained {
+                task: j
+                    .get("trained")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| inv("response missing 'trained'"))?
+                    .to_string(),
+                executions: u64_of("executions")?,
+            }),
+            "observe" => Ok(Response::Observed(ObserveAck {
+                task: j
+                    .get("observed")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| inv("response missing 'observed'"))?
+                    .to_string(),
+                executions: u64_of("executions")?,
+                predictor: predictor_of("predictor")?,
+            })),
+            "plan" => {
+                let fallback_reason = match j.get("fallback_reason") {
+                    None => None,
+                    Some(v) => match v.as_str() {
+                        Some(FALLBACK_UNTRAINED) => Some(FALLBACK_UNTRAINED),
+                        // A newer server's reason: still a fallback.
+                        Some(_) => Some(PROVENANCE_UNKNOWN),
+                        None => return Err(inv("'fallback_reason' must be a string")),
+                    },
+                };
+                Ok(Response::Planned(PlanOutcome {
+                    plan: plan_from_json(field(j, "plan")?)?,
+                    predictor: predictor_of("predictor")?,
+                    model_version: u64_of("model_version")?,
+                    fallback_reason,
+                }))
+            }
+            "failure" => Ok(Response::Retry(RetryOutcome {
+                plan: plan_from_json(field(j, "plan")?)?,
+                predictor: predictor_of("predictor")?,
+            })),
+            "stats" => Ok(Response::Stats(StatsSummary {
+                shards: j
+                    .get("shards")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| inv("response missing 'shards'"))?,
+                requests: u64_of("requests")?,
+                batches: u64_of("batches")?,
+                failures_handled: u64_of("failures_handled")?,
+                tasks_trained: u64_of("tasks_trained")?,
+                observations: u64_of("observations")?,
+                fallbacks: u64_of("fallbacks")?,
+                latency_p50_us: f64_field(j, "latency_p50_us")?,
+                latency_p99_us: f64_field(j, "latency_p99_us")?,
+            })),
+            other => Err(WireError::new(
+                ErrorCode::UnknownOp,
+                format!("no response decoder for op '{other}'"),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exec(seed: u64) -> Execution {
+        let mut rng = Rng::new(seed);
+        let n = 3 + rng.below(6);
+        Execution::new(
+            "t",
+            rng.uniform(100.0, 9000.0),
+            1.0,
+            (0..n).map(|_| rng.uniform(0.01, 12.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn request_json_roundtrip_every_op() {
+        let reqs = vec![
+            Request::Hello {
+                client: Some("test".into()),
+                min_version: Some(1),
+                max_version: Some(1),
+            },
+            Request::Hello { client: None, min_version: None, max_version: None },
+            Request::Configure { task: Some("bwa".into()), policy: PredictorPolicy::WittLr },
+            Request::Configure { task: None, policy: PredictorPolicy::KsPlus },
+            // Task name matches the generator's ("t"): the parser
+            // rebuilds each execution with the op's task field.
+            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)] },
+            Request::Observe { task: "t".into(), execution: exec(3) },
+            Request::Plan { task: "bwa".into(), input_mb: 1234.5 },
+            Request::Failure {
+                task: Some("bwa".into()),
+                plan: StepPlan::new(vec![0.0, 10.5], vec![2.25, 8.0]),
+                fail_time: 3.5,
+            },
+            Request::Failure {
+                task: None,
+                plan: StepPlan::flat(4.0),
+                fail_time: 0.0,
+            },
+            Request::Stats,
+        ];
+        for req in reqs {
+            let line = req.to_json().to_string();
+            let back = Request::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, req, "roundtrip of {line}");
+        }
+    }
+
+    #[test]
+    fn response_json_roundtrip_every_op() {
+        let cases: Vec<(&str, Response)> = vec![
+            (
+                "hello",
+                Response::Hello(ServerInfo {
+                    version: WIRE_VERSION,
+                    ops: OPS.iter().map(|s| s.to_string()).collect(),
+                    policies: PredictorPolicy::names()
+                        .iter()
+                        .map(|s| s.to_string())
+                        .collect(),
+                    shards: 4,
+                }),
+            ),
+            (
+                "configure",
+                Response::Configured {
+                    task: Some("bwa".into()),
+                    policy: PredictorPolicy::TovarPpm,
+                },
+            ),
+            (
+                "configure",
+                Response::Configured { task: None, policy: PredictorPolicy::KsPlus },
+            ),
+            ("train", Response::Trained { task: "bwa".into(), executions: 12 }),
+            (
+                "observe",
+                Response::Observed(ObserveAck {
+                    task: "bwa".into(),
+                    executions: 13,
+                    predictor: "ksplus",
+                }),
+            ),
+            (
+                "plan",
+                Response::Planned(PlanOutcome {
+                    plan: StepPlan::new(vec![0.0, 62.5], vec![4.125, 9.25]),
+                    predictor: "ksplus",
+                    model_version: 13,
+                    fallback_reason: None,
+                }),
+            ),
+            (
+                "plan",
+                Response::Planned(PlanOutcome {
+                    plan: StepPlan::flat(32.0),
+                    predictor: "default-limits",
+                    model_version: 0,
+                    fallback_reason: Some(FALLBACK_UNTRAINED),
+                }),
+            ),
+            (
+                "failure",
+                Response::Retry(RetryOutcome {
+                    plan: StepPlan::new(vec![0.0, 60.0], vec![2.0, 8.0]),
+                    predictor: "witt-lr",
+                }),
+            ),
+            (
+                "stats",
+                Response::Stats(StatsSummary {
+                    shards: 2,
+                    requests: 100,
+                    batches: 20,
+                    failures_handled: 3,
+                    tasks_trained: 5,
+                    observations: 7,
+                    fallbacks: 2,
+                    latency_p50_us: 12.5,
+                    latency_p99_us: 90.25,
+                }),
+            ),
+        ];
+        for (op, resp) in cases {
+            let j = resp.to_json();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+            let back = Response::from_json(&Json::parse(&j.to_string()).unwrap(), op)
+                .unwrap_or_else(|e| panic!("{op}: {e}"));
+            assert_eq!(back, resp, "roundtrip for op {op}");
+        }
+    }
+
+    #[test]
+    fn parse_errors_map_to_specific_codes() {
+        // The service-layer table: each malformed-request class maps to
+        // its own ErrorCode at Request::parse — never a catch-all.
+        let table: &[(&str, ErrorCode)] = &[
+            ("not json", ErrorCode::InvalidJson),
+            ("{", ErrorCode::InvalidJson),
+            (r#"{"task":"x"}"#, ErrorCode::MissingField),
+            (r#"{"op":42}"#, ErrorCode::InvalidField),
+            (r#"{"op":"frobnicate"}"#, ErrorCode::UnknownOp),
+            (r#"{"op":"plan"}"#, ErrorCode::MissingField),
+            (r#"{"op":"plan","task":"x"}"#, ErrorCode::MissingField),
+            (r#"{"op":"plan","input_mb":5}"#, ErrorCode::MissingField),
+            (r#"{"op":"plan","task":7,"input_mb":5}"#, ErrorCode::InvalidField),
+            (r#"{"op":"plan","task":"x","input_mb":"big"}"#, ErrorCode::InvalidField),
+            (r#"{"op":"train","task":"x"}"#, ErrorCode::MissingField),
+            (r#"{"op":"train","task":"x","history":5}"#, ErrorCode::InvalidField),
+            (r#"{"op":"train","task":"x","history":[]}"#, ErrorCode::EmptyHistory),
+            (
+                r#"{"op":"train","task":"x","history":[{"input_mb":1,"dt":1,"samples":[]}]}"#,
+                ErrorCode::EmptySamples,
+            ),
+            (
+                r#"{"op":"train","task":"x","history":[{"input_mb":1,"dt":0,"samples":[1]}]}"#,
+                ErrorCode::InvalidField,
+            ),
+            (
+                r#"{"op":"train","task":"x","history":[{"dt":1,"samples":[1]}]}"#,
+                ErrorCode::MissingField,
+            ),
+            (r#"{"op":"observe","task":"x"}"#, ErrorCode::MissingField),
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
+                ErrorCode::EmptySamples,
+            ),
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":["a"]}}"#,
+                ErrorCode::InvalidField,
+            ),
+            (r#"{"op":"configure","task":"x"}"#, ErrorCode::MissingField),
+            (r#"{"op":"configure","task":"x","policy":"nope"}"#, ErrorCode::UnknownPolicy),
+            (r#"{"op":"configure","task":5,"policy":"ksplus"}"#, ErrorCode::InvalidField),
+            // "*" is the default-scope response sentinel, reserved.
+            (r#"{"op":"configure","task":"*","policy":"ksplus"}"#, ErrorCode::InvalidField),
+            (r#"{"op":"failure","fail_time":1}"#, ErrorCode::MissingField),
+            (
+                r#"{"op":"failure","plan":{"starts":[0],"peaks":[1]}}"#,
+                ErrorCode::MissingField,
+            ),
+            (
+                r#"{"op":"failure","plan":{"starts":[],"peaks":[]},"fail_time":1}"#,
+                ErrorCode::InvalidPlan,
+            ),
+            (
+                r#"{"op":"failure","plan":{"starts":[0,1],"peaks":[1]},"fail_time":1}"#,
+                ErrorCode::InvalidPlan,
+            ),
+            (
+                r#"{"op":"failure","plan":{"starts":[0],"peaks":["x"]},"fail_time":1}"#,
+                ErrorCode::InvalidField,
+            ),
+            (r#"{"op":"hello","min_version":"two"}"#, ErrorCode::InvalidField),
+        ];
+        for (line, want) in table {
+            match Request::parse(line) {
+                Err(e) => assert_eq!(e.code, *want, "req {line} -> {e}"),
+                Ok(req) => panic!("{line} parsed as {req:?}, expected {want:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_provenance_degrades_instead_of_failing() {
+        // A newer server may name policies and fallback reasons this
+        // build has never heard of; the plan payload must still decode.
+        let line = r#"{"ok":true,"plan":{"starts":[0],"peaks":[4]},"predictor":"ppm-improved","model_version":7,"fallback_reason":"circuit-breaker"}"#;
+        let j = Json::parse(line).unwrap();
+        match Response::from_json(&j, "plan").unwrap() {
+            Response::Planned(o) => {
+                assert_eq!(o.predictor, PROVENANCE_UNKNOWN);
+                assert_eq!(o.fallback_reason, Some(PROVENANCE_UNKNOWN));
+                assert_eq!(o.model_version, 7);
+                assert_eq!(o.plan, StepPlan::flat(4.0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let line = r#"{"ok":true,"observed":"t","executions":3,"predictor":"from-the-future"}"#;
+        match Response::from_json(&Json::parse(line).unwrap(), "observe").unwrap() {
+            Response::Observed(a) => assert_eq!(a.predictor, PROVENANCE_UNKNOWN),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for c in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(ErrorCode::parse("nope"), None);
+        let e = WireError::new(ErrorCode::UnknownPolicy, "no such policy");
+        let j = Json::parse(&e.to_json().to_string()).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(WireError::from_json(&j), e);
+        // Legacy string-shaped errors degrade to Internal.
+        let legacy = Json::parse(r#"{"ok":false,"error":"boom"}"#).unwrap();
+        assert_eq!(WireError::from_json(&legacy).code, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn executions_and_plans_survive_the_wire_bit_exactly() {
+        // Shortest-roundtrip float formatting: what goes out comes back
+        // as the very same f64s — the property the KS+ parity test over
+        // TCP relies on.
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let e = exec(rng.next_u64());
+            let j = Json::parse(&execution_to_json(&e).to_string()).unwrap();
+            let back = execution_from_json("t", &j).unwrap();
+            assert_eq!(back.input_mb.to_bits(), e.input_mb.to_bits());
+            assert_eq!(back.dt.to_bits(), e.dt.to_bits());
+            assert_eq!(back.samples.len(), e.samples.len());
+            for (a, b) in back.samples.iter().zip(&e.samples) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let p = StepPlan::new(vec![0.0, 68.279_999_999_999_99], vec![4.4, 8.800000000000001]);
+        let j = Json::parse(&plan_to_json(&p).to_string()).unwrap();
+        let back = plan_from_json(&j).unwrap();
+        for (a, b) in back.starts.iter().zip(&p.starts) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in back.peaks.iter().zip(&p.peaks) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

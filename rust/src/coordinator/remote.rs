@@ -1,0 +1,145 @@
+//! `RemoteClient`: typed TCP client for the coordinator's wire v1 —
+//! the counterpart of the in-process `service::Client`, sharing the
+//! exact `Request`/`Response` types of `coordinator::protocol` with the
+//! server, so client and server cannot drift.
+//!
+//! One request/response pair per call, newline-delimited JSON over a
+//! persistent connection. Server-side errors surface as the structured
+//! `WireError` (`code: message` via its `Display`) wrapped in
+//! `anyhow::Error`.
+//!
+//! ```no_run
+//! # use ksplus::coordinator::remote::RemoteClient;
+//! # use ksplus::coordinator::PredictorPolicy;
+//! # fn main() -> anyhow::Result<()> {
+//! let mut rc = RemoteClient::connect("127.0.0.1:7070")?;
+//! let info = rc.hello()?;
+//! rc.configure(Some("bwa"), PredictorPolicy::WittLr)?;
+//! let out = rc.plan("bwa", 8000.0)?;
+//! println!("served by {} (v{})", out.predictor, out.model_version);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::protocol::{
+    ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, WIRE_VERSION,
+};
+use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+pub struct RemoteClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RemoteClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<RemoteClient> {
+        let stream = TcpStream::connect(addr).context("connect to coordinator")?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("clone coordinator stream")?;
+        Ok(RemoteClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one raw line and parse the reply as JSON. Escape hatch for
+    /// conformance tests that need to ship intentionally malformed
+    /// requests; typed callers use the op methods below.
+    pub fn raw(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.writer, "{line}").context("write request")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).context("read response")?;
+        anyhow::ensure!(!resp.is_empty(), "server closed the connection");
+        Json::parse(&resp).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        let j = self.raw(&req.to_json().to_string())?;
+        Response::from_json(&j, req.op()).map_err(report_wire_error)
+    }
+
+    /// Version/capability negotiation. Call once after connecting; fails
+    /// if the server cannot speak wire v1.
+    pub fn hello(&mut self) -> Result<ServerInfo> {
+        match self.call(&Request::Hello {
+            client: Some("ksplus-remote-client".into()),
+            min_version: Some(WIRE_VERSION),
+            max_version: Some(WIRE_VERSION),
+        })? {
+            Response::Hello(info) => Ok(info),
+            other => anyhow::bail!("unexpected response to hello: {other:?}"),
+        }
+    }
+
+    /// Bind a task (or, with `None`, the service-wide default) to a
+    /// predictor policy.
+    pub fn configure(&mut self, task: Option<&str>, policy: PredictorPolicy) -> Result<()> {
+        match self.call(&Request::Configure { task: task.map(str::to_string), policy })? {
+            Response::Configured { .. } => Ok(()),
+            other => anyhow::bail!("unexpected response to configure: {other:?}"),
+        }
+    }
+
+    /// Batch-train the task; returns the number of executions shipped.
+    pub fn train(&mut self, task: &str, history: &[Execution]) -> Result<u64> {
+        match self.call(&Request::Train { task: task.to_string(), history: history.to_vec() })? {
+            Response::Trained { executions, .. } => Ok(executions),
+            other => anyhow::bail!("unexpected response to train: {other:?}"),
+        }
+    }
+
+    /// Fold one finished execution into the task's models.
+    pub fn observe(&mut self, task: &str, execution: &Execution) -> Result<ObserveAck> {
+        match self.call(&Request::Observe {
+            task: task.to_string(),
+            execution: execution.clone(),
+        })? {
+            Response::Observed(ack) => Ok(ack),
+            other => anyhow::bail!("unexpected response to observe: {other:?}"),
+        }
+    }
+
+    /// Request an allocation plan; the outcome carries provenance.
+    pub fn plan(&mut self, task: &str, input_mb: f64) -> Result<PlanOutcome> {
+        match self.call(&Request::Plan { task: task.to_string(), input_mb })? {
+            Response::Planned(out) => Ok(out),
+            other => anyhow::bail!("unexpected response to plan: {other:?}"),
+        }
+    }
+
+    /// Report an OOM. With `task`, the retry uses that task's bound
+    /// policy; without, the KS+ segment-rescaling strategy.
+    pub fn report_failure(
+        &mut self,
+        task: Option<&str>,
+        plan: &StepPlan,
+        fail_time: f64,
+    ) -> Result<RetryOutcome> {
+        match self.call(&Request::Failure {
+            task: task.map(str::to_string),
+            plan: plan.clone(),
+            fail_time,
+        })? {
+            Response::Retry(r) => Ok(r),
+            other => anyhow::bail!("unexpected response to failure: {other:?}"),
+        }
+    }
+
+    /// Merged service counters across every shard.
+    pub fn stats(&mut self) -> Result<StatsSummary> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => anyhow::bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+}
+
+fn report_wire_error(e: WireError) -> anyhow::Error {
+    // The blanket std-error conversion keeps "{code}: {message}".
+    anyhow::Error::from(e)
+}

@@ -1,22 +1,32 @@
 //! Wire protocol server: newline-delimited JSON over TCP, the interface
-//! a workflow engine (Nextflow plugin, Airflow operator) calls.
+//! a workflow engine (Nextflow plugin, Airflow operator) calls. The
+//! protocol is **typed wire v1** — every request parses into
+//! `protocol::Request`, every reply serializes from
+//! `protocol::Response`, and malformed input maps to a structured
+//! `protocol::WireError` (one specific `ErrorCode` per failure class).
+//! The full schema lives in `docs/PROTOCOL.md`; the typed TCP client is
+//! `coordinator::remote::RemoteClient`.
 //!
-//! Requests (one JSON object per line):
+//! Ops (one JSON object per line):
+//!   {"op":"hello","min_version":1,"max_version":1}
+//!   {"op":"configure","task":"bwa","policy":"witt-lr"}
 //!   {"op":"train","task":"bwa","history":[{"input_mb":..,"dt":..,"samples":[..]},..]}
 //!   {"op":"observe","task":"bwa","execution":{"input_mb":..,"dt":..,"samples":[..]}}
 //!   {"op":"plan","task":"bwa","input_mb":8000.0}
-//!   {"op":"failure","plan":{"starts":[..],"peaks":[..]},"fail_time":624.0}
+//!   {"op":"failure","task":"bwa","plan":{"starts":[..],"peaks":[..]},"fail_time":624.0}
 //!   {"op":"stats"}
 //!
-//! `observe` is the streaming form of `train`: it folds ONE finished
-//! execution into the task's models in O(k) on the owning shard —
-//! exactly what a workflow engine does as tasks complete. A `train` over
-//! a history and the same history streamed through `observe` produce
-//! bit-identical models.
+//! `hello` negotiates the protocol version and advertises the op and
+//! policy lists. `configure` binds a task (or, without `task`, the
+//! service-wide default) to a predictor policy at runtime. `plan`
+//! responses carry provenance — `predictor`, `model_version`,
+//! `fallback_reason` — so callers can tell a trained KS+ plan from a
+//! default-limits fallback. `failure` with a `task` routes the retry
+//! through that task's bound policy.
 //!
 //! Responses:
-//!   {"ok":true, ...}            on success (fields depend on op)
-//!   {"ok":false,"error":"..."}  on failure
+//!   {"ok":true, ...}                                     on success
+//!   {"ok":false,"error":{"code":"...","message":"..."}}  on failure
 //!
 //! One OS thread per connection; every connection shares the coordinator
 //! worker pool (and thus its per-shard dynamic batchers), so concurrent
@@ -32,10 +42,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::protocol::{
+    ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, OPS,
+    WIRE_VERSION,
+};
 use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig};
-use crate::coordinator::BackendSpec;
-use crate::segments::StepPlan;
-use crate::trace::Execution;
+use crate::coordinator::{BackendSpec, PredictorPolicy};
 use crate::util::json::Json;
 
 /// A running TCP front end over a coordinator `Client`.
@@ -93,8 +105,21 @@ impl Server {
     /// Stop accepting new connections (existing ones finish naturally).
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Unblock accept() with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
+        // Unblock accept() with a throwaway connection. A listener bound
+        // to an unspecified address (0.0.0.0 / [::]) is reached through
+        // the loopback of the same family instead — several platforms
+        // refuse connects to the unspecified address, which would leave
+        // accept() blocked forever.
+        let target = if self.addr.ip().is_unspecified() {
+            let ip: std::net::IpAddr = match self.addr.ip() {
+                std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            };
+            std::net::SocketAddr::new(ip, self.addr.port())
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect(target);
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
@@ -116,116 +141,82 @@ fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match handle_request(&line, &client) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("ok", false.into()), ("error", format!("{e:#}").into())]),
+        let resp: Json = match Request::parse(&line) {
+            Ok(req) => dispatch(req, &client),
+            Err(e) => e.to_json(),
         };
         writeln!(writer, "{resp}")?;
     }
     Ok(())
 }
 
-fn plan_to_json(p: &StepPlan) -> Json {
-    Json::obj(vec![
-        ("starts", Json::arr_f64(&p.starts)),
-        ("peaks", Json::arr_f64(&p.peaks)),
-    ])
-}
-
-fn plan_from_json(j: &Json) -> Result<StepPlan> {
-    let get_vec = |key: &str| -> Result<Vec<f64>> {
-        j.get(key)
-            .and_then(Json::as_arr)
-            .with_context(|| format!("plan missing '{key}'"))?
-            .iter()
-            .map(|v| v.as_f64().context("non-number in plan"))
-            .collect()
-    };
-    let starts = get_vec("starts")?;
-    let peaks = get_vec("peaks")?;
-    anyhow::ensure!(!starts.is_empty() && starts.len() == peaks.len(), "malformed plan");
-    Ok(StepPlan::new(starts, peaks))
-}
-
-fn execution_from_json(task: &str, j: &Json) -> Result<Execution> {
-    let input_mb = j.get("input_mb").and_then(Json::as_f64).context("input_mb")?;
-    let dt = j.get("dt").and_then(Json::as_f64).context("dt")?;
-    anyhow::ensure!(dt > 0.0, "dt must be positive");
-    let samples: Result<Vec<f64>> = j
-        .get("samples")
-        .and_then(Json::as_arr)
-        .context("samples")?
-        .iter()
-        .map(|v| v.as_f64().context("non-number sample"))
-        .collect();
-    let samples = samples?;
-    // A sample-less execution has nothing to segment; rejecting it here
-    // keeps garbage off the worker threads.
-    anyhow::ensure!(!samples.is_empty(), "execution needs at least one sample");
-    Ok(Execution::new(task, input_mb, dt, samples))
-}
-
-fn handle_request(line: &str, client: &Client) -> Result<Json> {
-    let req = Json::parse(line).context("invalid JSON")?;
-    let op = req.get("op").and_then(Json::as_str).context("missing 'op'")?;
-    match op {
-        "train" => {
-            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
-            let history: Result<Vec<Execution>> = req
-                .get("history")
-                .and_then(Json::as_arr)
-                .context("missing 'history'")?
-                .iter()
-                .map(|j| execution_from_json(task, j))
-                .collect();
-            let history = history?;
-            anyhow::ensure!(!history.is_empty(), "empty history");
-            let n = history.len();
-            client.train(task, history);
-            Ok(Json::obj(vec![
-                ("ok", true.into()),
-                ("trained", task.into()),
-                ("executions", n.into()),
-            ]))
+/// Serve one parsed request. Infallible after parsing, except version
+/// negotiation — the coordinator itself never errors on a well-formed
+/// request.
+fn dispatch(req: Request, client: &Client) -> Json {
+    match req {
+        Request::Hello { min_version, max_version, .. } => {
+            if let Some(min) = min_version {
+                if min > WIRE_VERSION {
+                    return WireError::new(
+                        ErrorCode::UnsupportedVersion,
+                        format!("server speaks wire v{WIRE_VERSION}, client requires >= v{min}"),
+                    )
+                    .to_json();
+                }
+            }
+            if let Some(max) = max_version {
+                if max < WIRE_VERSION {
+                    return WireError::new(
+                        ErrorCode::UnsupportedVersion,
+                        format!("server speaks wire v{WIRE_VERSION}, client accepts <= v{max}"),
+                    )
+                    .to_json();
+                }
+            }
+            Response::Hello(ServerInfo {
+                version: WIRE_VERSION,
+                ops: OPS.iter().map(|s| s.to_string()).collect(),
+                policies: PredictorPolicy::names().iter().map(|s| s.to_string()).collect(),
+                shards: client.shards(),
+            })
+            .to_json()
         }
-        "observe" => {
-            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
-            let exec =
-                execution_from_json(task, req.get("execution").context("missing 'execution'")?)?;
-            let count = client.observe(task, exec);
-            Ok(Json::obj(vec![
-                ("ok", true.into()),
-                ("observed", task.into()),
-                ("executions", (count as usize).into()),
-            ]))
+        Request::Configure { task, policy } => {
+            client.configure(task.as_deref(), policy);
+            Response::Configured { task, policy }.to_json()
         }
-        "plan" => {
-            let task = req.get("task").and_then(Json::as_str).context("missing 'task'")?;
-            let input = req.get("input_mb").and_then(Json::as_f64).context("missing 'input_mb'")?;
-            let plan = client.plan(task, input);
-            Ok(Json::obj(vec![("ok", true.into()), ("plan", plan_to_json(&plan))]))
+        Request::Train { task, history } => {
+            let executions = history.len() as u64;
+            client.train(&task, history);
+            Response::Trained { task, executions }.to_json()
         }
-        "failure" => {
-            let prev = plan_from_json(req.get("plan").context("missing 'plan'")?)?;
-            let t = req.get("fail_time").and_then(Json::as_f64).context("missing 'fail_time'")?;
-            let plan = client.report_failure(&prev, t);
-            Ok(Json::obj(vec![("ok", true.into()), ("plan", plan_to_json(&plan))]))
+        Request::Observe { task, execution } => {
+            let (executions, predictor) = client.observe_detailed(&task, execution);
+            Response::Observed(ObserveAck { task, executions, predictor }).to_json()
         }
-        "stats" => {
+        Request::Plan { task, input_mb } => {
+            Response::Planned(client.plan_detailed(&task, input_mb)).to_json()
+        }
+        Request::Failure { task, plan, fail_time } => {
+            Response::Retry(client.report_failure_for(task.as_deref(), &plan, fail_time))
+                .to_json()
+        }
+        Request::Stats => {
             let s = client.stats();
-            Ok(Json::obj(vec![
-                ("ok", true.into()),
-                ("shards", client.shards().into()),
-                ("requests", (s.requests as usize).into()),
-                ("batches", (s.batches as usize).into()),
-                ("failures_handled", (s.failures_handled as usize).into()),
-                ("tasks_trained", (s.tasks_trained as usize).into()),
-                ("observations", (s.observations as usize).into()),
-                ("latency_p50_us", s.latency_percentile_us(50.0).into()),
-                ("latency_p99_us", s.latency_percentile_us(99.0).into()),
-            ]))
+            Response::Stats(StatsSummary {
+                shards: client.shards(),
+                requests: s.requests,
+                batches: s.batches,
+                failures_handled: s.failures_handled,
+                tasks_trained: s.tasks_trained,
+                observations: s.observations,
+                fallbacks: s.fallbacks,
+                latency_p50_us: s.latency_percentile_us(50.0),
+                latency_p99_us: s.latency_percentile_us(99.0),
+            })
+            .to_json()
         }
-        other => anyhow::bail!("unknown op '{other}'"),
     }
 }
 
@@ -286,6 +277,10 @@ mod tests {
         let plan = r.get("plan").unwrap();
         let starts = plan.get("starts").unwrap().as_arr().unwrap();
         assert!(!starts.is_empty());
+        // Provenance: a trained KS+ plan says so.
+        assert_eq!(r.get("predictor").and_then(Json::as_str), Some("ksplus"));
+        assert_eq!(r.get("model_version").and_then(Json::as_usize), Some(12));
+        assert!(r.get("fallback_reason").is_none());
 
         let fail = format!(
             r#"{{"op":"failure","plan":{plan},"fail_time":5.0}}"#,
@@ -293,10 +288,74 @@ mod tests {
         );
         let r = roundtrip(&mut s, &fail);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("predictor").and_then(Json::as_str), Some("ksplus"));
 
         let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert_eq!(r.get("tasks_trained").and_then(Json::as_usize), Some(1));
+        assert_eq!(r.get("fallbacks").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn hello_negotiates_and_advertises() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"hello","client":"t","min_version":1}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("version").and_then(Json::as_usize), Some(WIRE_VERSION));
+        let ops = r.get("ops").unwrap().as_arr().unwrap();
+        assert_eq!(ops.len(), OPS.len());
+        for op in OPS {
+            assert!(ops.iter().any(|o| o.as_str() == Some(op)), "missing op {op}");
+        }
+        let policies = r.get("policies").unwrap().as_arr().unwrap();
+        for p in PredictorPolicy::names() {
+            assert!(policies.iter().any(|x| x.as_str() == Some(p)), "missing policy {p}");
+        }
+        // A client from the future is refused with the specific code.
+        let r = roundtrip(&mut s, r#"{"op":"hello","min_version":99}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("unsupported-version")
+        );
+        // A client from the past likewise.
+        let r = roundtrip(&mut s, r#"{"op":"hello","max_version":0}"#);
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("unsupported-version")
+        );
+    }
+
+    #[test]
+    fn configure_switches_policy_and_plan_reports_provenance() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"configure","task":"bwa","policy":"witt-lr"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("configured").and_then(Json::as_str), Some("bwa"));
+        assert_eq!(r.get("policy").and_then(Json::as_str), Some("witt-lr"));
+        let r = roundtrip(&mut s, &train_req());
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":6000}"#);
+        assert_eq!(r.get("predictor").and_then(Json::as_str), Some("witt-lr"));
+        assert_eq!(
+            r.get("plan").unwrap().get("starts").unwrap().as_arr().unwrap().len(),
+            1,
+            "witt serves flat plans"
+        );
+        // Untrained task: fallback provenance + counted in stats.
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"mystery","input_mb":10}"#);
+        assert_eq!(r.get("predictor").and_then(Json::as_str), Some("default-limits"));
+        assert_eq!(
+            r.get("fallback_reason").and_then(Json::as_str),
+            Some("untrained-task")
+        );
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("fallbacks").and_then(Json::as_usize), Some(1));
+        // Service-wide default via task-less configure.
+        let r = roundtrip(&mut s, r#"{"op":"configure","policy":"tovar-ppm"}"#);
+        assert_eq!(r.get("configured").and_then(Json::as_str), Some("*"));
     }
 
     #[test]
@@ -315,6 +374,7 @@ mod tests {
             assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
             assert_eq!(r.get("observed").and_then(Json::as_str), Some("bwa"));
             assert_eq!(r.get("executions").and_then(Json::as_usize), Some(i + 1));
+            assert_eq!(r.get("predictor").and_then(Json::as_str), Some("ksplus"));
         }
         let r = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":5000}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
@@ -363,10 +423,14 @@ mod tests {
             r#"{"op":"observe","task":"x"}"#,
             r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1.0,"samples":[]}}"#,
             r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":0,"samples":[1.0]}}"#,
+            r#"{"op":"configure","task":"x","policy":"nope"}"#,
         ] {
             let r = roundtrip(&mut s, bad);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "req: {bad}");
-            assert!(r.get("error").is_some());
+            // Structured: every error carries a code and a message.
+            let err = r.get("error").expect("missing error object");
+            assert!(err.get("code").and_then(Json::as_str).is_some(), "req: {bad}");
+            assert!(err.get("message").and_then(Json::as_str).is_some(), "req: {bad}");
         }
         // Connection still usable afterwards.
         let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
@@ -406,6 +470,22 @@ mod tests {
     #[test]
     fn stop_unblocks_accept() {
         let (_coord, mut server) = start();
+        server.stop(); // must not hang
+    }
+
+    #[test]
+    fn stop_unblocks_accept_on_unspecified_bind() {
+        // Binding to 0.0.0.0 must still stop cleanly: the unblocking
+        // connect goes to loopback, not to the unspecified address.
+        let coord =
+            Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native).unwrap();
+        let mut server = Server::start("0.0.0.0:0", coord.client()).unwrap();
+        assert!(server.addr().ip().is_unspecified());
+        // The server is reachable through loopback before the stop.
+        let mut s =
+            TcpStream::connect(("127.0.0.1", server.addr().port())).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         server.stop(); // must not hang
     }
 

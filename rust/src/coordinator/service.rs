@@ -23,7 +23,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
-use crate::coordinator::{BackendSpec, ModelStore, PlanScratch};
+use crate::coordinator::{
+    BackendSpec, ModelStore, PlanOutcome, PlanScratch, PredictorPolicy, RetryOutcome,
+};
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 
@@ -40,6 +42,9 @@ pub struct CoordinatorConfig {
     /// batcher; tasks are routed by a deterministic name hash. `1`
     /// reproduces the original single-worker coordinator.
     pub shards: usize,
+    /// Predictor policy for tasks with no explicit `configure` binding;
+    /// pinned per task the first time it is trained or observed.
+    pub default_policy: PredictorPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -50,6 +55,7 @@ impl Default for CoordinatorConfig {
             batch_max: 64,
             batch_delay: Duration::from_millis(1),
             shards: 1,
+            default_policy: PredictorPolicy::KsPlus,
         }
     }
 }
@@ -172,6 +178,11 @@ pub struct ServiceStats {
     pub tasks_trained: u64,
     /// Single executions folded in via the incremental `Observe` path.
     pub observations: u64,
+    /// Plans served by the untrained flat default (counted whenever a
+    /// `PlanOutcome` carries a `fallback_reason`). Before this counter,
+    /// silent fallbacks were indistinguishable from real predictions in
+    /// every metric.
+    pub fallbacks: u64,
     /// Recent plan-request latencies, microseconds (enqueue -> response
     /// send), bounded to the last `LATENCY_WINDOW` requests per shard.
     pub latencies_us: LatencyWindow,
@@ -187,6 +198,7 @@ impl ServiceStats {
         self.failures_handled += other.failures_handled;
         self.tasks_trained += other.tasks_trained;
         self.observations += other.observations;
+        self.fallbacks += other.fallbacks;
         self.latencies_us.merge(&other.latencies_us);
     }
 
@@ -213,6 +225,12 @@ impl ServiceStats {
 }
 
 enum Msg {
+    Configure {
+        /// `None` sets the shard's default policy for unbound tasks.
+        task: Option<String>,
+        policy: PredictorPolicy,
+        done: mpsc::SyncSender<()>,
+    },
     Train {
         task: String,
         history: Vec<Execution>,
@@ -221,19 +239,23 @@ enum Msg {
     Observe {
         task: String,
         execution: Execution,
-        /// Replies with the task's total observation count.
-        done: mpsc::SyncSender<u64>,
+        /// Replies with the task's total observation count and the
+        /// policy the execution was folded under.
+        done: mpsc::SyncSender<(u64, &'static str)>,
     },
     Plan {
         task: String,
         input_mb: f64,
         enqueued: Instant,
-        resp: mpsc::SyncSender<StepPlan>,
+        resp: mpsc::SyncSender<PlanOutcome>,
     },
     Failure {
+        /// Route the retry through this task's bound policy; a task-less
+        /// report uses the KS+ strategy.
+        task: Option<String>,
         prev: StepPlan,
         fail_time: f64,
-        resp: mpsc::SyncSender<StepPlan>,
+        resp: mpsc::SyncSender<RetryOutcome>,
     },
     Stats {
         resp: mpsc::SyncSender<ServiceStats>,
@@ -260,7 +282,7 @@ struct Pending {
     task: String,
     input_mb: f64,
     enqueued: Instant,
-    resp: mpsc::SyncSender<StepPlan>,
+    resp: mpsc::SyncSender<PlanOutcome>,
 }
 
 impl Coordinator {
@@ -352,7 +374,43 @@ impl Client {
         self.txs.len()
     }
 
-    /// Fit (or refit) the task's segment models; blocks until stored.
+    /// Bind a task to a predictor policy — or, with `task: None`, set
+    /// every shard's default policy for tasks not yet pinned to one.
+    /// Blocks until the binding is visible (all shards, for a default).
+    pub fn configure(&self, task: Option<&str>, policy: PredictorPolicy) {
+        match task {
+            Some(t) => {
+                let (done_tx, done_rx) = mpsc::sync_channel(1);
+                self.tx_for(t)
+                    .send(Msg::Configure {
+                        task: Some(t.to_string()),
+                        policy,
+                        done: done_tx,
+                    })
+                    .expect("coordinator gone");
+                let _ = done_rx.recv();
+            }
+            None => {
+                // Fan out to every shard, pipelined like `shard_stats`.
+                let pending: Vec<mpsc::Receiver<()>> = self
+                    .txs
+                    .iter()
+                    .map(|tx| {
+                        let (done_tx, done_rx) = mpsc::sync_channel(1);
+                        tx.send(Msg::Configure { task: None, policy, done: done_tx })
+                            .expect("coordinator gone");
+                        done_rx
+                    })
+                    .collect();
+                for rx in pending {
+                    let _ = rx.recv();
+                }
+            }
+        }
+    }
+
+    /// Fit (or refit) the task's models under its bound policy; blocks
+    /// until stored.
     pub fn train(&self, task: &str, history: Vec<Execution>) {
         let (done_tx, done_rx) = mpsc::sync_channel(1);
         self.tx_for(task)
@@ -367,6 +425,12 @@ impl Client {
     /// very next plan request). Returns the task's total observation
     /// count; blocks until the model swap is visible.
     pub fn observe(&self, task: &str, execution: Execution) -> u64 {
+        self.observe_detailed(task, execution).0
+    }
+
+    /// `observe` plus provenance: (total observation count, name of the
+    /// policy the execution was folded under).
+    pub fn observe_detailed(&self, task: &str, execution: Execution) -> (u64, &'static str) {
         let (done_tx, done_rx) = mpsc::sync_channel(1);
         self.tx_for(task)
             .send(Msg::Observe { task: task.to_string(), execution, done: done_tx })
@@ -377,6 +441,12 @@ impl Client {
     /// Request an allocation plan; blocks until the shard's batcher
     /// flushes.
     pub fn plan(&self, task: &str, input_mb: f64) -> StepPlan {
+        self.plan_detailed(task, input_mb).plan
+    }
+
+    /// `plan` plus provenance: which policy served it, its model
+    /// version, and whether it was an untrained fallback.
+    pub fn plan_detailed(&self, task: &str, input_mb: f64) -> PlanOutcome {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
         self.tx_for(task)
             .send(Msg::Plan {
@@ -389,13 +459,33 @@ impl Client {
         resp_rx.recv().expect("coordinator dropped request")
     }
 
-    /// Report an OOM; returns the rescaled retry plan. Stateless, so any
-    /// shard can serve it.
+    /// Report an OOM; returns the rescaled retry plan (KS+ strategy).
+    /// Task-less and stateless, so any shard serves it.
     pub fn report_failure(&self, prev: &StepPlan, fail_time: f64) -> StepPlan {
+        self.report_failure_for(None, prev, fail_time).plan
+    }
+
+    /// Report an OOM for a specific task: the retry runs that task's
+    /// bound policy's strategy on its owning shard. A task-less report
+    /// round-robins and uses the KS+ strategy.
+    pub fn report_failure_for(
+        &self,
+        task: Option<&str>,
+        prev: &StepPlan,
+        fail_time: f64,
+    ) -> RetryOutcome {
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        self.any_tx()
-            .send(Msg::Failure { prev: prev.clone(), fail_time, resp: resp_tx })
-            .expect("coordinator gone");
+        let tx = match task {
+            Some(t) => self.tx_for(t),
+            None => self.any_tx(),
+        };
+        tx.send(Msg::Failure {
+            task: task.map(str::to_string),
+            prev: prev.clone(),
+            fail_time,
+            resp: resp_tx,
+        })
+        .expect("coordinator gone");
         resp_rx.recv().expect("coordinator dropped request")
     }
 
@@ -444,15 +534,19 @@ fn flush(
     store.plan_batch_into(&reqs, scratch);
     drop(reqs);
     stats.batches += 1;
-    for (p, plan) in pending.drain(..).zip(scratch.plans.drain(..)) {
+    for (p, outcome) in pending.drain(..).zip(scratch.plans.drain(..)) {
         stats.requests += 1;
+        if outcome.fallback_reason.is_some() {
+            stats.fallbacks += 1;
+        }
         stats.latencies_us.push(p.enqueued.elapsed().as_secs_f64() * 1e6);
-        let _ = p.resp.send(plan);
+        let _ = p.resp.send(outcome);
     }
 }
 
 fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc::Receiver<Msg>) {
     let mut store = ModelStore::new(cfg.k, cfg.capacity_gb, backend);
+    store.set_default_policy(cfg.default_policy);
     let mut stats = ServiceStats::default();
     let mut pending: Vec<Pending> = Vec::new();
     let mut scratch = PlanScratch::default();
@@ -514,6 +608,18 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                     stats.tasks_trained += 1;
                     let _ = done.send(());
                 }
+                Msg::Configure { task, policy, done } => {
+                    // A policy swap is a model swap: flush first so
+                    // in-flight requests see a consistent routing.
+                    flush(&mut pending, &store, &mut stats, &mut scratch);
+                    match task {
+                        Some(t) => {
+                            store.configure(&t, policy);
+                        }
+                        None => store.set_default_policy(policy),
+                    }
+                    let _ = done.send(());
+                }
                 Msg::Observe { task, execution, done } => {
                     // Also a model swap, just an O(k) incremental one.
                     flush(&mut pending, &store, &mut stats, &mut scratch);
@@ -524,11 +630,11 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                     if folded {
                         stats.observations += 1;
                     }
-                    let _ = done.send(count);
+                    let _ = done.send((count, store.policy_of(&task).name()));
                 }
-                Msg::Failure { prev, fail_time, resp } => {
+                Msg::Failure { task, prev, fail_time, resp } => {
                     stats.failures_handled += 1;
-                    let _ = resp.send(store.on_failure(&prev, fail_time));
+                    let _ = resp.send(store.on_failure_for(task.as_deref(), &prev, fail_time));
                 }
                 Msg::Stats { resp } => {
                     let _ = resp.send(stats.clone());
@@ -761,12 +867,14 @@ mod tests {
         a.failures_handled = 1;
         a.tasks_trained = 3;
         a.observations = 5;
+        a.fallbacks = 2;
         a.latencies_us.push(100.0);
         let mut b = ServiceStats::default();
         b.requests = 30;
         b.batches = 8;
         b.tasks_trained = 1;
         b.observations = 7;
+        b.fallbacks = 4;
         b.latencies_us.push(300.0);
         let m = ServiceStats::merged(&[a, b]);
         assert_eq!(m.requests, 40);
@@ -774,6 +882,7 @@ mod tests {
         assert_eq!(m.failures_handled, 1);
         assert_eq!(m.tasks_trained, 4);
         assert_eq!(m.observations, 12);
+        assert_eq!(m.fallbacks, 6);
         // Mean batch size comes from the merged counters, not an average
         // of per-shard means: (10 + 30) / (2 + 8).
         assert_eq!(m.mean_batch_size(), 4.0);
@@ -892,6 +1001,91 @@ mod tests {
         // Observations spread over multiple shards like training does.
         let per = client.shard_stats();
         assert!(per.iter().filter(|s| s.observations > 0).count() > 1, "{per:?}");
+    }
+
+    #[test]
+    fn per_task_policies_route_plans_observes_and_failures() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards: 4, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        client.configure(Some("ks-task"), PredictorPolicy::KsPlus);
+        client.configure(Some("wt-task"), PredictorPolicy::WittLr);
+        client.train("ks-task", history(41, 15));
+        client.train("wt-task", history(42, 15));
+        let ks = client.plan_detailed("ks-task", 5000.0);
+        assert_eq!(ks.predictor, "ksplus");
+        assert_eq!(ks.model_version, 15);
+        assert_eq!(ks.fallback_reason, None);
+        assert!(ks.plan.k() >= 1);
+        let wt = client.plan_detailed("wt-task", 5000.0);
+        assert_eq!(wt.predictor, "witt-lr");
+        assert_eq!(wt.model_version, 15);
+        assert_eq!(wt.plan.k(), 1, "witt serves flat peak plans");
+        // Observe provenance follows the binding.
+        let mut rng = Rng::new(43);
+        let (n, p) = client.observe_detailed("wt-task", two_phase_exec(4000.0, &mut rng));
+        assert_eq!((n, p), (16, "witt-lr"));
+        let (n, p) = client.observe_detailed("ks-task", two_phase_exec(4000.0, &mut rng));
+        assert_eq!((n, p), (16, "ksplus"));
+        // Failure retries run the bound policy's strategy on the owning
+        // shard.
+        let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+        let r = client.report_failure_for(Some("wt-task"), &prev, 60.0);
+        assert_eq!(r.predictor, "witt-lr");
+        assert_eq!(r.plan, StepPlan::flat(16.0));
+        let r = client.report_failure_for(Some("ks-task"), &prev, 60.0);
+        assert_eq!(r.predictor, "ksplus");
+        assert_eq!(r.plan.starts, vec![0.0, 60.0]);
+        assert_eq!(client.stats().failures_handled, 2);
+    }
+
+    #[test]
+    fn service_default_policy_fans_out_to_every_shard() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards: 3, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        client.configure(None, PredictorPolicy::TovarPpm);
+        // Whatever shard each task hashes to, training now lands on the
+        // tovar policy.
+        for i in 0..12u64 {
+            let task = format!("task-{i}");
+            client.train(&task, history(500 + i, 10));
+            let out = client.plan_detailed(&task, 4000.0);
+            assert_eq!(out.predictor, "tovar-ppm", "{task}");
+            assert_eq!(out.plan.k(), 1);
+        }
+    }
+
+    #[test]
+    fn fallbacks_counted_and_merged_across_shards() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, shards: 4, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        client.train("trained", history(51, 10));
+        // 6 untrained plans spread across shards + 2 trained plans.
+        for i in 0..6u64 {
+            let out = client.plan_detailed(&format!("mystery-{i}"), 100.0);
+            assert_eq!(out.fallback_reason, Some(crate::coordinator::FALLBACK_UNTRAINED));
+            assert_eq!(out.predictor, "default-limits");
+            assert_eq!(out.model_version, 0);
+        }
+        client.plan("trained", 4000.0);
+        client.plan("trained", 8000.0);
+        let stats = client.stats();
+        assert_eq!(stats.requests, 8);
+        assert_eq!(stats.fallbacks, 6);
+        // The merge is the sum of the per-shard counters.
+        let per = client.shard_stats();
+        assert_eq!(per.iter().map(|s| s.fallbacks).sum::<u64>(), 6);
     }
 
     #[test]

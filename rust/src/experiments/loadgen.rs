@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::service::{Coordinator, CoordinatorConfig, ServiceStats};
-use crate::coordinator::BackendSpec;
+use crate::coordinator::{BackendSpec, PredictorPolicy};
 use crate::trace::workflow::Workflow;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -38,6 +38,9 @@ pub struct LoadGenConfig {
     pub workflow: String,
     /// Numeric backend for every shard.
     pub spec: BackendSpec,
+    /// Predictor policy every task trains and serves under — measures a
+    /// baseline-serving workload instead of the KS+ default.
+    pub policy: PredictorPolicy,
 }
 
 impl Default for LoadGenConfig {
@@ -50,6 +53,7 @@ impl Default for LoadGenConfig {
             k: 4,
             workflow: "eager".to_string(),
             spec: BackendSpec::Native,
+            policy: PredictorPolicy::KsPlus,
         }
     }
 }
@@ -59,6 +63,8 @@ impl Default for LoadGenConfig {
 pub struct LoadGenReport {
     pub shards: usize,
     pub clients: usize,
+    /// Policy the workload trained and served under.
+    pub policy: &'static str,
     /// Plan requests actually issued (>= the configured total after
     /// per-client rounding).
     pub requests: u64,
@@ -80,6 +86,7 @@ impl LoadGenReport {
         Json::obj(vec![
             ("shards", self.shards.into()),
             ("clients", self.clients.into()),
+            ("policy", self.policy.into()),
             ("requests", (self.requests as usize).into()),
             ("elapsed_s", self.elapsed_s.into()),
             ("plans_per_s", self.plans_per_s.into()),
@@ -120,6 +127,14 @@ pub fn write_bench_json(path: &std::path::Path, reports: &[LoadGenReport]) -> Re
             Json::Arr(reports.iter().map(LoadGenReport::to_json).collect()),
         );
     }
+    // A nested output path must not lose the sweep at the very end:
+    // create the parent directories before writing.
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
     std::fs::write(path, doc.to_string())
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(())
@@ -146,6 +161,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
             // request, and the sweep would measure the linger knob
             // instead of pool capacity. The drain loop still batches.
             batch_delay: Duration::ZERO,
+            default_policy: cfg.policy,
             ..Default::default()
         },
         cfg.spec.clone(),
@@ -236,6 +252,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     Ok(LoadGenReport {
         shards: cfg.shards,
         clients: cfg.clients,
+        policy: cfg.policy.name(),
         requests: served,
         elapsed_s: elapsed.as_secs_f64(),
         plans_per_s: served as f64 / elapsed.as_secs_f64(),
@@ -331,5 +348,43 @@ mod tests {
             Some("ksplus-bench-hotpath/v1")
         );
         assert_eq!(back.get("plans").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+    }
+
+    #[test]
+    fn bench_json_creates_parent_directories() {
+        // A nested --bench-json path used to fail the whole run at the
+        // very end (after the sweep) when the directory did not exist.
+        let r = run(&LoadGenConfig { clients: 2, requests: 16, ..Default::default() }).unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "ksplus_bench_nested_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("a").join("b").join("bench.json");
+        write_bench_json(&path, &[r]).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(
+            back.get("schema").and_then(Json::as_str),
+            Some("ksplus-bench-hotpath/v1")
+        );
+    }
+
+    #[test]
+    fn loadgen_serves_non_default_policies() {
+        for policy in [PredictorPolicy::WittLr, PredictorPolicy::DefaultLimits] {
+            let r = run(&LoadGenConfig {
+                clients: 2,
+                requests: 32,
+                observe_frac: 0.25,
+                policy,
+                ..Default::default()
+            })
+            .unwrap();
+            assert_eq!(r.requests, 32, "{policy:?}");
+            assert_eq!(r.policy, policy.name());
+            let j = r.to_json();
+            assert_eq!(j.get("policy").and_then(Json::as_str), Some(policy.name()));
+        }
     }
 }

@@ -7,6 +7,7 @@
 //!   simulate               cluster simulation with a chosen method
 //!   serve                  smoke-run the online coordinator
 //!   loadgen                closed-loop load test over shard counts
+//!   protocol-smoke         wire v1 conformance check over live TCP
 //!
 //! Run `repro <cmd> --help` for flags.
 
@@ -15,7 +16,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-use ksplus::coordinator::BackendSpec;
+use ksplus::coordinator::{BackendSpec, PredictorPolicy};
 use ksplus::experiments::{self, ExpConfig};
 use ksplus::predictor;
 use ksplus::segments::algorithm::get_segments;
@@ -40,6 +41,7 @@ fn main() {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
         "loadgen" => cmd_loadgen(rest),
+        "protocol-smoke" => cmd_protocol_smoke(rest),
         other => {
             eprintln!("unknown command '{other}'\n");
             print_help();
@@ -62,8 +64,19 @@ fn print_help() {
            segment                        run Algorithm 1 on a trace\n\
            simulate                       discrete-event cluster simulation\n\
            serve                          coordinator service smoke run\n\
-           loadgen                        closed-loop coordinator load test\n"
+           loadgen                        closed-loop coordinator load test\n\
+           protocol-smoke                 wire v1 conformance check over TCP\n"
     );
+}
+
+/// Resolve a `--policy` flag value, listing the valid names on error.
+fn policy_from_flag(name: &str) -> Result<PredictorPolicy> {
+    PredictorPolicy::parse(name).with_context(|| {
+        format!(
+            "unknown policy '{name}' (valid: {})",
+            PredictorPolicy::names().join(", ")
+        )
+    })
 }
 
 fn exp_config(a: &ksplus::util::cli::Args) -> Result<ExpConfig> {
@@ -227,15 +240,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
         .flag("k", "segments", Some("4"))
         .flag("shards", "coordinator worker shards", Some("1"))
+        .flag(
+            "policy",
+            "default predictor policy (ksplus | witt-lr | tovar-ppm | ksegments | default-limits)",
+            Some("ksplus"),
+        )
         .flag("workflow", "training workflow", Some("eager"))
         .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None);
     let a = cmd.parse(argv)?;
     let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
+    let policy = policy_from_flag(a.get("policy").unwrap())?;
     let wf = Workflow::by_name(a.get("workflow").unwrap()).context("unknown workflow")?;
     let trace = wf.generate(42, 150);
     let shards = a.get_usize("shards")?;
     let coord = Coordinator::start(
-        CoordinatorConfig { k: a.get_usize("k")?, shards, ..Default::default() },
+        CoordinatorConfig {
+            k: a.get_usize("k")?,
+            shards,
+            default_policy: policy,
+            ..Default::default()
+        },
         spec,
     )?;
     let client = coord.client();
@@ -246,9 +270,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         // Server mode: expose the newline-JSON wire protocol and block.
         let server = ksplus::coordinator::server::Server::start(addr, coord.client())?;
         println!(
-            "serving KS+ predictions on {} ({} task models pre-trained, {} shard(s))\n\
-             protocol: one JSON object per line — op: train | observe | plan | failure | stats\n\
+            "serving {} predictions on {} ({} task models pre-trained, {} shard(s))\n\
+             protocol: wire v1, one JSON object per line — op: hello | configure | train |\n\
+             observe | plan | failure | stats (see docs/PROTOCOL.md)\n\
              Ctrl-C to stop.",
+            policy.name(),
             server.addr(),
             trace.tasks.len(),
             shards
@@ -288,22 +314,29 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .flag("requests", "total plan requests per shard count", Some("5000"))
     .flag("observe-frac", "probability of an observe op per plan (online retraining mix)", Some("0"))
     .flag("k", "segments", Some("4"))
+    .flag(
+        "policy",
+        "predictor policy the tasks train and serve under (ksplus | witt-lr | tovar-ppm | ksegments | default-limits)",
+        Some("ksplus"),
+    )
     .flag("workflow", "training workflow", Some("eager"))
     .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
     .flag("out", "write per-run JSON reports to this directory", None)
     .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
     let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
+    let policy = policy_from_flag(a.get("policy").unwrap())?;
     let shard_counts = a.get_usize_list("shards")?;
     let clients = a.get_usize("clients")?;
     let requests = a.get_usize("requests")?;
     let observe_frac = a.get_f64("observe-frac")?;
 
     println!(
-        "== loadgen: {} clients, {} requests per run, observe-frac {}, backend {} ==",
+        "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {} ==",
         clients,
         requests,
         observe_frac,
+        policy.name(),
         a.get("backend").unwrap()
     );
     println!(
@@ -321,6 +354,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             k: a.get_usize("k")?,
             workflow: a.get("workflow").unwrap().to_string(),
             spec: spec.clone(),
+            policy,
         })?;
         let speedup = match baseline {
             None => {
@@ -353,5 +387,149 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         experiments::loadgen::write_bench_json(Path::new(path), &reports)?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Wire v1 conformance smoke: starts a real TCP server, drives one
+/// request of every op (plus intentionally malformed lines) through the
+/// typed `RemoteClient`, and asserts on the structured responses — two
+/// different per-task policies on the one server, provenance checked.
+/// Exits non-zero on any mismatch; run by CI on every push.
+fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
+    use ksplus::coordinator::remote::RemoteClient;
+    use ksplus::coordinator::server::Server;
+    use ksplus::segments::StepPlan;
+    use ksplus::trace::Execution;
+    use ksplus::util::json::Json;
+
+    let cmd = Command::new(
+        "repro protocol-smoke",
+        "Wire v1 conformance: every op + malformed lines over a live TCP server",
+    )
+    .flag("shards", "coordinator worker shards", Some("2"))
+    .flag(
+        "policy",
+        "service default policy (ksplus | witt-lr | tovar-ppm | ksegments | default-limits)",
+        Some("ksplus"),
+    );
+    let a = cmd.parse(argv)?;
+    let shards = a.get_usize("shards")?;
+    let policy = policy_from_flag(a.get("policy").unwrap())?;
+    let (_coord, server) = Server::start_with_backend(
+        "127.0.0.1:0",
+        CoordinatorConfig { k: 3, shards, default_policy: policy, ..Default::default() },
+        BackendSpec::Native,
+    )?;
+    let mut rc = RemoteClient::connect(server.addr())?;
+
+    // hello: version + capability negotiation.
+    let info = rc.hello()?;
+    anyhow::ensure!(info.version == 1, "unexpected wire version {}", info.version);
+    anyhow::ensure!(info.shards == shards, "hello reports {} shards", info.shards);
+    for op in ["hello", "configure", "train", "observe", "plan", "failure", "stats"] {
+        anyhow::ensure!(info.ops.iter().any(|o| o == op), "hello does not advertise {op}");
+    }
+    anyhow::ensure!(
+        info.policies.len() == PredictorPolicy::names().len(),
+        "hello advertises {} policies",
+        info.policies.len()
+    );
+
+    // Two different policies on the one server.
+    rc.configure(Some("smoke-ks"), PredictorPolicy::KsPlus)?;
+    rc.configure(Some("smoke-witt"), PredictorPolicy::WittLr)?;
+
+    // A small two-phase synthetic history.
+    let hist: Vec<Execution> = (0..12)
+        .map(|i| {
+            let input = 1000.0 + 500.0 * i as f64;
+            let n = 6 + (i % 3) as usize;
+            let samples: Vec<f64> = (0..n)
+                .map(|j| 0.001 * input * if j < n / 2 { 0.5 } else { 1.0 })
+                .collect();
+            Execution::new("smoke", input, 1.0, samples)
+        })
+        .collect();
+    anyhow::ensure!(rc.train("smoke-ks", &hist)? == 12, "train ack count");
+    rc.train("smoke-witt", &hist)?;
+
+    // observe: provenance follows the binding, count increments.
+    let ack = rc.observe("smoke-ks", &hist[0])?;
+    anyhow::ensure!(
+        ack.executions == 13 && ack.predictor == "ksplus",
+        "observe ack {ack:?}"
+    );
+
+    // plan: provenance separates the two policies and the fallback.
+    let pk = rc.plan("smoke-ks", 5000.0)?;
+    anyhow::ensure!(pk.predictor == "ksplus", "ks plan predictor {}", pk.predictor);
+    anyhow::ensure!(pk.model_version == 13, "ks plan version {}", pk.model_version);
+    anyhow::ensure!(pk.fallback_reason.is_none(), "trained plan marked fallback");
+    let pw = rc.plan("smoke-witt", 5000.0)?;
+    anyhow::ensure!(pw.predictor == "witt-lr", "witt plan predictor {}", pw.predictor);
+    anyhow::ensure!(pw.plan.k() == 1, "witt plans are flat");
+    let pf = rc.plan("smoke-unknown", 10.0)?;
+    anyhow::ensure!(
+        pf.predictor == "default-limits" && pf.fallback_reason == Some("untrained-task"),
+        "fallback provenance {pf:?}"
+    );
+
+    // failure: retry strategy routed by the task's policy.
+    let retry = rc.report_failure(Some("smoke-witt"), &pw.plan, 1.0)?;
+    anyhow::ensure!(retry.predictor == "witt-lr", "witt retry predictor");
+    anyhow::ensure!(
+        retry.plan.peaks[0] >= pw.plan.peaks[0],
+        "witt retry must not lower the allocation"
+    );
+    let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+    let retry = rc.report_failure(None, &prev, 60.0)?;
+    anyhow::ensure!(retry.predictor == "ksplus", "task-less retry is KS+");
+    anyhow::ensure!(retry.plan.starts == vec![0.0, 60.0], "KS+ rescaling {:?}", retry.plan);
+
+    // stats: every counter visible, fallbacks counted.
+    let s = rc.stats()?;
+    anyhow::ensure!(s.shards == shards, "stats shards {}", s.shards);
+    anyhow::ensure!(s.requests == 3, "stats requests {}", s.requests);
+    anyhow::ensure!(s.tasks_trained == 2, "stats tasks_trained {}", s.tasks_trained);
+    anyhow::ensure!(s.observations == 1, "stats observations {}", s.observations);
+    anyhow::ensure!(s.fallbacks == 1, "stats fallbacks {}", s.fallbacks);
+    anyhow::ensure!(s.failures_handled == 2, "stats failures {}", s.failures_handled);
+
+    // Malformed lines: each class maps to its specific structured code.
+    for (line, want) in [
+        ("### not json", "invalid-json"),
+        (r#"{"op":"frobnicate"}"#, "unknown-op"),
+        (r#"{"op":"plan","task":"x"}"#, "missing-field"),
+        (r#"{"op":"plan","task":"x","input_mb":"big"}"#, "invalid-field"),
+        (r#"{"op":"train","task":"x","history":[]}"#, "empty-history"),
+        (
+            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
+            "empty-samples",
+        ),
+        (r#"{"op":"configure","task":"x","policy":"nope"}"#, "unknown-policy"),
+        (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
+    ] {
+        let j = rc.raw(line)?;
+        anyhow::ensure!(
+            j.get("ok") == Some(&Json::Bool(false)),
+            "malformed line accepted: {line}"
+        );
+        let code = j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
+        anyhow::ensure!(code == Some(want), "expected {want} for {line}, got {j}");
+    }
+    // The connection survived every error.
+    let s = rc.stats()?;
+    anyhow::ensure!(s.requests == 3, "error handling leaked plan requests");
+
+    println!(
+        "protocol-smoke: wire v{} OK — {} ops, {} policies, {} shard(s), default policy {}, \
+         provenance + fallback counting + {} error classes verified",
+        info.version,
+        info.ops.len(),
+        info.policies.len(),
+        shards,
+        policy.name(),
+        8
+    );
     Ok(())
 }

@@ -174,8 +174,9 @@ fn wire_protocol_sharded_under_stress() {
             let mut ok_plans = 0u64;
             let mut ok_observes = 0u64;
             for i in 0..120u64 {
-                // 0 = plan, 1 = observe, 2 = failure, 3 = stats, 4+ = junk
-                let kind = rng.below(6);
+                // 0 = plan, 1 = observe, 2 = failure, 3 = stats,
+                // 4 = hello, 5 = configure, 6+ = junk
+                let kind = rng.below(8);
                 let line = match kind {
                     // Valid plan op on one of 32 task names — enough
                     // distinct names that every one of the 4 shards
@@ -205,6 +206,19 @@ fn wire_protocol_sharded_under_stress() {
                         .to_string(),
                     // Valid stats op mid-stream.
                     3 => r#"{"op":"stats"}"#.to_string(),
+                    // Valid hello op (version negotiation under load).
+                    4 => r#"{"op":"hello","client":"stress","min_version":1}"#.to_string(),
+                    // Valid configure op: policy bindings mutate routing
+                    // under concurrent plan/observe traffic.
+                    5 => {
+                        const POLICIES: &[&str] =
+                            &["ksplus", "witt-lr", "tovar-ppm", "ksegments", "default-limits"];
+                        format!(
+                            r#"{{"op":"configure","task":"t{}","policy":"{}"}}"#,
+                            rng.below(32),
+                            POLICIES[rng.below(POLICIES.len())]
+                        )
+                    }
                     // Garbage bytes. Never whitespace-only: the server
                     // skips blank lines without replying.
                     _ => {
@@ -234,6 +248,9 @@ fn wire_protocol_sharded_under_stress() {
                     1 => {
                         assert_eq!(ok, &Json::Bool(true), "valid observe rejected: {resp}");
                         ok_observes += 1;
+                    }
+                    4 | 5 => {
+                        assert_eq!(ok, &Json::Bool(true), "valid op rejected: {resp}");
                     }
                     _ => {}
                 }

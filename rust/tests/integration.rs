@@ -4,10 +4,10 @@
 
 use std::collections::BTreeMap;
 
-#[cfg(feature = "pjrt")]
+use ksplus::coordinator::remote::RemoteClient;
 use ksplus::coordinator::server::Server;
 use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
-use ksplus::coordinator::BackendSpec;
+use ksplus::coordinator::{Backend, BackendSpec, ModelStore, PredictorPolicy};
 use ksplus::experiments::{evaluate_method, trained_predictor};
 use ksplus::metrics::WastageReport;
 use ksplus::predictor::{by_name, paper_methods, Predictor};
@@ -205,6 +205,80 @@ fn wire_protocol_end_to_end_with_pjrt() {
         }
     }
     assert!(plan.covers(e), "retry loop over the wire never converged");
+}
+
+#[test]
+fn per_task_policies_over_tcp_with_provenance_and_ksplus_parity() {
+    // The acceptance scenario: two tasks with different policies on ONE
+    // running server, train/observe/plan driven over TCP through the
+    // typed client, per-plan provenance checked, and the KS+ plan
+    // bit-identical to a seed-equivalent ModelStore fed the same data
+    // in-process (the pre-redesign path).
+    let (_coord, server) = Server::start_with_backend(
+        "127.0.0.1:0",
+        CoordinatorConfig { k: 3, shards: 2, ..Default::default() },
+        BackendSpec::Native,
+    )
+    .unwrap();
+    let mut rc = RemoteClient::connect(server.addr()).unwrap();
+    assert_eq!(rc.hello().unwrap().version, 1);
+    rc.configure(Some("bwa"), PredictorPolicy::KsPlus).unwrap();
+    rc.configure(Some("idx"), PredictorPolicy::WittLr).unwrap();
+
+    let wf = Workflow::eager();
+    let trace = wf.generate(77, 60);
+    let hist = &trace.task("bwa").unwrap().executions;
+    let (batch, streamed) = hist.split_at(hist.len() - 5);
+
+    // Train + observe over the wire...
+    assert_eq!(rc.train("bwa", batch).unwrap(), batch.len() as u64);
+    for (i, e) in streamed.iter().enumerate() {
+        let ack = rc.observe("bwa", e).unwrap();
+        assert_eq!(ack.executions, (batch.len() + i + 1) as u64);
+        assert_eq!(ack.predictor, "ksplus");
+    }
+    rc.train("idx", batch).unwrap();
+
+    // ...and replicate the identical sequence on an in-process store.
+    let mut store = ModelStore::new(3, 128.0, Backend::Native);
+    store.train("bwa", batch);
+    for e in streamed {
+        store.observe("bwa", e);
+    }
+
+    for input in [2500.0, 6000.0, 11000.0] {
+        let got = rc.plan("bwa", input).unwrap();
+        assert_eq!(got.predictor, "ksplus", "input {input}");
+        assert_eq!(got.model_version, hist.len() as u64);
+        assert_eq!(got.fallback_reason, None);
+        let want = store.plan_batch(&[("bwa", input)]);
+        // Bit-identical across training, planning, AND the JSON wire
+        // (shortest-roundtrip float formatting).
+        assert_eq!(got.plan.starts, want[0].starts, "input {input}");
+        assert_eq!(got.plan.peaks, want[0].peaks, "input {input}");
+    }
+
+    // The witt-bound task serves flat witt plans with its provenance.
+    let wt = rc.plan("idx", 6000.0).unwrap();
+    assert_eq!(wt.predictor, "witt-lr");
+    assert_eq!(wt.model_version, batch.len() as u64);
+    assert_eq!(wt.plan.k(), 1);
+    {
+        use ksplus::predictor::witt::{Offset, WittLr};
+        use ksplus::predictor::Predictor;
+        let mut want = WittLr::new(128.0, Offset::MeanSigma);
+        want.train(batch);
+        assert_eq!(wt.plan, want.plan(6000.0));
+    }
+
+    // An untrained task is a visible fallback, and counted.
+    let fb = rc.plan("mystery", 100.0).unwrap();
+    assert_eq!(fb.predictor, "default-limits");
+    assert_eq!(fb.fallback_reason, Some("untrained-task"));
+    let s = rc.stats().unwrap();
+    assert_eq!(s.fallbacks, 1);
+    assert_eq!(s.requests, 5);
+    assert_eq!(s.observations, 5);
 }
 
 #[test]

