@@ -26,10 +26,18 @@
 //!             └──fan-out───────▶ Stats : merged across every shard
 //! ```
 //!
-//! `Train`, `Observe`, and `Plan` route by a deterministic FNV-1a hash of
-//! the task name (`service::shard_for`), so one shard owns each task's
+//! `Train`, `Observe`, and `Plan` route by a consistent-hash ring over
+//! the live shard ids (`ring::HashRing`), so one shard owns each task's
 //! models and its plan traffic; `shards: 1` (the default) reproduces the
-//! original single-worker coordinator.
+//! original single-worker coordinator. The ring makes the pool *elastic*
+//! — shards can be added and removed at runtime, moving only ~1/N of the
+//! tasks, whose accumulators are handed off through the worker channels —
+//! and every state-changing message is dual-sent to the task's standby
+//! (next distinct shard clockwise), so a killed worker is restored from
+//! its neighbors with zero lost training (`service::Client::
+//! crash_restart_shard`). The full trained state snapshots to a
+//! versioned JSON document (`snapshot`) for restart-with-memory
+//! (`repro serve --snapshot-dir`).
 //!
 //! Every task is bound to a named **predictor policy**
 //! (`PredictorPolicy`): `ksplus` (the default, served by the fast path
@@ -54,8 +62,10 @@
 
 pub mod protocol;
 pub mod remote;
+pub mod ring;
 pub mod server;
 pub mod service;
+pub mod snapshot;
 
 use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
 use crate::predictor::regression::{LinModel, OlsStats};

@@ -33,9 +33,13 @@ use crate::util::json::Json;
 /// `max_version` is below it), with an `unsupported-version` error.
 pub const WIRE_VERSION: usize = 1;
 
-/// Every op of wire v1, in the order `hello` advertises them.
-pub const OPS: [&str; 7] =
-    ["hello", "configure", "train", "observe", "plan", "failure", "stats"];
+/// Every op of wire v1, in the order `hello` advertises them. The two
+/// admin ops (`snapshot`, `reshard`) ride the same version behind the
+/// `hello` capability list: a client that needs them checks `ops` before
+/// issuing one, so older servers fail loudly with `unknown-op` instead
+/// of half-working.
+pub const OPS: [&str; 9] =
+    ["hello", "configure", "train", "observe", "plan", "failure", "stats", "snapshot", "reshard"];
 
 /// Client-side placeholder for provenance strings a newer server sent
 /// that this build does not recognize (an unadvertised policy name, a
@@ -66,12 +70,18 @@ pub enum ErrorCode {
     /// Version negotiation failed (`hello.min_version` above ours, or
     /// `hello.max_version` below).
     UnsupportedVersion,
+    /// A request line exceeded the server's size cap. The connection is
+    /// closed after this error — the remaining bytes of the oversized
+    /// frame cannot be resynchronized.
+    RequestTooLarge,
+    /// The server is at its configured connection limit; retry later.
+    TooManyConnections,
     /// Server-side fault, or an unrecognized code from a newer peer.
     Internal,
 }
 
 impl ErrorCode {
-    pub const ALL: [ErrorCode; 10] = [
+    pub const ALL: [ErrorCode; 12] = [
         ErrorCode::InvalidJson,
         ErrorCode::UnknownOp,
         ErrorCode::MissingField,
@@ -81,6 +91,8 @@ impl ErrorCode {
         ErrorCode::InvalidPlan,
         ErrorCode::UnknownPolicy,
         ErrorCode::UnsupportedVersion,
+        ErrorCode::RequestTooLarge,
+        ErrorCode::TooManyConnections,
         ErrorCode::Internal,
     ];
 
@@ -95,6 +107,8 @@ impl ErrorCode {
             ErrorCode::InvalidPlan => "invalid-plan",
             ErrorCode::UnknownPolicy => "unknown-policy",
             ErrorCode::UnsupportedVersion => "unsupported-version",
+            ErrorCode::RequestTooLarge => "request-too-large",
+            ErrorCode::TooManyConnections => "too-many-connections",
             ErrorCode::Internal => "internal",
         }
     }
@@ -298,6 +312,10 @@ pub enum Request {
     /// policy; without, the KS+ segment-rescaling strategy.
     Failure { task: Option<String>, plan: StepPlan, fail_time: f64 },
     Stats,
+    /// Admin: export the full trained state as a snapshot document.
+    Snapshot,
+    /// Admin: resize the worker pool to exactly this many shards.
+    Reshard { shards: usize },
 }
 
 impl Request {
@@ -311,6 +329,8 @@ impl Request {
             Request::Plan { .. } => "plan",
             Request::Failure { .. } => "failure",
             Request::Stats => "stats",
+            Request::Snapshot => "snapshot",
+            Request::Reshard { .. } => "reshard",
         }
     }
 
@@ -371,6 +391,22 @@ impl Request {
                 fail_time: f64_field(&j, "fail_time")?,
             }),
             "stats" => Ok(Request::Stats),
+            "snapshot" => Ok(Request::Snapshot),
+            "reshard" => {
+                let shards = field(&j, "shards")?.as_usize().ok_or_else(|| {
+                    WireError::new(
+                        ErrorCode::InvalidField,
+                        "'shards' must be a non-negative integer",
+                    )
+                })?;
+                if shards == 0 {
+                    return Err(WireError::new(
+                        ErrorCode::InvalidField,
+                        "'shards' must be at least 1",
+                    ));
+                }
+                Ok(Request::Reshard { shards })
+            }
             other => {
                 Err(WireError::new(ErrorCode::UnknownOp, format!("unknown op '{other}'")))
             }
@@ -420,6 +456,10 @@ impl Request {
                 pairs.push(("fail_time", (*fail_time).into()));
             }
             Request::Stats => {}
+            Request::Snapshot => {}
+            Request::Reshard { shards } => {
+                pairs.push(("shards", (*shards).into()));
+            }
         }
         Json::obj(pairs)
     }
@@ -459,6 +499,10 @@ pub struct StatsSummary {
     /// Plans served by the untrained flat default — silent before this
     /// counter existed, now visible in every stats read.
     pub fallbacks: u64,
+    /// Connections refused at the server's max-connections limit.
+    pub conns_refused: u64,
+    /// Connections closed by the server's read timeout.
+    pub conn_timeouts: u64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
 }
@@ -473,6 +517,11 @@ pub enum Response {
     Planned(PlanOutcome),
     Retry(RetryOutcome),
     Stats(StatsSummary),
+    /// The full snapshot document, inline (same schema as the snapshot
+    /// file — see `coordinator::snapshot`).
+    Snapshot { doc: Json },
+    /// Resharding ack: the live shard ids after the resize.
+    Resharded { shard_ids: Vec<usize> },
 }
 
 impl Response {
@@ -524,8 +573,19 @@ impl Response {
                 pairs.push(("tasks_trained", (s.tasks_trained as usize).into()));
                 pairs.push(("observations", (s.observations as usize).into()));
                 pairs.push(("fallbacks", (s.fallbacks as usize).into()));
+                pairs.push(("conns_refused", (s.conns_refused as usize).into()));
+                pairs.push(("conn_timeouts", (s.conn_timeouts as usize).into()));
                 pairs.push(("latency_p50_us", s.latency_p50_us.into()));
                 pairs.push(("latency_p99_us", s.latency_p99_us.into()));
+            }
+            Response::Snapshot { doc } => {
+                pairs.push(("snapshot", doc.clone()));
+            }
+            Response::Resharded { shard_ids } => {
+                pairs.push((
+                    "shard_ids",
+                    Json::Arr(shard_ids.iter().map(|&id| id.into()).collect()),
+                ));
             }
         }
         Json::obj(pairs)
@@ -642,9 +702,36 @@ impl Response {
                 tasks_trained: u64_of("tasks_trained")?,
                 observations: u64_of("observations")?,
                 fallbacks: u64_of("fallbacks")?,
+                // Absent on pre-limits servers: default to 0 instead of
+                // failing the whole stats read.
+                conns_refused: j
+                    .get("conns_refused")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
+                conn_timeouts: j
+                    .get("conn_timeouts")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
                 latency_p50_us: f64_field(j, "latency_p50_us")?,
                 latency_p99_us: f64_field(j, "latency_p99_us")?,
             })),
+            "snapshot" => Ok(Response::Snapshot {
+                doc: field(j, "snapshot")?.clone(),
+            }),
+            "reshard" => {
+                let ids = field(j, "shard_ids")?.as_arr().ok_or_else(|| {
+                    inv("'shard_ids' must be an array")
+                })?;
+                let shard_ids = ids
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| {
+                            inv("'shard_ids' must contain non-negative integers")
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Response::Resharded { shard_ids })
+            }
             other => Err(WireError::new(
                 ErrorCode::UnknownOp,
                 format!("no response decoder for op '{other}'"),
@@ -696,6 +783,8 @@ mod tests {
                 fail_time: 0.0,
             },
             Request::Stats,
+            Request::Snapshot,
+            Request::Reshard { shards: 4 },
         ];
         for req in reqs {
             let line = req.to_json().to_string();
@@ -774,10 +863,22 @@ mod tests {
                     tasks_trained: 5,
                     observations: 7,
                     fallbacks: 2,
+                    conns_refused: 4,
+                    conn_timeouts: 1,
                     latency_p50_us: 12.5,
                     latency_p99_us: 90.25,
                 }),
             ),
+            (
+                "snapshot",
+                Response::Snapshot {
+                    doc: Json::obj(vec![
+                        ("schema", "ksplus-model-snapshot/v1".into()),
+                        ("tasks", Json::Arr(vec![])),
+                    ]),
+                },
+            ),
+            ("reshard", Response::Resharded { shard_ids: vec![0, 2, 5] }),
         ];
         for (op, resp) in cases {
             let j = resp.to_json();
@@ -850,6 +951,9 @@ mod tests {
                 ErrorCode::InvalidField,
             ),
             (r#"{"op":"hello","min_version":"two"}"#, ErrorCode::InvalidField),
+            (r#"{"op":"reshard"}"#, ErrorCode::MissingField),
+            (r#"{"op":"reshard","shards":"four"}"#, ErrorCode::InvalidField),
+            (r#"{"op":"reshard","shards":0}"#, ErrorCode::InvalidField),
         ];
         for (line, want) in table {
             match Request::parse(line) {
@@ -877,6 +981,21 @@ mod tests {
         let line = r#"{"ok":true,"observed":"t","executions":3,"predictor":"from-the-future"}"#;
         match Response::from_json(&Json::parse(line).unwrap(), "observe").unwrap() {
             Response::Observed(a) => assert_eq!(a.predictor, PROVENANCE_UNKNOWN),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_from_older_servers_default_connection_counters() {
+        // A pre-limits server omits conns_refused/conn_timeouts; the
+        // decode must not fail, just report zero.
+        let line = r#"{"ok":true,"shards":1,"requests":5,"batches":2,"failures_handled":0,"tasks_trained":1,"observations":0,"fallbacks":0,"latency_p50_us":10.0,"latency_p99_us":20.0}"#;
+        match Response::from_json(&Json::parse(line).unwrap(), "stats").unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.conns_refused, 0);
+                assert_eq!(s.conn_timeouts, 0);
+                assert_eq!(s.requests, 5);
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

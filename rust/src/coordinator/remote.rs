@@ -23,6 +23,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -42,9 +43,39 @@ pub struct RemoteClient {
 impl RemoteClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<RemoteClient> {
         let stream = TcpStream::connect(addr).context("connect to coordinator")?;
+        RemoteClient::from_stream(stream)
+    }
+
+    /// Like [`connect`](RemoteClient::connect), but bounds both the TCP
+    /// connect and every subsequent response read by `timeout` — a hung
+    /// or unreachable coordinator fails the call instead of blocking the
+    /// workflow engine forever.
+    pub fn connect_with_timeout<A: ToSocketAddrs>(
+        addr: A,
+        timeout: Duration,
+    ) -> Result<RemoteClient> {
+        let resolved = addr
+            .to_socket_addrs()
+            .context("resolve coordinator address")?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("coordinator address resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&resolved, timeout)
+            .with_context(|| format!("connect to coordinator at {resolved}"))?;
+        let mut rc = RemoteClient::from_stream(stream)?;
+        rc.set_read_timeout(Some(timeout))?;
+        Ok(rc)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<RemoteClient> {
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone().context("clone coordinator stream")?;
         Ok(RemoteClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Bound every response read. A read that times out leaves the
+    /// connection mid-frame — treat the client as dead and reconnect.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout).context("set read timeout")
     }
 
     /// Send one raw line and parse the reply as JSON. Escape hatch for
@@ -135,6 +166,25 @@ impl RemoteClient {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
             other => anyhow::bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+
+    /// Dump the server's full model state as a restorable snapshot
+    /// document (admin op; check `hello().ops` for `"snapshot"`).
+    pub fn snapshot(&mut self) -> Result<Json> {
+        match self.call(&Request::Snapshot)? {
+            Response::Snapshot { doc } => Ok(doc),
+            other => anyhow::bail!("unexpected response to snapshot: {other:?}"),
+        }
+    }
+
+    /// Resize the server's worker pool to `shards` workers; returns the
+    /// live shard ids after the resize (admin op; check `hello().ops`
+    /// for `"reshard"`).
+    pub fn reshard(&mut self, shards: usize) -> Result<Vec<usize>> {
+        match self.call(&Request::Reshard { shards })? {
+            Response::Resharded { shard_ids } => Ok(shard_ids),
+            other => anyhow::bail!("unexpected response to reshard: {other:?}"),
         }
     }
 }

@@ -15,14 +15,19 @@
 //!   {"op":"plan","task":"bwa","input_mb":8000.0}
 //!   {"op":"failure","task":"bwa","plan":{"starts":[..],"peaks":[..]},"fail_time":624.0}
 //!   {"op":"stats"}
+//!   {"op":"snapshot"}
+//!   {"op":"reshard","shards":4}
 //!
 //! `hello` negotiates the protocol version and advertises the op and
-//! policy lists. `configure` binds a task (or, without `task`, the
-//! service-wide default) to a predictor policy at runtime. `plan`
-//! responses carry provenance — `predictor`, `model_version`,
-//! `fallback_reason` — so callers can tell a trained KS+ plan from a
-//! default-limits fallback. `failure` with a `task` routes the retry
-//! through that task's bound policy.
+//! policy lists — a client checks that list for `"snapshot"` /
+//! `"reshard"` before attempting the admin ops. `configure` binds a task
+//! (or, without `task`, the service-wide default) to a predictor policy
+//! at runtime. `plan` responses carry provenance — `predictor`,
+//! `model_version`, `fallback_reason` — so callers can tell a trained
+//! KS+ plan from a default-limits fallback. `failure` with a `task`
+//! routes the retry through that task's bound policy. `snapshot` dumps
+//! the full model state as a restorable document; `reshard` resizes the
+//! worker pool in place (trained state migrates, plans are unchanged).
 //!
 //! Responses:
 //!   {"ok":true, ...}                                     on success
@@ -33,12 +38,21 @@
 //! clients' plan requests for tasks on the same shard are batched into
 //! single backend executions (one PJRT dispatch per flush when built
 //! with the `pjrt` feature). The `stats` op reports the merge across all
-//! shards.
+//! shards, plus the server's own connection counters.
+//!
+//! Connections are resource-bounded ([`ServerConfig`]): a request line
+//! larger than `max_line_bytes` is answered with `request-too-large` and
+//! the connection is closed (the remainder of an oversized frame cannot
+//! be resynchronized); connections past `max_conns` are refused with
+//! `too-many-connections`; a connection idle past `read_timeout` is
+//! closed and counted. Handler threads are tracked and joined — not
+//! detached — so `stop()` leaves no thread behind.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -46,24 +60,71 @@ use crate::coordinator::protocol::{
     ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, OPS,
     WIRE_VERSION,
 };
-use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig};
+use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig, MAX_SHARDS};
 use crate::coordinator::{BackendSpec, PredictorPolicy};
 use crate::util::json::Json;
+
+/// Resource limits for one server. The defaults are generous enough to
+/// never trip in normal operation while still bounding every resource a
+/// misbehaving client could otherwise grow without limit.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum concurrently served connections. Connection number
+    /// `max_conns + 1` receives a `too-many-connections` error line and
+    /// is closed without being served.
+    pub max_conns: usize,
+    /// Close a connection whose peer sends nothing for this long.
+    /// `None` (the default) waits forever, matching the pre-limit
+    /// behavior.
+    pub read_timeout: Option<Duration>,
+    /// Maximum length in bytes of one request line. Longer frames get a
+    /// `request-too-large` error and the connection is closed.
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_conns: 1024, read_timeout: None, max_line_bytes: 1 << 20 }
+    }
+}
+
+/// Connection counters owned by the server (workers report 0 for these;
+/// `dispatch` folds them into `stats` replies).
+#[derive(Default)]
+struct ConnCounters {
+    refused: AtomicU64,
+    timeouts: AtomicU64,
+}
 
 /// A running TCP front end over a coordinator `Client`.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
+    /// Live connections: the stream (so `stop()` can unblock a reader
+    /// with `shutdown`) and the handler thread (so `stop()` can join
+    /// it). The accept loop prunes finished entries as it goes.
+    conns: Arc<Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>>,
 }
 
 impl Server {
-    /// Bind `addr` (use port 0 for ephemeral) and serve until `stop()`.
+    /// Bind `addr` (use port 0 for ephemeral) and serve with default
+    /// limits until `stop()`.
     pub fn start(addr: &str, client: Client) -> Result<Server> {
+        Server::start_with_config(addr, client, ServerConfig::default())
+    }
+
+    /// Bind `addr` and serve with explicit resource limits.
+    pub fn start_with_config(addr: &str, client: Client, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(ConnCounters::default());
+        let cfg = Arc::new(cfg);
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
         let handle = std::thread::Builder::new()
             .name("ksplus-server-accept".into())
             .spawn(move || {
@@ -71,18 +132,46 @@ impl Server {
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
-                    match conn {
-                        Ok(stream) => {
-                            let c = client.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, c);
-                            });
-                        }
+                    let stream = match conn {
+                        Ok(s) => s,
                         Err(_) => break,
+                    };
+                    let mut guard = conns2.lock().unwrap();
+                    // Reap connections that already finished; their
+                    // joins are instant.
+                    let mut i = 0;
+                    while i < guard.len() {
+                        if guard[i].1.is_finished() {
+                            let (_, h) = guard.swap_remove(i);
+                            let _ = h.join();
+                        } else {
+                            i += 1;
+                        }
                     }
+                    if guard.len() >= cfg.max_conns {
+                        counters.refused.fetch_add(1, Ordering::Relaxed);
+                        let mut stream = stream;
+                        let err = WireError::new(
+                            ErrorCode::TooManyConnections,
+                            format!("server is at its limit of {} connections", cfg.max_conns),
+                        );
+                        let _ = writeln!(stream, "{}", err.to_json());
+                        continue; // dropping `stream` closes it
+                    }
+                    let c = client.clone();
+                    let cfg_c = cfg.clone();
+                    let counters_c = counters.clone();
+                    let tracked = match stream.try_clone() {
+                        Ok(t) => t,
+                        Err(_) => continue,
+                    };
+                    let h = std::thread::spawn(move || {
+                        let _ = handle_conn(stream, c, &cfg_c, &counters_c);
+                    });
+                    guard.push((tracked, h));
                 }
             })?;
-        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+        Ok(Server { addr: local, stop, accept_handle: Some(handle), conns })
     }
 
     /// Build a coordinator pool and a server over it in one call. Backend
@@ -102,7 +191,8 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting new connections (existing ones finish naturally).
+    /// Stop accepting, then unblock and join every live connection
+    /// handler.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Unblock accept() with a throwaway connection. A listener bound
@@ -123,6 +213,17 @@ impl Server {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        // With the accept loop gone, no new connections appear. Shut
+        // every live stream down — a handler blocked in a read sees EOF
+        // and returns — then join them all.
+        let drained: Vec<_> = {
+            let mut guard = self.conns.lock().unwrap();
+            std::mem::take(&mut *guard)
+        };
+        for (stream, handle) in drained {
+            let _ = stream.shutdown(Shutdown::Both);
+            let _ = handle.join();
+        }
     }
 }
 
@@ -132,28 +233,110 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, client: Client) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp: Json = match Request::parse(&line) {
-            Ok(req) => dispatch(req, &client),
-            Err(e) => e.to_json(),
+/// Outcome of reading one request line under a byte cap.
+enum LineRead {
+    Line(String),
+    /// Peer closed the connection (an unterminated final line is still
+    /// served; the next read sees the close).
+    Eof,
+    /// The frame exceeded the cap; the connection must be closed because
+    /// the rest of the oversized line cannot be skipped safely.
+    TooLong,
+    /// The peer sent nothing for the configured read timeout.
+    TimedOut,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes. Unlike
+/// `BufRead::lines`, this cannot be driven into unbounded allocation by
+/// a peer that streams bytes without ever sending a newline — the
+/// pre-limits server could be OOMed by exactly that.
+fn read_bounded_line(reader: &mut BufReader<TcpStream>, max: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (used, done) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Ok(LineRead::TimedOut)
+                }
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                return Ok(if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) if buf.len() + pos > max => (pos + 1, Some(LineRead::TooLong)),
+                Some(pos) => {
+                    buf.extend_from_slice(&chunk[..pos]);
+                    (pos + 1, Some(LineRead::Line(String::from_utf8_lossy(&buf).into_owned())))
+                }
+                None if buf.len() + chunk.len() > max => (chunk.len(), Some(LineRead::TooLong)),
+                None => {
+                    buf.extend_from_slice(chunk);
+                    (chunk.len(), None)
+                }
+            }
         };
-        writeln!(writer, "{resp}")?;
+        reader.consume(used);
+        if let Some(outcome) = done {
+            return Ok(outcome);
+        }
     }
-    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    client: Client,
+    cfg: &ServerConfig,
+    counters: &ConnCounters,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(cfg.read_timeout).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_bounded_line(&mut reader, cfg.max_line_bytes)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TimedOut => {
+                counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+            LineRead::TooLong => {
+                let err = WireError::new(
+                    ErrorCode::RequestTooLarge,
+                    format!(
+                        "request line exceeds the {}-byte limit; closing connection",
+                        cfg.max_line_bytes
+                    ),
+                );
+                writeln!(writer, "{}", err.to_json())?;
+                return Ok(());
+            }
+            LineRead::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp: Json = match Request::parse(&line) {
+                    Ok(req) => dispatch(req, &client, counters),
+                    Err(e) => e.to_json(),
+                };
+                writeln!(writer, "{resp}")?;
+            }
+        }
+    }
 }
 
 /// Serve one parsed request. Infallible after parsing, except version
-/// negotiation — the coordinator itself never errors on a well-formed
-/// request.
-fn dispatch(req: Request, client: &Client) -> Json {
+/// negotiation and the admin ops — the coordinator itself never errors
+/// on a well-formed data-path request.
+fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Json {
     match req {
         Request::Hello { min_version, max_version, .. } => {
             if let Some(min) = min_version {
@@ -212,10 +395,26 @@ fn dispatch(req: Request, client: &Client) -> Json {
                 tasks_trained: s.tasks_trained,
                 observations: s.observations,
                 fallbacks: s.fallbacks,
+                conns_refused: s.conns_refused + counters.refused.load(Ordering::Relaxed),
+                conn_timeouts: s.conn_timeouts + counters.timeouts.load(Ordering::Relaxed),
                 latency_p50_us: s.latency_percentile_us(50.0),
                 latency_p99_us: s.latency_percentile_us(99.0),
             })
             .to_json()
+        }
+        Request::Snapshot => Response::Snapshot { doc: client.snapshot_json() }.to_json(),
+        Request::Reshard { shards } => {
+            if shards < 1 || shards > MAX_SHARDS {
+                return WireError::new(
+                    ErrorCode::InvalidField,
+                    format!("'shards' must be between 1 and {MAX_SHARDS}"),
+                )
+                .to_json();
+            }
+            match client.set_shards(shards) {
+                Ok(shard_ids) => Response::Resharded { shard_ids }.to_json(),
+                Err(e) => WireError::new(ErrorCode::Internal, format!("reshard: {e:#}")).to_json(),
+            }
         }
     }
 }
@@ -234,6 +433,16 @@ mod tests {
             BackendSpec::Native,
         )
         .unwrap()
+    }
+
+    fn start_cfg(cfg: ServerConfig) -> (Coordinator, Server) {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let server = Server::start_with_config("127.0.0.1:0", coord.client(), cfg).unwrap();
+        (coord, server)
     }
 
     fn roundtrip(stream: &mut TcpStream, req: &str) -> Json {
@@ -307,6 +516,11 @@ mod tests {
         assert_eq!(ops.len(), OPS.len());
         for op in OPS {
             assert!(ops.iter().any(|o| o.as_str() == Some(op)), "missing op {op}");
+        }
+        // The admin ops ride the capability list, so a cautious client
+        // can feature-detect them before use.
+        for admin in ["snapshot", "reshard"] {
+            assert!(ops.iter().any(|o| o.as_str() == Some(admin)), "missing {admin}");
         }
         let policies = r.get("policies").unwrap().as_arr().unwrap();
         for p in PredictorPolicy::names() {
@@ -424,6 +638,8 @@ mod tests {
             r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1.0,"samples":[]}}"#,
             r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":0,"samples":[1.0]}}"#,
             r#"{"op":"configure","task":"x","policy":"nope"}"#,
+            r#"{"op":"reshard"}"#,
+            r#"{"op":"reshard","shards":0}"#,
         ] {
             let r = roundtrip(&mut s, bad);
             assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "req: {bad}");
@@ -435,6 +651,139 @@ mod tests {
         // Connection still usable afterwards.
         let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn oversized_request_line_gets_error_then_close() {
+        // Regression for the unbounded `reader.lines()` read path: a
+        // frame past the configured cap must produce a structured
+        // `request-too-large` error and a closed connection, not an
+        // unbounded allocation.
+        let cfg = ServerConfig { max_line_bytes: 4096, ..Default::default() };
+        let (_coord, server) = start_cfg(cfg);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let huge = format!(
+            r#"{{"op":"plan","task":"{}","input_mb":1}}"#,
+            "x".repeat(16 * 1024)
+        );
+        writeln!(s, "{huge}").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(&line).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("request-too-large")
+        );
+        // The connection is closed after the error (EOF, or a reset —
+        // the unread remainder of the frame may elicit an RST on some
+        // platforms).
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "connection must be closed after request-too-large");
+
+        // A fresh connection under the cap is served normally.
+        let mut s2 = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s2, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn connection_limit_refuses_with_wire_error_and_counts_it() {
+        let cfg = ServerConfig { max_conns: 2, ..Default::default() };
+        let (_coord, server) = start_cfg(cfg);
+        // Fill both slots, proving each is registered by serving a
+        // request on it before opening the next.
+        let mut s1 = TcpStream::connect(server.addr()).unwrap();
+        assert_eq!(roundtrip(&mut s1, r#"{"op":"stats"}"#).get("ok"), Some(&Json::Bool(true)));
+        let mut s2 = TcpStream::connect(server.addr()).unwrap();
+        assert_eq!(roundtrip(&mut s2, r#"{"op":"stats"}"#).get("ok"), Some(&Json::Bool(true)));
+        // The third connection is refused with the structured error...
+        let s3 = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(s3);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let r = Json::parse(&line).unwrap();
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("too-many-connections")
+        );
+        // ...and then closed.
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0);
+        // The refusal shows up in stats served to surviving connections.
+        let r = roundtrip(&mut s1, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("conns_refused").and_then(Json::as_usize), Some(1));
+        // Freeing a slot admits new connections again (the accept loop
+        // reaps finished handlers before counting).
+        drop(s2);
+        std::thread::sleep(Duration::from_millis(50));
+        let mut s4 = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s4, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+
+    #[test]
+    fn idle_connection_is_closed_and_counted() {
+        let cfg = ServerConfig {
+            read_timeout: Some(Duration::from_millis(80)),
+            ..Default::default()
+        };
+        let (_coord, server) = start_cfg(cfg);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        // The connection works while active...
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("conn_timeouts").and_then(Json::as_usize), Some(0));
+        // ...then goes idle past the timeout: the server closes it.
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "idle connection must be closed by the server");
+        // A fresh connection sees the timeout counted.
+        let mut s2 = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s2, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("conn_timeouts").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn snapshot_and_reshard_over_the_wire() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        roundtrip(&mut s, &train_req());
+        let before = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":6000}"#);
+        assert_eq!(before.get("ok"), Some(&Json::Bool(true)));
+
+        // Snapshot returns a restorable document.
+        let r = roundtrip(&mut s, r#"{"op":"snapshot"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        let doc = r.get("snapshot").expect("missing snapshot payload");
+        assert!(doc.get("schema").and_then(Json::as_str).is_some());
+        assert!(doc
+            .get("tasks")
+            .and_then(Json::as_arr)
+            .map(|t| !t.is_empty())
+            .unwrap_or(false));
+
+        // Reshard to 3 workers; hello and stats agree on the new width,
+        // and the trained task plans bit-identically afterwards.
+        let r = roundtrip(&mut s, r#"{"op":"reshard","shards":3}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("shard_ids").and_then(Json::as_arr).map(Vec::len), Some(3));
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("shards").and_then(Json::as_usize), Some(3));
+        let after = roundtrip(&mut s, r#"{"op":"plan","task":"bwa","input_mb":6000}"#);
+        assert_eq!(before.get("plan"), after.get("plan"));
+        assert_eq!(before.get("model_version"), after.get("model_version"));
+
+        // Out-of-range widths are rejected with invalid-field.
+        let r = roundtrip(&mut s, r#"{"op":"reshard","shards":100000}"#);
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("invalid-field")
+        );
     }
 
     #[test]
@@ -471,6 +820,23 @@ mod tests {
     fn stop_unblocks_accept() {
         let (_coord, mut server) = start();
         server.stop(); // must not hang
+    }
+
+    #[test]
+    fn stop_joins_live_connections() {
+        // A connection sitting idle in a blocking read (no read timeout
+        // configured) must not wedge `stop()`: the server shuts the
+        // stream down and joins the handler.
+        let (_coord, mut server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        server.stop(); // must not hang with `s` still open and idle
+        // The server side of the connection is gone.
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0);
     }
 
     #[test]

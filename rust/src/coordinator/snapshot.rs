@@ -1,0 +1,564 @@
+//! Versioned snapshot/restore for `ModelStore` — the persistence layer
+//! that makes the coordinator crash-safe.
+//!
+//! A trained task is tiny: 2k `OlsStats` accumulators (five `f64`s each),
+//! a policy binding, a fallback peak, and an observation count — a few
+//! hundred bytes. Non-KS+ policies additionally carry their bounded
+//! retained history window (at most `ALT_HISTORY_CAP` executions). This
+//! module serializes exactly that state, and *only* that state: the
+//! closed-form models are NOT persisted, because they are a pure function
+//! of the accumulators (`OlsStats::fit`) and of the retained history
+//! (`Predictor::train`). Restoring refits from the raw numbers, and since
+//! the crate's JSON formats `f64`s shortest-roundtrip (bit-exact through
+//! a parse), a restored store serves **bit-identical plans** to the store
+//! it was snapshotted from — the property the persistence tests pin.
+//!
+//! Three layers share the [`TaskState`] unit:
+//!   * the on-disk snapshot file (`snapshot.json`, schema
+//!     [`SNAPSHOT_SCHEMA`], written atomically via rename),
+//!   * the `snapshot` wire op (the same JSON document, inline), and
+//!   * in-process shard handoff (resharding and replica recovery move
+//!     `Vec<TaskState>` through the worker channels without touching
+//!     JSON at all).
+//!
+//! Restore is strict: the schema string, `k`, and `capacity_gb` must
+//! match the receiving store — silently reinterpreting accumulators fit
+//! under different hyperparameters would serve wrong plans with full
+//! confidence.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::protocol::{execution_from_json, execution_to_json};
+use super::{AltModel, ModelStore, PredictorPolicy, TaskModels, ALT_HISTORY_CAP};
+use crate::predictor::regression::OlsStats;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+/// Schema tag of the snapshot document; bump on breaking layout changes.
+pub const SNAPSHOT_SCHEMA: &str = "ksplus-model-snapshot/v1";
+
+/// File name of the current snapshot inside a snapshot directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Serializable per-task model state: the complete learned state of one
+/// task, sufficient to reconstruct bit-identical plans. This is the unit
+/// moved between shards during resharding and replica recovery, and the
+/// unit stored in the snapshot file's `tasks` array.
+#[derive(Debug, Clone)]
+pub struct TaskState {
+    pub task: String,
+    /// The task's effective policy binding.
+    pub policy: PredictorPolicy,
+    /// KS+ sufficient-statistics state, if any.
+    pub ks: Option<KsState>,
+    /// Non-KS+ retained-history state, if any.
+    pub alt: Option<AltState>,
+}
+
+/// The KS+ fast path's learned state: raw accumulators, not models.
+#[derive(Debug, Clone)]
+pub struct KsState {
+    /// The 2k regressions' sufficient statistics (k starts, then k peaks).
+    pub stats: Vec<OlsStats>,
+    pub fallback_peak: f64,
+    pub observed: u64,
+}
+
+/// A non-KS+ policy's learned state: the bounded history window its
+/// predictor is refit from, plus the policy that owns it.
+#[derive(Debug, Clone)]
+pub struct AltState {
+    pub policy: PredictorPolicy,
+    pub history: Vec<Execution>,
+    pub observed: u64,
+}
+
+/// Parsed snapshot document: store-wide settings plus every task.
+#[derive(Debug, Clone)]
+pub struct SnapshotDoc {
+    pub k: usize,
+    pub capacity_gb: f64,
+    pub default_policy: PredictorPolicy,
+    pub tasks: Vec<TaskState>,
+}
+
+fn ols_to_json(s: &OlsStats) -> Json {
+    Json::obj(vec![
+        ("n", s.n.into()),
+        ("sx", s.sx.into()),
+        ("sy", s.sy.into()),
+        ("sxx", s.sxx.into()),
+        ("sxy", s.sxy.into()),
+    ])
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a number"))
+}
+
+fn ols_from_json(j: &Json) -> Result<OlsStats> {
+    Ok(OlsStats {
+        n: f64_of(j, "n")?,
+        sx: f64_of(j, "sx")?,
+        sy: f64_of(j, "sy")?,
+        sxx: f64_of(j, "sxx")?,
+        sxy: f64_of(j, "sxy")?,
+    })
+}
+
+fn policy_of_json(j: &Json, key: &str) -> Result<PredictorPolicy> {
+    let name = j
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a string"))?;
+    PredictorPolicy::parse(name).ok_or_else(|| anyhow!("unknown policy '{name}' in snapshot"))
+}
+
+impl TaskState {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("task", Json::from(self.task.as_str())),
+            ("policy", self.policy.name().into()),
+        ];
+        if let Some(ks) = &self.ks {
+            fields.push((
+                "ks",
+                Json::obj(vec![
+                    ("stats", Json::Arr(ks.stats.iter().map(ols_to_json).collect())),
+                    ("fallback_peak", ks.fallback_peak.into()),
+                    ("observed", (ks.observed as usize).into()),
+                ]),
+            ));
+        }
+        if let Some(alt) = &self.alt {
+            fields.push((
+                "alt",
+                Json::obj(vec![
+                    ("policy", alt.policy.name().into()),
+                    (
+                        "history",
+                        Json::Arr(alt.history.iter().map(execution_to_json).collect()),
+                    ),
+                    ("observed", (alt.observed as usize).into()),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TaskState> {
+        let task = j
+            .get("task")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("snapshot task entry without a 'task' name"))?
+            .to_string();
+        let policy = policy_of_json(j, "policy")?;
+        let ks = match j.get("ks") {
+            None => None,
+            Some(kj) => {
+                let stats = kj
+                    .get("stats")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("task '{task}': 'ks.stats' missing"))?
+                    .iter()
+                    .map(ols_from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("task '{task}'"))?;
+                Some(KsState {
+                    stats,
+                    fallback_peak: f64_of(kj, "fallback_peak")
+                        .with_context(|| format!("task '{task}'"))?,
+                    observed: f64_of(kj, "observed")
+                        .with_context(|| format!("task '{task}'"))?
+                        as u64,
+                })
+            }
+        };
+        let alt = match j.get("alt") {
+            None => None,
+            Some(aj) => {
+                let history = aj
+                    .get("history")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("task '{task}': 'alt.history' missing"))?
+                    .iter()
+                    .map(|e| execution_from_json(&task, e))
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| anyhow!("task '{task}': bad history execution: {e}"))?;
+                Some(AltState {
+                    policy: policy_of_json(aj, "policy")
+                        .with_context(|| format!("task '{task}'"))?,
+                    history,
+                    observed: f64_of(aj, "observed")
+                        .with_context(|| format!("task '{task}'"))?
+                        as u64,
+                })
+            }
+        };
+        Ok(TaskState { task, policy, ks, alt })
+    }
+}
+
+/// Assemble the full snapshot document from store settings + task states.
+pub fn snapshot_to_json(
+    k: usize,
+    capacity_gb: f64,
+    default_policy: PredictorPolicy,
+    tasks: &[TaskState],
+) -> Json {
+    Json::obj(vec![
+        ("schema", SNAPSHOT_SCHEMA.into()),
+        ("k", k.into()),
+        ("capacity_gb", capacity_gb.into()),
+        ("default_policy", default_policy.name().into()),
+        ("tasks", Json::Arr(tasks.iter().map(TaskState::to_json).collect())),
+    ])
+}
+
+/// Parse and validate a snapshot document (schema check included).
+pub fn parse_snapshot(doc: &Json) -> Result<SnapshotDoc> {
+    let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
+    if schema != SNAPSHOT_SCHEMA {
+        bail!("unsupported snapshot schema '{schema}' (this build reads '{SNAPSHOT_SCHEMA}')");
+    }
+    let k = doc
+        .get("k")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("snapshot 'k' missing or not an integer"))?;
+    let capacity_gb = f64_of(doc, "capacity_gb")?;
+    let default_policy = policy_of_json(doc, "default_policy")?;
+    let tasks = doc
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("snapshot 'tasks' missing or not an array"))?
+        .iter()
+        .map(TaskState::from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SnapshotDoc { k, capacity_gb, default_policy, tasks })
+}
+
+impl ModelStore {
+    /// Every task name with any recorded state *or* an explicit policy
+    /// binding — the set a snapshot or a shard handoff must cover
+    /// (`tasks()` alone misses configure-only bindings).
+    pub fn stateful_tasks(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.extend(self.alt.keys().cloned());
+        v.extend(self.policies.keys().cloned());
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Extract one task's complete learned state, or `None` if the store
+    /// has nothing recorded for it.
+    pub fn export_task(&self, task: &str) -> Option<TaskState> {
+        let bound = self.policies.get(task).copied();
+        let ks = self.models.get(task).map(|tm| KsState {
+            stats: tm.stats.clone(),
+            fallback_peak: tm.fallback_peak,
+            observed: tm.observed,
+        });
+        let alt = self.alt.get(task).map(|am| AltState {
+            policy: am.policy,
+            history: am.history.clone(),
+            observed: am.observed,
+        });
+        if bound.is_none() && ks.is_none() && alt.is_none() {
+            return None;
+        }
+        Some(TaskState {
+            task: task.to_string(),
+            policy: bound.unwrap_or(self.default_policy),
+            ks,
+            alt,
+        })
+    }
+
+    /// Drop every trace of a task (models, history, binding).
+    pub fn remove_task(&mut self, task: &str) {
+        self.models.remove(task);
+        self.alt.remove(task);
+        self.policies.remove(task);
+    }
+
+    /// Overwrite this store's state for `st.task` with the imported
+    /// state. Closed-form models are refit from the raw accumulators and
+    /// the retained history — pure functions of the imported numbers —
+    /// so an exported-then-imported task serves bit-identical plans.
+    pub fn import_task(&mut self, st: TaskState) -> Result<()> {
+        if let Some(ks) = &st.ks {
+            if ks.stats.len() != 2 * self.k {
+                bail!(
+                    "task '{}' carries {} accumulators but this store's k={} needs {}",
+                    st.task,
+                    ks.stats.len(),
+                    self.k,
+                    2 * self.k
+                );
+            }
+        }
+        self.remove_task(&st.task);
+        self.policies.insert(st.task.clone(), st.policy);
+        if let Some(ks) = st.ks {
+            let mut tm = TaskModels {
+                stats: ks.stats,
+                start_models: Vec::new(),
+                peak_models: Vec::new(),
+                fallback_peak: ks.fallback_peak,
+                observed: ks.observed,
+            };
+            tm.refit(self.k);
+            self.models.insert(st.task.clone(), tm);
+        }
+        if let Some(mut alt) = st.alt {
+            if alt.history.len() > ALT_HISTORY_CAP {
+                // Defensive: exports never exceed the cap, but a
+                // hand-edited file must not grow the window.
+                alt.history.drain(..alt.history.len() - ALT_HISTORY_CAP);
+            }
+            let mut pred = alt.policy.build(self.k, self.capacity_gb);
+            if !alt.history.is_empty() {
+                pred.train(&alt.history);
+            }
+            self.alt.insert(
+                st.task.clone(),
+                AltModel {
+                    policy: alt.policy,
+                    pred,
+                    history: alt.history,
+                    observed: alt.observed,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize the store's complete learned state as a versioned JSON
+    /// document (settings + every task's `TaskState`).
+    pub fn snapshot(&self) -> Json {
+        let tasks: Vec<TaskState> = self
+            .stateful_tasks()
+            .iter()
+            .filter_map(|t| self.export_task(t))
+            .collect();
+        snapshot_to_json(self.k, self.capacity_gb, self.default_policy, &tasks)
+    }
+
+    /// Load a snapshot produced by [`ModelStore::snapshot`], replacing
+    /// state for every task it carries (tasks absent from the snapshot
+    /// are left alone). Strict about hyperparameters: the snapshot's `k`
+    /// and `capacity_gb` must match this store's. Returns the number of
+    /// tasks restored.
+    pub fn restore(&mut self, doc: &Json) -> Result<usize> {
+        let snap = parse_snapshot(doc)?;
+        if snap.k != self.k {
+            bail!("snapshot was taken with k={} but this store runs k={}", snap.k, self.k);
+        }
+        if snap.capacity_gb != self.capacity_gb {
+            bail!(
+                "snapshot was taken with capacity_gb={} but this store runs capacity_gb={}",
+                snap.capacity_gb,
+                self.capacity_gb
+            );
+        }
+        self.default_policy = snap.default_policy;
+        let n = snap.tasks.len();
+        for st in snap.tasks {
+            self.import_task(st)?;
+        }
+        Ok(n)
+    }
+}
+
+/// Path of the snapshot file inside a snapshot directory.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join(SNAPSHOT_FILE)
+}
+
+/// Write a snapshot document atomically (`.tmp` + rename), creating the
+/// directory if needed. A crash mid-write never corrupts the previous
+/// snapshot. Returns the final path.
+pub fn write_snapshot_file(dir: &Path, doc: &Json) -> Result<PathBuf> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = snapshot_path(dir);
+    let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+    fs::write(&tmp, format!("{doc}\n")).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(path)
+}
+
+/// Read the snapshot file from a directory; `Ok(None)` when none exists
+/// yet (a fresh start, not an error).
+pub fn read_snapshot_file(dir: &Path) -> Result<Option<Json>> {
+    let path = snapshot_path(dir);
+    let text = match fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
+    };
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+    Ok(Some(doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::util::rng::Rng;
+
+    fn exec(task: &str, input: f64, rng: &mut Rng) -> Execution {
+        let d1 = ((input * 0.01) as usize).clamp(2, 40);
+        let d2 = ((input * 0.003) as usize).clamp(1, 20);
+        let mut s = vec![input * 0.0005; d1];
+        s.extend(vec![input * 0.001; d2]);
+        for v in s.iter_mut() {
+            *v *= 1.0 - 0.01 * rng.f64();
+        }
+        Execution::new(task, input, 1.0, s)
+    }
+
+    fn store_with_every_policy(k: usize) -> ModelStore {
+        let mut store = ModelStore::new(k, 128.0, Backend::Native);
+        let mut rng = Rng::new(0xA11CE);
+        for (i, p) in PredictorPolicy::ALL.iter().enumerate() {
+            let task = format!("task-{}", p.name());
+            store.configure(&task, *p);
+            for _ in 0..12 {
+                let e = exec(&task, 2000.0 + 700.0 * i as f64 + rng.uniform(0.0, 6000.0), &mut rng);
+                store.observe(&task, &e);
+            }
+        }
+        // A configure-only binding with no trained state must survive too.
+        store.configure("bound-only", PredictorPolicy::TovarPpm);
+        store
+    }
+
+    fn assert_same_plans(a: &ModelStore, b: &ModelStore) {
+        for task in a.stateful_tasks() {
+            assert_eq!(a.policy_of(&task), b.policy_of(&task), "{task}");
+            for input in [500.0, 2500.0, 7000.0, 14000.0] {
+                let pa = a.plan_batch_outcomes(&[(task.as_str(), input)]);
+                let pb = b.plan_batch_outcomes(&[(task.as_str(), input)]);
+                assert_eq!(pa, pb, "task {task} input {input}");
+            }
+        }
+    }
+
+    #[test]
+    fn ols_stats_roundtrip_bit_exact_through_text() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let mut s = OlsStats::default();
+            for _ in 0..10 {
+                s.push(rng.uniform(0.0, 1e5), rng.uniform(0.0, 1e3));
+            }
+            let text = ols_to_json(&s).to_string();
+            let back = ols_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(s, back, "accumulators must survive text bit-exactly");
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical_for_every_policy() {
+        let store = store_with_every_policy(3);
+        let doc = store.snapshot();
+        // Through the full text layer, as the file and the wire would.
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        let mut restored = ModelStore::new(3, 128.0, Backend::Native);
+        let n = restored.restore(&reparsed).unwrap();
+        assert_eq!(n, PredictorPolicy::ALL.len() + 1);
+        assert_same_plans(&store, &restored);
+        // Model versions (observation counts) survive exactly.
+        for p in PredictorPolicy::ALL {
+            let task = format!("task-{}", p.name());
+            let va = store.plan_batch_outcomes(&[(task.as_str(), 3000.0)])[0].model_version;
+            let vb = restored.plan_batch_outcomes(&[(task.as_str(), 3000.0)])[0].model_version;
+            assert_eq!(va, vb, "{task}");
+        }
+        assert_eq!(restored.policy_of("bound-only"), PredictorPolicy::TovarPpm);
+    }
+
+    #[test]
+    fn alt_history_window_task_survives_restore() {
+        // A task past the retention cap: the snapshot carries only the
+        // window, but the observation count and served plans must match.
+        let total = ALT_HISTORY_CAP + 24;
+        let mut store = ModelStore::new(2, 128.0, Backend::Native);
+        store.configure("w", PredictorPolicy::WittLr);
+        for i in 0..total {
+            let input = 1000.0 + i as f64;
+            store.observe("w", &Execution::new("w", input, 1.0, vec![0.001 * input, 0.002 * input]));
+        }
+        let doc = Json::parse(&store.snapshot().to_string()).unwrap();
+        let mut restored = ModelStore::new(2, 128.0, Backend::Native);
+        restored.restore(&doc).unwrap();
+        let a = store.plan_batch_outcomes(&[("w", 5000.0)]);
+        let b = restored.plan_batch_outcomes(&[("w", 5000.0)]);
+        assert_eq!(a, b);
+        assert_eq!(a[0].model_version, total as u64);
+    }
+
+    #[test]
+    fn restore_keeps_counting_from_where_the_snapshot_left_off() {
+        // Observing after a restore continues the same trajectory the
+        // original store would have taken (accumulators, not models, are
+        // what the snapshot carries).
+        let mut rng = Rng::new(99);
+        let execs: Vec<Execution> = (0..20).map(|_| exec("bwa", rng.uniform(2000.0, 9000.0), &mut rng)).collect();
+        let mut original = ModelStore::new(2, 128.0, Backend::Native);
+        for e in &execs[..10] {
+            original.observe("bwa", e);
+        }
+        let doc = Json::parse(&original.snapshot().to_string()).unwrap();
+        let mut restored = ModelStore::new(2, 128.0, Backend::Native);
+        restored.restore(&doc).unwrap();
+        for e in &execs[10..] {
+            original.observe("bwa", e);
+            restored.observe("bwa", e);
+        }
+        assert_same_plans(&original, &restored);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_schema_k_and_capacity() {
+        let store = store_with_every_policy(2);
+        let doc = store.snapshot();
+        let mut wrong_k = ModelStore::new(3, 128.0, Backend::Native);
+        let err = wrong_k.restore(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("k="), "{err:#}");
+        let mut wrong_cap = ModelStore::new(2, 64.0, Backend::Native);
+        let err = wrong_cap.restore(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+        let bad = Json::obj(vec![("schema", "nope/v9".into())]);
+        let mut fresh = ModelStore::new(2, 128.0, Backend::Native);
+        let err = fresh.restore(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+    }
+
+    #[test]
+    fn snapshot_file_roundtrips_atomically() {
+        let dir = std::env::temp_dir()
+            .join(format!("ksplus-snapshot-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert!(read_snapshot_file(&dir).unwrap().is_none(), "no file yet");
+        let store = store_with_every_policy(2);
+        let doc = store.snapshot();
+        let path = write_snapshot_file(&dir, &doc).unwrap();
+        assert!(path.ends_with(SNAPSHOT_FILE));
+        let back = read_snapshot_file(&dir).unwrap().expect("snapshot written");
+        let mut restored = ModelStore::new(2, 128.0, Backend::Native);
+        restored.restore(&back).unwrap();
+        assert_same_plans(&store, &restored);
+        // No .tmp litter after a successful write.
+        assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -41,6 +41,13 @@ pub struct LoadGenConfig {
     /// Predictor policy every task trains and serves under — measures a
     /// baseline-serving workload instead of the KS+ default.
     pub policy: PredictorPolicy,
+    /// Chaos mode: crash-and-restore this many shards (round-robin, one
+    /// at a time, spaced through the run) while the clients hammer the
+    /// pool. Each kill amnesia-wipes one shard and restores it from its
+    /// ring-standby replicas; the run still fails if a single
+    /// observation is lost or an invalid plan is served. Requires
+    /// `shards >= 2` (a lone shard has no standby).
+    pub chaos_kills: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -54,6 +61,7 @@ impl Default for LoadGenConfig {
             workflow: "eager".to_string(),
             spec: BackendSpec::Native,
             policy: PredictorPolicy::KsPlus,
+            chaos_kills: 0,
         }
     }
 }
@@ -79,6 +87,8 @@ pub struct LoadGenReport {
     pub observes_per_s: f64,
     /// Plan requests each shard served, in shard order.
     pub per_shard_requests: Vec<u64>,
+    /// Shard crash/restore cycles performed during the run.
+    pub chaos_kills: u64,
 }
 
 impl LoadGenReport {
@@ -102,6 +112,7 @@ impl LoadGenReport {
                     self.per_shard_requests.iter().map(|&r| (r as usize).into()).collect(),
                 ),
             ),
+            ("chaos_kills", (self.chaos_kills as usize).into()),
         ])
     }
 }
@@ -148,6 +159,10 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(
         (0.0..=1.0).contains(&cfg.observe_frac),
         "observe_frac must be in [0, 1]"
+    );
+    anyhow::ensure!(
+        cfg.chaos_kills == 0 || cfg.shards >= 2,
+        "chaos kills need at least 2 shards (a lone shard has no standby to restore from)"
     );
     let wf = Workflow::by_name(&cfg.workflow)
         .with_context(|| format!("unknown workflow '{}'", cfg.workflow))?;
@@ -203,6 +218,27 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     let per_client = cfg.requests.div_ceil(cfg.clients);
     let observe_frac = cfg.observe_frac;
     let t0 = Instant::now();
+    // Chaos thread: crash/restore shards round-robin while the clients
+    // run. Kills are spaced so the clients interleave real traffic with
+    // each amnesia-wipe-and-restore cycle.
+    let chaos_handle = (cfg.chaos_kills > 0).then(|| {
+        let cl = coord.client();
+        let target = cfg.chaos_kills as u64;
+        std::thread::spawn(move || -> Result<u64> {
+            let ids = cl.shard_ids();
+            let mut kills = 0u64;
+            let mut i = 0usize;
+            while kills < target {
+                std::thread::sleep(Duration::from_millis(10));
+                let id = ids[i % ids.len()];
+                i += 1;
+                cl.crash_restart_shard(id)
+                    .with_context(|| format!("chaos crash/restore of shard {id}"))?;
+                kills += 1;
+            }
+            Ok(kills)
+        })
+    });
     let mut handles = Vec::with_capacity(cfg.clients);
     for c in 0..cfg.clients {
         let cl = coord.client();
@@ -238,11 +274,19 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     // is a service bug, not a load characteristic — fail loudly rather
     // than skewing throughput.
     anyhow::ensure!(invalid == 0, "coordinator returned {invalid} invalid plans");
+    let chaos_kills = match chaos_handle {
+        Some(h) => h.join().map_err(|_| anyhow::anyhow!("chaos thread panicked"))??,
+        None => 0,
+    };
     let served = (per_client * cfg.clients) as u64;
     let elapsed = t0.elapsed().max(Duration::from_nanos(1));
 
     let per_shard = client.shard_stats();
     let stats = ServiceStats::merged(&per_shard);
+    // The strongest chaos assertion available to a black-box load run:
+    // every acked observation is still counted after every kill, because
+    // a crash wipes a shard's models, not its ledgers, and the training
+    // state itself is re-folded from the standby replicas.
     anyhow::ensure!(
         stats.observations == observes,
         "coordinator lost observations: {} issued, {} recorded",
@@ -263,6 +307,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         observes,
         observes_per_s: observes as f64 / elapsed.as_secs_f64(),
         per_shard_requests: per_shard.iter().map(|s| s.requests).collect(),
+        chaos_kills,
     })
 }
 
@@ -331,6 +376,31 @@ mod tests {
         assert!(run(&LoadGenConfig { shards: 0, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { observe_frac: 1.5, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { observe_frac: -0.1, ..Default::default() }).is_err());
+        // Chaos on a single shard: no standby, refused up front.
+        assert!(run(&LoadGenConfig { shards: 1, chaos_kills: 1, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn loadgen_survives_chaos_kills_without_losing_observes() {
+        // Shards die and come back from their replicas mid-run; the run's
+        // own invariants (zero invalid plans, zero lost observations) do
+        // the asserting.
+        let r = run(&LoadGenConfig {
+            shards: 3,
+            clients: 4,
+            requests: 300,
+            observe_frac: 0.5,
+            chaos_kills: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 300);
+        assert_eq!(r.chaos_kills, 3);
+        assert!(r.observes > 0, "no observes issued at frac 0.5");
+        assert_eq!(
+            r.to_json().get("chaos_kills").and_then(Json::as_usize),
+            Some(3)
+        );
     }
 
     #[test]

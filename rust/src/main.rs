@@ -234,7 +234,32 @@ fn backend_spec_from_flag(backend: &str) -> Result<BackendSpec> {
     Ok(spec)
 }
 
+/// Deterministic fingerprint of the plans the service would serve: one
+/// fixed-input plan per trained task (sorted by name), hashed over the
+/// exact f64 bits via the plan's shortest-roundtrip text form. Two
+/// coordinators print the same fingerprint iff they serve bit-identical
+/// plans — CI compares this line across a snapshot/restore cycle.
+fn plan_fingerprint(client: &ksplus::coordinator::service::Client, tasks: &[String]) -> u64 {
+    let mut text = String::new();
+    let mut sorted: Vec<&String> = tasks.iter().collect();
+    sorted.sort();
+    for task in sorted {
+        for input in [1500.0, 6000.0, 9000.0] {
+            let out = client.plan_detailed(task, input);
+            text.push_str(&format!(
+                "{task}/{input}:{:?}/{:?}/{}/{}/{:?};",
+                out.plan.starts, out.plan.peaks, out.predictor, out.model_version,
+                out.fallback_reason
+            ));
+        }
+    }
+    ksplus::util::fnv1a(&text)
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    use ksplus::coordinator::server::{Server, ServerConfig};
+    use ksplus::coordinator::snapshot;
+
     let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
         .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
         .flag("requests", "number of plan requests (smoke mode)", Some("1000"))
@@ -246,7 +271,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             Some("ksplus"),
         )
         .flag("workflow", "training workflow", Some("eager"))
-        .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None);
+        .flag("listen", "serve the JSON wire protocol on this addr (e.g. 127.0.0.1:7070)", None)
+        .flag(
+            "snapshot-dir",
+            "restore model state from this directory on start and persist it there \
+             (periodically in listen mode, on exit in smoke mode)",
+            None,
+        )
+        .flag("snapshot-every", "seconds between periodic snapshots in listen mode", Some("30"))
+        .flag("max-conns", "maximum concurrent wire connections", Some("1024"))
+        .flag(
+            "idle-timeout",
+            "close wire connections idle for this many seconds (0 = never)",
+            Some("0"),
+        );
     let a = cmd.parse(argv)?;
     let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
     let policy = policy_from_flag(a.get("policy").unwrap())?;
@@ -263,24 +301,61 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         spec,
     )?;
     let client = coord.client();
-    for t in &trace.tasks {
-        client.train(&t.task, t.executions.clone());
+    let snapshot_dir = a.get("snapshot-dir").map(PathBuf::from);
+
+    // Crash-safety: a snapshot on disk wins over the synthetic
+    // pre-training — restoring it reproduces the exact pre-crash plans.
+    let mut restored = 0usize;
+    if let Some(dir) = &snapshot_dir {
+        if let Some(doc) = snapshot::read_snapshot_file(dir)? {
+            restored = client.restore_snapshot(&doc)?;
+            println!(
+                "restored {restored} task models from {}",
+                snapshot::snapshot_path(dir).display()
+            );
+        }
     }
+    if restored == 0 {
+        for t in &trace.tasks {
+            client.train(&t.task, t.executions.clone());
+        }
+    }
+    let task_names: Vec<String> = trace.tasks.iter().map(|t| t.task.clone()).collect();
+
     if let Some(addr) = a.get("listen") {
         // Server mode: expose the newline-JSON wire protocol and block.
-        let server = ksplus::coordinator::server::Server::start(addr, coord.client())?;
+        let idle = a.get_u64("idle-timeout")?;
+        let server_cfg = ServerConfig {
+            max_conns: a.get_usize("max-conns")?,
+            read_timeout: (idle > 0).then(|| std::time::Duration::from_secs(idle)),
+            ..Default::default()
+        };
+        let server = Server::start_with_config(addr, coord.client(), server_cfg)?;
         println!(
             "serving {} predictions on {} ({} task models pre-trained, {} shard(s))\n\
              protocol: wire v1, one JSON object per line — op: hello | configure | train |\n\
-             observe | plan | failure | stats (see docs/PROTOCOL.md)\n\
+             observe | plan | failure | stats | snapshot | reshard (see docs/PROTOCOL.md)\n\
              Ctrl-C to stop.",
             policy.name(),
             server.addr(),
             trace.tasks.len(),
             shards
         );
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+        let every = a.get_u64("snapshot-every")?;
+        match &snapshot_dir {
+            Some(dir) if every > 0 => {
+                // Periodic persistence: a crash loses at most `every`
+                // seconds of training.
+                let dir = dir.clone();
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(every));
+                    let path = snapshot::write_snapshot_file(&dir, &client.snapshot_json())?;
+                    eprintln!("snapshot written to {}", path.display());
+                }
+            }
+            _ => loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            },
         }
     }
     let n = a.get_usize("requests")?;
@@ -301,6 +376,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("throughput     : {:.0} plans/s", n as f64 / elapsed.as_secs_f64());
     println!("latency p50    : {:.0} us", stats.latency_percentile_us(50.0));
     println!("latency p99    : {:.0} us", stats.latency_percentile_us(99.0));
+    println!("plan fingerprint: {:016x}", plan_fingerprint(&client, &task_names));
+    if let Some(dir) = &snapshot_dir {
+        let path = snapshot::write_snapshot_file(dir, &client.snapshot_json())?;
+        println!("snapshot       : {}", path.display());
+    }
     Ok(())
 }
 
@@ -321,6 +401,12 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     )
     .flag("workflow", "training workflow", Some("eager"))
     .flag("backend", "native or pjrt", Some(DEFAULT_BACKEND))
+    .flag(
+        "chaos-kills",
+        "crash/restore this many shards mid-run (needs >= 2 shards); the run fails if any \
+         observation is lost",
+        Some("0"),
+    )
     .flag("out", "write per-run JSON reports to this directory", None)
     .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
@@ -330,14 +416,20 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let clients = a.get_usize("clients")?;
     let requests = a.get_usize("requests")?;
     let observe_frac = a.get_f64("observe-frac")?;
+    let chaos_kills = a.get_usize("chaos-kills")?;
 
     println!(
-        "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {} ==",
+        "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {}{} ==",
         clients,
         requests,
         observe_frac,
         policy.name(),
-        a.get("backend").unwrap()
+        a.get("backend").unwrap(),
+        if chaos_kills > 0 {
+            format!(", chaos-kills {chaos_kills}")
+        } else {
+            String::new()
+        }
     );
     println!(
         "{:>6}  {:>10}  {:>9}  {:>9}  {:>10}  {:>10}  shard spread",
@@ -355,6 +447,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             workflow: a.get("workflow").unwrap().to_string(),
             spec: spec.clone(),
             policy,
+            chaos_kills,
         })?;
         let speedup = match baseline {
             None => {
@@ -426,7 +519,10 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
     let info = rc.hello()?;
     anyhow::ensure!(info.version == 1, "unexpected wire version {}", info.version);
     anyhow::ensure!(info.shards == shards, "hello reports {} shards", info.shards);
-    for op in ["hello", "configure", "train", "observe", "plan", "failure", "stats"] {
+    for op in [
+        "hello", "configure", "train", "observe", "plan", "failure", "stats", "snapshot",
+        "reshard",
+    ] {
         anyhow::ensure!(info.ops.iter().any(|o| o == op), "hello does not advertise {op}");
     }
     anyhow::ensure!(
@@ -508,6 +604,8 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
         ),
         (r#"{"op":"configure","task":"x","policy":"nope"}"#, "unknown-policy"),
         (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
+        (r#"{"op":"reshard"}"#, "missing-field"),
+        (r#"{"op":"reshard","shards":0}"#, "invalid-field"),
     ] {
         let j = rc.raw(line)?;
         anyhow::ensure!(
@@ -520,16 +618,44 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
     // The connection survived every error.
     let s = rc.stats()?;
     anyhow::ensure!(s.requests == 3, "error handling leaked plan requests");
+    anyhow::ensure!(
+        s.conns_refused == 0 && s.conn_timeouts == 0,
+        "unexpected connection counters: refused {} timeouts {}",
+        s.conns_refused,
+        s.conn_timeouts
+    );
+
+    // snapshot: a restorable document covering every trained task.
+    let doc = rc.snapshot()?;
+    anyhow::ensure!(
+        doc.get("schema").and_then(Json::as_str).is_some(),
+        "snapshot carries no schema: {doc}"
+    );
+    let snap_tasks = doc.get("tasks").and_then(Json::as_arr).map(Vec::len).unwrap_or(0);
+    anyhow::ensure!(snap_tasks >= 2, "snapshot covers {snap_tasks} tasks, expected >= 2");
+
+    // reshard: grow then shrink the pool; the plans a client sees must
+    // be bit-identical across both moves (trained state migrates).
+    let before = rc.plan("smoke-ks", 7000.0)?;
+    let ids = rc.reshard(shards + 1)?;
+    anyhow::ensure!(ids.len() == shards + 1, "reshard grew to {} shards", ids.len());
+    let grown = rc.plan("smoke-ks", 7000.0)?;
+    anyhow::ensure!(grown == before, "growing the pool changed a plan");
+    let ids = rc.reshard(shards)?;
+    anyhow::ensure!(ids.len() == shards, "reshard shrank to {} shards", ids.len());
+    let shrunk = rc.plan("smoke-ks", 7000.0)?;
+    anyhow::ensure!(shrunk == before, "shrinking the pool changed a plan");
 
     println!(
         "protocol-smoke: wire v{} OK — {} ops, {} policies, {} shard(s), default policy {}, \
-         provenance + fallback counting + {} error classes verified",
+         provenance + fallback counting + snapshot/reshard plan parity + {} error classes \
+         verified",
         info.version,
         info.ops.len(),
         info.policies.len(),
         shards,
         policy.name(),
-        8
+        10
     );
     Ok(())
 }

@@ -136,6 +136,17 @@ fn remote_client_roundtrips_every_op() {
     assert_eq!(s.observations, 1);
     assert_eq!(s.failures_handled, 1);
     assert_eq!(s.fallbacks, 0);
+    assert_eq!(s.conns_refused, 0);
+    assert_eq!(s.conn_timeouts, 0);
+
+    // Admin ops: snapshot dumps a restorable doc, reshard resizes the
+    // pool without touching the plans a client sees.
+    let doc = rc.snapshot().unwrap();
+    assert!(doc.get("schema").and_then(Json::as_str).is_some(), "{doc}");
+    let ids = rc.reshard(3).unwrap();
+    assert_eq!(ids.len(), 3);
+    let out2 = rc.plan("a", 5000.0).unwrap();
+    assert_eq!(out2, out, "resharding changed a served plan");
 }
 
 #[test]
