@@ -1,0 +1,994 @@
+//! Single-threaded event-loop coordinator server.
+//!
+//! One loop thread owns every socket: it accepts connections, reads
+//! bytes, splits them into frames on the connection's negotiated wire
+//! ([`Wire::V1`] JSON lines or [`Wire::V2`] binary), and hands decoded
+//! [`Request`]s to a small pool of dispatch workers so a slow shard
+//! never stalls the loop. Responses come back as encoded bytes tagged
+//! with a per-connection sequence number; the loop flushes them in
+//! request order, which is what makes pipelining safe: a client may
+//! write N requests back-to-back and read N responses in the same
+//! order, even though the dispatch pool executes them in parallel.
+//!
+//! Readiness comes from [`poll::Poller`] (epoll/kqueue, level
+//! triggered); idle connections are reaped through a coarse
+//! [`TimerWheel`]. The threaded server in [`super::server`] stays as
+//! the parity oracle — both front ends call the same
+//! [`service::dispatch`], so behavior differences are wire bugs by
+//! construction.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::mem;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::poll::{drain_waker, waker_pair, Event, Poller, Waker};
+use crate::coordinator::protocol::{ErrorCode, Request, WireError};
+use crate::coordinator::server::ServerConfig;
+use crate::coordinator::service::{
+    dispatch, Client, ConnCounters, Coordinator, CoordinatorConfig, Dispatched,
+};
+use crate::coordinator::timer::TimerWheel;
+use crate::coordinator::wire::{
+    decode_request, encode_error, encode_response, FrameSplit, Wire,
+};
+use crate::coordinator::BackendSpec;
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKER: usize = 1;
+/// Connection tokens start here; `token - TOKEN_BASE` is the slab index.
+const TOKEN_BASE: usize = 2;
+
+/// Per-connection state owned by the loop thread.
+struct Conn {
+    stream: TcpStream,
+    /// Monotonic identity. Slab slots are recycled, so completions and
+    /// timer entries carry the id and are dropped when it mismatches.
+    id: u64,
+    /// Codec for frames *read from* this connection. Captured per
+    /// request at decode time, so responses straddling a mid-pipeline
+    /// `hello` upgrade still encode on the wire their request used.
+    wire: Wire,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Sequence number the next decoded request gets.
+    next_seq: u64,
+    /// Sequence number the next response to hit `wbuf` must carry.
+    flush_seq: u64,
+    /// Out-of-order completions parked until their turn.
+    pending: BTreeMap<u64, Vec<u8>>,
+    /// Peer EOF seen or a fatal protocol error queued: stop reading,
+    /// flush what is owed, then close.
+    draining: bool,
+    last_activity: Instant,
+    interest_r: bool,
+    interest_w: bool,
+}
+
+/// A decoded request travelling to the dispatch pool.
+struct Work {
+    token: usize,
+    conn_id: u64,
+    seq: u64,
+    wire: Wire,
+    req: Request,
+}
+
+/// An encoded response travelling back to the loop.
+struct Done {
+    token: usize,
+    conn_id: u64,
+    seq: u64,
+    bytes: Vec<u8>,
+}
+
+struct QueueState {
+    work: VecDeque<Work>,
+    stopping: bool,
+}
+
+/// State shared between the loop thread and the dispatch workers.
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    completions: Mutex<Vec<Done>>,
+    waker: Waker,
+    client: Client,
+    counters: Arc<ConnCounters>,
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        let work = loop {
+            if let Some(w) = q.work.pop_front() {
+                break w;
+            }
+            if q.stopping {
+                return;
+            }
+            q = shared.cv.wait(q).unwrap();
+        };
+        drop(q);
+        let bytes = match dispatch(work.req, &shared.client, &shared.counters) {
+            Dispatched::Reply(resp) => encode_response(work.wire, &resp),
+            Dispatched::Error(err) => encode_error(work.wire, &err),
+            // Hellos are handled inline by the loop (the codec switch
+            // must be ordered against frame parsing); if one ever lands
+            // here, answer it on the request's wire without switching.
+            Dispatched::Hello(resp, _) => encode_response(work.wire, &resp),
+        };
+        shared.completions.lock().unwrap().push(Done {
+            token: work.token,
+            conn_id: work.conn_id,
+            seq: work.seq,
+            bytes,
+        });
+        shared.waker.wake();
+        q = shared.queue.lock().unwrap();
+    }
+}
+
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    waker_rx: UnixStream,
+    slab: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    live: usize,
+    next_conn_id: u64,
+    wheel: Option<TimerWheel>,
+    cfg: ServerConfig,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let timeout = self
+                .wheel
+                .as_ref()
+                .and_then(|w| w.next_wakeup(Instant::now()));
+            match self.poller.wait(&mut events, timeout) {
+                Ok(()) => {}
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => drain_waker(&self.waker_rx),
+                    token => {
+                        let idx = token - TOKEN_BASE;
+                        if ev.readable {
+                            self.conn_readable(idx);
+                        }
+                        if ev.writable {
+                            self.after_io(idx);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            self.reap_idle();
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if self.live >= self.cfg.max_conns {
+            self.shared.counters.refused.fetch_add(1, Ordering::Relaxed);
+            // Same refusal the threaded server sends, best-effort; the
+            // peer has not negotiated yet, so it speaks v1.
+            let err = WireError::new(
+                ErrorCode::TooManyConnections,
+                format!(
+                    "server is at its limit of {} connections",
+                    self.cfg.max_conns
+                ),
+            );
+            let _ = stream.set_nonblocking(false);
+            let mut stream = stream;
+            let _ = stream.write_all(&encode_error(Wire::V1, &err));
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let idx = match self.free.pop() {
+            Some(idx) => idx,
+            None => {
+                self.slab.push(None);
+                self.slab.len() - 1
+            }
+        };
+        let token = idx + TOKEN_BASE;
+        if self
+            .poller
+            .register(stream.as_raw_fd(), token, true, false)
+            .is_err()
+        {
+            self.free.push(idx);
+            return;
+        }
+        let id = self.next_conn_id;
+        self.next_conn_id += 1;
+        let now = Instant::now();
+        if let (Some(wheel), Some(timeout)) = (self.wheel.as_mut(), self.cfg.read_timeout) {
+            wheel.schedule(now + timeout, token, id);
+        }
+        self.slab[idx] = Some(Conn {
+            stream,
+            id,
+            wire: Wire::V1,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            flush_seq: 0,
+            pending: BTreeMap::new(),
+            draining: false,
+            last_activity: now,
+            interest_r: true,
+            interest_w: false,
+        });
+        self.live += 1;
+    }
+
+    fn conn_readable(&mut self, idx: usize) {
+        let mut dead = false;
+        {
+            let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            if conn.draining {
+                return;
+            }
+            let mut chunk = [0u8; 64 * 1024];
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.draining = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                        conn.last_activity = Instant::now();
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close(idx);
+            return;
+        }
+        self.parse_frames(idx);
+        self.after_io(idx);
+    }
+
+    /// Split the read buffer into frames on the connection's current
+    /// wire, dispatching each. Hellos are handled inline so the codec
+    /// switch is ordered against later frames already in the buffer.
+    fn parse_frames(&mut self, idx: usize) {
+        let cfg_max = self.cfg.max_frame_bytes;
+        let shared = Arc::clone(&self.shared);
+        let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+            Some(c) => c,
+            None => return,
+        };
+        let mut new_work = false;
+        loop {
+            match conn.wire.split(&conn.rbuf[conn.rpos..], cfg_max) {
+                FrameSplit::Incomplete => break,
+                FrameSplit::TooLarge => {
+                    let seq = conn.next_seq;
+                    conn.next_seq += 1;
+                    let err = WireError::new(
+                        ErrorCode::RequestTooLarge,
+                        format!(
+                            "request exceeds the {}-byte limit; closing connection",
+                            cfg_max
+                        ),
+                    );
+                    conn.pending.insert(seq, encode_error(conn.wire, &err));
+                    conn.draining = true;
+                    break;
+                }
+                FrameSplit::Frame { consumed, from, to } => {
+                    let payload_from = conn.rpos + from;
+                    let payload_to = conn.rpos + to;
+                    conn.rpos += consumed;
+                    let decoded =
+                        decode_request(conn.wire, &conn.rbuf[payload_from..payload_to]);
+                    match decoded {
+                        Ok(None) => {} // blank v1 line: no reply
+                        Ok(Some(req @ Request::Hello { .. })) => {
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
+                            match dispatch(req, &shared.client, &shared.counters) {
+                                Dispatched::Hello(resp, version) => {
+                                    // STARTTLS-style: the answer travels
+                                    // on the wire the hello arrived on;
+                                    // everything after switches.
+                                    conn.pending
+                                        .insert(seq, encode_response(conn.wire, &resp));
+                                    if let Some(w) = Wire::from_version(version) {
+                                        conn.wire = w;
+                                    }
+                                }
+                                Dispatched::Reply(resp) => {
+                                    conn.pending
+                                        .insert(seq, encode_response(conn.wire, &resp));
+                                }
+                                Dispatched::Error(err) => {
+                                    conn.pending.insert(seq, encode_error(conn.wire, &err));
+                                }
+                            }
+                        }
+                        Ok(Some(req)) => {
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
+                            shared.queue.lock().unwrap().work.push_back(Work {
+                                token: idx + TOKEN_BASE,
+                                conn_id: conn.id,
+                                seq,
+                                wire: conn.wire,
+                                req,
+                            });
+                            new_work = true;
+                        }
+                        Err(err) => {
+                            // Malformed frame: structured error, stay open
+                            // (matches the threaded server's behavior).
+                            let seq = conn.next_seq;
+                            conn.next_seq += 1;
+                            conn.pending.insert(seq, encode_error(conn.wire, &err));
+                        }
+                    }
+                }
+            }
+        }
+        if conn.rpos > 0 {
+            conn.rbuf.drain(..conn.rpos);
+            conn.rpos = 0;
+        }
+        if new_work {
+            shared.cv.notify_all();
+        }
+    }
+
+    /// Move in-order completions into the write buffer, flush as much
+    /// as the socket accepts, then settle interest/close state.
+    fn after_io(&mut self, idx: usize) {
+        {
+            let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            while let Some(bytes) = conn.pending.remove(&conn.flush_seq) {
+                conn.flush_seq += 1;
+                conn.wbuf.extend_from_slice(&bytes);
+            }
+        }
+        if !self.try_write(idx) {
+            self.close(idx);
+            return;
+        }
+        let (close_now, want_r, want_w, fd, token, change) = {
+            let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => return,
+            };
+            let flushed = conn.wbuf.is_empty();
+            let close_now = conn.draining && conn.flush_seq == conn.next_seq && flushed;
+            let want_r = !conn.draining;
+            let want_w = !flushed;
+            let change = want_r != conn.interest_r || want_w != conn.interest_w;
+            conn.interest_r = want_r;
+            conn.interest_w = want_w;
+            (
+                close_now,
+                want_r,
+                want_w,
+                conn.stream.as_raw_fd(),
+                idx + TOKEN_BASE,
+                change,
+            )
+        };
+        if close_now {
+            self.close(idx);
+        } else if change {
+            let _ = self.poller.reregister(fd, token, want_r, want_w);
+        }
+    }
+
+    /// Returns false when the connection died mid-write.
+    fn try_write(&mut self, idx: usize) -> bool {
+        let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+            Some(c) => c,
+            None => return true,
+        };
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => conn.wpos += n,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        }
+        true
+    }
+
+    fn drain_completions(&mut self) {
+        let done = mem::take(&mut *self.shared.completions.lock().unwrap());
+        let mut touched = Vec::new();
+        for d in done {
+            let idx = d.token - TOKEN_BASE;
+            let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => continue,
+            };
+            if conn.id != d.conn_id {
+                continue; // completion for a closed, recycled slot
+            }
+            conn.pending.insert(d.seq, d.bytes);
+            if !touched.contains(&idx) {
+                touched.push(idx);
+            }
+        }
+        for idx in touched {
+            self.after_io(idx);
+        }
+    }
+
+    fn reap_idle(&mut self) {
+        let timeout = match self.cfg.read_timeout {
+            Some(t) => t,
+            None => return,
+        };
+        let wheel = match self.wheel.as_mut() {
+            Some(w) => w,
+            None => return,
+        };
+        let now = Instant::now();
+        let due = wheel.expire(now);
+        let mut reap = Vec::new();
+        for (token, conn_id) in due {
+            let idx = token - TOKEN_BASE;
+            let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
+                Some(c) => c,
+                None => continue,
+            };
+            if conn.id != conn_id {
+                continue; // stale entry for a recycled slot
+            }
+            let deadline = conn.last_activity + timeout;
+            if now >= deadline {
+                reap.push(idx);
+            } else {
+                wheel.schedule(deadline, token, conn_id);
+            }
+        }
+        for idx in reap {
+            // Matches the threaded server: an idle timeout counts and
+            // closes without a goodbye frame.
+            self.shared.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+            self.close(idx);
+        }
+    }
+
+    fn close(&mut self, idx: usize) {
+        if let Some(conn) = self.slab.get_mut(idx).and_then(Option::take) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            self.free.push(idx);
+            self.live -= 1;
+        }
+    }
+}
+
+/// Handle to a running event-loop server. Mirrors
+/// [`super::server::Server`]'s lifecycle API so call sites can swap
+/// front ends without touching anything else.
+pub struct EventLoopServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    loop_handle: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EventLoopServer {
+    pub fn start(addr: impl ToSocketAddrs, client: Client) -> Result<EventLoopServer> {
+        EventLoopServer::start_with_config(addr, client, ServerConfig::default())
+    }
+
+    /// Build a coordinator for `spec` and serve it, mirroring
+    /// `Server::start_with_backend` so front ends swap freely.
+    pub fn start_with_backend(
+        addr: impl ToSocketAddrs,
+        config: CoordinatorConfig,
+        spec: BackendSpec,
+    ) -> Result<(Coordinator, EventLoopServer)> {
+        let coord = Coordinator::start(config, spec).context("start coordinator")?;
+        let server = EventLoopServer::start(addr, coord.client())?;
+        Ok((coord, server))
+    }
+
+    pub fn start_with_config(
+        addr: impl ToSocketAddrs,
+        client: Client,
+        cfg: ServerConfig,
+    ) -> Result<EventLoopServer> {
+        let listener = TcpListener::bind(addr).context("binding event-loop listener")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let poller = Poller::new().context("creating readiness poller")?;
+        let (waker, waker_rx) = waker_pair().context("creating loop waker")?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .context("registering listener")?;
+        poller
+            .register(waker_rx.as_raw_fd(), TOKEN_WAKER, true, false)
+            .context("registering waker")?;
+
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                work: VecDeque::new(),
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            completions: Mutex::new(Vec::new()),
+            waker,
+            client,
+            counters: Arc::new(ConnCounters::default()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let n_workers = if cfg.dispatch_threads == 0 {
+            thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 16)
+        } else {
+            cfg.dispatch_threads
+        };
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("ksplus-dispatch-{i}"))
+                    .spawn(move || worker(shared))
+                    .context("spawning dispatch worker")?,
+            );
+        }
+
+        let wheel = cfg
+            .read_timeout
+            .map(|t| TimerWheel::new(t, Instant::now()));
+        let mut el = EventLoop {
+            poller,
+            listener,
+            waker_rx,
+            slab: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            next_conn_id: 0,
+            wheel,
+            cfg,
+            shared: Arc::clone(&shared),
+            stop: Arc::clone(&stop),
+        };
+        let loop_handle = thread::Builder::new()
+            .name("ksplus-eventloop".to_string())
+            .spawn(move || el.run())
+            .context("spawning event loop")?;
+
+        Ok(EventLoopServer {
+            addr,
+            stop,
+            shared,
+            loop_handle: Some(loop_handle),
+            workers,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the loop and the dispatch pool. Live connections are
+    /// dropped; queued-but-undispatched requests are discarded.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.shared.waker.wake();
+        if let Some(h) = self.loop_handle.take() {
+            let _ = h.join();
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.stopping = true;
+            q.work.clear();
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventLoopServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{Response, WIRE_V2, WIRE_VERSION};
+    use crate::coordinator::wire::{decode_response, encode_request, read_frame, FrameRead};
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader};
+    use std::time::Duration;
+
+    fn start() -> (Coordinator, EventLoopServer) {
+        start_cfg(ServerConfig::default())
+    }
+
+    fn start_cfg(cfg: ServerConfig) -> (Coordinator, EventLoopServer) {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let server =
+            EventLoopServer::start_with_config("127.0.0.1:0", coord.client(), cfg).unwrap();
+        (coord, server)
+    }
+
+    fn connect(server: &EventLoopServer) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Json {
+        writeln!(stream, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(&resp).unwrap()
+    }
+
+    fn err_code(resp: &Json) -> Option<&str> {
+        resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str)
+    }
+
+    fn train_req(task: &str) -> String {
+        format!(
+            r#"{{"op":"train","task":"{task}","history":[{{"input_mb":100,"dt":1.0,"samples":[1.0,2.0,3.0]}},{{"input_mb":200,"dt":1.0,"samples":[2.0,4.0,6.0]}}]}}"#
+        )
+    }
+
+    fn read_v2(reader: &mut BufReader<TcpStream>, op: &str) -> Result<Response, WireError> {
+        match read_frame(reader, Wire::V2, 1 << 24).unwrap() {
+            FrameRead::Frame(payload) => decode_response(Wire::V2, &payload, op),
+            other => panic!("expected a frame for op {op}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn serves_v1_json_unchanged() {
+        let (_coord, server) = start();
+        let (mut stream, mut reader) = connect(&server);
+
+        let resp = roundtrip(&mut stream, &mut reader, &train_req("ingest"));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("executions").and_then(Json::as_usize), Some(2));
+
+        // A blank line is skipped without a reply, like the threaded
+        // server: the next line's response is the first thing we read.
+        stream.write_all(b"\n").unwrap();
+        let resp = roundtrip(
+            &mut stream,
+            &mut reader,
+            r#"{"op":"plan","task":"ingest","input_mb":150}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("predictor").and_then(Json::as_str), Some("ksplus"));
+        assert!(resp.get("plan").is_some());
+
+        let resp = roundtrip(&mut stream, &mut reader, "not json at all");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(err_code(&resp), Some("invalid-json"));
+
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"warp"}"#);
+        assert_eq!(err_code(&resp), Some("unknown-op"));
+
+        // Errors do not wedge the connection.
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn hello_upgrades_to_v2_binary() {
+        let (_coord, server) = start();
+        let (mut stream, mut reader) = connect(&server);
+
+        // The hello travels as JSON; its *response* is still JSON.
+        let resp = roundtrip(
+            &mut stream,
+            &mut reader,
+            r#"{"op":"hello","min_version":1,"max_version":2}"#,
+        );
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(WIRE_V2));
+
+        // Everything after is binary, both directions.
+        let train = Request::parse(&train_req("etl")).unwrap();
+        stream.write_all(&encode_request(Wire::V2, &train)).unwrap();
+        match read_v2(&mut reader, "train").expect("train should succeed") {
+            Response::Trained { executions, .. } => assert_eq!(executions, 2),
+            other => panic!("unexpected response: {other:?}"),
+        }
+
+        let plan = Request::Plan { task: "etl".to_string(), input_mb: 150.0 };
+        stream.write_all(&encode_request(Wire::V2, &plan)).unwrap();
+        match read_v2(&mut reader, "plan").expect("plan should succeed") {
+            Response::Planned(o) => {
+                assert_eq!(o.predictor, "ksplus");
+                assert!(o.plan.is_valid());
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_get_in_order_responses() {
+        let (_coord, server) = start();
+        let (mut stream, mut reader) = connect(&server);
+
+        // Eight observes for distinct tasks written in one burst; the
+        // dispatch pool may execute them in any order, but responses
+        // must come back in request order.
+        let mut batch = String::new();
+        for i in 0..8 {
+            batch.push_str(&format!(
+                r#"{{"op":"observe","task":"t{i}","execution":{{"input_mb":10,"dt":1.0,"samples":[1.0,2.0]}}}}"#
+            ));
+            batch.push('\n');
+        }
+        stream.write_all(batch.as_bytes()).unwrap();
+        for i in 0..8 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(
+                resp.get("observed").and_then(Json::as_str),
+                Some(format!("t{i}")).as_deref(),
+                "response {i} out of order"
+            );
+        }
+
+        // Same property on the binary wire after an upgrade.
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"hello","max_version":2}"#);
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(WIRE_V2));
+        let mut batch = Vec::new();
+        for i in 0..8 {
+            let req = Request::Observe {
+                task: format!("t{i}"),
+                execution: crate::trace::Execution::new(
+                    format!("t{i}"),
+                    20.0,
+                    1.0,
+                    vec![1.0, 2.0],
+                ),
+            };
+            batch.extend_from_slice(&encode_request(Wire::V2, &req));
+        }
+        stream.write_all(&batch).unwrap();
+        for i in 0..8 {
+            match read_v2(&mut reader, "observe")
+                .unwrap_or_else(|e| panic!("observe {i} failed: {e:?}"))
+            {
+                Response::Observed(ack) => {
+                    assert_eq!(ack.task, format!("t{i}"), "response {i} out of order");
+                    assert_eq!(ack.executions, 2, "t{i} saw both observes");
+                }
+                other => panic!("unexpected response: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_on_both_wires() {
+        let cfg = ServerConfig { max_frame_bytes: 4096, ..Default::default() };
+
+        // v1: a line over the cap draws the structured error, then EOF.
+        let (_coord, server) = start_cfg(cfg);
+        let (mut stream, mut reader) = connect(&server);
+        writeln!(stream, r#"{{"op":"plan","task":"{}"}}"#, "x".repeat(8192)).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(err_code(&resp), Some("request-too-large"));
+        line.clear();
+        let n = reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "connection must close after request-too-large");
+
+        // v2: the refusal happens on the 4-byte header alone — the
+        // oversized payload is never read, let alone allocated.
+        let (mut stream, mut reader) = connect(&server);
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"hello","max_version":2}"#);
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(WIRE_V2));
+        stream.write_all(&(1u32 << 20).to_le_bytes()).unwrap();
+        let err = read_v2(&mut reader, "plan").expect_err("expected request-too-large");
+        assert_eq!(err.code, ErrorCode::RequestTooLarge);
+        let mut one = [0u8; 1];
+        let n = stream.read(&mut one).unwrap_or(0);
+        assert_eq!(n, 0, "connection must close after the error frame");
+    }
+
+    #[test]
+    fn connection_limit_refuses_with_wire_error_and_counts_it() {
+        let (_coord, server) =
+            start_cfg(ServerConfig { max_conns: 2, ..Default::default() });
+        // Prove both slots are admitted by serving a request on each.
+        let (mut s1, mut r1) = connect(&server);
+        assert_eq!(
+            roundtrip(&mut s1, &mut r1, r#"{"op":"stats"}"#).get("ok"),
+            Some(&Json::Bool(true))
+        );
+        let (mut s2, mut r2) = connect(&server);
+        assert_eq!(
+            roundtrip(&mut s2, &mut r2, r#"{"op":"stats"}"#).get("ok"),
+            Some(&Json::Bool(true))
+        );
+
+        let (_s3, mut r3) = connect(&server);
+        let mut line = String::new();
+        r3.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(err_code(&resp), Some("too-many-connections"));
+        line.clear();
+        assert_eq!(r3.read_line(&mut line).unwrap_or(0), 0, "refused conn closes");
+
+        let resp = roundtrip(&mut s1, &mut r1, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("conns_refused").and_then(Json::as_usize), Some(1));
+
+        // Freeing a slot admits new connections again.
+        drop(s2);
+        drop(r2);
+        std::thread::sleep(Duration::from_millis(50));
+        let (mut s4, mut r4) = connect(&server);
+        assert_eq!(
+            roundtrip(&mut s4, &mut r4, r#"{"op":"stats"}"#).get("ok"),
+            Some(&Json::Bool(true))
+        );
+    }
+
+    #[test]
+    fn idle_connection_is_reaped_and_counted() {
+        let (_coord, server) = start_cfg(ServerConfig {
+            read_timeout: Some(Duration::from_millis(80)),
+            ..Default::default()
+        });
+        let (_idle, mut idle_reader) = connect(&server);
+        let mut buf = String::new();
+        // The reaper closes us without a goodbye; read_line sees EOF.
+        assert_eq!(idle_reader.read_line(&mut buf).unwrap_or(0), 0);
+
+        let (mut s, mut r) = connect(&server);
+        let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("conn_timeouts").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn stop_joins_with_a_live_connection() {
+        let (_coord, mut server) = start();
+        let (mut s, mut r) = connect(&server);
+        let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        server.stop(); // must not hang with `s` still open and idle
+        let mut line = String::new();
+        assert_eq!(r.read_line(&mut line).unwrap_or(0), 0);
+    }
+
+    #[test]
+    fn concurrent_connections_share_the_coordinator() {
+        let (_coord, server) = start();
+        {
+            let (mut s, mut r) = connect(&server);
+            roundtrip(&mut s, &mut r, &train_req("shared"));
+        }
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            handles.push(thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                for _ in 0..5 {
+                    let resp = roundtrip(
+                        &mut stream,
+                        &mut reader,
+                        r#"{"op":"plan","task":"shared","input_mb":50}"#,
+                    );
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (mut s, mut r) = connect(&server);
+        let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
+        assert_eq!(
+            resp.get("requests").and_then(Json::as_usize),
+            Some(80),
+            "16 clients x 5 plans (train and stats are not counted)"
+        );
+    }
+
+    #[test]
+    fn negotiation_is_conservative_over_the_wire() {
+        let (_coord, server) = start();
+        let (mut stream, mut reader) = connect(&server);
+        // A v1-only hello stays on v1 even though the server can do v2.
+        let resp = roundtrip(
+            &mut stream,
+            &mut reader,
+            r#"{"op":"hello","min_version":1,"max_version":1}"#,
+        );
+        assert_eq!(resp.get("version").and_then(Json::as_usize), Some(WIRE_VERSION));
+        // Still JSON after.
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+}

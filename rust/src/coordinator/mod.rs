@@ -60,12 +60,18 @@
 //! (native-only) builds the same flush runs the closed-form OLS
 //! in-process. The Python stack is never invoked either way.
 
+#[cfg(unix)]
+pub mod eventloop;
+#[cfg(unix)]
+pub mod poll;
 pub mod protocol;
 pub mod remote;
 pub mod ring;
 pub mod server;
 pub mod service;
 pub mod snapshot;
+pub mod timer;
+pub mod wire;
 
 use crate::predictor::ksplus::{KsPlus, MEM_OVERPREDICT, TIME_UNDERPREDICT};
 use crate::predictor::regression::{LinModel, OlsStats};

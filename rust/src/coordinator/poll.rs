@@ -1,0 +1,539 @@
+//! Hand-rolled readiness abstraction for the event-loop server: one
+//! small `Poller` over **epoll** (Linux/Android) or **kqueue**
+//! (macOS/iOS), with a stub that reports `Unsupported` elsewhere (the
+//! CLI falls back to the threaded server there). Dependencies are
+//! vendored in this workspace, so there is no tokio/mio — the two
+//! syscall surfaces are tiny and declared directly.
+//!
+//! Semantics are deliberately the intersection of the two APIs:
+//!
+//! * **Level-triggered**: readiness is re-reported while it holds, so
+//!   the loop may leave bytes unread in the kernel buffer without
+//!   losing the connection (kqueue is naturally level-triggered;
+//!   epoll is used without `EPOLLET`).
+//! * One `usize` token per fd, echoed back in each [`Event`].
+//! * Error/hangup conditions surface as `readable` so the owner's next
+//!   read observes the actual `io::Error`/EOF — the loop has one error
+//!   path, not two.
+//!
+//! [`Waker`] lets dispatch worker threads interrupt a blocked
+//! [`Poller::wait`]: it is the read end of a socketpair registered like
+//! any connection (no pipe/eventfd FFI needed — `UnixStream::pair` is
+//! std).
+
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// One readiness report: the registered token plus which directions
+/// are ready.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Readiness selector. All methods take `&self`; registration state
+/// lives in the kernel.
+pub struct Poller {
+    sys: sys::Selector,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { sys: sys::Selector::new()? })
+    }
+
+    /// Register `fd` with interest in `readable`/`writable` readiness.
+    pub fn register(
+        &self,
+        fd: RawFd,
+        token: usize,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        self.sys.register(fd, token, readable, writable)
+    }
+
+    /// Change an existing registration's interests (cheaper than
+    /// deregister + register; used to toggle write interest as the
+    /// write buffer fills and drains).
+    pub fn reregister(
+        &self,
+        fd: RawFd,
+        token: usize,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        self.sys.reregister(fd, token, readable, writable)
+    }
+
+    /// Remove `fd` entirely. Call before closing the fd — close-time
+    /// auto-cleanup is not portable across the two backends.
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        self.sys.deregister(fd)
+    }
+
+    /// Block until readiness or `timeout` (`None` = forever), appending
+    /// to `events` (cleared first). Spurious empty returns are allowed.
+    pub fn wait(&self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        self.sys.wait(events, timeout)
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        self.sys.close();
+    }
+}
+
+/// Wake handle for a blocked [`Poller::wait`]: any thread calls
+/// [`Waker::wake`]; the loop sees the paired receive end readable and
+/// drains it. Writes are nonblocking and best-effort — once the pair's
+/// buffer holds a byte the loop is already due to wake, so a
+/// `WouldBlock` here is success.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Build a waker and its receive end. The caller registers the receive
+/// end's fd with the poller and calls [`drain_waker`] whenever it polls
+/// readable.
+pub fn waker_pair() -> io::Result<(Waker, UnixStream)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { tx }, rx))
+}
+
+/// Swallow every pending wake byte so the next `wake()` is visible.
+pub fn drain_waker(rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    while let Ok(n) = (&*rx).read(&mut buf) {
+        if n == 0 {
+            break;
+        }
+    }
+}
+
+/// Cap a `Duration` into the millisecond int epoll takes, rounding up
+/// so a short timeout cannot spin at zero.
+#[cfg(any(target_os = "linux", target_os = "android"))]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            if d.subsec_nanos() % 1_000_000 != 0 {
+                (ms + 1).min(i32::MAX as u128) as i32
+            } else {
+                ms.min(i32::MAX as u128) as i32
+            }
+        }
+    }
+}
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+mod sys {
+    use super::{timeout_ms, Event};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    // epoll's event struct is packed on x86-64 only (a 32-bit mask
+    // followed by a 64-bit payload with no padding); other Linux
+    // targets use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Selector {
+        epfd: i32,
+    }
+
+    impl Selector {
+        pub fn new() -> io::Result<Selector> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Selector { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, readable: bool, writable: bool, token: usize) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: if readable { EPOLLIN } else { 0 } | if writable { EPOLLOUT } else { 0 },
+                data: token as u64,
+            };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&self, fd: RawFd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, r, w, token)
+        }
+
+        pub fn reregister(&self, fd: RawFd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, r, w, token)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // The event argument must be non-null on pre-2.6.9 kernels;
+            // passing one is harmless everywhere.
+            self.ctl(EPOLL_CTL_DEL, fd, false, false, 0)
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 1024];
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(()); // spurious empty wake
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy packed fields by value before use.
+                let mask = ev.events;
+                let data = ev.data;
+                out.push(Event {
+                    token: data as usize,
+                    // Error/hangup surfaces as readable: the owner's
+                    // next read sees the real error or EOF.
+                    readable: mask & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: mask & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+
+        pub fn close(&self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(any(target_os = "macos", target_os = "ios"))]
+mod sys {
+    use super::Event;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::ptr;
+    use std::time::Duration;
+
+    // The macOS/iOS kevent ABI. (FreeBSD's differs — 64-bit fflags and
+    // an ext array — which is why this arm is Apple-only and other BSDs
+    // get the stub.)
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct Kevent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut core::ffi::c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x1;
+    const EV_DELETE: u16 = 0x2;
+    const EV_ENABLE: u16 = 0x4;
+    const EV_DISABLE: u16 = 0x8;
+    const EV_ERROR: u16 = 0x4000;
+    const EV_EOF: u16 = 0x8000;
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const Kevent,
+            nchanges: i32,
+            eventlist: *mut Kevent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Selector {
+        kq: i32,
+    }
+
+    impl Selector {
+        pub fn new() -> io::Result<Selector> {
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Selector { kq })
+        }
+
+        fn change(&self, fd: RawFd, filter: i16, flags: u16, token: usize) -> io::Result<()> {
+            let ch = Kevent {
+                ident: fd as usize,
+                filter,
+                flags,
+                fflags: 0,
+                data: 0,
+                udata: token as *mut core::ffi::c_void,
+            };
+            let rc = unsafe { kevent(self.kq, &ch, 1, ptr::null_mut(), 0, ptr::null()) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Both filters are always added; uninterested directions are
+        /// disabled. `EV_ADD` on an existing filter is an update, so
+        /// register and reregister are the same idempotent operation.
+        fn set(&self, fd: RawFd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            let rf = EV_ADD | if r { EV_ENABLE } else { EV_DISABLE };
+            let wf = EV_ADD | if w { EV_ENABLE } else { EV_DISABLE };
+            self.change(fd, EVFILT_READ, rf, token)?;
+            self.change(fd, EVFILT_WRITE, wf, token)
+        }
+
+        pub fn register(&self, fd: RawFd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.set(fd, token, r, w)
+        }
+
+        pub fn reregister(&self, fd: RawFd, token: usize, r: bool, w: bool) -> io::Result<()> {
+            self.set(fd, token, r, w)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // Either filter may already be gone; that is not an error
+            // for our callers.
+            let _ = self.change(fd, EVFILT_READ, EV_DELETE, 0);
+            let _ = self.change(fd, EVFILT_WRITE, EV_DELETE, 0);
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let ts;
+            let ts_ptr = match timeout {
+                None => ptr::null(),
+                Some(d) => {
+                    ts = Timespec {
+                        tv_sec: d.as_secs().min(i64::MAX as u64) as i64,
+                        tv_nsec: d.subsec_nanos() as i64,
+                    };
+                    &ts as *const Timespec
+                }
+            };
+            let mut buf = [Kevent {
+                ident: 0,
+                filter: 0,
+                flags: 0,
+                fflags: 0,
+                data: 0,
+                udata: ptr::null_mut(),
+            }; 1024];
+            let n = unsafe {
+                kevent(self.kq, ptr::null(), 0, buf.as_mut_ptr(), buf.len() as i32, ts_ptr)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                if ev.flags & EV_ERROR != 0 {
+                    // Per-fd error: surface as readable so the owner's
+                    // next read reports it.
+                    out.push(Event { token: ev.udata as usize, readable: true, writable: false });
+                    continue;
+                }
+                let eof = ev.flags & EV_EOF != 0;
+                out.push(Event {
+                    token: ev.udata as usize,
+                    readable: ev.filter == EVFILT_READ || eof,
+                    writable: ev.filter == EVFILT_WRITE,
+                });
+            }
+            Ok(())
+        }
+
+        pub fn close(&self) {
+            unsafe {
+                close(self.kq);
+            }
+        }
+    }
+}
+
+#[cfg(not(any(
+    target_os = "linux",
+    target_os = "android",
+    target_os = "macos",
+    target_os = "ios"
+)))]
+mod sys {
+    use super::Event;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    /// No readiness backend for this platform; `repro serve` falls back
+    /// to the threaded front end.
+    pub struct Selector;
+
+    fn unsupported() -> io::Error {
+        io::Error::new(io::ErrorKind::Unsupported, "no epoll/kqueue backend on this platform")
+    }
+
+    impl Selector {
+        pub fn new() -> io::Result<Selector> {
+            Err(unsupported())
+        }
+
+        pub fn register(&self, _: RawFd, _: usize, _: bool, _: bool) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn reregister(&self, _: RawFd, _: usize, _: bool, _: bool) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn deregister(&self, _: RawFd) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn wait(&self, _: &mut Vec<Event>, _: Option<Duration>) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn close(&self) {}
+    }
+}
+
+#[cfg(all(test, any(target_os = "linux", target_os = "android", target_os = "macos", target_os = "ios")))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn readable_readiness_is_level_triggered() {
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        poller.register(server.as_raw_fd(), 7, true, false).unwrap();
+
+        // Nothing to read yet: a short wait returns no event for it.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7));
+
+        client.write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        let ev = events.iter().find(|e| e.token == 7).expect("readable event");
+        assert!(ev.readable);
+
+        // Level-triggered: the byte is still unread, readiness repeats.
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        poller.deregister(server.as_raw_fd()).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7), "deregistered fd still reported");
+    }
+
+    #[test]
+    fn write_interest_toggles_via_reregister() {
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        // Read-only first: an idle socket reports nothing.
+        poller.register(server.as_raw_fd(), 3, true, false).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 3));
+
+        // With write interest, an empty send buffer is instantly ready.
+        poller.reregister(server.as_raw_fd(), 3, true, true).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.writable));
+
+        // And off again.
+        poller.reregister(server.as_raw_fd(), 3, true, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 3));
+    }
+
+    #[test]
+    fn waker_interrupts_a_blocked_wait() {
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = waker_pair().unwrap();
+        poller.register(rx.as_raw_fd(), 0, true, false).unwrap();
+
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            waker.wake();
+            waker.wake(); // coalesces, must not block
+        });
+        let mut events = Vec::new();
+        let start = std::time::Instant::now();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        assert!(start.elapsed() < Duration::from_secs(5), "wait did not wake");
+        assert!(events.iter().any(|e| e.token == 0 && e.readable));
+        drain_waker(&rx);
+        // Drained: no stale readiness.
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 0));
+        t.join().unwrap();
+    }
+}

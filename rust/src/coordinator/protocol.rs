@@ -33,6 +33,53 @@ use crate::util::json::Json;
 /// `max_version` is below it), with an `unsupported-version` error.
 pub const WIRE_VERSION: usize = 1;
 
+/// The length-prefixed binary framing (see `coordinator::wire` and
+/// docs/PROTOCOL.md "Wire v2"). Negotiated per connection: a `hello`
+/// with `max_version >= 2` switches the connection to binary frames
+/// starting with the request *after* the hello response.
+pub const WIRE_V2: usize = 2;
+
+/// Highest wire version this build can speak.
+pub const WIRE_VERSION_MAX: usize = WIRE_V2;
+
+/// Version negotiation, shared by every server front end. Conservative
+/// by design: the answer is v1 unless the client *explicitly* asks for
+/// more via `max_version`, so pre-v2 clients (who send `min_version: 1`
+/// or nothing at all) keep speaking JSON lines unchanged.
+///
+/// * `min_version > max_version` is a malformed request
+///   (`invalid-field`), not a failed negotiation.
+/// * A `min_version` above everything we speak, or a `max_version`
+///   below v1, is `unsupported-version`.
+pub fn negotiate_version(
+    min_version: Option<usize>,
+    max_version: Option<usize>,
+) -> Result<usize, WireError> {
+    if let (Some(lo), Some(hi)) = (min_version, max_version) {
+        if lo > hi {
+            return Err(WireError::new(
+                ErrorCode::InvalidField,
+                "'min_version' must not exceed 'max_version'",
+            ));
+        }
+    }
+    let lo = min_version.unwrap_or(1);
+    if lo > WIRE_VERSION_MAX {
+        return Err(WireError::new(
+            ErrorCode::UnsupportedVersion,
+            format!("server speaks versions 1..={WIRE_VERSION_MAX}, client needs >= {lo}"),
+        ));
+    }
+    let hi = max_version.unwrap_or(lo.max(1));
+    if hi < 1 {
+        return Err(WireError::new(
+            ErrorCode::UnsupportedVersion,
+            "server speaks no version below 1".to_string(),
+        ));
+    }
+    Ok(hi.min(WIRE_VERSION_MAX))
+}
+
 /// Every op of wire v1, in the order `hello` advertises them. The two
 /// admin ops (`snapshot`, `reshard`) ride the same version behind the
 /// `hello` capability list: a client that needs them checks `ops` before
@@ -76,12 +123,16 @@ pub enum ErrorCode {
     RequestTooLarge,
     /// The server is at its configured connection limit; retry later.
     TooManyConnections,
+    /// A binary (wire v2) frame could not be decoded: unknown op tag,
+    /// truncated payload, or malformed field encoding. The v2 analogue
+    /// of `invalid-json`.
+    InvalidFrame,
     /// Server-side fault, or an unrecognized code from a newer peer.
     Internal,
 }
 
 impl ErrorCode {
-    pub const ALL: [ErrorCode; 12] = [
+    pub const ALL: [ErrorCode; 13] = [
         ErrorCode::InvalidJson,
         ErrorCode::UnknownOp,
         ErrorCode::MissingField,
@@ -93,6 +144,7 @@ impl ErrorCode {
         ErrorCode::UnsupportedVersion,
         ErrorCode::RequestTooLarge,
         ErrorCode::TooManyConnections,
+        ErrorCode::InvalidFrame,
         ErrorCode::Internal,
     ];
 
@@ -109,6 +161,7 @@ impl ErrorCode {
             ErrorCode::UnsupportedVersion => "unsupported-version",
             ErrorCode::RequestTooLarge => "request-too-large",
             ErrorCode::TooManyConnections => "too-many-connections",
+            ErrorCode::InvalidFrame => "invalid-frame",
             ErrorCode::Internal => "internal",
         }
     }
@@ -247,10 +300,23 @@ pub fn execution_to_json(e: &Execution) -> Json {
 pub fn execution_from_json(task: &str, j: &Json) -> Result<Execution, WireError> {
     let input_mb = f64_field(j, "input_mb")?;
     let dt = f64_field(j, "dt")?;
+    let samples = f64_vec_field(j, "samples")?;
+    execution_from_parts(task, input_mb, dt, samples)
+}
+
+/// Semantic validation shared by both wires: the JSON parser above and
+/// the binary decoder (`coordinator::wire`) funnel through here, so a
+/// bad execution gets the identical `ErrorCode` + message whichever
+/// framing carried it.
+pub fn execution_from_parts(
+    task: &str,
+    input_mb: f64,
+    dt: f64,
+    samples: Vec<f64>,
+) -> Result<Execution, WireError> {
     if !(dt > 0.0) {
         return Err(WireError::new(ErrorCode::InvalidField, "'dt' must be positive"));
     }
-    let samples = f64_vec_field(j, "samples")?;
     if samples.is_empty() {
         // Nothing to segment or learn from; rejecting here keeps garbage
         // off the worker threads.
@@ -272,6 +338,11 @@ pub fn plan_to_json(p: &StepPlan) -> Json {
 pub fn plan_from_json(j: &Json) -> Result<StepPlan, WireError> {
     let starts = f64_vec_field(j, "starts")?;
     let peaks = f64_vec_field(j, "peaks")?;
+    plan_from_parts(starts, peaks)
+}
+
+/// Shared-by-both-wires counterpart of [`execution_from_parts`].
+pub fn plan_from_parts(starts: Vec<f64>, peaks: Vec<f64>) -> Result<StepPlan, WireError> {
     if starts.is_empty() || starts.len() != peaks.len() {
         return Err(WireError::new(
             ErrorCode::InvalidPlan,
@@ -281,7 +352,38 @@ pub fn plan_from_json(j: &Json) -> Result<StepPlan, WireError> {
     Ok(StepPlan::new(starts, peaks))
 }
 
-fn policy_from_name(name: &str) -> Result<PredictorPolicy, WireError> {
+/// Shared semantic check: `"*"` is the default-scope response sentinel
+/// and therefore reserved as a task name on `configure`.
+pub fn validate_configure_task(task: Option<String>) -> Result<Option<String>, WireError> {
+    if task.as_deref() == Some("*") {
+        return Err(WireError::new(
+            ErrorCode::InvalidField,
+            "task name '*' is reserved (omit 'task' to set the default)",
+        ));
+    }
+    Ok(task)
+}
+
+/// Shared semantic check: `train.history` must be non-empty.
+pub fn validate_history_len(n: usize) -> Result<(), WireError> {
+    if n == 0 {
+        return Err(WireError::new(ErrorCode::EmptyHistory, "empty history"));
+    }
+    Ok(())
+}
+
+/// Shared semantic check: `reshard.shards` must be at least 1 (the
+/// upper bound is the service's `MAX_SHARDS`, enforced at dispatch).
+pub fn validate_reshard_shards(shards: usize) -> Result<usize, WireError> {
+    if shards == 0 {
+        return Err(WireError::new(ErrorCode::InvalidField, "'shards' must be at least 1"));
+    }
+    Ok(shards)
+}
+
+/// Policy-name lookup with the wire's `unknown-policy` error (shared by
+/// the JSON parser and the binary decoder).
+pub fn policy_from_name(name: &str) -> Result<PredictorPolicy, WireError> {
     PredictorPolicy::parse(name).ok_or_else(|| {
         WireError::new(
             ErrorCode::UnknownPolicy,
@@ -347,16 +449,10 @@ impl Request {
                 max_version: opt_usize_field(&j, "max_version")?,
             }),
             "configure" => {
-                let task = opt_str_field(&j, "task")?;
                 // "*" is the response sentinel for the service-wide
                 // default scope; a task literally named "*" would be
                 // indistinguishable in the ack, so reserve it.
-                if task.as_deref() == Some("*") {
-                    return Err(WireError::new(
-                        ErrorCode::InvalidField,
-                        "task name '*' is reserved (omit 'task' to set the default)",
-                    ));
-                }
+                let task = validate_configure_task(opt_str_field(&j, "task")?)?;
                 Ok(Request::Configure {
                     task,
                     policy: policy_from_name(&str_field(&j, "policy")?)?,
@@ -367,9 +463,7 @@ impl Request {
                 let arr = field(&j, "history")?.as_arr().ok_or_else(|| {
                     WireError::new(ErrorCode::InvalidField, "'history' must be an array")
                 })?;
-                if arr.is_empty() {
-                    return Err(WireError::new(ErrorCode::EmptyHistory, "empty history"));
-                }
+                validate_history_len(arr.len())?;
                 let history = arr
                     .iter()
                     .map(|e| execution_from_json(&task, e))
@@ -399,13 +493,7 @@ impl Request {
                         "'shards' must be a non-negative integer",
                     )
                 })?;
-                if shards == 0 {
-                    return Err(WireError::new(
-                        ErrorCode::InvalidField,
-                        "'shards' must be at least 1",
-                    ));
-                }
-                Ok(Request::Reshard { shards })
+                Ok(Request::Reshard { shards: validate_reshard_shards(shards)? })
             }
             other => {
                 Err(WireError::new(ErrorCode::UnknownOp, format!("unknown op '{other}'")))
@@ -998,6 +1086,58 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn negotiation_is_conservative_and_refuses_bad_ranges() {
+        // No explicit max: stay on v1 whatever we *could* speak — the
+        // pre-v2 client population sends min_version:1 or nothing.
+        assert_eq!(negotiate_version(None, None).unwrap(), 1);
+        assert_eq!(negotiate_version(Some(1), None).unwrap(), 1);
+        assert_eq!(negotiate_version(Some(1), Some(1)).unwrap(), 1);
+        // Explicit opt-in to v2.
+        assert_eq!(negotiate_version(None, Some(2)).unwrap(), WIRE_V2);
+        assert_eq!(negotiate_version(Some(1), Some(2)).unwrap(), WIRE_V2);
+        assert_eq!(negotiate_version(Some(2), Some(2)).unwrap(), WIRE_V2);
+        // A client that *requires* v2 but set no max still gets it.
+        assert_eq!(negotiate_version(Some(2), None).unwrap(), WIRE_V2);
+        // A future client capped above us negotiates down to our max.
+        assert_eq!(negotiate_version(None, Some(9)).unwrap(), WIRE_VERSION_MAX);
+        // Failures.
+        assert_eq!(
+            negotiate_version(Some(3), Some(1)).unwrap_err().code,
+            ErrorCode::InvalidField
+        );
+        assert_eq!(
+            negotiate_version(Some(99), None).unwrap_err().code,
+            ErrorCode::UnsupportedVersion
+        );
+        assert_eq!(
+            negotiate_version(None, Some(0)).unwrap_err().code,
+            ErrorCode::UnsupportedVersion
+        );
+    }
+
+    #[test]
+    fn shared_part_validators_match_the_json_parser() {
+        assert_eq!(
+            execution_from_parts("t", 1.0, 0.0, vec![1.0]).unwrap_err().code,
+            ErrorCode::InvalidField
+        );
+        assert_eq!(
+            execution_from_parts("t", 1.0, 1.0, vec![]).unwrap_err().code,
+            ErrorCode::EmptySamples
+        );
+        assert_eq!(
+            plan_from_parts(vec![0.0, 1.0], vec![1.0]).unwrap_err().code,
+            ErrorCode::InvalidPlan
+        );
+        assert_eq!(
+            validate_configure_task(Some("*".into())).unwrap_err().code,
+            ErrorCode::InvalidField
+        );
+        assert_eq!(validate_history_len(0).unwrap_err().code, ErrorCode::EmptyHistory);
+        assert_eq!(validate_reshard_shards(0).unwrap_err().code, ErrorCode::InvalidField);
     }
 
     #[test]

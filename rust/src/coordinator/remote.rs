@@ -1,19 +1,26 @@
-//! `RemoteClient`: typed TCP client for the coordinator's wire v1 —
-//! the counterpart of the in-process `service::Client`, sharing the
-//! exact `Request`/`Response` types of `coordinator::protocol` with the
+//! `RemoteClient`: typed TCP client for the coordinator wire — the
+//! counterpart of the in-process `service::Client`, sharing the exact
+//! `Request`/`Response` types of `coordinator::protocol` with the
 //! server, so client and server cannot drift.
 //!
-//! One request/response pair per call, newline-delimited JSON over a
-//! persistent connection. Server-side errors surface as the structured
-//! `WireError` (`code: message` via its `Display`) wrapped in
-//! `anyhow::Error`.
+//! Every connection starts on wire v1 (newline-delimited JSON).
+//! [`RemoteClient::negotiate`] offers the server a higher version; when
+//! the server grants wire v2, the connection switches to the
+//! length-prefixed binary framing of `coordinator::wire` for everything
+//! after the hello response. Either way the typed surface is identical
+//! — the codec is connection state, not API.
+//!
+//! One request/response pair per call, or [`RemoteClient::pipeline`]
+//! to ship a batch of requests in one write and collect their responses
+//! in order. Server-side errors surface as the structured `WireError`
+//! (`code: message` via its `Display`) wrapped in `anyhow::Error`.
 //!
 //! ```no_run
 //! # use ksplus::coordinator::remote::RemoteClient;
 //! # use ksplus::coordinator::PredictorPolicy;
 //! # fn main() -> anyhow::Result<()> {
 //! let mut rc = RemoteClient::connect("127.0.0.1:7070")?;
-//! let info = rc.hello()?;
+//! let info = rc.negotiate(2)?; // binary wire when the server has it
 //! rc.configure(Some("bwa"), PredictorPolicy::WittLr)?;
 //! let out = rc.plan("bwa", 8000.0)?;
 //! println!("served by {} (v{})", out.predictor, out.model_version);
@@ -21,7 +28,7 @@
 //! # }
 //! ```
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
@@ -30,14 +37,23 @@ use anyhow::{Context, Result};
 use crate::coordinator::protocol::{
     ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, WIRE_VERSION,
 };
+use crate::coordinator::wire::{
+    decode_response, encode_request, read_frame, FrameRead, Wire,
+};
 use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome};
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 use crate::util::json::Json;
 
+/// Client-side cap on one response frame. Far above the server's
+/// request cap because a `snapshot` response carries the whole model
+/// store inline.
+pub const CLIENT_MAX_FRAME_BYTES: usize = 1 << 26;
+
 pub struct RemoteClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    wire: Wire,
 }
 
 impl RemoteClient {
@@ -46,10 +62,12 @@ impl RemoteClient {
         RemoteClient::from_stream(stream)
     }
 
-    /// Like [`connect`](RemoteClient::connect), but bounds both the TCP
-    /// connect and every subsequent response read by `timeout` — a hung
-    /// or unreachable coordinator fails the call instead of blocking the
-    /// workflow engine forever.
+    /// Like [`connect`](RemoteClient::connect), but bounds the TCP
+    /// connect and every subsequent read *and* write by `timeout` — a
+    /// hung or unreachable coordinator fails the call instead of
+    /// blocking the workflow engine forever. (Writes block too once the
+    /// socket's send buffer fills against a stalled peer; bounding only
+    /// reads was a hole.)
     pub fn connect_with_timeout<A: ToSocketAddrs>(
         addr: A,
         timeout: Duration,
@@ -63,13 +81,19 @@ impl RemoteClient {
             .with_context(|| format!("connect to coordinator at {resolved}"))?;
         let mut rc = RemoteClient::from_stream(stream)?;
         rc.set_read_timeout(Some(timeout))?;
+        rc.set_write_timeout(Some(timeout))?;
         Ok(rc)
     }
 
     fn from_stream(stream: TcpStream) -> Result<RemoteClient> {
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone().context("clone coordinator stream")?;
-        Ok(RemoteClient { reader: BufReader::new(stream), writer })
+        Ok(RemoteClient { reader: BufReader::new(stream), writer, wire: Wire::V1 })
+    }
+
+    /// The wire this connection currently speaks.
+    pub fn wire(&self) -> Wire {
+        self.wire
     }
 
     /// Bound every response read. A read that times out leaves the
@@ -78,33 +102,116 @@ impl RemoteClient {
         self.reader.get_ref().set_read_timeout(timeout).context("set read timeout")
     }
 
-    /// Send one raw line and parse the reply as JSON. Escape hatch for
-    /// conformance tests that need to ship intentionally malformed
-    /// requests; typed callers use the op methods below.
+    /// Bound every request write (a stalled server eventually fills the
+    /// socket's send buffer; an unbounded write then blocks forever).
+    /// Same caveat as reads: a timed-out write leaves the connection
+    /// mid-frame.
+    pub fn set_write_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_write_timeout(timeout).context("set write timeout")
+    }
+
+    /// Send one raw v1 line and parse the reply as JSON. Escape hatch
+    /// for conformance tests that need to ship intentionally malformed
+    /// requests; typed callers use the op methods. Only meaningful on a
+    /// wire-v1 connection — after a v2 upgrade raw line bytes would
+    /// corrupt the binary framing, so this refuses.
     pub fn raw(&mut self, line: &str) -> Result<Json> {
+        anyhow::ensure!(
+            self.wire == Wire::V1,
+            "raw lines are a wire-v1 escape hatch; this connection negotiated {}",
+            self.wire.name()
+        );
         writeln!(self.writer, "{line}").context("write request")?;
-        let mut resp = String::new();
-        self.reader.read_line(&mut resp).context("read response")?;
-        anyhow::ensure!(!resp.is_empty(), "server closed the connection");
-        Json::parse(&resp).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
+        match read_frame(&mut self.reader, Wire::V1, CLIENT_MAX_FRAME_BYTES)
+            .context("read response")?
+        {
+            FrameRead::Frame(payload) => {
+                let text = String::from_utf8_lossy(&payload);
+                Json::parse(&text).map_err(|e| anyhow::anyhow!("unparseable response: {e}"))
+            }
+            FrameRead::Eof => anyhow::bail!("server closed the connection"),
+            FrameRead::TooLong => anyhow::bail!("response exceeded the client frame cap"),
+            FrameRead::TimedOut => anyhow::bail!("response read timed out"),
+        }
+    }
+
+    /// Read one framed response off the connection and decode it for
+    /// `op`, separating transport failures (`Err`) from structured
+    /// server-side errors (`Ok(Err(_))`).
+    fn read_response(&mut self, op: &str) -> Result<Result<Response, WireError>> {
+        match read_frame(&mut self.reader, self.wire, CLIENT_MAX_FRAME_BYTES)
+            .context("read response")?
+        {
+            FrameRead::Frame(payload) => match decode_response(self.wire, &payload, op) {
+                Ok(resp) => Ok(Ok(resp)),
+                Err(e) => Ok(Err(e)),
+            },
+            FrameRead::Eof => anyhow::bail!("server closed the connection"),
+            FrameRead::TooLong => anyhow::bail!("response exceeded the client frame cap"),
+            FrameRead::TimedOut => anyhow::bail!("response read timed out"),
+        }
+    }
+
+    /// Send one typed request and return the server's verdict with the
+    /// structured error preserved: `Err` is a transport/decoding
+    /// failure, `Ok(Err(WireError))` a well-formed server-side
+    /// rejection. The parity suite uses this to compare error codes and
+    /// messages across wires; ordinary callers use the op methods.
+    pub fn call_raw(&mut self, req: &Request) -> Result<Result<Response, WireError>> {
+        self.writer
+            .write_all(&encode_request(self.wire, req))
+            .context("write request")?;
+        self.read_response(req.op())
     }
 
     fn call(&mut self, req: &Request) -> Result<Response> {
-        let j = self.raw(&req.to_json().to_string())?;
-        Response::from_json(&j, req.op()).map_err(report_wire_error)
+        self.call_raw(req)?.map_err(report_wire_error)
     }
 
-    /// Version/capability negotiation. Call once after connecting; fails
-    /// if the server cannot speak wire v1.
-    pub fn hello(&mut self) -> Result<ServerInfo> {
+    /// Ship every request in one write, then collect their responses in
+    /// order — request pipelining. Each slot is that request's verdict
+    /// (`Err(WireError)` for structured rejections); a transport
+    /// failure aborts the whole batch. `hello` must not ride a pipeline
+    /// (its response can switch the codec mid-stream); negotiate first.
+    pub fn pipeline(&mut self, reqs: &[Request]) -> Result<Vec<Result<Response, WireError>>> {
+        anyhow::ensure!(
+            !reqs.iter().any(|r| matches!(r, Request::Hello { .. })),
+            "hello cannot be pipelined; use negotiate() before the batch"
+        );
+        let mut batch = Vec::new();
+        for req in reqs {
+            batch.extend_from_slice(&encode_request(self.wire, req));
+        }
+        self.writer.write_all(&batch).context("write pipelined batch")?;
+        reqs.iter().map(|req| self.read_response(req.op())).collect()
+    }
+
+    /// Version/capability negotiation. Offers the server versions
+    /// `1..=max_version`; the connection switches to whatever the
+    /// server grants (the hello response itself still arrives on the
+    /// wire the hello was sent on). Negotiation is conservative: a
+    /// server that predates wire v2 — or this one, when `max_version`
+    /// is 1 — leaves the connection on v1.
+    pub fn negotiate(&mut self, max_version: usize) -> Result<ServerInfo> {
         match self.call(&Request::Hello {
             client: Some("ksplus-remote-client".into()),
             min_version: Some(WIRE_VERSION),
-            max_version: Some(WIRE_VERSION),
+            max_version: Some(max_version),
         })? {
-            Response::Hello(info) => Ok(info),
+            Response::Hello(info) => {
+                if let Some(w) = Wire::from_version(info.version) {
+                    self.wire = w;
+                }
+                Ok(info)
+            }
             other => anyhow::bail!("unexpected response to hello: {other:?}"),
         }
+    }
+
+    /// Version/capability negotiation pinned to wire v1. Call once
+    /// after connecting; fails if the server cannot speak wire v1.
+    pub fn hello(&mut self) -> Result<ServerInfo> {
+        self.negotiate(WIRE_VERSION)
     }
 
     /// Bind a task (or, with `None`, the service-wide default) to a

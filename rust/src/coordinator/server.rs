@@ -40,33 +40,44 @@
 //! with the `pjrt` feature). The `stats` op reports the merge across all
 //! shards, plus the server's own connection counters.
 //!
-//! Connections are resource-bounded ([`ServerConfig`]): a request line
-//! larger than `max_line_bytes` is answered with `request-too-large` and
-//! the connection is closed (the remainder of an oversized frame cannot
-//! be resynchronized); connections past `max_conns` are refused with
-//! `too-many-connections`; a connection idle past `read_timeout` is
+//! Framing goes through the [`wire`](crate::coordinator::wire) codec
+//! seam: every connection starts on wire v1 (JSON lines) and may
+//! negotiate the length-prefixed binary wire v2 via `hello` — after the
+//! (still-v1) hello response, both directions switch. Request handling
+//! itself lives in [`service::dispatch`], shared with the event-loop
+//! front end in [`eventloop`](crate::coordinator::eventloop); this
+//! thread-per-connection server is the simpler parity oracle.
+//!
+//! Connections are resource-bounded ([`ServerConfig`]): a request frame
+//! larger than `max_frame_bytes` is answered with `request-too-large`
+//! and the connection is closed (the remainder of an oversized frame
+//! cannot be resynchronized); connections past `max_conns` are refused
+//! with `too-many-connections`; a connection idle past `read_timeout` is
 //! closed and counted. Handler threads are tracked and joined — not
 //! detached — so `stop()` leaves no thread behind.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::protocol::{
-    ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, OPS,
-    WIRE_VERSION,
+use crate::coordinator::protocol::{ErrorCode, WireError};
+use crate::coordinator::service::{
+    dispatch, Client, ConnCounters, Coordinator, CoordinatorConfig, Dispatched,
 };
-use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig, MAX_SHARDS};
-use crate::coordinator::{BackendSpec, PredictorPolicy};
-use crate::util::json::Json;
+use crate::coordinator::wire::{
+    decode_request, encode_error, encode_response, read_frame, FrameRead, Wire,
+    DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::coordinator::BackendSpec;
 
-/// Resource limits for one server. The defaults are generous enough to
-/// never trip in normal operation while still bounding every resource a
-/// misbehaving client could otherwise grow without limit.
+/// Resource limits for one server (both front ends share this type).
+/// The defaults are generous enough to never trip in normal operation
+/// while still bounding every resource a misbehaving client could
+/// otherwise grow without limit.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Maximum concurrently served connections. Connection number
@@ -77,23 +88,25 @@ pub struct ServerConfig {
     /// `None` (the default) waits forever, matching the pre-limit
     /// behavior.
     pub read_timeout: Option<Duration>,
-    /// Maximum length in bytes of one request line. Longer frames get a
-    /// `request-too-large` error and the connection is closed.
-    pub max_line_bytes: usize,
+    /// Maximum size in bytes of one request frame — a v1 line or a v2
+    /// binary frame; both wires enforce the same cap. Larger frames get
+    /// a `request-too-large` error and the connection is closed.
+    pub max_frame_bytes: usize,
+    /// Dispatch worker threads for the event-loop front end (`0` sizes
+    /// from `available_parallelism`). The thread-per-connection server
+    /// ignores this — its parallelism is its connection count.
+    pub dispatch_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_conns: 1024, read_timeout: None, max_line_bytes: 1 << 20 }
+        ServerConfig {
+            max_conns: 1024,
+            read_timeout: None,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            dispatch_threads: 0,
+        }
     }
-}
-
-/// Connection counters owned by the server (workers report 0 for these;
-/// `dispatch` folds them into `stats` replies).
-#[derive(Default)]
-struct ConnCounters {
-    refused: AtomicU64,
-    timeouts: AtomicU64,
 }
 
 /// A running TCP front end over a coordinator `Client`.
@@ -155,7 +168,8 @@ impl Server {
                             ErrorCode::TooManyConnections,
                             format!("server is at its limit of {} connections", cfg.max_conns),
                         );
-                        let _ = writeln!(stream, "{}", err.to_json());
+                        // Refused before negotiation, so v1 by definition.
+                        let _ = stream.write_all(&encode_error(Wire::V1, &err));
                         continue; // dropping `stream` closes it
                     }
                     let c = client.clone();
@@ -233,64 +247,6 @@ impl Drop for Server {
     }
 }
 
-/// Outcome of reading one request line under a byte cap.
-enum LineRead {
-    Line(String),
-    /// Peer closed the connection (an unterminated final line is still
-    /// served; the next read sees the close).
-    Eof,
-    /// The frame exceeded the cap; the connection must be closed because
-    /// the rest of the oversized line cannot be skipped safely.
-    TooLong,
-    /// The peer sent nothing for the configured read timeout.
-    TimedOut,
-}
-
-/// Read one `\n`-terminated line of at most `max` bytes. Unlike
-/// `BufRead::lines`, this cannot be driven into unbounded allocation by
-/// a peer that streams bytes without ever sending a newline — the
-/// pre-limits server could be OOMed by exactly that.
-fn read_bounded_line(reader: &mut BufReader<TcpStream>, max: usize) -> std::io::Result<LineRead> {
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        let (used, done) = {
-            let chunk = match reader.fill_buf() {
-                Ok(c) => c,
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e)
-                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
-                {
-                    return Ok(LineRead::TimedOut)
-                }
-                Err(e) => return Err(e),
-            };
-            if chunk.is_empty() {
-                return Ok(if buf.is_empty() {
-                    LineRead::Eof
-                } else {
-                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
-                });
-            }
-            match chunk.iter().position(|&b| b == b'\n') {
-                Some(pos) if buf.len() + pos > max => (pos + 1, Some(LineRead::TooLong)),
-                Some(pos) => {
-                    buf.extend_from_slice(&chunk[..pos]);
-                    (pos + 1, Some(LineRead::Line(String::from_utf8_lossy(&buf).into_owned())))
-                }
-                None if buf.len() + chunk.len() > max => (chunk.len(), Some(LineRead::TooLong)),
-                None => {
-                    buf.extend_from_slice(chunk);
-                    (chunk.len(), None)
-                }
-            }
-        };
-        reader.consume(used);
-        if let Some(outcome) = done {
-            return Ok(outcome);
-        }
-    }
-}
-
 fn handle_conn(
     stream: TcpStream,
     client: Client,
@@ -301,120 +257,46 @@ fn handle_conn(
     stream.set_read_timeout(cfg.read_timeout).ok();
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    // Every connection starts on wire v1; a successful `hello`
+    // negotiation may switch it (STARTTLS-style: the hello response
+    // still travels on the wire the hello arrived on).
+    let mut wire = Wire::V1;
     loop {
-        match read_bounded_line(&mut reader, cfg.max_line_bytes)? {
-            LineRead::Eof => return Ok(()),
-            LineRead::TimedOut => {
+        match read_frame(&mut reader, wire, cfg.max_frame_bytes)? {
+            FrameRead::Eof => return Ok(()),
+            FrameRead::TimedOut => {
                 counters.timeouts.fetch_add(1, Ordering::Relaxed);
                 return Ok(());
             }
-            LineRead::TooLong => {
+            FrameRead::TooLong => {
                 let err = WireError::new(
                     ErrorCode::RequestTooLarge,
                     format!(
-                        "request line exceeds the {}-byte limit; closing connection",
-                        cfg.max_line_bytes
+                        "request exceeds the {}-byte limit; closing connection",
+                        cfg.max_frame_bytes
                     ),
                 );
-                writeln!(writer, "{}", err.to_json())?;
+                writer.write_all(&encode_error(wire, &err))?;
                 return Ok(());
             }
-            LineRead::Line(line) => {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let resp: Json = match Request::parse(&line) {
-                    Ok(req) => dispatch(req, &client, counters),
-                    Err(e) => e.to_json(),
-                };
-                writeln!(writer, "{resp}")?;
-            }
-        }
-    }
-}
-
-/// Serve one parsed request. Infallible after parsing, except version
-/// negotiation and the admin ops — the coordinator itself never errors
-/// on a well-formed data-path request.
-fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Json {
-    match req {
-        Request::Hello { min_version, max_version, .. } => {
-            if let Some(min) = min_version {
-                if min > WIRE_VERSION {
-                    return WireError::new(
-                        ErrorCode::UnsupportedVersion,
-                        format!("server speaks wire v{WIRE_VERSION}, client requires >= v{min}"),
-                    )
-                    .to_json();
-                }
-            }
-            if let Some(max) = max_version {
-                if max < WIRE_VERSION {
-                    return WireError::new(
-                        ErrorCode::UnsupportedVersion,
-                        format!("server speaks wire v{WIRE_VERSION}, client accepts <= v{max}"),
-                    )
-                    .to_json();
-                }
-            }
-            Response::Hello(ServerInfo {
-                version: WIRE_VERSION,
-                ops: OPS.iter().map(|s| s.to_string()).collect(),
-                policies: PredictorPolicy::names().iter().map(|s| s.to_string()).collect(),
-                shards: client.shards(),
-            })
-            .to_json()
-        }
-        Request::Configure { task, policy } => {
-            client.configure(task.as_deref(), policy);
-            Response::Configured { task, policy }.to_json()
-        }
-        Request::Train { task, history } => {
-            let executions = history.len() as u64;
-            client.train(&task, history);
-            Response::Trained { task, executions }.to_json()
-        }
-        Request::Observe { task, execution } => {
-            let (executions, predictor) = client.observe_detailed(&task, execution);
-            Response::Observed(ObserveAck { task, executions, predictor }).to_json()
-        }
-        Request::Plan { task, input_mb } => {
-            Response::Planned(client.plan_detailed(&task, input_mb)).to_json()
-        }
-        Request::Failure { task, plan, fail_time } => {
-            Response::Retry(client.report_failure_for(task.as_deref(), &plan, fail_time))
-                .to_json()
-        }
-        Request::Stats => {
-            let s = client.stats();
-            Response::Stats(StatsSummary {
-                shards: client.shards(),
-                requests: s.requests,
-                batches: s.batches,
-                failures_handled: s.failures_handled,
-                tasks_trained: s.tasks_trained,
-                observations: s.observations,
-                fallbacks: s.fallbacks,
-                conns_refused: s.conns_refused + counters.refused.load(Ordering::Relaxed),
-                conn_timeouts: s.conn_timeouts + counters.timeouts.load(Ordering::Relaxed),
-                latency_p50_us: s.latency_percentile_us(50.0),
-                latency_p99_us: s.latency_percentile_us(99.0),
-            })
-            .to_json()
-        }
-        Request::Snapshot => Response::Snapshot { doc: client.snapshot_json() }.to_json(),
-        Request::Reshard { shards } => {
-            if shards < 1 || shards > MAX_SHARDS {
-                return WireError::new(
-                    ErrorCode::InvalidField,
-                    format!("'shards' must be between 1 and {MAX_SHARDS}"),
-                )
-                .to_json();
-            }
-            match client.set_shards(shards) {
-                Ok(shard_ids) => Response::Resharded { shard_ids }.to_json(),
-                Err(e) => WireError::new(ErrorCode::Internal, format!("reshard: {e:#}")).to_json(),
-            }
+            FrameRead::Frame(payload) => match decode_request(wire, &payload) {
+                Ok(None) => continue, // blank v1 line: no reply
+                Ok(Some(req)) => match dispatch(req, &client, counters) {
+                    Dispatched::Reply(resp) => {
+                        writer.write_all(&encode_response(wire, &resp))?;
+                    }
+                    Dispatched::Error(err) => {
+                        writer.write_all(&encode_error(wire, &err))?;
+                    }
+                    Dispatched::Hello(resp, version) => {
+                        writer.write_all(&encode_response(wire, &resp))?;
+                        if let Some(w) = Wire::from_version(version) {
+                            wire = w;
+                        }
+                    }
+                },
+                Err(e) => writer.write_all(&encode_error(wire, &e))?,
+            },
         }
     }
 }
@@ -422,9 +304,13 @@ fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::protocol::{Request, Response, OPS, WIRE_V2, WIRE_VERSION};
     use crate::coordinator::service::{Coordinator, CoordinatorConfig};
-    use crate::coordinator::BackendSpec;
+    use crate::coordinator::wire::encode_request;
+    use crate::coordinator::{BackendSpec, PredictorPolicy};
+    use crate::util::json::Json;
     use crate::util::rng::Rng;
+    use std::io::BufRead;
 
     fn start() -> (Coordinator, Server) {
         Server::start_with_backend(
@@ -539,6 +425,36 @@ mod tests {
             r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
             Some("unsupported-version")
         );
+    }
+
+    #[test]
+    fn threaded_server_negotiates_and_serves_wire_v2() {
+        let (_coord, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // The hello rides v1; its response is still v1 JSON, and only
+        // then does the connection switch to binary framing.
+        let r = roundtrip(&mut s, r#"{"op":"hello","min_version":1,"max_version":2}"#);
+        assert_eq!(r.get("version").and_then(Json::as_usize), Some(WIRE_V2));
+
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let req = Request::Plan { task: "fresh".into(), input_mb: 64.0 };
+        s.write_all(&encode_request(Wire::V2, &req)).unwrap();
+        match read_frame(&mut reader, Wire::V2, DEFAULT_MAX_FRAME_BYTES).unwrap() {
+            FrameRead::Frame(payload) => {
+                let resp =
+                    crate::coordinator::wire::decode_response(Wire::V2, &payload, "plan")
+                        .expect("plan should succeed");
+                match resp {
+                    Response::Planned(o) => {
+                        assert_eq!(o.predictor, "default-limits");
+                        assert!(o.plan.is_valid());
+                    }
+                    other => panic!("unexpected response: {other:?}"),
+                }
+            }
+            other => panic!("expected a binary frame, got {other:?}"),
+        }
     }
 
     #[test]
@@ -659,7 +575,7 @@ mod tests {
         // frame past the configured cap must produce a structured
         // `request-too-large` error and a closed connection, not an
         // unbounded allocation.
-        let cfg = ServerConfig { max_line_bytes: 4096, ..Default::default() };
+        let cfg = ServerConfig { max_frame_bytes: 4096, ..Default::default() };
         let (_coord, server) = start_cfg(cfg);
         let mut s = TcpStream::connect(server.addr()).unwrap();
         let huge = format!(

@@ -44,12 +44,16 @@
 //! regressed plan.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::coordinator::protocol::{
+    negotiate_version, ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary,
+    WireError, OPS,
+};
 use crate::coordinator::ring::HashRing;
 use crate::coordinator::snapshot::{self, TaskState};
 use crate::coordinator::{
@@ -1274,6 +1278,114 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
                 Msg::Shutdown => {
                     flush(&mut pending, &store, &mut stats, &mut scratch);
                     break 'outer;
+                }
+            }
+        }
+    }
+}
+
+// ---- shared request dispatch ---------------------------------------------
+//
+// Every server front end — the threaded parity oracle and the event
+// loop — turns a decoded `protocol::Request` into a reply through this
+// one function, so the two cores cannot drift in semantics. The front
+// ends own only framing and connection lifecycle; everything from
+// version negotiation to shard routing lives here.
+
+/// Connection counters owned by a server front end. The shard workers
+/// know nothing about sockets, so refusals and idle-timeout closes are
+/// counted at the front end and folded into `stats` replies by
+/// [`dispatch`].
+#[derive(Default)]
+pub struct ConnCounters {
+    /// Connections refused at the `max_conns` limit.
+    pub refused: AtomicU64,
+    /// Connections closed by the idle/read timeout.
+    pub timeouts: AtomicU64,
+}
+
+/// Outcome of dispatching one request.
+pub enum Dispatched {
+    Reply(Response),
+    Error(WireError),
+    /// A successful `hello`: the response plus the negotiated wire
+    /// version. The front end writes the response on the wire the hello
+    /// arrived on, then switches the connection's codec — the
+    /// STARTTLS-style upgrade point.
+    Hello(Response, usize),
+}
+
+/// Serve one parsed request. Infallible after parsing, except version
+/// negotiation and the admin ops — the coordinator itself never errors
+/// on a well-formed data-path request.
+pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispatched {
+    match req {
+        Request::Hello { min_version, max_version, .. } => {
+            match negotiate_version(min_version, max_version) {
+                Err(e) => Dispatched::Error(e),
+                Ok(version) => Dispatched::Hello(
+                    Response::Hello(ServerInfo {
+                        version,
+                        ops: OPS.iter().map(|s| s.to_string()).collect(),
+                        policies: PredictorPolicy::names()
+                            .iter()
+                            .map(|s| s.to_string())
+                            .collect(),
+                        shards: client.shards(),
+                    }),
+                    version,
+                ),
+            }
+        }
+        Request::Configure { task, policy } => {
+            client.configure(task.as_deref(), policy);
+            Dispatched::Reply(Response::Configured { task, policy })
+        }
+        Request::Train { task, history } => {
+            let executions = history.len() as u64;
+            client.train(&task, history);
+            Dispatched::Reply(Response::Trained { task, executions })
+        }
+        Request::Observe { task, execution } => {
+            let (executions, predictor) = client.observe_detailed(&task, execution);
+            Dispatched::Reply(Response::Observed(ObserveAck { task, executions, predictor }))
+        }
+        Request::Plan { task, input_mb } => {
+            Dispatched::Reply(Response::Planned(client.plan_detailed(&task, input_mb)))
+        }
+        Request::Failure { task, plan, fail_time } => Dispatched::Reply(Response::Retry(
+            client.report_failure_for(task.as_deref(), &plan, fail_time),
+        )),
+        Request::Stats => {
+            let s = client.stats();
+            Dispatched::Reply(Response::Stats(StatsSummary {
+                shards: client.shards(),
+                requests: s.requests,
+                batches: s.batches,
+                failures_handled: s.failures_handled,
+                tasks_trained: s.tasks_trained,
+                observations: s.observations,
+                fallbacks: s.fallbacks,
+                conns_refused: s.conns_refused + counters.refused.load(Ordering::Relaxed),
+                conn_timeouts: s.conn_timeouts + counters.timeouts.load(Ordering::Relaxed),
+                latency_p50_us: s.latency_percentile_us(50.0),
+                latency_p99_us: s.latency_percentile_us(99.0),
+            }))
+        }
+        Request::Snapshot => {
+            Dispatched::Reply(Response::Snapshot { doc: client.snapshot_json() })
+        }
+        Request::Reshard { shards } => {
+            if shards < 1 || shards > MAX_SHARDS {
+                return Dispatched::Error(WireError::new(
+                    ErrorCode::InvalidField,
+                    format!("'shards' must be between 1 and {MAX_SHARDS}"),
+                ));
+            }
+            match client.set_shards(shards) {
+                Ok(shard_ids) => Dispatched::Reply(Response::Resharded { shard_ids }),
+                Err(e) => {
+                    Dispatched::Error(WireError::new(ErrorCode::Internal, format!("reshard: {e:#}")))
                 }
             }
         }

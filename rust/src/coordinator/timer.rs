@@ -1,0 +1,168 @@
+//! Hashed timer wheel for the event-loop server's idle-timeout reaping.
+//!
+//! The threaded server charges one `SO_RCVTIMEO` per blocking read; an
+//! event loop has one thread and thousands of connections, so timeouts
+//! become data: each connection schedules an entry at
+//! `last_activity + timeout`, and the loop asks the wheel how long
+//! `poll` may sleep and which entries have come due.
+//!
+//! The wheel is deliberately coarse. Slots cover `granularity` each
+//! (`timeout / 8`, clamped to 10–500 ms), so an entry fires within one
+//! granularity of its deadline — idle-timeout enforcement, not a
+//! high-resolution timer. Entries are `(token, conn_id)` pairs; firing
+//! is **advisory**: the loop re-validates against the connection's
+//! actual `last_activity` (the connection may have spoken since, or the
+//! slot may even hold a closed connection's recycled token — the
+//! monotonic `conn_id` catches that) and reschedules instead of closing
+//! when the entry is stale. That re-validation is also why deadlines
+//! beyond the wheel's span can simply be clamped to the farthest slot.
+
+use std::time::{Duration, Instant};
+
+/// Slots in the wheel. With the granularity clamp this spans at least
+/// 640 ms and at most 32 s — always ≥ the 8-granularity timeout, so an
+/// in-span deadline never wraps onto a nearer slot.
+pub const WHEEL_SLOTS: usize = 64;
+
+/// One idle-deadline registry for a single timeout duration.
+pub struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    granularity: Duration,
+    /// Start of the current slot's coverage window; advances by one
+    /// granularity per tick as `expire` consumes time.
+    base: Instant,
+    cursor: usize,
+    len: usize,
+}
+
+impl TimerWheel {
+    pub fn new(timeout: Duration, now: Instant) -> TimerWheel {
+        let granularity = (timeout / 8)
+            .max(Duration::from_millis(10))
+            .min(Duration::from_millis(500));
+        TimerWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            granularity,
+            base: now,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn granularity(&self) -> Duration {
+        self.granularity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Register `(token, conn_id)` to fire at `deadline`. Deadlines
+    /// beyond the wheel's span clamp to the farthest slot (the early
+    /// fire is re-validated and rescheduled); deadlines at or before
+    /// `base` land one slot out rather than firing instantly.
+    pub fn schedule(&mut self, deadline: Instant, token: usize, conn_id: u64) {
+        let ticks = deadline
+            .saturating_duration_since(self.base)
+            .as_nanos()
+            .checked_div(self.granularity.as_nanos())
+            .unwrap_or(0) as usize;
+        let offset = ticks.clamp(1, WHEEL_SLOTS - 1);
+        let slot = (self.cursor + offset) % WHEEL_SLOTS;
+        self.slots[slot].push((token, conn_id));
+        self.len += 1;
+    }
+
+    /// How long the poller may sleep before the next entry could come
+    /// due. `None` when the wheel is empty.
+    pub fn next_wakeup(&self, now: Instant) -> Option<Duration> {
+        if self.is_empty() {
+            return None;
+        }
+        Some((self.base + self.granularity).saturating_duration_since(now))
+    }
+
+    /// Advance through every slot whose window has fully elapsed by
+    /// `now`, draining their entries. The caller re-validates each
+    /// entry before acting on it.
+    pub fn expire(&mut self, now: Instant) -> Vec<(usize, u64)> {
+        let mut due = Vec::new();
+        while now.saturating_duration_since(self.base) >= self.granularity {
+            self.base += self.granularity;
+            self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+            let fired = std::mem::take(&mut self.slots[self.cursor]);
+            self.len -= fired.len();
+            due.extend(fired);
+        }
+        due
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_after_the_timeout_not_before() {
+        let t0 = Instant::now();
+        let timeout = Duration::from_millis(800);
+        let mut w = TimerWheel::new(timeout, t0);
+        assert_eq!(w.granularity(), Duration::from_millis(100));
+        w.schedule(t0 + timeout, 3, 7);
+        assert!(!w.is_empty());
+        // Just before the deadline window: nothing fires.
+        assert!(w.expire(t0 + Duration::from_millis(650)).is_empty());
+        // Once the covering slot elapses, the entry is due.
+        let due = w.expire(t0 + timeout + w.granularity());
+        assert_eq!(due, vec![(3, 7)]);
+        assert!(w.is_empty());
+        // Entries drain exactly once.
+        assert!(w.expire(t0 + Duration::from_secs(60)).is_empty());
+    }
+
+    #[test]
+    fn granularity_clamps_short_and_long_timeouts() {
+        let t0 = Instant::now();
+        assert_eq!(
+            TimerWheel::new(Duration::from_millis(8), t0).granularity(),
+            Duration::from_millis(10)
+        );
+        assert_eq!(
+            TimerWheel::new(Duration::from_secs(3600), t0).granularity(),
+            Duration::from_millis(500)
+        );
+    }
+
+    #[test]
+    fn far_deadlines_clamp_to_the_wheel_span_and_still_fire() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(80), t0);
+        // Deadline far past the span: clamped, fires at span's edge
+        // (the event loop re-validates and reschedules — early is fine,
+        // lost is not).
+        w.schedule(t0 + Duration::from_secs(3600), 1, 1);
+        let span = w.granularity() * WHEEL_SLOTS as u32;
+        let due = w.expire(t0 + span + w.granularity());
+        assert_eq!(due, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn past_deadlines_fire_on_the_next_tick() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(80), t0);
+        w.schedule(t0, 9, 2); // already due
+        assert!(w.next_wakeup(t0).is_some());
+        let due = w.expire(t0 + w.granularity() * 2);
+        assert_eq!(due, vec![(9, 2)]);
+    }
+
+    #[test]
+    fn next_wakeup_tracks_the_tick_boundary() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(800), t0);
+        assert_eq!(w.next_wakeup(t0), None, "empty wheel needs no wakeup");
+        w.schedule(t0 + Duration::from_millis(400), 1, 1);
+        let d = w.next_wakeup(t0).unwrap();
+        assert!(d <= w.granularity());
+    }
+}

@@ -1,0 +1,1152 @@
+//! The wire-codec seam: every server front end and the typed client
+//! speak through [`Wire`], which selects between the two framings of
+//! the coordinator protocol:
+//!
+//! * **v1 — JSON lines** (`Wire::V1`): one JSON object per
+//!   `\n`-terminated line, exactly the bytes `protocol::Request::to_json`
+//!   / `Response::to_json` have always produced. This module adds no
+//!   bytes and removes none — v1 traffic is byte-for-byte what the
+//!   pre-codec server emitted.
+//! * **v2 — length-prefixed binary** (`Wire::V2`): each frame is a
+//!   little-endian `u32` payload length followed by the payload; the
+//!   payload's first byte is an op tag, the rest fixed-width
+//!   little-endian fields. Floats travel as raw `f64::to_bits`, so the
+//!   bit-exactness v1 gets from shortest-roundtrip formatting is
+//!   structural here. The framing is specified normatively in
+//!   `docs/PROTOCOL.md` ("Wire v2").
+//!
+//! A connection starts on v1; a `hello` with `max_version >= 2`
+//! switches it to v2 for every frame after the hello response
+//! (STARTTLS-style — the hello response itself still rides the wire the
+//! hello arrived on). `protocol::negotiate_version` is the single
+//! negotiation rule shared by every front end.
+//!
+//! Semantic validation is shared with the JSON parser
+//! (`execution_from_parts`, `plan_from_parts`, …), so a malformed
+//! request earns the identical `ErrorCode` and message on either wire.
+//! Frames that cannot be decoded *structurally* (unknown tag, truncated
+//! field) get v2's own `invalid-frame` — the analogue of v1's
+//! `invalid-json`.
+
+use std::io::{self, BufRead, ErrorKind, Read};
+
+use crate::coordinator::protocol::{
+    execution_from_parts, plan_from_parts, policy_from_name, validate_configure_task,
+    validate_history_len, validate_reshard_shards, ErrorCode, ObserveAck, Request, Response,
+    ServerInfo, StatsSummary, WireError, OPS, PROVENANCE_UNKNOWN, WIRE_V2, WIRE_VERSION,
+};
+use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome, FALLBACK_UNTRAINED};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+/// The unified request-size cap both framings enforce (`repro serve
+/// --max-frame-bytes`): v1 bounds the line length, v2 bounds the
+/// declared frame length, and both answer `request-too-large`.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Error frames carry this tag instead of `0x80 | request_tag`, so a
+/// pipelining client can decode an error without knowing which request
+/// it answers (responses stay in request order regardless).
+const TAG_ERROR: u8 = 0xFF;
+
+/// Success responses echo the request's op tag with the high bit set.
+const RESPONSE_BIT: u8 = 0x80;
+
+/// Request op tags are `1 + index` into `protocol::OPS` — `hello` is
+/// 0x01 through `reshard` 0x09. Tag 0x00 is reserved (never valid), so
+/// an all-zero frame cannot masquerade as a request.
+fn op_tag(op: &str) -> Option<u8> {
+    OPS.iter().position(|&o| o == op).map(|i| (i + 1) as u8)
+}
+
+fn tag_op(tag: u8) -> Option<&'static str> {
+    OPS.get((tag as usize).checked_sub(1)?).copied()
+}
+
+fn response_op(resp: &Response) -> &'static str {
+    match resp {
+        Response::Hello(_) => "hello",
+        Response::Configured { .. } => "configure",
+        Response::Trained { .. } => "train",
+        Response::Observed(_) => "observe",
+        Response::Planned(_) => "plan",
+        Response::Retry(_) => "failure",
+        Response::Stats(_) => "stats",
+        Response::Snapshot { .. } => "snapshot",
+        Response::Resharded { .. } => "reshard",
+    }
+}
+
+/// One framing of the coordinator protocol. Copyable connection state:
+/// the event loop, the threaded server, and `RemoteClient` each hold
+/// the current `Wire` per connection and flip it after a successful
+/// v2 negotiation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    /// Newline-delimited JSON (wire version 1).
+    V1,
+    /// Length-prefixed binary (wire version 2).
+    V2,
+}
+
+impl Wire {
+    pub fn version(self) -> usize {
+        match self {
+            Wire::V1 => WIRE_VERSION,
+            Wire::V2 => WIRE_V2,
+        }
+    }
+
+    pub fn from_version(v: usize) -> Option<Wire> {
+        match v {
+            WIRE_VERSION => Some(Wire::V1),
+            WIRE_V2 => Some(Wire::V2),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Wire::V1 => "v1",
+            Wire::V2 => "v2",
+        }
+    }
+
+    /// CLI spelling (`--wire v1|v2`; bare version numbers accepted).
+    pub fn parse(s: &str) -> Option<Wire> {
+        match s {
+            "v1" | "1" => Some(Wire::V1),
+            "v2" | "2" => Some(Wire::V2),
+            _ => None,
+        }
+    }
+
+    /// Nonblocking frame splitter for the event loop: does `buf` (the
+    /// front of a connection's read buffer) hold one complete frame?
+    /// `Frame { consumed, from, to }` says "the payload is
+    /// `buf[from..to]`; drop the first `consumed` bytes afterwards" —
+    /// for v1 the payload is the line without its `\n`, for v2 the
+    /// tagged payload without its length header.
+    pub fn split(self, buf: &[u8], max_frame_bytes: usize) -> FrameSplit {
+        match self {
+            Wire::V1 => match buf.iter().position(|&b| b == b'\n') {
+                // Same boundary as the bounded line reader: the line
+                // *content* must fit the cap.
+                Some(pos) if pos > max_frame_bytes => FrameSplit::TooLarge,
+                Some(pos) => FrameSplit::Frame { consumed: pos + 1, from: 0, to: pos },
+                None if buf.len() > max_frame_bytes => FrameSplit::TooLarge,
+                None => FrameSplit::Incomplete,
+            },
+            Wire::V2 => {
+                if buf.len() < 4 {
+                    return FrameSplit::Incomplete;
+                }
+                let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+                if len > max_frame_bytes {
+                    // Decided from the header alone — the oversized
+                    // payload is never buffered.
+                    return FrameSplit::TooLarge;
+                }
+                if buf.len() < 4 + len {
+                    return FrameSplit::Incomplete;
+                }
+                FrameSplit::Frame { consumed: 4 + len, from: 4, to: 4 + len }
+            }
+        }
+    }
+}
+
+/// Result of [`Wire::split`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameSplit {
+    /// Not enough buffered bytes for one frame yet — keep reading.
+    Incomplete,
+    /// The frame declares/implies a length over the cap. The connection
+    /// must be poisoned (`request-too-large`, then close) — neither
+    /// framing can resynchronize past a dropped oversized frame.
+    TooLarge,
+    /// One complete frame: payload at `buf[from..to]`, and the first
+    /// `consumed` bytes of `buf` are done with.
+    Frame { consumed: usize, from: usize, to: usize },
+}
+
+// ---- binary primitives ---------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
+    match s {
+        None => out.push(0),
+        Some(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+    }
+}
+
+fn put_opt_u32(out: &mut Vec<u8>, v: Option<u32>) {
+    match v {
+        None => out.push(0),
+        Some(v) => {
+            out.push(1);
+            put_u32(out, v);
+        }
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+fn put_execution(out: &mut Vec<u8>, e: &Execution) {
+    put_f64(out, e.input_mb);
+    put_f64(out, e.dt);
+    put_f64s(out, &e.samples);
+}
+
+fn put_plan(out: &mut Vec<u8>, p: &StepPlan) {
+    put_f64s(out, &p.starts);
+    put_f64s(out, &p.peaks);
+}
+
+/// Wrap a tagged payload in the 4-byte length header.
+fn frame(tag: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + body.len());
+    put_u32(&mut out, (1 + body.len()) as u32);
+    out.push(tag);
+    out.extend_from_slice(body);
+    out
+}
+
+fn bad(msg: impl Into<String>) -> WireError {
+    WireError::new(ErrorCode::InvalidFrame, msg)
+}
+
+/// Bounds-checked cursor over one binary payload. Every structural
+/// decode error is `invalid-frame`; trailing unread bytes are ignored
+/// by design (the forward-compatibility seam — a newer peer may append
+/// fields).
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(bad("truncated frame"));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| bad("string field is not valid UTF-8"))
+    }
+
+    fn opt_str(&mut self) -> Result<Option<String>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            _ => Err(bad("optional-field flag must be 0 or 1")),
+        }
+    }
+
+    fn opt_u32(&mut self) -> Result<Option<u32>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u32()?)),
+            _ => Err(bad("optional-field flag must be 0 or 1")),
+        }
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.u32()? as usize;
+        // Check against the bytes actually present before allocating —
+        // a hostile length cannot force a huge allocation.
+        if n > self.remaining() / 8 {
+            return Err(bad("array length exceeds frame"));
+        }
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    /// Raw execution fields; semantic validation happens in
+    /// `execution_from_parts`, identically to the JSON path.
+    fn execution(&mut self, task: &str) -> Result<Execution, WireError> {
+        let input_mb = self.f64()?;
+        let dt = self.f64()?;
+        let samples = self.f64s()?;
+        execution_from_parts(task, input_mb, dt, samples)
+    }
+
+    fn plan(&mut self) -> Result<StepPlan, WireError> {
+        let starts = self.f64s()?;
+        let peaks = self.f64s()?;
+        plan_from_parts(starts, peaks)
+    }
+}
+
+// ---- requests ------------------------------------------------------------
+
+/// Encode one request for the given wire. v1 output is the JSON line
+/// (trailing `\n` included), byte-identical to what `RemoteClient` has
+/// always written.
+pub fn encode_request(wire: Wire, req: &Request) -> Vec<u8> {
+    match wire {
+        Wire::V1 => {
+            let mut v = req.to_json().to_string().into_bytes();
+            v.push(b'\n');
+            v
+        }
+        Wire::V2 => {
+            let mut body = Vec::new();
+            match req {
+                Request::Hello { client, min_version, max_version } => {
+                    put_opt_str(&mut body, client.as_deref());
+                    put_opt_u32(&mut body, min_version.map(|v| v as u32));
+                    put_opt_u32(&mut body, max_version.map(|v| v as u32));
+                }
+                Request::Configure { task, policy } => {
+                    put_opt_str(&mut body, task.as_deref());
+                    put_str(&mut body, policy.name());
+                }
+                Request::Train { task, history } => {
+                    put_str(&mut body, task);
+                    put_u32(&mut body, history.len() as u32);
+                    for e in history {
+                        put_execution(&mut body, e);
+                    }
+                }
+                Request::Observe { task, execution } => {
+                    put_str(&mut body, task);
+                    put_execution(&mut body, execution);
+                }
+                Request::Plan { task, input_mb } => {
+                    put_str(&mut body, task);
+                    put_f64(&mut body, *input_mb);
+                }
+                Request::Failure { task, plan, fail_time } => {
+                    put_opt_str(&mut body, task.as_deref());
+                    put_plan(&mut body, plan);
+                    put_f64(&mut body, *fail_time);
+                }
+                Request::Stats | Request::Snapshot => {}
+                Request::Reshard { shards } => {
+                    put_u32(&mut body, *shards as u32);
+                }
+            }
+            frame(op_tag(req.op()).expect("every Request op is in OPS"), &body)
+        }
+    }
+}
+
+/// Decode one request payload (as delimited by [`Wire::split`] or
+/// [`read_frame`]). `Ok(None)` is v1's blank line — skipped without a
+/// reply, exactly the old server behavior.
+pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<Option<Request>, WireError> {
+    match wire {
+        Wire::V1 => {
+            // Lossy conversion, as the bounded line reader always did:
+            // invalid UTF-8 fails JSON parsing with `invalid-json`.
+            let line = String::from_utf8_lossy(payload);
+            if line.trim().is_empty() {
+                return Ok(None);
+            }
+            Request::parse(&line).map(Some)
+        }
+        Wire::V2 => {
+            let mut c = Cur::new(payload);
+            let tag = c.u8().map_err(|_| bad("empty frame"))?;
+            let op = tag_op(tag).ok_or_else(|| bad(format!("unknown op tag 0x{tag:02x}")))?;
+            let req = match op {
+                "hello" => Request::Hello {
+                    client: c.opt_str()?,
+                    min_version: c.opt_u32()?.map(|v| v as usize),
+                    max_version: c.opt_u32()?.map(|v| v as usize),
+                },
+                "configure" => {
+                    let task = validate_configure_task(c.opt_str()?)?;
+                    let policy = policy_from_name(&c.str()?)?;
+                    Request::Configure { task, policy }
+                }
+                "train" => {
+                    let task = c.str()?;
+                    let n = c.u32()? as usize;
+                    validate_history_len(n)?;
+                    let history = (0..n)
+                        .map(|_| c.execution(&task))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Request::Train { task, history }
+                }
+                "observe" => {
+                    let task = c.str()?;
+                    let execution = c.execution(&task)?;
+                    Request::Observe { task, execution }
+                }
+                "plan" => Request::Plan { task: c.str()?, input_mb: c.f64()? },
+                "failure" => Request::Failure {
+                    task: c.opt_str()?,
+                    plan: c.plan()?,
+                    fail_time: c.f64()?,
+                },
+                "stats" => Request::Stats,
+                "snapshot" => Request::Snapshot,
+                "reshard" => {
+                    Request::Reshard { shards: validate_reshard_shards(c.u32()? as usize)? }
+                }
+                _ => unreachable!("tag_op returns only OPS entries"),
+            };
+            Ok(Some(req))
+        }
+    }
+}
+
+// ---- responses -----------------------------------------------------------
+
+/// Encode one success response. v1 output is the JSON line with its
+/// trailing `\n`, byte-identical to the threaded server's `writeln!`.
+pub fn encode_response(wire: Wire, resp: &Response) -> Vec<u8> {
+    match wire {
+        Wire::V1 => {
+            let mut v = resp.to_json().to_string().into_bytes();
+            v.push(b'\n');
+            v
+        }
+        Wire::V2 => {
+            let mut body = Vec::new();
+            match resp {
+                Response::Hello(i) => {
+                    put_u32(&mut body, i.version as u32);
+                    put_u32(&mut body, i.shards as u32);
+                    put_u32(&mut body, i.ops.len() as u32);
+                    for op in &i.ops {
+                        put_str(&mut body, op);
+                    }
+                    put_u32(&mut body, i.policies.len() as u32);
+                    for p in &i.policies {
+                        put_str(&mut body, p);
+                    }
+                }
+                Response::Configured { task, policy } => {
+                    put_opt_str(&mut body, task.as_deref());
+                    put_str(&mut body, policy.name());
+                }
+                Response::Trained { task, executions } => {
+                    put_str(&mut body, task);
+                    put_u64(&mut body, *executions);
+                }
+                Response::Observed(a) => {
+                    put_str(&mut body, &a.task);
+                    put_u64(&mut body, a.executions);
+                    put_str(&mut body, a.predictor);
+                }
+                Response::Planned(o) => {
+                    put_plan(&mut body, &o.plan);
+                    put_str(&mut body, o.predictor);
+                    put_u64(&mut body, o.model_version);
+                    put_opt_str(&mut body, o.fallback_reason);
+                }
+                Response::Retry(r) => {
+                    put_plan(&mut body, &r.plan);
+                    put_str(&mut body, r.predictor);
+                }
+                Response::Stats(s) => {
+                    put_u32(&mut body, s.shards as u32);
+                    put_u64(&mut body, s.requests);
+                    put_u64(&mut body, s.batches);
+                    put_u64(&mut body, s.failures_handled);
+                    put_u64(&mut body, s.tasks_trained);
+                    put_u64(&mut body, s.observations);
+                    put_u64(&mut body, s.fallbacks);
+                    put_u64(&mut body, s.conns_refused);
+                    put_u64(&mut body, s.conn_timeouts);
+                    put_f64(&mut body, s.latency_p50_us);
+                    put_f64(&mut body, s.latency_p99_us);
+                }
+                Response::Snapshot { doc } => {
+                    // The snapshot document is structurally JSON (it is
+                    // the on-disk schema); v2 carries its text as one
+                    // string field rather than inventing a second
+                    // serialization of the whole model state.
+                    put_str(&mut body, &doc.to_string());
+                }
+                Response::Resharded { shard_ids } => {
+                    put_u32(&mut body, shard_ids.len() as u32);
+                    for &id in shard_ids {
+                        put_u32(&mut body, id as u32);
+                    }
+                }
+            }
+            let tag = RESPONSE_BIT
+                | op_tag(response_op(resp)).expect("every Response op is in OPS");
+            frame(tag, &body)
+        }
+    }
+}
+
+/// Encode an error reply (`ok:false` line on v1, a `0xFF` frame on v2).
+pub fn encode_error(wire: Wire, err: &WireError) -> Vec<u8> {
+    match wire {
+        Wire::V1 => {
+            let mut v = err.to_json().to_string().into_bytes();
+            v.push(b'\n');
+            v
+        }
+        Wire::V2 => {
+            let mut body = Vec::new();
+            put_str(&mut body, err.code.as_str());
+            put_str(&mut body, &err.message);
+            frame(TAG_ERROR, &body)
+        }
+    }
+}
+
+/// Client side: decode one response payload for the request op it
+/// answers. Server-sent errors come back as `Err` (as
+/// `Response::from_json` always has); structurally undecodable frames
+/// are `Err` with `invalid-frame`/`invalid-json`.
+pub fn decode_response(wire: Wire, payload: &[u8], op: &str) -> Result<Response, WireError> {
+    match wire {
+        Wire::V1 => {
+            let line = String::from_utf8_lossy(payload);
+            let j = Json::parse(&line)
+                .map_err(|e| WireError::new(ErrorCode::InvalidJson, e.to_string()))?;
+            Response::from_json(&j, op)
+        }
+        Wire::V2 => {
+            let mut c = Cur::new(payload);
+            let tag = c.u8().map_err(|_| bad("empty frame"))?;
+            if tag == TAG_ERROR {
+                let code = c.str()?;
+                let message = c.str()?;
+                // Unknown codes from a newer server degrade to
+                // Internal, as WireError::from_json does.
+                return Err(WireError {
+                    code: ErrorCode::parse(&code).unwrap_or(ErrorCode::Internal),
+                    message,
+                });
+            }
+            let want = RESPONSE_BIT | op_tag(op).ok_or_else(|| bad("unknown request op"))?;
+            if tag != want {
+                return Err(bad(format!(
+                    "response tag 0x{tag:02x} does not answer op '{op}'"
+                )));
+            }
+            // Provenance degradation, same stance as the JSON decoder.
+            let predictor_of = |name: String| -> &'static str {
+                PredictorPolicy::parse(&name)
+                    .map(PredictorPolicy::name)
+                    .unwrap_or(PROVENANCE_UNKNOWN)
+            };
+            match op {
+                "hello" => {
+                    let version = c.u32()? as usize;
+                    let shards = c.u32()? as usize;
+                    let n_ops = c.u32()? as usize;
+                    if n_ops > c.remaining() / 4 {
+                        return Err(bad("array length exceeds frame"));
+                    }
+                    let ops = (0..n_ops).map(|_| c.str()).collect::<Result<Vec<_>, _>>()?;
+                    let n_pol = c.u32()? as usize;
+                    if n_pol > c.remaining() / 4 {
+                        return Err(bad("array length exceeds frame"));
+                    }
+                    let policies =
+                        (0..n_pol).map(|_| c.str()).collect::<Result<Vec<_>, _>>()?;
+                    Ok(Response::Hello(ServerInfo { version, ops, policies, shards }))
+                }
+                "configure" => {
+                    let task = c.opt_str()?;
+                    let policy = policy_from_name(&c.str()?)?;
+                    Ok(Response::Configured { task, policy })
+                }
+                "train" => Ok(Response::Trained { task: c.str()?, executions: c.u64()? }),
+                "observe" => Ok(Response::Observed(ObserveAck {
+                    task: c.str()?,
+                    executions: c.u64()?,
+                    predictor: predictor_of(c.str()?),
+                })),
+                "plan" => {
+                    let plan = c.plan()?;
+                    let predictor = predictor_of(c.str()?);
+                    let model_version = c.u64()?;
+                    let fallback_reason = match c.opt_str()?.as_deref() {
+                        None => None,
+                        Some(FALLBACK_UNTRAINED) => Some(FALLBACK_UNTRAINED),
+                        // A newer server's reason: still a fallback.
+                        Some(_) => Some(PROVENANCE_UNKNOWN),
+                    };
+                    Ok(Response::Planned(PlanOutcome {
+                        plan,
+                        predictor,
+                        model_version,
+                        fallback_reason,
+                    }))
+                }
+                "failure" => Ok(Response::Retry(RetryOutcome {
+                    plan: c.plan()?,
+                    predictor: predictor_of(c.str()?),
+                })),
+                "stats" => Ok(Response::Stats(StatsSummary {
+                    shards: c.u32()? as usize,
+                    requests: c.u64()?,
+                    batches: c.u64()?,
+                    failures_handled: c.u64()?,
+                    tasks_trained: c.u64()?,
+                    observations: c.u64()?,
+                    fallbacks: c.u64()?,
+                    conns_refused: c.u64()?,
+                    conn_timeouts: c.u64()?,
+                    latency_p50_us: c.f64()?,
+                    latency_p99_us: c.f64()?,
+                })),
+                "snapshot" => {
+                    let text = c.str()?;
+                    let doc = Json::parse(&text)
+                        .map_err(|e| bad(format!("snapshot payload is not JSON: {e}")))?;
+                    Ok(Response::Snapshot { doc })
+                }
+                "reshard" => {
+                    let n = c.u32()? as usize;
+                    if n > c.remaining() / 4 {
+                        return Err(bad("array length exceeds frame"));
+                    }
+                    let shard_ids = (0..n)
+                        .map(|_| c.u32().map(|v| v as usize))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Ok(Response::Resharded { shard_ids })
+                }
+                other => Err(WireError::new(
+                    ErrorCode::UnknownOp,
+                    format!("no response decoder for op '{other}'"),
+                )),
+            }
+        }
+    }
+}
+
+// ---- blocking frame reader -----------------------------------------------
+
+/// Outcome of one blocking framed read (threaded server and
+/// `RemoteClient`). The v1 arm preserves the bounded line reader's
+/// semantics exactly, including serving an unterminated final line
+/// before reporting EOF.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// One frame's payload (v1: the line bytes without `\n`).
+    Frame(Vec<u8>),
+    /// Peer closed the connection cleanly.
+    Eof,
+    /// The frame exceeds `max_frame_bytes`; the connection must be
+    /// closed — neither framing can resynchronize past it.
+    TooLong,
+    /// The socket's read timeout elapsed.
+    TimedOut,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut
+}
+
+enum Exact {
+    Ok,
+    Eof,
+    TimedOut,
+}
+
+fn read_exact_soft<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<Exact> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => return Ok(Exact::Eof),
+            Ok(m) => n += m,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return Ok(Exact::TimedOut),
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Exact::Ok)
+}
+
+/// Read one frame of at most `max` payload bytes from a blocking
+/// reader. Neither arm can be driven into unbounded allocation: v1
+/// never buffers more than `max + one chunk` bytes of an endless line,
+/// v2 rejects the frame from its 4-byte header before allocating.
+pub fn read_frame<R: BufRead>(reader: &mut R, wire: Wire, max: usize) -> io::Result<FrameRead> {
+    match wire {
+        Wire::V1 => {
+            let mut buf: Vec<u8> = Vec::new();
+            loop {
+                let (used, done) = {
+                    let chunk = match reader.fill_buf() {
+                        Ok(c) => c,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) if is_timeout(&e) => return Ok(FrameRead::TimedOut),
+                        Err(e) => return Err(e),
+                    };
+                    if chunk.is_empty() {
+                        return Ok(if buf.is_empty() {
+                            FrameRead::Eof
+                        } else {
+                            FrameRead::Frame(buf)
+                        });
+                    }
+                    match chunk.iter().position(|&b| b == b'\n') {
+                        Some(pos) if buf.len() + pos > max => (pos + 1, Some(FrameRead::TooLong)),
+                        Some(pos) => {
+                            buf.extend_from_slice(&chunk[..pos]);
+                            (pos + 1, Some(FrameRead::Frame(std::mem::take(&mut buf))))
+                        }
+                        None if buf.len() + chunk.len() > max => {
+                            (chunk.len(), Some(FrameRead::TooLong))
+                        }
+                        None => {
+                            let n = chunk.len();
+                            buf.extend_from_slice(chunk);
+                            (n, None)
+                        }
+                    }
+                };
+                reader.consume(used);
+                if let Some(outcome) = done {
+                    return Ok(outcome);
+                }
+            }
+        }
+        Wire::V2 => {
+            let mut hdr = [0u8; 4];
+            match read_exact_soft(reader, &mut hdr)? {
+                Exact::Eof => return Ok(FrameRead::Eof),
+                Exact::TimedOut => return Ok(FrameRead::TimedOut),
+                Exact::Ok => {}
+            }
+            let len = u32::from_le_bytes(hdr) as usize;
+            if len > max {
+                return Ok(FrameRead::TooLong);
+            }
+            let mut payload = vec![0u8; len];
+            match read_exact_soft(reader, &mut payload)? {
+                // EOF or timeout mid-frame: the stream cannot be
+                // resynchronized either way — report the terminal state.
+                Exact::Eof => Ok(FrameRead::Eof),
+                Exact::TimedOut => Ok(FrameRead::TimedOut),
+                Exact::Ok => Ok(FrameRead::Frame(payload)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exec(seed: u64) -> Execution {
+        let mut rng = Rng::new(seed);
+        let n = 3 + rng.below(6);
+        Execution::new(
+            "t",
+            rng.uniform(100.0, 9000.0),
+            1.0,
+            (0..n).map(|_| rng.uniform(0.01, 12.0)).collect(),
+        )
+    }
+
+    fn every_request() -> Vec<Request> {
+        vec![
+            Request::Hello {
+                client: Some("codec-test".into()),
+                min_version: Some(1),
+                max_version: Some(2),
+            },
+            Request::Hello { client: None, min_version: None, max_version: None },
+            Request::Configure { task: Some("bwa".into()), policy: PredictorPolicy::WittLr },
+            Request::Configure { task: None, policy: PredictorPolicy::KsPlus },
+            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)] },
+            Request::Observe { task: "t".into(), execution: exec(3) },
+            Request::Plan { task: "bwa".into(), input_mb: 1234.5 },
+            Request::Failure {
+                task: Some("bwa".into()),
+                plan: StepPlan::new(vec![0.0, 10.5], vec![2.25, 8.0]),
+                fail_time: 3.5,
+            },
+            Request::Stats,
+            Request::Snapshot,
+            Request::Reshard { shards: 4 },
+        ]
+    }
+
+    fn every_response() -> Vec<Response> {
+        vec![
+            Response::Hello(ServerInfo {
+                version: 2,
+                ops: OPS.iter().map(|s| s.to_string()).collect(),
+                policies: PredictorPolicy::names().iter().map(|s| s.to_string()).collect(),
+                shards: 4,
+            }),
+            Response::Configured { task: Some("bwa".into()), policy: PredictorPolicy::TovarPpm },
+            Response::Configured { task: None, policy: PredictorPolicy::KsPlus },
+            Response::Trained { task: "bwa".into(), executions: 12 },
+            Response::Observed(ObserveAck {
+                task: "bwa".into(),
+                executions: 13,
+                predictor: "ksplus",
+            }),
+            Response::Planned(PlanOutcome {
+                plan: StepPlan::new(
+                    vec![0.0, 68.279_999_999_999_99],
+                    vec![4.125, 8.800000000000001],
+                ),
+                predictor: "ksplus",
+                model_version: 13,
+                fallback_reason: None,
+            }),
+            Response::Planned(PlanOutcome {
+                plan: StepPlan::flat(32.0),
+                predictor: "default-limits",
+                model_version: 0,
+                fallback_reason: Some(FALLBACK_UNTRAINED),
+            }),
+            Response::Retry(RetryOutcome {
+                plan: StepPlan::new(vec![0.0, 60.0], vec![2.0, 8.0]),
+                predictor: "witt-lr",
+            }),
+            Response::Stats(StatsSummary {
+                shards: 2,
+                requests: 100,
+                batches: 20,
+                failures_handled: 3,
+                tasks_trained: 5,
+                observations: 7,
+                fallbacks: 2,
+                conns_refused: 4,
+                conn_timeouts: 1,
+                latency_p50_us: 12.5,
+                latency_p99_us: 90.25,
+            }),
+            Response::Snapshot {
+                doc: Json::obj(vec![
+                    ("schema", "ksplus-model-snapshot/v1".into()),
+                    ("tasks", Json::Arr(vec![])),
+                ]),
+            },
+            Response::Resharded { shard_ids: vec![0, 2, 5] },
+        ]
+    }
+
+    #[test]
+    fn v1_is_byte_identical_to_the_json_lines() {
+        // The codec seam must not perturb v1 traffic by a single byte.
+        for req in every_request() {
+            let mut want = req.to_json().to_string().into_bytes();
+            want.push(b'\n');
+            assert_eq!(encode_request(Wire::V1, &req), want);
+        }
+        for resp in every_response() {
+            let mut want = resp.to_json().to_string().into_bytes();
+            want.push(b'\n');
+            assert_eq!(encode_response(Wire::V1, &resp), want);
+        }
+        let err = WireError::new(ErrorCode::UnknownOp, "nope");
+        let mut want = err.to_json().to_string().into_bytes();
+        want.push(b'\n');
+        assert_eq!(encode_error(Wire::V1, &err), want);
+    }
+
+    #[test]
+    fn v2_requests_roundtrip_every_op() {
+        for req in every_request() {
+            let framed = encode_request(Wire::V2, &req);
+            let split = Wire::V2.split(&framed, DEFAULT_MAX_FRAME_BYTES);
+            let FrameSplit::Frame { consumed, from, to } = split else {
+                panic!("{req:?}: not one frame: {split:?}");
+            };
+            assert_eq!(consumed, framed.len());
+            let back = decode_request(Wire::V2, &framed[from..to])
+                .unwrap_or_else(|e| panic!("{req:?}: {e}"))
+                .expect("v2 has no blank frames");
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn v2_responses_roundtrip_with_bit_exact_floats() {
+        for resp in every_response() {
+            let op = response_op(&resp);
+            let framed = encode_response(Wire::V2, &resp);
+            let FrameSplit::Frame { from, to, .. } =
+                Wire::V2.split(&framed, DEFAULT_MAX_FRAME_BYTES)
+            else {
+                panic!("{op}: bad frame");
+            };
+            let back = decode_response(Wire::V2, &framed[from..to], op)
+                .unwrap_or_else(|e| panic!("{op}: {e}"));
+            assert_eq!(back, resp, "roundtrip for {op}");
+        }
+        // PartialEq on f64 conflates 0.0/-0.0; pin bits explicitly.
+        let plan = StepPlan::new(vec![-0.0, 68.279_999_999_999_99], vec![4.4, f64::MIN_POSITIVE]);
+        let resp = Response::Retry(RetryOutcome { plan: plan.clone(), predictor: "ksplus" });
+        let framed = encode_response(Wire::V2, &resp);
+        let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
+            panic!()
+        };
+        match decode_response(Wire::V2, &framed[from..to], "failure").unwrap() {
+            Response::Retry(r) => {
+                for (a, b) in r.plan.starts.iter().zip(&plan.starts) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in r.plan.peaks.iter().zip(&plan.peaks) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v2_error_frames_roundtrip_and_unknown_codes_degrade() {
+        for code in ErrorCode::ALL {
+            let err = WireError::new(code, format!("ctx {}", code.as_str()));
+            let framed = encode_error(Wire::V2, &err);
+            let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
+                panic!()
+            };
+            let got = decode_response(Wire::V2, &framed[from..to], "plan").unwrap_err();
+            assert_eq!(got, err);
+        }
+        // A code from the future degrades to Internal, message kept.
+        let mut body = Vec::new();
+        put_str(&mut body, "circuit-breaker-open");
+        put_str(&mut body, "try later");
+        let framed = frame(TAG_ERROR, &body);
+        let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
+            panic!()
+        };
+        let got = decode_response(Wire::V2, &framed[from..to], "plan").unwrap_err();
+        assert_eq!(got.code, ErrorCode::Internal);
+        assert_eq!(got.message, "try later");
+    }
+
+    #[test]
+    fn v2_structural_garbage_is_invalid_frame_without_big_allocations() {
+        // Empty payload, unknown tag, truncated fields.
+        assert_eq!(decode_request(Wire::V2, &[]).unwrap_err().code, ErrorCode::InvalidFrame);
+        assert_eq!(
+            decode_request(Wire::V2, &[0x6f]).unwrap_err().code,
+            ErrorCode::InvalidFrame
+        );
+        assert_eq!(
+            decode_request(Wire::V2, &[0x00]).unwrap_err().code,
+            ErrorCode::InvalidFrame
+        );
+        // plan op with a truncated task string.
+        let payload = [0x05, 0xff, 0xff, 0xff, 0x7f];
+        assert_eq!(
+            decode_request(Wire::V2, &payload).unwrap_err().code,
+            ErrorCode::InvalidFrame
+        );
+        // observe with a samples count far past the frame: must error
+        // before allocating, not OOM.
+        let mut body = Vec::new();
+        put_str(&mut body, "t");
+        put_f64(&mut body, 1.0);
+        put_f64(&mut body, 1.0);
+        put_u32(&mut body, u32::MAX);
+        let mut payload = vec![0x04];
+        payload.extend_from_slice(&body);
+        assert_eq!(
+            decode_request(Wire::V2, &payload).unwrap_err().code,
+            ErrorCode::InvalidFrame
+        );
+    }
+
+    #[test]
+    fn v2_semantic_errors_match_v1_codes_and_messages() {
+        // The same malformed request earns the identical error on both
+        // wires — codes *and* messages, because the validators are the
+        // same functions.
+        let cases: Vec<(Request, &str)> = vec![
+            (
+                Request::Observe {
+                    task: "t".into(),
+                    execution: Execution::new("t", 1.0, 0.0, vec![1.0]),
+                },
+                r#"{"op":"observe","task":"t","execution":{"input_mb":1,"dt":0,"samples":[1]}}"#,
+            ),
+            (
+                Request::Observe {
+                    task: "t".into(),
+                    execution: Execution::new("t", 1.0, 1.0, vec![]),
+                },
+                r#"{"op":"observe","task":"t","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
+            ),
+            (
+                Request::Failure {
+                    task: None,
+                    plan: StepPlan::new(vec![0.0, 1.0], vec![1.0]),
+                    fail_time: 1.0,
+                },
+                r#"{"op":"failure","plan":{"starts":[0,1],"peaks":[1]},"fail_time":1}"#,
+            ),
+            (
+                Request::Reshard { shards: 0 },
+                r#"{"op":"reshard","shards":0}"#,
+            ),
+            (
+                Request::Configure { task: Some("*".into()), policy: PredictorPolicy::KsPlus },
+                r#"{"op":"configure","task":"*","policy":"ksplus"}"#,
+            ),
+            (
+                Request::Train { task: "t".into(), history: vec![] },
+                r#"{"op":"train","task":"t","history":[]}"#,
+            ),
+        ];
+        for (req, v1_line) in cases {
+            let v1_err = Request::parse(v1_line).unwrap_err();
+            let framed = encode_request(Wire::V2, &req);
+            let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
+                panic!()
+            };
+            let v2_err = decode_request(Wire::V2, &framed[from..to]).unwrap_err();
+            assert_eq!(v2_err, v1_err, "wires disagree for {v1_line}");
+        }
+    }
+
+    #[test]
+    fn split_handles_partial_frames_and_caps() {
+        // v2: header alone, partial payload, exact frame, frame + tail.
+        let framed = encode_request(Wire::V2, &Request::Stats);
+        assert_eq!(Wire::V2.split(&framed[..3], 1024), FrameSplit::Incomplete);
+        assert_eq!(Wire::V2.split(&framed[..4], 1024), FrameSplit::Incomplete);
+        let FrameSplit::Frame { consumed, from, to } = Wire::V2.split(&framed, 1024) else {
+            panic!()
+        };
+        assert_eq!((consumed, from, to), (framed.len(), 4, framed.len()));
+        let mut two = framed.clone();
+        two.extend_from_slice(&framed);
+        let FrameSplit::Frame { consumed, .. } = Wire::V2.split(&two, 1024) else { panic!() };
+        assert_eq!(consumed, framed.len());
+        // Oversized: rejected from the header alone, payload absent.
+        let mut huge = Vec::new();
+        put_u32(&mut huge, 2048);
+        assert_eq!(Wire::V2.split(&huge, 1024), FrameSplit::TooLarge);
+
+        // v1: no newline yet, newline, content-over-cap boundaries.
+        assert_eq!(Wire::V1.split(b"{\"op\":\"st", 1024), FrameSplit::Incomplete);
+        assert_eq!(
+            Wire::V1.split(b"{\"op\":\"stats\"}\nrest", 1024),
+            FrameSplit::Frame { consumed: 15, from: 0, to: 14 }
+        );
+        // A 5-byte line is within a 5-byte cap; 6 bytes is not.
+        assert_eq!(
+            Wire::V1.split(b"aaaaa\n", 5),
+            FrameSplit::Frame { consumed: 6, from: 0, to: 5 }
+        );
+        assert_eq!(Wire::V1.split(b"aaaaaa\n", 5), FrameSplit::TooLarge);
+        assert_eq!(Wire::V1.split(b"aaaaaa", 5), FrameSplit::TooLarge);
+    }
+
+    #[test]
+    fn blocking_read_frame_matches_split_semantics() {
+        use std::io::BufReader;
+        // v1 line, v1 unterminated final line, then EOF.
+        let mut r = BufReader::new(&b"{\"op\":\"stats\"}\n{\"op\":\"snap"[..]);
+        let FrameRead::Frame(p) = read_frame(&mut r, Wire::V1, 1024).unwrap() else { panic!() };
+        assert_eq!(p, b"{\"op\":\"stats\"}");
+        let FrameRead::Frame(p) = read_frame(&mut r, Wire::V1, 1024).unwrap() else { panic!() };
+        assert_eq!(p, b"{\"op\":\"snap");
+        assert!(matches!(read_frame(&mut r, Wire::V1, 1024).unwrap(), FrameRead::Eof));
+
+        // v1 over-cap line.
+        let long = vec![b'x'; 64];
+        let mut r = BufReader::new(&long[..]);
+        assert!(matches!(read_frame(&mut r, Wire::V1, 16).unwrap(), FrameRead::TooLong));
+
+        // v2: two frames back to back, then EOF.
+        let mut bytes = encode_request(Wire::V2, &Request::Stats);
+        bytes.extend_from_slice(&encode_request(
+            Wire::V2,
+            &Request::Plan { task: "bwa".into(), input_mb: 7.5 },
+        ));
+        let mut r = BufReader::new(&bytes[..]);
+        let FrameRead::Frame(p) = read_frame(&mut r, Wire::V2, 1024).unwrap() else { panic!() };
+        assert_eq!(decode_request(Wire::V2, &p).unwrap(), Some(Request::Stats));
+        let FrameRead::Frame(p) = read_frame(&mut r, Wire::V2, 1024).unwrap() else { panic!() };
+        assert_eq!(
+            decode_request(Wire::V2, &p).unwrap(),
+            Some(Request::Plan { task: "bwa".into(), input_mb: 7.5 })
+        );
+        assert!(matches!(read_frame(&mut r, Wire::V2, 1024).unwrap(), FrameRead::Eof));
+
+        // v2 over-cap frame: refused from the header.
+        let mut huge = Vec::new();
+        put_u32(&mut huge, (1 << 30) as u32);
+        let mut r = BufReader::new(&huge[..]);
+        assert!(matches!(read_frame(&mut r, Wire::V2, 1024).unwrap(), FrameRead::TooLong));
+    }
+
+    #[test]
+    fn blank_v1_lines_are_skipped_without_reply() {
+        assert_eq!(decode_request(Wire::V1, b"").unwrap(), None);
+        assert_eq!(decode_request(Wire::V1, b"   \r").unwrap(), None);
+        assert!(decode_request(Wire::V1, b"{\"op\":\"stats\"}").unwrap().is_some());
+    }
+
+    #[test]
+    fn wire_names_and_versions() {
+        assert_eq!(Wire::parse("v1"), Some(Wire::V1));
+        assert_eq!(Wire::parse("2"), Some(Wire::V2));
+        assert_eq!(Wire::parse("v3"), None);
+        assert_eq!(Wire::from_version(Wire::V2.version()), Some(Wire::V2));
+        assert_eq!(Wire::V1.name(), "v1");
+        assert_eq!(Wire::V2.name(), "v2");
+    }
+}

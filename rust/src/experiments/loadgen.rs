@@ -7,17 +7,67 @@
 //! `shards: N` on an N-core machine should sustain a multiple of the
 //! single-shard throughput because every shard owns an independent model
 //! store, backend, and batcher. Exposed as `repro loadgen`.
+//!
+//! The generator can also drive the coordinator through a real TCP front
+//! end instead of the in-process `Client` (`--server threaded` or
+//! `--server eventloop`), on either wire (`--wire v1|v2`) and with
+//! request pipelining (`--pipeline N` in-flight requests per
+//! connection). That turns the same workload into an apples-to-apples
+//! comparison of the serving stacks: the in-process numbers bound what
+//! the pool itself can do, and the per-front-end numbers show what each
+//! transport layer costs on top.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::service::{Coordinator, CoordinatorConfig, ServiceStats};
+#[cfg(unix)]
+use crate::coordinator::eventloop::EventLoopServer;
+use crate::coordinator::protocol::{Request, Response};
+use crate::coordinator::remote::RemoteClient;
+use crate::coordinator::server::Server;
+use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig, ServiceStats};
+use crate::coordinator::wire::Wire;
 use crate::coordinator::{BackendSpec, PredictorPolicy};
 use crate::trace::workflow::Workflow;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Connect/read/write bound on every loadgen client connection: a wedged
+/// server fails the run instead of hanging it.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How the generated load reaches the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Call the coordinator `Client` directly — no sockets, no codec.
+    /// The historical loadgen; measures the pool itself.
+    InProcess,
+    /// Thread-per-connection TCP server (`repro serve --threaded`).
+    Threaded,
+    /// Readiness-driven event-loop TCP server (unix only).
+    EventLoop,
+}
+
+impl ServeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeMode::InProcess => "in-process",
+            ServeMode::Threaded => "threaded",
+            ServeMode::EventLoop => "eventloop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServeMode> {
+        match s {
+            "none" | "in-process" | "inprocess" => Some(ServeMode::InProcess),
+            "threaded" => Some(ServeMode::Threaded),
+            "eventloop" | "event-loop" => Some(ServeMode::EventLoop),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
@@ -48,6 +98,16 @@ pub struct LoadGenConfig {
     /// observation is lost or an invalid plan is served. Requires
     /// `shards >= 2` (a lone shard has no standby).
     pub chaos_kills: usize,
+    /// Serving stack the clients drive. TCP modes bind an ephemeral
+    /// loopback port and run the same coordinator behind it.
+    pub server: ServeMode,
+    /// Wire the TCP clients negotiate (ignored in-process, where there
+    /// is no wire).
+    pub wire: Wire,
+    /// Requests each TCP client keeps in flight per connection. 1 is
+    /// strict request/response; higher depths ship a whole batch in one
+    /// write and then collect the in-order responses.
+    pub pipeline: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -62,6 +122,9 @@ impl Default for LoadGenConfig {
             spec: BackendSpec::Native,
             policy: PredictorPolicy::KsPlus,
             chaos_kills: 0,
+            server: ServeMode::InProcess,
+            wire: Wire::V1,
+            pipeline: 1,
         }
     }
 }
@@ -73,6 +136,13 @@ pub struct LoadGenReport {
     pub clients: usize,
     /// Policy the workload trained and served under.
     pub policy: &'static str,
+    /// Serving stack the load went through.
+    pub server: &'static str,
+    /// Wire the TCP clients spoke ("v1" for in-process runs, where it
+    /// only labels the row).
+    pub wire: &'static str,
+    /// Pipeline depth per connection.
+    pub pipeline: usize,
     /// Plan requests actually issued (>= the configured total after
     /// per-client rounding).
     pub requests: u64,
@@ -92,11 +162,20 @@ pub struct LoadGenReport {
 }
 
 impl LoadGenReport {
+    /// The key this run files under in the bench document's "serving"
+    /// section: one slot per (front end, wire) combination.
+    pub fn serving_key(&self) -> String {
+        format!("{}-{}", self.server, self.wire)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("shards", self.shards.into()),
             ("clients", self.clients.into()),
             ("policy", self.policy.into()),
+            ("server", self.server.into()),
+            ("wire", self.wire.into()),
+            ("pipeline", self.pipeline.into()),
             ("requests", (self.requests as usize).into()),
             ("elapsed_s", self.elapsed_s.into()),
             ("plans_per_s", self.plans_per_s.into()),
@@ -117,12 +196,17 @@ impl LoadGenReport {
     }
 }
 
-/// Write the sweep's reports as the machine-readable `BENCH_hotpath.json`
-/// "plans" section (schema shared with `cargo bench --bench hotpath`).
+/// Write the sweep's reports into the machine-readable
+/// `BENCH_hotpath.json` (schema shared with `cargo bench --bench
+/// hotpath`). In-process runs land in the "plans" array (the historical
+/// section); runs that went through a TCP front end land in the
+/// "serving" object, one slot per "<server>-<wire>" key, so the
+/// threaded-v1 and eventloop-v2 numbers sit side by side.
 ///
 /// Merges into an existing schema-compatible file instead of clobbering
-/// it, so running the hotpath bench (which owns the segmentation/observe
-/// sections) and then this sweep leaves both sets of numbers in place.
+/// it: the hotpath bench owns the segmentation/observe sections, a prior
+/// in-process sweep owns "plans", and each serving run only replaces its
+/// own key.
 pub fn write_bench_json(path: &std::path::Path, reports: &[LoadGenReport]) -> Result<()> {
     const SCHEMA: &str = "ksplus-bench-hotpath/v1";
     let mut doc = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
@@ -131,12 +215,31 @@ pub fn write_bench_json(path: &std::path::Path, reports: &[LoadGenReport]) -> Re
         }
         _ => Json::obj(vec![("schema", SCHEMA.into())]),
     };
+    let local: Vec<&LoadGenReport> =
+        reports.iter().filter(|r| r.server == ServeMode::InProcess.name()).collect();
+    let served: Vec<&LoadGenReport> =
+        reports.iter().filter(|r| r.server != ServeMode::InProcess.name()).collect();
     if let Json::Obj(map) = &mut doc {
         map.insert("source".to_string(), "repro-loadgen".into());
-        map.insert(
-            "plans".to_string(),
-            Json::Arr(reports.iter().map(LoadGenReport::to_json).collect()),
-        );
+        if !local.is_empty() {
+            map.insert(
+                "plans".to_string(),
+                Json::Arr(local.iter().map(|r| r.to_json()).collect()),
+            );
+        }
+        if !served.is_empty() {
+            let serving = map
+                .entry("serving".to_string())
+                .or_insert_with(|| Json::obj(vec![]));
+            if !matches!(serving, Json::Obj(_)) {
+                *serving = Json::obj(vec![]);
+            }
+            if let Json::Obj(slots) = serving {
+                for r in &served {
+                    slots.insert(r.serving_key(), r.to_json());
+                }
+            }
+        }
     }
     // A nested output path must not lose the sweep at the very end:
     // create the parent directories before writing.
@@ -151,11 +254,49 @@ pub fn write_bench_json(path: &std::path::Path, reports: &[LoadGenReport]) -> Re
     Ok(())
 }
 
+/// A running TCP front end of either flavor, stopped when the run ends.
+enum ServeHandle {
+    Threaded(Server),
+    #[cfg(unix)]
+    EventLoop(EventLoopServer),
+}
+
+impl ServeHandle {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            ServeHandle::Threaded(s) => s.addr(),
+            #[cfg(unix)]
+            ServeHandle::EventLoop(s) => s.addr(),
+        }
+    }
+
+    fn stop(&mut self) {
+        match self {
+            ServeHandle::Threaded(s) => s.stop(),
+            #[cfg(unix)]
+            ServeHandle::EventLoop(s) => s.stop(),
+        }
+    }
+}
+
+#[cfg(unix)]
+fn start_eventloop(client: Client) -> Result<ServeHandle> {
+    Ok(ServeHandle::EventLoop(
+        EventLoopServer::start("127.0.0.1:0", client).context("start event-loop server")?,
+    ))
+}
+
+#[cfg(not(unix))]
+fn start_eventloop(_client: Client) -> Result<ServeHandle> {
+    anyhow::bail!("the event-loop server needs epoll/kqueue; use --server threaded here")
+}
+
 /// Train every task of the workflow, then hammer the coordinator from
 /// `clients` closed-loop threads and collect the merged service stats.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
     anyhow::ensure!(cfg.requests >= 1, "loadgen needs at least one request");
+    anyhow::ensure!(cfg.pipeline >= 1, "pipeline depth must be at least 1");
     anyhow::ensure!(
         (0.0..=1.0).contains(&cfg.observe_frac),
         "observe_frac must be in [0, 1]"
@@ -163,6 +304,10 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(
         cfg.chaos_kills == 0 || cfg.shards >= 2,
         "chaos kills need at least 2 shards (a lone shard has no standby to restore from)"
+    );
+    anyhow::ensure!(
+        cfg.server != ServeMode::InProcess || (cfg.wire == Wire::V1 && cfg.pipeline == 1),
+        "--wire and --pipeline need a TCP front end (--server threaded|eventloop)"
     );
     let wf = Workflow::by_name(&cfg.workflow)
         .with_context(|| format!("unknown workflow '{}'", cfg.workflow))?;
@@ -215,12 +360,26 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     // only heavyweight allocation in the setup path.
     let obs_mix = Arc::new(obs_mix);
 
+    // TCP modes put the chosen front end (ephemeral loopback port) in
+    // front of the same coordinator; training above already went through
+    // the in-process client either way.
+    let mut front = match cfg.server {
+        ServeMode::InProcess => None,
+        ServeMode::Threaded => Some(ServeHandle::Threaded(
+            Server::start("127.0.0.1:0", coord.client()).context("start threaded server")?,
+        )),
+        ServeMode::EventLoop => Some(start_eventloop(coord.client())?),
+    };
+    let addr = front.as_ref().map(ServeHandle::addr);
+
     let per_client = cfg.requests.div_ceil(cfg.clients);
     let observe_frac = cfg.observe_frac;
     let t0 = Instant::now();
     // Chaos thread: crash/restore shards round-robin while the clients
     // run. Kills are spaced so the clients interleave real traffic with
-    // each amnesia-wipe-and-restore cycle.
+    // each amnesia-wipe-and-restore cycle. Chaos always goes through the
+    // in-process client — it is an operator action, not load — so it
+    // composes with any serving mode.
     let chaos_handle = (cfg.chaos_kills > 0).then(|| {
         let cl = coord.client();
         let target = cfg.chaos_kills as u64;
@@ -239,34 +398,94 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
             Ok(kills)
         })
     });
-    let mut handles = Vec::with_capacity(cfg.clients);
+    let mut handles: Vec<std::thread::JoinHandle<Result<(u64, u64)>>> =
+        Vec::with_capacity(cfg.clients);
     for c in 0..cfg.clients {
-        let cl = coord.client();
         let mix = mix.clone();
         let obs_mix = Arc::clone(&obs_mix);
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(0xC0FFEE ^ c as u64);
-            let mut invalid = 0u64;
-            let mut observes = 0u64;
-            for _ in 0..per_client {
-                if observe_frac > 0.0 && rng.f64() < observe_frac {
-                    let (task, exec) = &obs_mix[rng.below(obs_mix.len())];
-                    cl.observe(task, exec.clone());
-                    observes += 1;
-                }
-                let (task, input) = &mix[rng.below(mix.len())];
-                if !cl.plan(task, *input).is_valid() {
-                    invalid += 1;
-                }
+        match addr {
+            None => {
+                let cl = coord.client();
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xC0FFEE ^ c as u64);
+                    let mut invalid = 0u64;
+                    let mut observes = 0u64;
+                    for _ in 0..per_client {
+                        if observe_frac > 0.0 && rng.f64() < observe_frac {
+                            let (task, exec) = &obs_mix[rng.below(obs_mix.len())];
+                            cl.observe(task, exec.clone());
+                            observes += 1;
+                        }
+                        let (task, input) = &mix[rng.below(mix.len())];
+                        if !cl.plan(task, *input).is_valid() {
+                            invalid += 1;
+                        }
+                    }
+                    Ok((invalid, observes))
+                }));
             }
-            (invalid, observes)
-        }));
+            Some(addr) => {
+                let wire = cfg.wire;
+                let depth = cfg.pipeline;
+                handles.push(std::thread::spawn(move || {
+                    let mut rc = RemoteClient::connect_with_timeout(addr, CLIENT_TIMEOUT)
+                        .context("loadgen client connect")?;
+                    let info = rc.negotiate(wire.version()).context("negotiate wire")?;
+                    anyhow::ensure!(
+                        rc.wire() == wire,
+                        "asked for wire {} but the server granted v{}",
+                        wire.name(),
+                        info.version
+                    );
+                    let mut rng = Rng::new(0xC0FFEE ^ c as u64);
+                    let mut invalid = 0u64;
+                    let mut observes = 0u64;
+                    let mut remaining = per_client;
+                    let mut reqs: Vec<Request> = Vec::with_capacity(depth * 2);
+                    while remaining > 0 {
+                        let batch = depth.min(remaining);
+                        reqs.clear();
+                        for _ in 0..batch {
+                            if observe_frac > 0.0 && rng.f64() < observe_frac {
+                                let (task, exec) = &obs_mix[rng.below(obs_mix.len())];
+                                reqs.push(Request::Observe {
+                                    task: task.clone(),
+                                    execution: exec.clone(),
+                                });
+                            }
+                            let (task, input) = &mix[rng.below(mix.len())];
+                            reqs.push(Request::Plan { task: task.clone(), input_mb: *input });
+                        }
+                        for verdict in rc.pipeline(&reqs).context("pipelined batch")? {
+                            match verdict {
+                                Ok(Response::Planned(o)) => {
+                                    if !o.plan.is_valid() {
+                                        invalid += 1;
+                                    }
+                                }
+                                Ok(Response::Observed(_)) => observes += 1,
+                                Ok(other) => {
+                                    anyhow::bail!("unexpected load response: {other:?}")
+                                }
+                                Err(e) => anyhow::bail!(
+                                    "server rejected a load request: {} ({})",
+                                    e.message,
+                                    e.code.as_str()
+                                ),
+                            }
+                        }
+                        remaining -= batch;
+                    }
+                    Ok((invalid, observes))
+                }));
+            }
+        }
     }
     let mut invalid = 0u64;
     let mut observes = 0u64;
     for h in handles {
         let (i, o) =
-            h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))?;
+            h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))??;
         invalid += i;
         observes += o;
     }
@@ -280,6 +499,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     };
     let served = (per_client * cfg.clients) as u64;
     let elapsed = t0.elapsed().max(Duration::from_nanos(1));
+    if let Some(f) = front.as_mut() {
+        f.stop();
+    }
 
     let per_shard = client.shard_stats();
     let stats = ServiceStats::merged(&per_shard);
@@ -297,6 +519,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         shards: cfg.shards,
         clients: cfg.clients,
         policy: cfg.policy.name(),
+        server: cfg.server.name(),
+        wire: cfg.wire.name(),
+        pipeline: cfg.pipeline,
         requests: served,
         elapsed_s: elapsed.as_secs_f64(),
         plans_per_s: served as f64 / elapsed.as_secs_f64(),
@@ -328,6 +553,8 @@ mod tests {
         assert_eq!(r.per_shard_requests, vec![64]);
         assert!(r.plans_per_s > 0.0);
         assert!(r.p99_us >= r.p50_us);
+        assert_eq!(r.server, "in-process");
+        assert_eq!(r.wire, "v1");
     }
 
     #[test]
@@ -376,8 +603,12 @@ mod tests {
         assert!(run(&LoadGenConfig { shards: 0, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { observe_frac: 1.5, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { observe_frac: -0.1, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { pipeline: 0, ..Default::default() }).is_err());
         // Chaos on a single shard: no standby, refused up front.
         assert!(run(&LoadGenConfig { shards: 1, chaos_kills: 1, ..Default::default() }).is_err());
+        // Wire/pipeline knobs without a TCP front end to apply them to.
+        assert!(run(&LoadGenConfig { wire: Wire::V2, ..Default::default() }).is_err());
+        assert!(run(&LoadGenConfig { pipeline: 4, ..Default::default() }).is_err());
     }
 
     #[test]
@@ -401,6 +632,58 @@ mod tests {
             r.to_json().get("chaos_kills").and_then(Json::as_usize),
             Some(3)
         );
+    }
+
+    #[test]
+    fn loadgen_over_threaded_server_on_wire_v1() {
+        let r = run(&LoadGenConfig {
+            clients: 2,
+            requests: 32,
+            observe_frac: 0.25,
+            server: ServeMode::Threaded,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 32);
+        assert_eq!(r.server, "threaded");
+        assert_eq!(r.wire, "v1");
+        assert_eq!(r.serving_key(), "threaded-v1");
+        assert!(r.observes > 0, "no observes issued at frac 0.25");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn loadgen_over_eventloop_server_on_wire_v2_pipelined() {
+        let r = run(&LoadGenConfig {
+            clients: 2,
+            requests: 48,
+            observe_frac: 0.25,
+            server: ServeMode::EventLoop,
+            wire: Wire::V2,
+            pipeline: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 48);
+        assert_eq!(r.server, "eventloop");
+        assert_eq!(r.wire, "v2");
+        assert_eq!(r.pipeline, 4);
+        assert_eq!(r.serving_key(), "eventloop-v2");
+        assert!(r.observes > 0, "no observes issued at frac 0.25");
+        let j = r.to_json();
+        assert_eq!(j.get("server").and_then(Json::as_str), Some("eventloop"));
+        assert_eq!(j.get("wire").and_then(Json::as_str), Some("v2"));
+        assert_eq!(j.get("pipeline").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn serve_mode_parses_cli_spellings() {
+        assert_eq!(ServeMode::parse("none"), Some(ServeMode::InProcess));
+        assert_eq!(ServeMode::parse("in-process"), Some(ServeMode::InProcess));
+        assert_eq!(ServeMode::parse("threaded"), Some(ServeMode::Threaded));
+        assert_eq!(ServeMode::parse("eventloop"), Some(ServeMode::EventLoop));
+        assert_eq!(ServeMode::parse("event-loop"), Some(ServeMode::EventLoop));
+        assert_eq!(ServeMode::parse("tokio"), None);
     }
 
     #[test]
@@ -438,6 +721,33 @@ mod tests {
             back.get("schema").and_then(Json::as_str),
             Some("ksplus-bench-hotpath/v1")
         );
+    }
+
+    #[test]
+    fn bench_json_serving_section_merges_without_clobbering_plans() {
+        let local = run(&LoadGenConfig { clients: 2, requests: 16, ..Default::default() }).unwrap();
+        let served = run(&LoadGenConfig {
+            clients: 2,
+            requests: 16,
+            server: ServeMode::Threaded,
+            ..Default::default()
+        })
+        .unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "ksplus_bench_serving_{}.json",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        // First write the in-process sweep, then — as CI does — merge a
+        // serving run into the same document.
+        write_bench_json(&path, &[local]).unwrap();
+        write_bench_json(&path, &[served]).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.get("plans").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        let slot = back.get("serving").and_then(|s| s.get("threaded-v1")).unwrap();
+        assert_eq!(slot.get("server").and_then(Json::as_str), Some("threaded"));
+        assert_eq!(slot.get("requests").and_then(Json::as_usize), Some(16));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!   simulate               cluster simulation with a chosen method
 //!   serve                  smoke-run the online coordinator
 //!   loadgen                closed-loop load test over shard counts
-//!   protocol-smoke         wire v1 conformance check over live TCP
+//!   protocol-smoke         wire conformance check over live TCP (v1/v2)
 //!
 //! Run `repro <cmd> --help` for flags.
 
@@ -65,7 +65,7 @@ fn print_help() {
            simulate                       discrete-event cluster simulation\n\
            serve                          coordinator service smoke run\n\
            loadgen                        closed-loop coordinator load test\n\
-           protocol-smoke                 wire v1 conformance check over TCP\n"
+           protocol-smoke                 wire conformance check over TCP (v1/v2)\n"
     );
 }
 
@@ -234,6 +234,69 @@ fn backend_spec_from_flag(backend: &str) -> Result<BackendSpec> {
     Ok(spec)
 }
 
+/// Either TCP front end, so `serve` and `protocol-smoke` hold whichever
+/// one the flags picked. The event loop is the default wherever the
+/// readiness syscalls exist; `--threaded` keeps the thread-per-connection
+/// server reachable as a parity oracle.
+enum FrontEnd {
+    Threaded(ksplus::coordinator::server::Server),
+    #[cfg(unix)]
+    EventLoop(ksplus::coordinator::eventloop::EventLoopServer),
+}
+
+impl FrontEnd {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            FrontEnd::Threaded(s) => s.addr(),
+            #[cfg(unix)]
+            FrontEnd::EventLoop(s) => s.addr(),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            FrontEnd::Threaded(_) => "threaded",
+            #[cfg(unix)]
+            FrontEnd::EventLoop(_) => "eventloop",
+        }
+    }
+}
+
+/// Start the requested front end over a coordinator client. `threaded:
+/// false` asks for the event loop, which only exists where epoll/kqueue
+/// do.
+#[cfg(unix)]
+fn start_front_end(
+    addr: &str,
+    client: ksplus::coordinator::service::Client,
+    cfg: ksplus::coordinator::server::ServerConfig,
+    threaded: bool,
+) -> Result<FrontEnd> {
+    if threaded {
+        Ok(FrontEnd::Threaded(ksplus::coordinator::server::Server::start_with_config(
+            addr, client, cfg,
+        )?))
+    } else {
+        Ok(FrontEnd::EventLoop(ksplus::coordinator::eventloop::EventLoopServer::start_with_config(
+            addr, client, cfg,
+        )?))
+    }
+}
+
+#[cfg(not(unix))]
+fn start_front_end(
+    addr: &str,
+    client: ksplus::coordinator::service::Client,
+    cfg: ksplus::coordinator::server::ServerConfig,
+    _threaded: bool,
+) -> Result<FrontEnd> {
+    // No epoll/kqueue on this platform: the threaded server is the only
+    // front end, whatever the flag says.
+    Ok(FrontEnd::Threaded(ksplus::coordinator::server::Server::start_with_config(
+        addr, client, cfg,
+    )?))
+}
+
 /// Deterministic fingerprint of the plans the service would serve: one
 /// fixed-input plan per trained task (sorted by name), hashed over the
 /// exact f64 bits via the plan's shortest-roundtrip text form. Two
@@ -257,7 +320,7 @@ fn plan_fingerprint(client: &ksplus::coordinator::service::Client, tasks: &[Stri
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    use ksplus::coordinator::server::{Server, ServerConfig};
+    use ksplus::coordinator::server::ServerConfig;
     use ksplus::coordinator::snapshot;
 
     let cmd = Command::new("repro serve", "Coordinator service smoke run or TCP server")
@@ -284,6 +347,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "idle-timeout",
             "close wire connections idle for this many seconds (0 = never)",
             Some("0"),
+        )
+        .flag(
+            "max-frame-bytes",
+            "maximum request frame size in bytes, on either wire",
+            Some("1048576"),
+        )
+        .flag(
+            "dispatch-threads",
+            "event-loop dispatch worker threads (0 = size from the core count)",
+            Some("0"),
+        )
+        .bool_flag(
+            "threaded",
+            "serve with the thread-per-connection front end instead of the event loop",
         );
     let a = cmd.parse(argv)?;
     let spec = backend_spec_from_flag(a.get("backend").unwrap())?;
@@ -323,21 +400,26 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let task_names: Vec<String> = trace.tasks.iter().map(|t| t.task.clone()).collect();
 
     if let Some(addr) = a.get("listen") {
-        // Server mode: expose the newline-JSON wire protocol and block.
+        // Server mode: expose the wire protocol and block. The event
+        // loop serves by default where it exists; --threaded keeps the
+        // thread-per-connection oracle reachable.
         let idle = a.get_u64("idle-timeout")?;
         let server_cfg = ServerConfig {
             max_conns: a.get_usize("max-conns")?,
             read_timeout: (idle > 0).then(|| std::time::Duration::from_secs(idle)),
-            ..Default::default()
+            max_frame_bytes: a.get_usize("max-frame-bytes")?,
+            dispatch_threads: a.get_usize("dispatch-threads")?,
         };
-        let server = Server::start_with_config(addr, coord.client(), server_cfg)?;
+        let server = start_front_end(addr, coord.client(), server_cfg, a.get_bool("threaded"))?;
         println!(
-            "serving {} predictions on {} ({} task models pre-trained, {} shard(s))\n\
-             protocol: wire v1, one JSON object per line — op: hello | configure | train |\n\
-             observe | plan | failure | stats | snapshot | reshard (see docs/PROTOCOL.md)\n\
+            "serving {} predictions on {} ({} front end, {} task models pre-trained, {} shard(s))\n\
+             protocol: wire v1 (one JSON object per line) by default; negotiate wire v2\n\
+             (length-prefixed binary) via hello — op: hello | configure | train | observe |\n\
+             plan | failure | stats | snapshot | reshard (see docs/PROTOCOL.md)\n\
              Ctrl-C to stop.",
             policy.name(),
             server.addr(),
+            server.kind(),
             trace.tasks.len(),
             shards
         );
@@ -407,6 +489,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
          observation is lost",
         Some("0"),
     )
+    .flag(
+        "server",
+        "serving stack to drive: none (in-process), threaded, or eventloop",
+        Some("none"),
+    )
+    .flag("wire", "wire the TCP clients negotiate: v1 or v2", Some("v1"))
+    .flag("pipeline", "requests each TCP client keeps in flight", Some("1"))
     .flag("out", "write per-run JSON reports to this directory", None)
     .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
@@ -417,14 +506,23 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let requests = a.get_usize("requests")?;
     let observe_frac = a.get_f64("observe-frac")?;
     let chaos_kills = a.get_usize("chaos-kills")?;
+    let server = experiments::loadgen::ServeMode::parse(a.get("server").unwrap())
+        .with_context(|| format!("unknown server mode '{}'", a.get("server").unwrap()))?;
+    let wire = ksplus::coordinator::wire::Wire::parse(a.get("wire").unwrap())
+        .with_context(|| format!("unknown wire '{}'", a.get("wire").unwrap()))?;
+    let pipeline = a.get_usize("pipeline")?;
 
     println!(
-        "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {}{} ==",
+        "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {}, \
+         server {}, wire {}, pipeline {}{} ==",
         clients,
         requests,
         observe_frac,
         policy.name(),
         a.get("backend").unwrap(),
+        server.name(),
+        wire.name(),
+        pipeline,
         if chaos_kills > 0 {
             format!(", chaos-kills {chaos_kills}")
         } else {
@@ -448,6 +546,9 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             spec: spec.clone(),
             policy,
             chaos_kills,
+            server,
+            wire,
+            pipeline,
         })?;
         let speedup = match baseline {
             None => {
@@ -483,41 +584,60 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Wire v1 conformance smoke: starts a real TCP server, drives one
-/// request of every op (plus intentionally malformed lines) through the
-/// typed `RemoteClient`, and asserts on the structured responses — two
+/// Wire conformance smoke: starts a real TCP server (either front end),
+/// negotiates the requested wire, drives one request of every op (plus
+/// malformed and semantically invalid requests) through the typed
+/// `RemoteClient`, and asserts on the structured responses — two
 /// different per-task policies on the one server, provenance checked.
-/// Exits non-zero on any mismatch; run by CI on every push.
+/// Exits non-zero on any mismatch; run by CI on every push, on both
+/// wires.
 fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
+    use ksplus::coordinator::protocol::{ErrorCode, Request};
     use ksplus::coordinator::remote::RemoteClient;
-    use ksplus::coordinator::server::Server;
+    use ksplus::coordinator::server::ServerConfig;
+    use ksplus::coordinator::wire::Wire;
     use ksplus::segments::StepPlan;
     use ksplus::trace::Execution;
     use ksplus::util::json::Json;
 
     let cmd = Command::new(
         "repro protocol-smoke",
-        "Wire v1 conformance: every op + malformed lines over a live TCP server",
+        "Wire conformance: every op + malformed requests over a live TCP server",
     )
     .flag("shards", "coordinator worker shards", Some("2"))
     .flag(
         "policy",
         "service default policy (ksplus | witt-lr | tovar-ppm | ksegments | default-limits)",
         Some("ksplus"),
-    );
+    )
+    .flag("server", "front end to test: threaded or eventloop", Some("threaded"))
+    .flag("wire", "wire to negotiate: v1 or v2", Some("v1"));
     let a = cmd.parse(argv)?;
     let shards = a.get_usize("shards")?;
     let policy = policy_from_flag(a.get("policy").unwrap())?;
-    let (_coord, server) = Server::start_with_backend(
-        "127.0.0.1:0",
+    let wire = Wire::parse(a.get("wire").unwrap())
+        .with_context(|| format!("unknown wire '{}'", a.get("wire").unwrap()))?;
+    let threaded = match a.get("server").unwrap() {
+        "threaded" => true,
+        "eventloop" | "event-loop" => false,
+        other => bail!("unknown server mode '{other}' (threaded | eventloop)"),
+    };
+    let coord = Coordinator::start(
         CoordinatorConfig { k: 3, shards, default_policy: policy, ..Default::default() },
         BackendSpec::Native,
     )?;
+    let server =
+        start_front_end("127.0.0.1:0", coord.client(), ServerConfig::default(), threaded)?;
     let mut rc = RemoteClient::connect(server.addr())?;
 
-    // hello: version + capability negotiation.
-    let info = rc.hello()?;
-    anyhow::ensure!(info.version == 1, "unexpected wire version {}", info.version);
+    // hello: version + capability negotiation onto the requested wire.
+    let info = rc.negotiate(wire.version())?;
+    anyhow::ensure!(
+        info.version == wire.version(),
+        "asked for wire {} but negotiated v{}",
+        wire.name(),
+        info.version
+    );
     anyhow::ensure!(info.shards == shards, "hello reports {} shards", info.shards);
     for op in [
         "hello", "configure", "train", "observe", "plan", "failure", "stats", "snapshot",
@@ -592,28 +712,57 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
     anyhow::ensure!(s.failures_handled == 2, "stats failures {}", s.failures_handled);
 
     // Malformed lines: each class maps to its specific structured code.
-    for (line, want) in [
-        ("### not json", "invalid-json"),
-        (r#"{"op":"frobnicate"}"#, "unknown-op"),
-        (r#"{"op":"plan","task":"x"}"#, "missing-field"),
-        (r#"{"op":"plan","task":"x","input_mb":"big"}"#, "invalid-field"),
-        (r#"{"op":"train","task":"x","history":[]}"#, "empty-history"),
+    // Raw line bytes are a v1-only probe — on a v2 connection they would
+    // corrupt the binary framing, so there the byte-level classes
+    // (invalid-json has no v2 analogue) are skipped and the semantic
+    // classes below carry the conformance check.
+    let mut error_classes = 3;
+    if wire == Wire::V1 {
+        error_classes += 10;
+        for (line, want) in [
+            ("### not json", "invalid-json"),
+            (r#"{"op":"frobnicate"}"#, "unknown-op"),
+            (r#"{"op":"plan","task":"x"}"#, "missing-field"),
+            (r#"{"op":"plan","task":"x","input_mb":"big"}"#, "invalid-field"),
+            (r#"{"op":"train","task":"x","history":[]}"#, "empty-history"),
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
+                "empty-samples",
+            ),
+            (r#"{"op":"configure","task":"x","policy":"nope"}"#, "unknown-policy"),
+            (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
+            (r#"{"op":"reshard"}"#, "missing-field"),
+            (r#"{"op":"reshard","shards":0}"#, "invalid-field"),
+        ] {
+            let j = rc.raw(line)?;
+            anyhow::ensure!(
+                j.get("ok") == Some(&Json::Bool(false)),
+                "malformed line accepted: {line}"
+            );
+            let code = j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
+            anyhow::ensure!(code == Some(want), "expected {want} for {line}, got {j}");
+        }
+    }
+    // Semantically invalid but well-framed requests: expressible as
+    // typed values, so both wires must reject them with the same codes.
+    for (req, want) in [
+        (Request::Train { task: "x".into(), history: vec![] }, ErrorCode::EmptyHistory),
+        (Request::Reshard { shards: 0 }, ErrorCode::InvalidField),
         (
-            r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
-            "empty-samples",
+            Request::Hello { client: None, min_version: Some(99), max_version: None },
+            ErrorCode::UnsupportedVersion,
         ),
-        (r#"{"op":"configure","task":"x","policy":"nope"}"#, "unknown-policy"),
-        (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
-        (r#"{"op":"reshard"}"#, "missing-field"),
-        (r#"{"op":"reshard","shards":0}"#, "invalid-field"),
     ] {
-        let j = rc.raw(line)?;
-        anyhow::ensure!(
-            j.get("ok") == Some(&Json::Bool(false)),
-            "malformed line accepted: {line}"
-        );
-        let code = j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
-        anyhow::ensure!(code == Some(want), "expected {want} for {line}, got {j}");
+        match rc.call_raw(&req)? {
+            Err(e) => anyhow::ensure!(
+                e.code == want,
+                "expected {} for {req:?}, got {} ({})",
+                want.as_str(),
+                e.code.as_str(),
+                e.message
+            ),
+            Ok(resp) => bail!("invalid request accepted: {req:?} -> {resp:?}"),
+        }
     }
     // The connection survived every error.
     let s = rc.stats()?;
@@ -647,15 +796,16 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
     anyhow::ensure!(shrunk == before, "shrinking the pool changed a plan");
 
     println!(
-        "protocol-smoke: wire v{} OK — {} ops, {} policies, {} shard(s), default policy {}, \
-         provenance + fallback counting + snapshot/reshard plan parity + {} error classes \
-         verified",
+        "protocol-smoke: wire v{} over the {} front end OK — {} ops, {} policies, {} shard(s), \
+         default policy {}, provenance + fallback counting + snapshot/reshard plan parity + \
+         {} error classes verified",
         info.version,
+        server.kind(),
         info.ops.len(),
         info.policies.len(),
         shards,
         policy.name(),
-        10
+        error_classes
     );
     Ok(())
 }

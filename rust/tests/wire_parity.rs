@@ -1,0 +1,286 @@
+//! Cross-wire, cross-front-end parity: the same session script driven
+//! over threaded-v1, threaded-v2, eventloop-v1, and eventloop-v2 must
+//! produce bit-identical results — every plan's f64s compared via
+//! `to_bits`, provenance strings, error codes, counters. The wire and
+//! the front end are transport; if either changes a single bit of a
+//! plan, that is a codec bug, not a rounding difference.
+//!
+//! Also pins the hello negotiation matrix over a live socket on both
+//! front ends.
+
+use std::time::Duration;
+
+#[cfg(unix)]
+use ksplus::coordinator::eventloop::EventLoopServer;
+use ksplus::coordinator::protocol::{ErrorCode, Request};
+use ksplus::coordinator::remote::RemoteClient;
+use ksplus::coordinator::server::Server;
+use ksplus::coordinator::service::{Client, Coordinator, CoordinatorConfig};
+use ksplus::coordinator::wire::Wire;
+use ksplus::coordinator::{BackendSpec, PredictorPolicy};
+use ksplus::segments::StepPlan;
+use ksplus::trace::Execution;
+use ksplus::util::json::Json;
+
+const SHARDS: usize = 2;
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Either front end, so one test body can iterate over both.
+enum Front {
+    Threaded(Server),
+    #[cfg(unix)]
+    Event(EventLoopServer),
+}
+
+impl Front {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            Front::Threaded(s) => s.addr(),
+            #[cfg(unix)]
+            Front::Event(s) => s.addr(),
+        }
+    }
+}
+
+#[cfg(unix)]
+fn start_event_front(client: Client) -> Front {
+    Front::Event(EventLoopServer::start("127.0.0.1:0", client).unwrap())
+}
+
+#[cfg(not(unix))]
+fn start_event_front(_client: Client) -> Front {
+    unreachable!("eventloop combos are not generated on this platform")
+}
+
+/// A fresh coordinator (deterministic: same config, same training
+/// below) behind the requested front end.
+fn start(threaded: bool) -> (Coordinator, Front) {
+    let coord = Coordinator::start(
+        CoordinatorConfig { k: 3, shards: SHARDS, ..Default::default() },
+        BackendSpec::Native,
+    )
+    .unwrap();
+    let front = if threaded {
+        Front::Threaded(Server::start("127.0.0.1:0", coord.client()).unwrap())
+    } else {
+        start_event_front(coord.client())
+    };
+    (coord, front)
+}
+
+/// The (label, front end, wire) combinations under test. The first
+/// entry is the baseline the others must match bit-for-bit.
+fn combos() -> Vec<(&'static str, bool, Wire)> {
+    let mut v = vec![("threaded-v1", true, Wire::V1), ("threaded-v2", true, Wire::V2)];
+    #[cfg(unix)]
+    {
+        v.push(("eventloop-v1", false, Wire::V1));
+        v.push(("eventloop-v2", false, Wire::V2));
+    }
+    v
+}
+
+/// Deterministic two-phase history — same bytes into every combo.
+fn history(n: usize) -> Vec<Execution> {
+    (0..n)
+        .map(|i| {
+            let input = 1000.0 + 750.0 * i as f64;
+            let len = 5 + i % 4;
+            let samples: Vec<f64> = (0..len)
+                .map(|j| 0.0007 * input * if j < len / 2 { 0.6 } else { 1.3 })
+                .collect();
+            Execution::new("t", input, 1.0, samples)
+        })
+        .collect()
+}
+
+/// Canonical exact-bits form of a plan: any formatting rounding would
+/// defeat the comparison, so hash the raw f64 bit patterns.
+fn plan_key(p: &StepPlan) -> String {
+    let starts: Vec<u64> = p.starts.iter().map(|f| f.to_bits()).collect();
+    let peaks: Vec<u64> = p.peaks.iter().map(|f| f.to_bits()).collect();
+    format!("{starts:?}/{peaks:?}")
+}
+
+/// Run the full session script over one connection and record every
+/// observable result as a line. Two combos are in parity iff their
+/// line vectors are equal.
+fn drive_session(addr: std::net::SocketAddr, wire: Wire) -> Vec<String> {
+    let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT).unwrap();
+    let info = rc.negotiate(wire.version()).unwrap();
+    assert_eq!(info.version, wire.version(), "negotiation granted the wrong wire");
+    assert_eq!(rc.wire(), wire);
+    let mut out = Vec::new();
+    // The negotiated version is the one per-combo difference; everything
+    // recorded below must be identical across combos.
+    out.push(format!("hello: ops={} policies={} shards={}", info.ops.len(),
+        info.policies.len(), info.shards));
+
+    rc.configure(Some("par-ks"), PredictorPolicy::KsPlus).unwrap();
+    rc.configure(Some("par-witt"), PredictorPolicy::WittLr).unwrap();
+    let hist = history(12);
+    out.push(format!("train par-ks: {}", rc.train("par-ks", &hist).unwrap()));
+    out.push(format!("train par-witt: {}", rc.train("par-witt", &hist).unwrap()));
+
+    let ack = rc.observe("par-ks", &hist[3]).unwrap();
+    out.push(format!(
+        "observe: task={} executions={} predictor={}",
+        ack.task, ack.executions, ack.predictor
+    ));
+
+    for task in ["par-ks", "par-witt", "par-missing"] {
+        for input in [1500.0, 4096.5, 9000.25] {
+            let o = rc.plan(task, input).unwrap();
+            out.push(format!(
+                "plan {task}/{input}: {} v{} fb={:?} {}",
+                o.predictor,
+                o.model_version,
+                o.fallback_reason,
+                plan_key(&o.plan)
+            ));
+        }
+    }
+
+    let base = rc.plan("par-ks", 5000.0).unwrap();
+    let retry = rc.report_failure(Some("par-ks"), &base.plan, 30.0).unwrap();
+    out.push(format!("retry par-ks: {} {}", retry.predictor, plan_key(&retry.plan)));
+    let prev = StepPlan::new(vec![0.0, 100.0], vec![2.0, 8.0]);
+    let retry = rc.report_failure(None, &prev, 60.0).unwrap();
+    out.push(format!("retry default: {} {}", retry.predictor, plan_key(&retry.plan)));
+
+    // Semantic error classes, typed so both wires can express them; the
+    // structured code must not depend on the framing.
+    for (req, label) in [
+        (Request::Train { task: "x".into(), history: vec![] }, "empty-train"),
+        (Request::Reshard { shards: 0 }, "reshard-0"),
+        (Request::Configure { task: Some("*".into()), policy: PredictorPolicy::KsPlus },
+            "configure-star"),
+        (Request::Hello { client: None, min_version: Some(99), max_version: None },
+            "hello-99"),
+    ] {
+        let err = rc.call_raw(&req).unwrap().unwrap_err();
+        out.push(format!("error {label}: {}", err.code.as_str()));
+    }
+
+    let doc = rc.snapshot().unwrap();
+    out.push(format!(
+        "snapshot: schema={:?} tasks={}",
+        doc.get("schema").and_then(Json::as_str),
+        doc.get("tasks").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0)
+    ));
+
+    // Reshard round trip: plans must be bit-stable across both moves.
+    let ids = rc.reshard(SHARDS + 1).unwrap();
+    out.push(format!("reshard grow: {}", ids.len()));
+    out.push(format!("plan after grow: {}", plan_key(&rc.plan("par-ks", 7000.0).unwrap().plan)));
+    let ids = rc.reshard(SHARDS).unwrap();
+    out.push(format!("reshard shrink: {}", ids.len()));
+    out.push(format!(
+        "plan after shrink: {}",
+        plan_key(&rc.plan("par-ks", 7000.0).unwrap().plan)
+    ));
+
+    let s = rc.stats().unwrap();
+    out.push(format!(
+        "stats: shards={} requests={} trained={} observations={} fallbacks={} \
+         failures={} refused={} timeouts={}",
+        s.shards,
+        s.requests,
+        s.tasks_trained,
+        s.observations,
+        s.fallbacks,
+        s.failures_handled,
+        s.conns_refused,
+        s.conn_timeouts
+    ));
+    out
+}
+
+#[test]
+fn same_session_is_bit_identical_across_front_ends_and_wires() {
+    let mut baseline: Option<(&'static str, Vec<String>)> = None;
+    for (label, threaded, wire) in combos() {
+        let (_coord, front) = start(threaded);
+        let got = drive_session(front.addr(), wire);
+        // Spot-check the script itself produced real content before
+        // comparing: plans from both policies plus the fallback.
+        assert!(got.iter().any(|l| l.contains("plan par-ks") && l.contains("ksplus")), "{label}");
+        assert!(
+            got.iter().any(|l| l.contains("plan par-missing") && l.contains("untrained-task")),
+            "{label}"
+        );
+        match &baseline {
+            None => baseline = Some((label, got)),
+            Some((base_label, want)) => {
+                assert_eq!(
+                    &got, want,
+                    "session trace over {label} diverged from {base_label}"
+                );
+            }
+        }
+    }
+}
+
+/// The hello negotiation matrix, over a live socket: conservative
+/// defaults (absent fields mean v1), explicit v2 opt-in, and the error
+/// classes for impossible ranges. Sent as raw v1 lines so absent fields
+/// really are absent.
+fn negotiation_matrix(addr: std::net::SocketAddr) {
+    let grants: &[(&str, usize)] = &[
+        (r#"{"op":"hello"}"#, 1),
+        (r#"{"op":"hello","min_version":1}"#, 1),
+        (r#"{"op":"hello","min_version":1,"max_version":1}"#, 1),
+        (r#"{"op":"hello","max_version":2}"#, 2),
+        (r#"{"op":"hello","min_version":1,"max_version":2}"#, 2),
+        (r#"{"op":"hello","min_version":2,"max_version":2}"#, 2),
+        (r#"{"op":"hello","min_version":2}"#, 2),
+        (r#"{"op":"hello","max_version":99}"#, 2),
+    ];
+    for (line, want) in grants {
+        // Fresh connection per case: a granted v2 switches the server
+        // side's codec, after which raw v1 lines would be framing
+        // garbage.
+        let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT).unwrap();
+        let j = rc.raw(line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line} -> {j}");
+        assert_eq!(
+            j.get("version").and_then(Json::as_usize),
+            Some(*want),
+            "{line} -> {j}"
+        );
+    }
+    let errors: &[(&str, &str)] = &[
+        (r#"{"op":"hello","min_version":3,"max_version":1}"#, "invalid-field"),
+        (r#"{"op":"hello","min_version":99}"#, "unsupported-version"),
+        (r#"{"op":"hello","max_version":0}"#, "unsupported-version"),
+    ];
+    for (line, want) in errors {
+        let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT).unwrap();
+        let j = rc.raw(line).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line} -> {j}");
+        let code = j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str);
+        assert_eq!(code, Some(*want), "{line} -> {j}");
+    }
+    // A failed negotiation must leave the connection serviceable on v1.
+    let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT).unwrap();
+    let err = rc
+        .call_raw(&Request::Hello { client: None, min_version: Some(99), max_version: None })
+        .unwrap()
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+    let info = rc.hello().unwrap();
+    assert_eq!(info.version, 1);
+}
+
+#[test]
+fn negotiation_matrix_over_threaded_server() {
+    let (_coord, front) = start(true);
+    negotiation_matrix(front.addr());
+}
+
+#[cfg(unix)]
+#[test]
+fn negotiation_matrix_over_eventloop_server() {
+    let (_coord, front) = start(false);
+    negotiation_matrix(front.addr());
+}
