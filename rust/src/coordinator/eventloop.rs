@@ -32,14 +32,13 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::poll::{drain_waker, waker_pair, Event, Poller, Waker};
 use crate::coordinator::protocol::{ErrorCode, Request, WireError};
-use crate::coordinator::server::ServerConfig;
+use crate::coordinator::server::{encode_response_or_error, ServerConfig};
 use crate::coordinator::service::{
-    dispatch, Client, ConnCounters, Coordinator, CoordinatorConfig, Dispatched,
+    dispatch_tapped, Client, ConnCounters, Coordinator, CoordinatorConfig, DispatchTap,
+    Dispatched,
 };
 use crate::coordinator::timer::TimerWheel;
-use crate::coordinator::wire::{
-    decode_request, encode_error, encode_response, FrameSplit, Wire,
-};
+use crate::coordinator::wire::{decode_request, encode_error, FrameSplit, Wire};
 use crate::coordinator::BackendSpec;
 
 const TOKEN_LISTENER: usize = 0;
@@ -50,9 +49,11 @@ const TOKEN_BASE: usize = 2;
 /// Per-connection state owned by the loop thread.
 struct Conn {
     stream: TcpStream,
-    /// Monotonic identity. Slab slots are recycled, so completions and
-    /// timer entries carry the id and are dropped when it mismatches.
-    id: u64,
+    /// Slot generation at admit time. `EventLoop::gens[idx]` is bumped
+    /// on every close, so completions and timer entries minted for an
+    /// earlier occupant of a recycled slot carry a stale generation and
+    /// are dropped on mismatch.
+    gen: u64,
     /// Codec for frames *read from* this connection. Captured per
     /// request at decode time, so responses straddling a mid-pipeline
     /// `hello` upgrade still encode on the wire their request used.
@@ -78,7 +79,7 @@ struct Conn {
 /// A decoded request travelling to the dispatch pool.
 struct Work {
     token: usize,
-    conn_id: u64,
+    gen: u64,
     seq: u64,
     wire: Wire,
     req: Request,
@@ -87,7 +88,7 @@ struct Work {
 /// An encoded response travelling back to the loop.
 struct Done {
     token: usize,
-    conn_id: u64,
+    gen: u64,
     seq: u64,
     bytes: Vec<u8>,
 }
@@ -105,6 +106,7 @@ struct Shared {
     waker: Waker,
     client: Client,
     counters: Arc<ConnCounters>,
+    tap: Option<Arc<dyn DispatchTap>>,
 }
 
 fn worker(shared: Arc<Shared>) {
@@ -120,17 +122,22 @@ fn worker(shared: Arc<Shared>) {
             q = shared.cv.wait(q).unwrap();
         };
         drop(q);
-        let bytes = match dispatch(work.req, &shared.client, &shared.counters) {
-            Dispatched::Reply(resp) => encode_response(work.wire, &resp),
+        let bytes = match dispatch_tapped(
+            work.req,
+            &shared.client,
+            &shared.counters,
+            shared.tap.as_ref(),
+        ) {
+            Dispatched::Reply(resp) => encode_response_or_error(work.wire, &resp),
             Dispatched::Error(err) => encode_error(work.wire, &err),
             // Hellos are handled inline by the loop (the codec switch
             // must be ordered against frame parsing); if one ever lands
             // here, answer it on the request's wire without switching.
-            Dispatched::Hello(resp, _) => encode_response(work.wire, &resp),
+            Dispatched::Hello(resp, _) => encode_response_or_error(work.wire, &resp),
         };
         shared.completions.lock().unwrap().push(Done {
             token: work.token,
-            conn_id: work.conn_id,
+            gen: work.gen,
             seq: work.seq,
             bytes,
         });
@@ -144,9 +151,11 @@ struct EventLoop {
     listener: TcpListener,
     waker_rx: UnixStream,
     slab: Vec<Option<Conn>>,
+    /// Per-slot generation counters, parallel to `slab`. Bumped on every
+    /// close so anything minted for a previous occupant is droppable.
+    gens: Vec<u64>,
     free: Vec<usize>,
     live: usize,
-    next_conn_id: u64,
     wheel: Option<TimerWheel>,
     cfg: ServerConfig,
     shared: Arc<Shared>,
@@ -229,6 +238,7 @@ impl EventLoop {
             Some(idx) => idx,
             None => {
                 self.slab.push(None);
+                self.gens.push(0);
                 self.slab.len() - 1
             }
         };
@@ -241,15 +251,14 @@ impl EventLoop {
             self.free.push(idx);
             return;
         }
-        let id = self.next_conn_id;
-        self.next_conn_id += 1;
+        let gen = self.gens[idx];
         let now = Instant::now();
         if let (Some(wheel), Some(timeout)) = (self.wheel.as_mut(), self.cfg.read_timeout) {
-            wheel.schedule(now + timeout, token, id);
+            wheel.schedule(now + timeout, token, gen);
         }
         self.slab[idx] = Some(Conn {
             stream,
-            id,
+            gen,
             wire: Wire::V1,
             rbuf: Vec::new(),
             rpos: 0,
@@ -343,20 +352,29 @@ impl EventLoop {
                         Ok(Some(req @ Request::Hello { .. })) => {
                             let seq = conn.next_seq;
                             conn.next_seq += 1;
-                            match dispatch(req, &shared.client, &shared.counters) {
+                            match dispatch_tapped(
+                                req,
+                                &shared.client,
+                                &shared.counters,
+                                shared.tap.as_ref(),
+                            ) {
                                 Dispatched::Hello(resp, version) => {
                                     // STARTTLS-style: the answer travels
                                     // on the wire the hello arrived on;
                                     // everything after switches.
-                                    conn.pending
-                                        .insert(seq, encode_response(conn.wire, &resp));
+                                    conn.pending.insert(
+                                        seq,
+                                        encode_response_or_error(conn.wire, &resp),
+                                    );
                                     if let Some(w) = Wire::from_version(version) {
                                         conn.wire = w;
                                     }
                                 }
                                 Dispatched::Reply(resp) => {
-                                    conn.pending
-                                        .insert(seq, encode_response(conn.wire, &resp));
+                                    conn.pending.insert(
+                                        seq,
+                                        encode_response_or_error(conn.wire, &resp),
+                                    );
                                 }
                                 Dispatched::Error(err) => {
                                     conn.pending.insert(seq, encode_error(conn.wire, &err));
@@ -368,7 +386,7 @@ impl EventLoop {
                             conn.next_seq += 1;
                             shared.queue.lock().unwrap().work.push_back(Work {
                                 token: idx + TOKEN_BASE,
-                                conn_id: conn.id,
+                                gen: conn.gen,
                                 seq,
                                 wire: conn.wire,
                                 req,
@@ -409,6 +427,22 @@ impl EventLoop {
             }
         }
         if !self.try_write(idx) {
+            self.close(idx);
+            return;
+        }
+        let max_wbuf = self.cfg.max_wbuf_bytes;
+        let overflowed = match self.slab.get(idx).and_then(Option::as_ref) {
+            Some(c) => c.wbuf.len() - c.wpos > max_wbuf,
+            None => return,
+        };
+        if overflowed {
+            // A peer that pipelines requests but stops reading responses
+            // would otherwise grow `wbuf` without bound. Past the cap the
+            // slow reader is cut off rather than the server OOM-killed.
+            self.shared
+                .counters
+                .overflows
+                .fetch_add(1, Ordering::Relaxed);
             self.close(idx);
             return;
         }
@@ -471,7 +505,7 @@ impl EventLoop {
                 Some(c) => c,
                 None => continue,
             };
-            if conn.id != d.conn_id {
+            if conn.gen != d.gen {
                 continue; // completion for a closed, recycled slot
             }
             conn.pending.insert(d.seq, d.bytes);
@@ -496,20 +530,29 @@ impl EventLoop {
         let now = Instant::now();
         let due = wheel.expire(now);
         let mut reap = Vec::new();
-        for (token, conn_id) in due {
+        for (token, gen) in due {
             let idx = token - TOKEN_BASE;
             let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
                 Some(c) => c,
                 None => continue,
             };
-            if conn.id != conn_id {
+            if conn.gen != gen {
                 continue; // stale entry for a recycled slot
+            }
+            if conn.flush_seq < conn.next_seq {
+                // Requests are still in the dispatch pool (or parked
+                // out-of-order): the peer is waiting on us, not idle.
+                // `last_activity` only moves on reads, so without this
+                // guard a long dispatch under a short timeout would reap
+                // a connection mid-flight and drop its responses.
+                wheel.schedule(now + timeout, token, gen);
+                continue;
             }
             let deadline = conn.last_activity + timeout;
             if now >= deadline {
                 reap.push(idx);
             } else {
-                wheel.schedule(deadline, token, conn_id);
+                wheel.schedule(deadline, token, gen);
             }
         }
         for idx in reap {
@@ -524,6 +567,9 @@ impl EventLoop {
         if let Some(conn) = self.slab.get_mut(idx).and_then(Option::take) {
             let _ = self.poller.deregister(conn.stream.as_raw_fd());
             let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            // Invalidate everything minted for this occupant before the
+            // slot can be recycled.
+            self.gens[idx] = self.gens[idx].wrapping_add(1);
             self.free.push(idx);
             self.live -= 1;
         }
@@ -587,6 +633,7 @@ impl EventLoopServer {
             waker,
             client,
             counters: Arc::new(ConnCounters::default()),
+            tap: cfg.tap.clone(),
         });
         let stop = Arc::new(AtomicBool::new(false));
 
@@ -617,9 +664,9 @@ impl EventLoopServer {
             listener,
             waker_rx,
             slab: Vec::new(),
+            gens: Vec::new(),
             free: Vec::new(),
             live: 0,
-            next_conn_id: 0,
             wheel,
             cfg,
             shared: Arc::clone(&shared),
@@ -673,7 +720,9 @@ impl Drop for EventLoopServer {
 mod tests {
     use super::*;
     use crate::coordinator::protocol::{Response, WIRE_V2, WIRE_VERSION};
-    use crate::coordinator::wire::{decode_response, encode_request, read_frame, FrameRead};
+    use crate::coordinator::wire::{
+        decode_response, read_frame, try_encode_request, FrameRead, DEFAULT_MAX_FRAME_BYTES,
+    };
     use crate::util::json::Json;
     use std::io::{BufRead, BufReader};
     use std::time::Duration;
@@ -772,14 +821,14 @@ mod tests {
 
         // Everything after is binary, both directions.
         let train = Request::parse(&train_req("etl")).unwrap();
-        stream.write_all(&encode_request(Wire::V2, &train)).unwrap();
+        stream.write_all(&try_encode_request(Wire::V2, &train, DEFAULT_MAX_FRAME_BYTES).unwrap()).unwrap();
         match read_v2(&mut reader, "train").expect("train should succeed") {
             Response::Trained { executions, .. } => assert_eq!(executions, 2),
             other => panic!("unexpected response: {other:?}"),
         }
 
         let plan = Request::Plan { task: "etl".to_string(), input_mb: 150.0 };
-        stream.write_all(&encode_request(Wire::V2, &plan)).unwrap();
+        stream.write_all(&try_encode_request(Wire::V2, &plan, DEFAULT_MAX_FRAME_BYTES).unwrap()).unwrap();
         match read_v2(&mut reader, "plan").expect("plan should succeed") {
             Response::Planned(o) => {
                 assert_eq!(o.predictor, "ksplus");
@@ -830,7 +879,7 @@ mod tests {
                     vec![1.0, 2.0],
                 ),
             };
-            batch.extend_from_slice(&encode_request(Wire::V2, &req));
+            batch.extend_from_slice(&try_encode_request(Wire::V2, &req, DEFAULT_MAX_FRAME_BYTES).unwrap());
         }
         stream.write_all(&batch).unwrap();
         for i in 0..8 {
@@ -927,6 +976,100 @@ mod tests {
         let (mut s, mut r) = connect(&server);
         let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
         assert_eq!(resp.get("conn_timeouts").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn in_flight_dispatch_defers_the_idle_reaper() {
+        let (_coord, server) = start_cfg(ServerConfig {
+            dispatch_threads: 1,
+            read_timeout: Some(Duration::from_millis(75)),
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = connect(&server);
+
+        // 400 reshards through a single dispatch thread (each one spawns
+        // or retires a shard worker and rebuilds replicas) take well past
+        // the read timeout, and `last_activity` only moves on reads: the
+        // whole batch lands in one read at t=0. Without the in-flight
+        // guard the reaper cuts the connection mid-pipeline and the
+        // responses below never arrive.
+        let mut batch = String::new();
+        for i in 0..400 {
+            batch.push_str(&format!(r#"{{"op":"reshard","shards":{}}}"#, 3 - i % 2));
+            batch.push('\n');
+        }
+        batch.push_str("{\"op\":\"stats\"}\n");
+        stream.write_all(batch.as_bytes()).unwrap();
+
+        for i in 0..400 {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).unwrap();
+            assert!(n > 0, "connection reaped mid-pipeline at response {i}");
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "reshard {i} failed");
+        }
+        // The in-band stats response was serialized while the connection
+        // still had work owed, so a mid-flight reap would show up here;
+        // a reap *after* the pipeline drains is legitimate and does not.
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "stats response missing");
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("conn_timeouts").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn slow_reader_overflowing_the_write_buffer_is_cut_off() {
+        let (_coord, server) = start_cfg(ServerConfig {
+            max_wbuf_bytes: 256 * 1024,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = connect(&server);
+
+        // A retained-history policy keeps the raw executions, so the
+        // snapshot response scales with what we train: ~64 executions of
+        // 500 samples each make every snapshot a few hundred KB.
+        let resp = roundtrip(
+            &mut stream,
+            &mut reader,
+            r#"{"op":"configure","task":"fat","policy":"witt-lr"}"#,
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let mut train = String::from(r#"{"op":"train","task":"fat","history":["#);
+        for i in 0..64 {
+            if i > 0 {
+                train.push(',');
+            }
+            let samples: Vec<String> =
+                (0..500).map(|s| format!("{}.5", 100 + (i * 7 + s) % 900)).collect();
+            train.push_str(&format!(
+                r#"{{"input_mb":{},"dt":1.0,"samples":[{}]}}"#,
+                100 + i,
+                samples.join(",")
+            ));
+        }
+        train.push_str("]}");
+        let resp = roundtrip(&mut stream, &mut reader, &train);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "train failed: {resp}");
+
+        // Pipeline far more snapshot bytes than the socket buffers and
+        // the 256 KB write-buffer cap can hold, and read none of them:
+        // the server must cut us off instead of buffering without bound.
+        let mut batch = Vec::new();
+        for _ in 0..256 {
+            batch.extend_from_slice(b"{\"op\":\"snapshot\"}\n");
+        }
+        stream.write_all(&batch).unwrap();
+        let mut sink = Vec::new();
+        let got = stream.read_to_end(&mut sink).unwrap_or(sink.len());
+        assert!(
+            got < 256 * (1 << 20),
+            "server kept buffering for a reader that never drained"
+        );
+
+        let (mut s, mut r) = connect(&server);
+        let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
+        let overflowed = resp.get("conns_overflowed").and_then(Json::as_usize);
+        assert_eq!(overflowed, Some(1), "overflow close must be counted: {resp}");
     }
 
     #[test]

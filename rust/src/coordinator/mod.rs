@@ -69,6 +69,7 @@ pub mod remote;
 pub mod ring;
 pub mod server;
 pub mod service;
+pub mod session;
 pub mod snapshot;
 pub mod timer;
 pub mod wire;

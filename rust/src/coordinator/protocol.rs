@@ -591,6 +591,10 @@ pub struct StatsSummary {
     pub conns_refused: u64,
     /// Connections closed by the server's read timeout.
     pub conn_timeouts: u64,
+    /// Connections closed because their buffered responses exceeded the
+    /// server's write-buffer cap (a pipelining peer that stopped
+    /// reading).
+    pub conns_overflowed: u64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
 }
@@ -663,6 +667,7 @@ impl Response {
                 pairs.push(("fallbacks", (s.fallbacks as usize).into()));
                 pairs.push(("conns_refused", (s.conns_refused as usize).into()));
                 pairs.push(("conn_timeouts", (s.conn_timeouts as usize).into()));
+                pairs.push(("conns_overflowed", (s.conns_overflowed as usize).into()));
                 pairs.push(("latency_p50_us", s.latency_p50_us.into()));
                 pairs.push(("latency_p99_us", s.latency_p99_us.into()));
             }
@@ -798,6 +803,10 @@ impl Response {
                     .unwrap_or(0) as u64,
                 conn_timeouts: j
                     .get("conn_timeouts")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
+                conns_overflowed: j
+                    .get("conns_overflowed")
                     .and_then(Json::as_usize)
                     .unwrap_or(0) as u64,
                 latency_p50_us: f64_field(j, "latency_p50_us")?,
@@ -953,6 +962,7 @@ mod tests {
                     fallbacks: 2,
                     conns_refused: 4,
                     conn_timeouts: 1,
+                    conns_overflowed: 6,
                     latency_p50_us: 12.5,
                     latency_p99_us: 90.25,
                 }),
@@ -1082,6 +1092,7 @@ mod tests {
             Response::Stats(s) => {
                 assert_eq!(s.conns_refused, 0);
                 assert_eq!(s.conn_timeouts, 0);
+                assert_eq!(s.conns_overflowed, 0);
                 assert_eq!(s.requests, 5);
             }
             other => panic!("unexpected {other:?}"),

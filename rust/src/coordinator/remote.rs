@@ -38,7 +38,7 @@ use crate::coordinator::protocol::{
     ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, WIRE_VERSION,
 };
 use crate::coordinator::wire::{
-    decode_response, encode_request, read_frame, FrameRead, Wire,
+    decode_response, read_frame, try_encode_request, FrameRead, Wire, DEFAULT_MAX_FRAME_BYTES,
 };
 use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome};
 use crate::segments::StepPlan;
@@ -54,6 +54,11 @@ pub struct RemoteClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     wire: Wire,
+    /// Outbound request cap, mirroring the server's `--max-frame-bytes`.
+    /// An over-cap request is refused *before* any byte is written — the
+    /// server would answer `request-too-large` and close; refusing
+    /// client-side keeps the connection usable.
+    max_request_bytes: usize,
 }
 
 impl RemoteClient {
@@ -88,7 +93,20 @@ impl RemoteClient {
     fn from_stream(stream: TcpStream) -> Result<RemoteClient> {
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone().context("clone coordinator stream")?;
-        Ok(RemoteClient { reader: BufReader::new(stream), writer, wire: Wire::V1 })
+        Ok(RemoteClient {
+            reader: BufReader::new(stream),
+            writer,
+            wire: Wire::V1,
+            max_request_bytes: DEFAULT_MAX_FRAME_BYTES,
+        })
+    }
+
+    /// Set the outbound request cap (use the value the server was given
+    /// with `--max-frame-bytes`). Requests that encode over the cap come
+    /// back as a structured `request-too-large` without touching the
+    /// wire, so the connection survives.
+    pub fn set_max_request_bytes(&mut self, max: usize) {
+        self.max_request_bytes = max;
     }
 
     /// The wire this connection currently speaks.
@@ -158,9 +176,14 @@ impl RemoteClient {
     /// rejection. The parity suite uses this to compare error codes and
     /// messages across wires; ordinary callers use the op methods.
     pub fn call_raw(&mut self, req: &Request) -> Result<Result<Response, WireError>> {
-        self.writer
-            .write_all(&encode_request(self.wire, req))
-            .context("write request")?;
+        let bytes = match try_encode_request(self.wire, req, self.max_request_bytes) {
+            Ok(b) => b,
+            // Nothing was written, so the stream is still in sync; the
+            // refusal is the same structured error the server would send
+            // (followed by a close, which this path avoids).
+            Err(e) => return Ok(Err(e)),
+        };
+        self.writer.write_all(&bytes).context("write request")?;
         self.read_response(req.op())
     }
 
@@ -178,9 +201,15 @@ impl RemoteClient {
             !reqs.iter().any(|r| matches!(r, Request::Hello { .. })),
             "hello cannot be pipelined; use negotiate() before the batch"
         );
+        // Encode the whole batch before writing anything: if one request
+        // is over the cap, the batch is refused with nothing on the wire
+        // (a partial pipeline would desynchronize request/response
+        // pairing).
         let mut batch = Vec::new();
         for req in reqs {
-            batch.extend_from_slice(&encode_request(self.wire, req));
+            let bytes = try_encode_request(self.wire, req, self.max_request_bytes)
+                .map_err(|e| anyhow::anyhow!("pipelined {} request: {e}", req.op()))?;
+            batch.extend_from_slice(&bytes);
         }
         self.writer.write_all(&batch).context("write pipelined batch")?;
         reqs.iter().map(|req| self.read_response(req.op())).collect()

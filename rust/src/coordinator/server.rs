@@ -64,21 +64,28 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::protocol::{ErrorCode, WireError};
+use crate::coordinator::protocol::{ErrorCode, Response, WireError};
 use crate::coordinator::service::{
-    dispatch, Client, ConnCounters, Coordinator, CoordinatorConfig, Dispatched,
+    dispatch_tapped, Client, ConnCounters, Coordinator, CoordinatorConfig, DispatchTap,
+    Dispatched,
 };
 use crate::coordinator::wire::{
-    decode_request, encode_error, encode_response, read_frame, FrameRead, Wire,
-    DEFAULT_MAX_FRAME_BYTES,
+    decode_request, encode_error, read_frame, try_encode_response, FrameRead, Wire,
+    DEFAULT_MAX_FRAME_BYTES, MAX_V2_PAYLOAD_BYTES,
 };
 use crate::coordinator::BackendSpec;
+
+/// Default cap on one connection's buffered-but-unsent response bytes
+/// in the event-loop front end (see [`ServerConfig::max_wbuf_bytes`]).
+/// Far above any sane pipeline depth, low enough that a reader that
+/// never drains cannot grow the buffer toward OOM.
+pub const DEFAULT_MAX_WBUF_BYTES: usize = 8 << 20;
 
 /// Resource limits for one server (both front ends share this type).
 /// The defaults are generous enough to never trip in normal operation
 /// while still bounding every resource a misbehaving client could
 /// otherwise grow without limit.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct ServerConfig {
     /// Maximum concurrently served connections. Connection number
     /// `max_conns + 1` receives a `too-many-connections` error line and
@@ -96,6 +103,17 @@ pub struct ServerConfig {
     /// from `available_parallelism`). The thread-per-connection server
     /// ignores this — its parallelism is its connection count.
     pub dispatch_threads: usize,
+    /// Event-loop front end only: maximum bytes of encoded responses
+    /// buffered for one connection awaiting the peer's reads. A
+    /// pipelining client that never reads would otherwise grow the
+    /// buffer without bound (slow-reader OOM); past the cap the
+    /// connection is closed and `conns_overflowed` counts it. The
+    /// threaded front end has no such buffer — its writes block per
+    /// response.
+    pub max_wbuf_bytes: usize,
+    /// Observer for the dispatch seam (`repro record` installs one to
+    /// capture session traces); `None` costs nothing.
+    pub tap: Option<Arc<dyn DispatchTap>>,
 }
 
 impl Default for ServerConfig {
@@ -105,8 +123,33 @@ impl Default for ServerConfig {
             read_timeout: None,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             dispatch_threads: 0,
+            max_wbuf_bytes: DEFAULT_MAX_WBUF_BYTES,
+            tap: None,
         }
     }
+}
+
+impl std::fmt::Debug for ServerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerConfig")
+            .field("max_conns", &self.max_conns)
+            .field("read_timeout", &self.read_timeout)
+            .field("max_frame_bytes", &self.max_frame_bytes)
+            .field("dispatch_threads", &self.dispatch_threads)
+            .field("max_wbuf_bytes", &self.max_wbuf_bytes)
+            .field("tap", &self.tap.as_ref().map(|_| "installed"))
+            .finish()
+    }
+}
+
+/// Encode a response for the wire, substituting the structured
+/// `internal` error when the response itself cannot be framed (v2's
+/// `u32` length ceiling). Responses are deliberately not bounded by the
+/// *request* cap — a snapshot legitimately exceeds it — so the only
+/// limit here is structural.
+pub(crate) fn encode_response_or_error(wire: Wire, resp: &Response) -> Vec<u8> {
+    try_encode_response(wire, resp, MAX_V2_PAYLOAD_BYTES)
+        .unwrap_or_else(|e| encode_error(wire, &e))
 }
 
 /// A running TCP front end over a coordinator `Client`.
@@ -281,20 +324,22 @@ fn handle_conn(
             }
             FrameRead::Frame(payload) => match decode_request(wire, &payload) {
                 Ok(None) => continue, // blank v1 line: no reply
-                Ok(Some(req)) => match dispatch(req, &client, counters) {
-                    Dispatched::Reply(resp) => {
-                        writer.write_all(&encode_response(wire, &resp))?;
-                    }
-                    Dispatched::Error(err) => {
-                        writer.write_all(&encode_error(wire, &err))?;
-                    }
-                    Dispatched::Hello(resp, version) => {
-                        writer.write_all(&encode_response(wire, &resp))?;
-                        if let Some(w) = Wire::from_version(version) {
-                            wire = w;
+                Ok(Some(req)) => {
+                    match dispatch_tapped(req, &client, counters, cfg.tap.as_ref()) {
+                        Dispatched::Reply(resp) => {
+                            writer.write_all(&encode_response_or_error(wire, &resp))?;
+                        }
+                        Dispatched::Error(err) => {
+                            writer.write_all(&encode_error(wire, &err))?;
+                        }
+                        Dispatched::Hello(resp, version) => {
+                            writer.write_all(&encode_response_or_error(wire, &resp))?;
+                            if let Some(w) = Wire::from_version(version) {
+                                wire = w;
+                            }
                         }
                     }
-                },
+                }
                 Err(e) => writer.write_all(&encode_error(wire, &e))?,
             },
         }
@@ -306,7 +351,7 @@ mod tests {
     use super::*;
     use crate::coordinator::protocol::{Request, Response, OPS, WIRE_V2, WIRE_VERSION};
     use crate::coordinator::service::{Coordinator, CoordinatorConfig};
-    use crate::coordinator::wire::encode_request;
+    use crate::coordinator::wire::try_encode_request;
     use crate::coordinator::{BackendSpec, PredictorPolicy};
     use crate::util::json::Json;
     use crate::util::rng::Rng;
@@ -439,7 +484,8 @@ mod tests {
 
         let mut reader = BufReader::new(s.try_clone().unwrap());
         let req = Request::Plan { task: "fresh".into(), input_mb: 64.0 };
-        s.write_all(&encode_request(Wire::V2, &req)).unwrap();
+        s.write_all(&try_encode_request(Wire::V2, &req, DEFAULT_MAX_FRAME_BYTES).unwrap())
+            .unwrap();
         match read_frame(&mut reader, Wire::V2, DEFAULT_MAX_FRAME_BYTES).unwrap() {
             FrameRead::Frame(payload) => {
                 let resp =

@@ -1302,6 +1302,10 @@ pub struct ConnCounters {
     pub refused: AtomicU64,
     /// Connections closed by the idle/read timeout.
     pub timeouts: AtomicU64,
+    /// Connections closed because their buffered-but-unsent responses
+    /// exceeded `max_wbuf_bytes` (event-loop front end; a slow or
+    /// non-reading pipelining peer).
+    pub overflows: AtomicU64,
 }
 
 /// Outcome of dispatching one request.
@@ -1368,6 +1372,7 @@ pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispa
                 fallbacks: s.fallbacks,
                 conns_refused: s.conns_refused + counters.refused.load(Ordering::Relaxed),
                 conn_timeouts: s.conn_timeouts + counters.timeouts.load(Ordering::Relaxed),
+                conns_overflowed: counters.overflows.load(Ordering::Relaxed),
                 latency_p50_us: s.latency_percentile_us(50.0),
                 latency_p99_us: s.latency_percentile_us(99.0),
             }))
@@ -1388,6 +1393,35 @@ pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispa
                     Dispatched::Error(WireError::new(ErrorCode::Internal, format!("reshard: {e:#}")))
                 }
             }
+        }
+    }
+}
+
+/// Observer installed at the dispatch seam — the one point every front
+/// end funnels through, so a tap sees exactly the request/outcome pairs
+/// the server acted on (negotiation outcomes and structured errors
+/// included). `repro record` installs one to capture session traces.
+/// Called synchronously on the dispatching thread; implementations must
+/// be cheap or buffer.
+pub trait DispatchTap: Send + Sync {
+    fn observe(&self, req: &Request, out: &Dispatched);
+}
+
+/// [`dispatch`] with an optional [`DispatchTap`]. With no tap installed
+/// this is exactly `dispatch` — the clone only happens when someone is
+/// recording.
+pub fn dispatch_tapped(
+    req: Request,
+    client: &Client,
+    counters: &ConnCounters,
+    tap: Option<&Arc<dyn DispatchTap>>,
+) -> Dispatched {
+    match tap {
+        None => dispatch(req, client, counters),
+        Some(tap) => {
+            let out = dispatch(req.clone(), client, counters);
+            tap.observe(&req, &out);
+            out
         }
     }
 }

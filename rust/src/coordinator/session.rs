@@ -1,0 +1,1154 @@
+//! Record/replay golden conformance for the coordinator.
+//!
+//! `record` drives a scripted client session against a live threaded
+//! server with a [`DispatchTap`] installed at the service dispatch seam
+//! and captures every request/response pair — plus raw-socket probes
+//! for the decode-level errors that never reach dispatch — into a
+//! versioned trace document (`ksplus-session-trace/v1`). `replay`
+//! re-drives a trace against a fresh coordinator behind any front end
+//! (threaded or event loop), any wire (v1 JSON lines or v2 binary), and
+//! any shard count, and asserts the observable results are
+//! bit-identical: every plan f64 is compared via `to_bits`, every error
+//! by code and message.
+//!
+//! Two expectation modes make traces both machine-recordable and
+//! hand-authorable:
+//!
+//! * a concrete `expect` document pins the response at record time and
+//!   is checked on every replay;
+//! * the sentinel `"cross-combo"` defers the expectation to replay
+//!   time: the first replayed combo's result becomes the baseline the
+//!   other combos must match bit-for-bit. This keeps committed goldens
+//!   honest about computed f64s without requiring the author to know
+//!   their exact bit patterns.
+//!
+//! Canonical forms deliberately exclude fields that are volatile
+//! (latency percentiles, batch counts) or legitimately vary with the
+//! replay topology (shard ids, the hello's shard count), so a trace
+//! recorded at 2 shards replays cleanly at 3.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::protocol::{ErrorCode, Request, Response, WireError};
+use crate::coordinator::remote::RemoteClient;
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::service::{
+    Client, Coordinator, CoordinatorConfig, DispatchTap, Dispatched,
+};
+use crate::coordinator::wire::{
+    decode_response, read_frame, try_encode_request, FrameRead, Wire, DEFAULT_MAX_FRAME_BYTES,
+};
+use crate::coordinator::{BackendSpec, PredictorPolicy};
+use crate::segments::StepPlan;
+use crate::trace::Execution;
+use crate::util::json::Json;
+
+#[cfg(unix)]
+use crate::coordinator::eventloop::EventLoopServer;
+
+/// Schema tag every trace document carries.
+pub const TRACE_SCHEMA: &str = "ksplus-session-trace/v1";
+/// Expectation sentinel: the first replayed combo is the baseline.
+pub const CROSS_COMBO: &str = "cross-combo";
+/// File name of a committed golden inside `golden/<case>/`.
+pub const TRACE_FILE: &str = "trace.json";
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+// ---- trace documents -----------------------------------------------------
+
+/// Coordinator + server shape a trace was recorded against and must be
+/// replayed against (shard count may be overridden at replay time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaseConfig {
+    pub shards: usize,
+    pub k: usize,
+    pub max_conns: usize,
+    pub max_frame_bytes: usize,
+}
+
+impl Default for CaseConfig {
+    fn default() -> CaseConfig {
+        CaseConfig {
+            shards: 2,
+            k: 3,
+            max_conns: 32,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+impl CaseConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", self.shards.into()),
+            ("k", self.k.into()),
+            ("max_conns", self.max_conns.into()),
+            ("max_frame_bytes", self.max_frame_bytes.into()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CaseConfig> {
+        let field = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("trace config missing numeric '{key}'"))
+        };
+        Ok(CaseConfig {
+            shards: field("shards")?,
+            k: field("k")?,
+            max_conns: field("max_conns")?,
+            max_frame_bytes: field("max_frame_bytes")?,
+        })
+    }
+}
+
+/// What a recorded request is expected to produce on replay.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expect {
+    /// Compare against the first replayed combo instead of a pinned
+    /// document (see [`CROSS_COMBO`]).
+    CrossCombo,
+    /// A pinned v1 response document (`"ok":true` success or
+    /// `"ok":false` error line), compared in canonical form.
+    Json(Json),
+}
+
+/// One replayable step of a session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// A typed request driven through [`RemoteClient::call_raw`] on the
+    /// session connection.
+    Request { request: Json, expect: Expect },
+    /// A named raw-socket probe (fresh connections) for behavior that
+    /// typed requests cannot reach: decode-level errors, oversized
+    /// frames, hello negotiation, connection limits.
+    Probe { name: String },
+}
+
+/// A full recorded session: config, provenance, and ordered steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionTrace {
+    pub case_name: String,
+    /// Informational provenance: how the trace was produced (front end,
+    /// wire, negotiated version, or `"hand-authored"`).
+    pub recorded: Json,
+    pub config: CaseConfig,
+    pub steps: Vec<Step>,
+}
+
+impl SessionTrace {
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| match s {
+                Step::Request { request, expect } => Json::obj(vec![
+                    ("request", request.clone()),
+                    (
+                        "expect",
+                        match expect {
+                            Expect::CrossCombo => CROSS_COMBO.into(),
+                            Expect::Json(j) => j.clone(),
+                        },
+                    ),
+                ]),
+                Step::Probe { name } => Json::obj(vec![("probe", name.as_str().into())]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", TRACE_SCHEMA.into()),
+            ("case", self.case_name.as_str().into()),
+            ("recorded", self.recorded.clone()),
+            ("config", self.config.to_json()),
+            ("steps", Json::Arr(steps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionTrace> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        ensure!(
+            schema == TRACE_SCHEMA,
+            "unsupported trace schema '{schema}' (this build reads {TRACE_SCHEMA})"
+        );
+        let case_name = j
+            .get("case")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("trace missing 'case'"))?
+            .to_string();
+        let config = CaseConfig::from_json(
+            j.get("config").ok_or_else(|| anyhow!("trace missing 'config'"))?,
+        )?;
+        let raw_steps = j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace missing 'steps' array"))?;
+        let mut steps = Vec::with_capacity(raw_steps.len());
+        for (i, s) in raw_steps.iter().enumerate() {
+            if let Some(name) = s.get("probe").and_then(Json::as_str) {
+                ensure!(
+                    probe_exists(name),
+                    "step {i}: unknown probe '{name}' (known: {})",
+                    probe_names().join(", ")
+                );
+                steps.push(Step::Probe { name: name.to_string() });
+            } else if let Some(request) = s.get("request") {
+                let expect = match s.get("expect") {
+                    Some(Json::Str(s)) if s.as_str() == CROSS_COMBO => Expect::CrossCombo,
+                    Some(doc) => Expect::Json(doc.clone()),
+                    None => bail!("step {i}: request step missing 'expect'"),
+                };
+                steps.push(Step::Request { request: request.clone(), expect });
+            } else {
+                bail!("step {i}: neither a 'request' nor a 'probe' step");
+            }
+        }
+        Ok(SessionTrace {
+            case_name,
+            recorded: j.get("recorded").cloned().unwrap_or(Json::Null),
+            config,
+            steps,
+        })
+    }
+
+    pub fn write_file(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let mut body = self.to_json().to_string();
+        body.push('\n');
+        std::fs::write(path, body).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn read_file(path: &Path) -> Result<SessionTrace> {
+        let body = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&body)
+            .map_err(|e| anyhow!("{} is not valid JSON: {e}", path.display()))?;
+        SessionTrace::from_json(&doc)
+            .with_context(|| format!("parsing trace {}", path.display()))
+    }
+}
+
+// ---- canonical comparison forms ------------------------------------------
+
+fn bits(xs: &[f64]) -> String {
+    let hex: Vec<String> = xs.iter().map(|f| format!("{:016x}", f.to_bits())).collect();
+    hex.join(",")
+}
+
+fn canonical_plan(p: &StepPlan) -> String {
+    format!("starts={} peaks={}", bits(&p.starts), bits(&p.peaks))
+}
+
+fn canonical_error(e: &WireError) -> String {
+    format!("err {}: {}", e.code.as_str(), e.message)
+}
+
+/// Snapshot docs list tasks in shard-iteration order, which varies with
+/// topology; sort by task name before rendering. Rendering goes through
+/// the shortest-roundtrip f64 formatter, so two different bit patterns
+/// always render differently.
+fn canonical_snapshot(doc: &Json) -> String {
+    let mut doc = doc.clone();
+    if let Json::Obj(map) = &mut doc {
+        if let Some(Json::Arr(tasks)) = map.get_mut("tasks") {
+            tasks.sort_by_key(|t| {
+                t.get("task").and_then(Json::as_str).unwrap_or("").to_string()
+            });
+        }
+    }
+    doc.to_string()
+}
+
+/// The replay-stable projection of a response. Everything kept must be
+/// bit-identical across front ends, wires, and shard counts; volatile
+/// or topology-dependent fields (latencies, batch counts, shard ids)
+/// are excluded.
+pub fn canonical_response(resp: &Response) -> String {
+    match resp {
+        Response::Hello(i) => format!(
+            "hello ops=[{}] policies=[{}]",
+            i.ops.join(","),
+            i.policies.join(",")
+        ),
+        Response::Configured { task, policy } => {
+            format!("configured {} {}", task.as_deref().unwrap_or("*"), policy.name())
+        }
+        Response::Trained { task, executions } => {
+            format!("trained {task} executions={executions}")
+        }
+        Response::Observed(a) => {
+            format!(
+                "observed {} executions={} predictor={}",
+                a.task, a.executions, a.predictor
+            )
+        }
+        Response::Planned(o) => format!(
+            "planned predictor={} model_version={} fallback={} {}",
+            o.predictor,
+            o.model_version,
+            o.fallback_reason.unwrap_or("-"),
+            canonical_plan(&o.plan)
+        ),
+        Response::Retry(r) => {
+            format!("retry predictor={} {}", r.predictor, canonical_plan(&r.plan))
+        }
+        Response::Stats(s) => format!(
+            "stats requests={} failures_handled={} tasks_trained={} observations={} \
+             fallbacks={} conns_refused={} conn_timeouts={} conns_overflowed={}",
+            s.requests,
+            s.failures_handled,
+            s.tasks_trained,
+            s.observations,
+            s.fallbacks,
+            s.conns_refused,
+            s.conn_timeouts,
+            s.conns_overflowed
+        ),
+        Response::Snapshot { doc } => format!("snapshot {}", canonical_snapshot(doc)),
+        Response::Resharded { shard_ids } => format!("resharded n={}", shard_ids.len()),
+    }
+}
+
+pub fn canonical_result(r: &Result<Response, WireError>) -> String {
+    match r {
+        Ok(resp) => canonical_response(resp),
+        Err(e) => canonical_error(e),
+    }
+}
+
+/// Canonical form of a pinned expect document (success or error line).
+fn canonical_expect(op: &str, expect: &Json) -> Result<String> {
+    match Response::from_json(expect, op) {
+        Ok(resp) => Ok(canonical_response(&resp)),
+        Err(e) if expect.get("ok").and_then(Json::as_bool) == Some(false) => {
+            Ok(canonical_error(&e))
+        }
+        Err(e) => bail!("malformed expect for op '{op}': {} ({})", e.message, expect),
+    }
+}
+
+// ---- the case registry ---------------------------------------------------
+
+/// A scripted session action, turned into trace steps by `record`.
+enum Action {
+    Call(Request),
+    Probe(&'static str),
+}
+
+/// Every golden case, in corpus order.
+pub fn case_names() -> &'static [&'static str] {
+    &["policies", "errors", "negotiation", "limits", "ops", "mixed-session"]
+}
+
+pub fn case_config(case: &str) -> Result<CaseConfig> {
+    match case {
+        "policies" | "errors" | "negotiation" | "ops" | "mixed-session" => {
+            Ok(CaseConfig::default())
+        }
+        // Small caps so the oversize and connection-limit probes can
+        // actually hit them.
+        "limits" => Ok(CaseConfig {
+            max_conns: 2,
+            max_frame_bytes: 4096,
+            ..CaseConfig::default()
+        }),
+        other => bail!("unknown case '{other}' (known: {})", case_names().join(", ")),
+    }
+}
+
+/// Deterministic per-task history: the same bytes feed every combo.
+fn history(task: &str, n: usize) -> Vec<Execution> {
+    (0..n)
+        .map(|i| {
+            let input = 900.0 + 650.0 * i as f64;
+            let len = 6 + i % 3;
+            let samples: Vec<f64> = (0..len)
+                .map(|j| 0.0005 * input * if j < len / 2 { 0.7 } else { 1.4 })
+                .collect();
+            Execution::new(task, input, 1.0, samples)
+        })
+        .collect()
+}
+
+fn one_exec(task: &str, input: f64) -> Execution {
+    let samples: Vec<f64> = (0..8).map(|j| 0.0005 * input * (0.7 + 0.1 * j as f64)).collect();
+    Execution::new(task, input, 1.0, samples)
+}
+
+fn call_train(task: &str, n: usize) -> Action {
+    Action::Call(Request::Train { task: task.to_string(), history: history(task, n) })
+}
+
+fn call_plan(task: &str, input_mb: f64) -> Action {
+    Action::Call(Request::Plan { task: task.to_string(), input_mb })
+}
+
+fn case_script(case: &str) -> Result<Vec<Action>> {
+    let mut s: Vec<Action> = Vec::new();
+    match case {
+        // Every registered predictor policy: bind, train, plan, fold an
+        // observation, plan again (the model-version bump must move the
+        // plan deterministically).
+        "policies" => {
+            s.push(Action::Call(Request::Configure {
+                task: None,
+                policy: PredictorPolicy::KsPlus,
+            }));
+            for policy in [
+                PredictorPolicy::KsPlus,
+                PredictorPolicy::WittLr,
+                PredictorPolicy::TovarPpm,
+                PredictorPolicy::KSegments,
+                PredictorPolicy::DefaultLimits,
+            ] {
+                let task = format!("po-{}", policy.name());
+                s.push(Action::Call(Request::Configure {
+                    task: Some(task.clone()),
+                    policy,
+                }));
+                s.push(call_train(&task, 12));
+                for input in [1500.0, 4096.5, 9000.25] {
+                    s.push(call_plan(&task, input));
+                }
+                s.push(Action::Call(Request::Observe {
+                    task: task.clone(),
+                    execution: one_exec(&task, 2200.0),
+                }));
+                s.push(call_plan(&task, 4096.5));
+            }
+        }
+        // Every parse-level structured error, plus the served fallback
+        // path (an untrained task plans on default-limits).
+        "errors" => {
+            for probe in [
+                "v1-garbage",
+                "v2-garbage",
+                "unknown-op",
+                "missing-field",
+                "invalid-field",
+                "empty-history",
+                "empty-samples",
+                "invalid-plan",
+                "unknown-policy",
+            ] {
+                s.push(Action::Probe(probe));
+            }
+            s.push(call_plan("never-trained", 512.0));
+            s.push(Action::Call(Request::Stats));
+        }
+        // The hello negotiation matrix over live sockets.
+        "negotiation" => {
+            for probe in [
+                "hello-default",
+                "hello-v1-only",
+                "hello-upgrade",
+                "hello-bad-range",
+                "hello-unsupported",
+                "hello-max-zero",
+            ] {
+                s.push(Action::Probe(probe));
+            }
+        }
+        // Resource-cap behavior: oversized requests and the connection
+        // limit. Kept separate because the connection-limit probe's
+        // retries make connection counters nondeterministic, so no
+        // stats step may follow it.
+        "limits" => {
+            s.push(Action::Probe("oversized"));
+            s.push(Action::Probe("conn-limit"));
+        }
+        // Admin ops: snapshot and reshard, with plans pinned across a
+        // grow/shrink cycle.
+        "ops" => {
+            s.push(Action::Call(Request::Snapshot));
+            s.push(Action::Call(Request::Configure {
+                task: Some("op-task".to_string()),
+                policy: PredictorPolicy::KsPlus,
+            }));
+            s.push(call_train("op-task", 10));
+            s.push(call_plan("op-task", 3000.0));
+            // Stats must precede the reshards: counters are per-shard
+            // and merged over live shards, so a remove_shard may drop
+            // counts — before any removal the merged sum is identical
+            // at every shard count.
+            s.push(Action::Call(Request::Stats));
+            s.push(Action::Call(Request::Snapshot));
+            s.push(Action::Call(Request::Reshard { shards: 3 }));
+            s.push(call_plan("op-task", 3000.0));
+            s.push(Action::Call(Request::Reshard { shards: 2 }));
+            s.push(call_plan("op-task", 3000.0));
+            s.push(Action::Call(Request::Snapshot));
+        }
+        // A multi-policy workload with a snapshot and a 2→3 reshard in
+        // the middle: the replay split test cuts this one in half.
+        "mixed-session" => {
+            for (task, policy) in [
+                ("mx-a", PredictorPolicy::KsPlus),
+                ("mx-b", PredictorPolicy::WittLr),
+                ("mx-c", PredictorPolicy::KSegments),
+            ] {
+                s.push(Action::Call(Request::Configure {
+                    task: Some(task.to_string()),
+                    policy,
+                }));
+                s.push(call_train(task, 10));
+                s.push(call_plan(task, 1800.0));
+            }
+            s.push(Action::Call(Request::Snapshot));
+            s.push(Action::Call(Request::Reshard { shards: 3 }));
+            for task in ["mx-a", "mx-b", "mx-c"] {
+                s.push(Action::Call(Request::Observe {
+                    task: task.to_string(),
+                    execution: one_exec(task, 2600.0),
+                }));
+                s.push(call_plan(task, 1800.0));
+                s.push(call_plan(task, 7300.5));
+            }
+            s.push(Action::Call(Request::Snapshot));
+        }
+        other => bail!("unknown case '{other}'"),
+    }
+    Ok(s)
+}
+
+// ---- servers -------------------------------------------------------------
+
+enum FrontHandle {
+    Threaded(Server),
+    #[cfg(unix)]
+    Event(EventLoopServer),
+}
+
+/// A coordinator behind one of the two front ends, shaped by a case
+/// config. Dropping it stops the server and the coordinator.
+pub struct CaseServer {
+    pub coord: Coordinator,
+    front: FrontHandle,
+}
+
+impl CaseServer {
+    pub fn addr(&self) -> SocketAddr {
+        match &self.front {
+            FrontHandle::Threaded(s) => s.addr(),
+            #[cfg(unix)]
+            FrontHandle::Event(s) => s.addr(),
+        }
+    }
+}
+
+/// Start a fresh coordinator + server for a case. `shards` overrides
+/// the recorded shard count; `tap` is installed at the dispatch seam.
+pub fn start_case_server(
+    cfg: &CaseConfig,
+    threaded: bool,
+    shards: Option<usize>,
+    tap: Option<Arc<dyn DispatchTap>>,
+) -> Result<CaseServer> {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            k: cfg.k,
+            shards: shards.unwrap_or(cfg.shards),
+            ..Default::default()
+        },
+        BackendSpec::Native,
+    )
+    .context("starting coordinator")?;
+    let server_cfg = ServerConfig {
+        max_conns: cfg.max_conns,
+        max_frame_bytes: cfg.max_frame_bytes,
+        tap,
+        ..Default::default()
+    };
+    let front = if threaded {
+        FrontHandle::Threaded(
+            Server::start_with_config("127.0.0.1:0", coord.client(), server_cfg)
+                .context("starting threaded server")?,
+        )
+    } else {
+        start_event_front(coord.client(), server_cfg)?
+    };
+    Ok(CaseServer { coord, front })
+}
+
+#[cfg(unix)]
+fn start_event_front(client: Client, cfg: ServerConfig) -> Result<FrontHandle> {
+    Ok(FrontHandle::Event(
+        EventLoopServer::start_with_config("127.0.0.1:0", client, cfg)
+            .context("starting event-loop server")?,
+    ))
+}
+
+#[cfg(not(unix))]
+fn start_event_front(_client: Client, _cfg: ServerConfig) -> Result<FrontHandle> {
+    bail!("the event-loop front end is unix-only")
+}
+
+/// The front-end × wire combinations a replay sweep covers. The first
+/// entry is the cross-combo baseline.
+pub fn all_combos() -> Vec<(&'static str, bool, Wire)> {
+    let mut v = vec![("threaded-v1", true, Wire::V1), ("threaded-v2", true, Wire::V2)];
+    #[cfg(unix)]
+    {
+        v.push(("eventloop-v1", false, Wire::V1));
+        v.push(("eventloop-v2", false, Wire::V2));
+    }
+    v
+}
+
+// ---- record --------------------------------------------------------------
+
+/// Tap that logs `(request, outcome)` pairs while armed. Recording uses
+/// a single sequential client, so arming around each scripted call
+/// keeps negotiation hellos and probe traffic out of the log.
+struct RecordingTap {
+    armed: AtomicBool,
+    log: Mutex<Vec<(Json, Json)>>,
+}
+
+impl DispatchTap for RecordingTap {
+    fn observe(&self, req: &Request, out: &Dispatched) {
+        if !self.armed.load(Ordering::SeqCst) {
+            return;
+        }
+        let outcome = match out {
+            Dispatched::Reply(resp) => resp.to_json(),
+            Dispatched::Hello(resp, _) => resp.to_json(),
+            Dispatched::Error(e) => e.to_json(),
+        };
+        self.log.lock().unwrap().push((req.to_json(), outcome));
+    }
+}
+
+/// Drive a case script against a tapped threaded server and capture it
+/// as a trace. Expectations come from the server side of the dispatch
+/// seam and are cross-checked against what the client observed on the
+/// wire — recording fails loudly if the two ever disagree.
+pub fn record_case(case: &str) -> Result<SessionTrace> {
+    let cfg = case_config(case)?;
+    let script = case_script(case)?;
+    let tap = Arc::new(RecordingTap { armed: AtomicBool::new(false), log: Mutex::new(Vec::new()) });
+    let server = start_case_server(
+        &cfg,
+        true,
+        None,
+        Some(Arc::clone(&tap) as Arc<dyn DispatchTap>),
+    )?;
+    let addr = server.addr();
+    let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT)?;
+    rc.set_read_timeout(Some(TIMEOUT))?;
+    let info = rc.negotiate(Wire::V1.version())?;
+
+    let mut steps = Vec::with_capacity(script.len());
+    for (i, action) in script.into_iter().enumerate() {
+        match action {
+            Action::Call(req) => {
+                tap.armed.store(true, Ordering::SeqCst);
+                let client_side = rc.call_raw(&req)?;
+                tap.armed.store(false, Ordering::SeqCst);
+                let mut captured = std::mem::take(&mut *tap.log.lock().unwrap());
+                ensure!(
+                    captured.len() == 1,
+                    "step {i} ({}): tap captured {} dispatches, expected 1",
+                    req.op(),
+                    captured.len()
+                );
+                let (tap_req, tap_out) = captured.remove(0);
+                ensure!(
+                    tap_req.to_string() == req.to_json().to_string(),
+                    "step {i}: tap saw a different request: {tap_req} vs {}",
+                    req.to_json()
+                );
+                let server_canon = canonical_expect(req.op(), &tap_out)?;
+                let client_canon = canonical_result(&client_side);
+                ensure!(
+                    server_canon == client_canon,
+                    "step {i} ({}): dispatch seam and wire disagree:\n  seam: {server_canon}\n  wire: {client_canon}",
+                    req.op()
+                );
+                steps.push(Step::Request {
+                    request: req.to_json(),
+                    expect: Expect::Json(tap_out),
+                });
+            }
+            Action::Probe(name) => {
+                // Probes self-check; at record time we only prove they
+                // pass so the trace is replayable as written.
+                run_probe(addr, name, &cfg)
+                    .with_context(|| format!("step {i}: probe '{name}' failed at record time"))?;
+                steps.push(Step::Probe { name: name.to_string() });
+            }
+        }
+    }
+    Ok(SessionTrace {
+        case_name: case.to_string(),
+        recorded: Json::obj(vec![
+            ("server", "threaded".into()),
+            ("wire", Wire::V1.name().into()),
+            ("negotiated_version", info.version.into()),
+        ]),
+        config: cfg,
+        steps,
+    })
+}
+
+// ---- replay --------------------------------------------------------------
+
+/// Drive a slice of steps over an existing session connection, checking
+/// pinned expects, and return the canonical transcript (one line per
+/// observable result). Exposed at step granularity so tests can split a
+/// trace across a snapshot/restore or reshard boundary.
+pub fn replay_steps(
+    addr: SocketAddr,
+    rc: &mut RemoteClient,
+    cfg: &CaseConfig,
+    steps: &[Step],
+) -> Result<Vec<String>> {
+    let mut transcript = Vec::new();
+    for (i, step) in steps.iter().enumerate() {
+        match step {
+            Step::Request { request, expect } => {
+                let line = request.to_string();
+                let req = Request::parse(&line).map_err(|e| {
+                    anyhow!("step {i}: trace request does not parse: {} ({line})", e.message)
+                })?;
+                let got = rc
+                    .call_raw(&req)
+                    .with_context(|| format!("step {i} ({}) transport failure", req.op()))?;
+                let got_canon = canonical_result(&got);
+                if let Expect::Json(doc) = expect {
+                    let want_canon = canonical_expect(req.op(), doc)
+                        .with_context(|| format!("step {i}"))?;
+                    ensure!(
+                        got_canon == want_canon,
+                        "step {i} ({}) diverged from the pinned expect:\n  want: {want_canon}\n  got:  {got_canon}",
+                        req.op()
+                    );
+                }
+                transcript.push(format!("{} {}", req.op(), got_canon));
+            }
+            Step::Probe { name } => {
+                let mut lines = run_probe(addr, name, cfg)
+                    .with_context(|| format!("step {i}: probe '{name}'"))?;
+                transcript.append(&mut lines);
+            }
+        }
+    }
+    Ok(transcript)
+}
+
+/// Replay a whole trace against a fresh server and return the canonical
+/// transcript. Cross-combo comparison is the caller's job: transcripts
+/// from different combos of the same trace must be identical.
+pub fn replay_trace(
+    trace: &SessionTrace,
+    threaded: bool,
+    wire: Wire,
+    shards: Option<usize>,
+) -> Result<Vec<String>> {
+    let server = start_case_server(&trace.config, threaded, shards, None)?;
+    let mut rc = RemoteClient::connect_with_timeout(server.addr(), TIMEOUT)?;
+    rc.set_read_timeout(Some(TIMEOUT))?;
+    let info = rc.negotiate(wire.version()).context("negotiating the session wire")?;
+    ensure!(
+        info.version == wire.version(),
+        "negotiation granted v{} but the combo wants {}",
+        info.version,
+        wire.name()
+    );
+    replay_steps(server.addr(), &mut rc, &trace.config, &trace.steps)
+}
+
+// ---- probes --------------------------------------------------------------
+
+fn probe_names() -> Vec<&'static str> {
+    vec![
+        "v1-garbage",
+        "v2-garbage",
+        "unknown-op",
+        "missing-field",
+        "invalid-field",
+        "empty-history",
+        "empty-samples",
+        "invalid-plan",
+        "unknown-policy",
+        "oversized",
+        "conn-limit",
+        "hello-default",
+        "hello-v1-only",
+        "hello-upgrade",
+        "hello-bad-range",
+        "hello-unsupported",
+        "hello-max-zero",
+    ]
+}
+
+fn probe_exists(name: &str) -> bool {
+    probe_names().contains(&name)
+}
+
+fn probe_conn(addr: SocketAddr) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr).context("probe connect")?;
+    stream.set_read_timeout(Some(TIMEOUT))?;
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok((stream, reader))
+}
+
+fn v1_line(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> Result<Json> {
+    writeln!(stream, "{line}")?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    ensure!(!resp.is_empty(), "connection closed instead of replying to {line}");
+    Json::parse(&resp).map_err(|e| anyhow!("unparseable response line: {e}"))
+}
+
+fn error_of(j: &Json) -> Result<WireError> {
+    ensure!(
+        j.get("ok").and_then(Json::as_bool) == Some(false),
+        "expected an error line, got {j}"
+    );
+    Ok(WireError::from_json(j))
+}
+
+fn expect_code(name: &str, got: &WireError, want: ErrorCode) -> Result<()> {
+    ensure!(
+        got.code == want,
+        "probe {name}: expected {}, got {}: {}",
+        want.as_str(),
+        got.code.as_str(),
+        got.message
+    );
+    Ok(())
+}
+
+fn at_eof(reader: &mut BufReader<TcpStream>) -> bool {
+    let mut one = [0u8; 1];
+    matches!(reader.read(&mut one), Ok(0))
+}
+
+/// Upgrade a fresh connection to the v2 binary wire via a v1 hello.
+fn upgrade_to_v2(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+) -> Result<()> {
+    let j = v1_line(stream, reader, r#"{"op":"hello","max_version":2}"#)?;
+    ensure!(
+        j.get("version").and_then(Json::as_usize) == Some(2),
+        "v2 upgrade not granted: {j}"
+    );
+    Ok(())
+}
+
+/// Run one named probe against the server on fresh connections and
+/// return its canonical transcript lines. Probes carry their expected
+/// error codes in code — the trace only names them — so a golden stays
+/// hand-authorable while the assertions stay exact.
+pub fn run_probe(addr: SocketAddr, name: &str, cfg: &CaseConfig) -> Result<Vec<String>> {
+    // Parse-level error probes: one bad v1 line, one structured error,
+    // connection stays open (proved with a stats roundtrip).
+    let v1_error_table: &[(&str, &str, ErrorCode)] = &[
+        ("v1-garbage", "### not json", ErrorCode::InvalidJson),
+        ("unknown-op", r#"{"op":"frobnicate"}"#, ErrorCode::UnknownOp),
+        ("missing-field", r#"{"op":"plan"}"#, ErrorCode::MissingField),
+        (
+            "invalid-field",
+            r#"{"op":"plan","task":"t","input_mb":"much"}"#,
+            ErrorCode::InvalidField,
+        ),
+        (
+            "empty-history",
+            r#"{"op":"train","task":"t","history":[]}"#,
+            ErrorCode::EmptyHistory,
+        ),
+        (
+            "empty-samples",
+            r#"{"op":"observe","task":"t","execution":{"input_mb":10,"dt":1.0,"samples":[]}}"#,
+            ErrorCode::EmptySamples,
+        ),
+        (
+            "invalid-plan",
+            r#"{"op":"failure","plan":{"starts":[0.0,5.0],"peaks":[2.0]},"fail_time":1.0}"#,
+            ErrorCode::InvalidPlan,
+        ),
+        (
+            "unknown-policy",
+            r#"{"op":"configure","task":"t","policy":"nope"}"#,
+            ErrorCode::UnknownPolicy,
+        ),
+    ];
+    if let Some((_, line, want)) = v1_error_table.iter().find(|(n, _, _)| *n == name) {
+        let (mut stream, mut reader) = probe_conn(addr)?;
+        let err = error_of(&v1_line(&mut stream, &mut reader, line)?)?;
+        expect_code(name, &err, *want)?;
+        let after = v1_line(&mut stream, &mut reader, r#"{"op":"stats"}"#)?;
+        ensure!(
+            after.get("ok").and_then(Json::as_bool) == Some(true),
+            "probe {name}: connection wedged after the error"
+        );
+        return Ok(vec![format!("probe {name}: {} still-open=ok", canonical_error(&err))]);
+    }
+
+    match name {
+        // An unknown tag on the binary wire draws invalid-frame.
+        "v2-garbage" => {
+            let (mut stream, mut reader) = probe_conn(addr)?;
+            upgrade_to_v2(&mut stream, &mut reader)?;
+            let mut frame = (5u32).to_le_bytes().to_vec();
+            frame.extend_from_slice(&[0x7E, 1, 2, 3, 4]);
+            stream.write_all(&frame)?;
+            let err = match read_frame(&mut reader, Wire::V2, DEFAULT_MAX_FRAME_BYTES)? {
+                FrameRead::Frame(payload) => decode_response(Wire::V2, &payload, "probe")
+                    .err()
+                    .ok_or_else(|| anyhow!("probe {name}: got a success response"))?,
+                other => bail!("probe {name}: expected an error frame, got {other:?}"),
+            };
+            expect_code(name, &err, ErrorCode::InvalidFrame)?;
+            Ok(vec![format!("probe {name}: {}", canonical_error(&err))])
+        }
+        // Over-cap requests draw request-too-large and a close, on both
+        // wires; the v2 refusal happens on the length header alone.
+        "oversized" => {
+            let mut out = Vec::new();
+            let (mut stream, mut reader) = probe_conn(addr)?;
+            let long = "x".repeat(cfg.max_frame_bytes + 1);
+            let err = error_of(&v1_line(&mut stream, &mut reader, &long)?)?;
+            expect_code(name, &err, ErrorCode::RequestTooLarge)?;
+            ensure!(at_eof(&mut reader), "probe {name}: v1 connection stayed open");
+            out.push(format!("probe {name}: v1 {} closed=ok", canonical_error(&err)));
+
+            let (mut stream, mut reader) = probe_conn(addr)?;
+            upgrade_to_v2(&mut stream, &mut reader)?;
+            stream.write_all(&((cfg.max_frame_bytes as u32) + 1).to_le_bytes())?;
+            let err = match read_frame(&mut reader, Wire::V2, DEFAULT_MAX_FRAME_BYTES)? {
+                FrameRead::Frame(payload) => decode_response(Wire::V2, &payload, "probe")
+                    .err()
+                    .ok_or_else(|| anyhow!("probe {name}: got a success response"))?,
+                other => bail!("probe {name}: expected an error frame, got {other:?}"),
+            };
+            expect_code(name, &err, ErrorCode::RequestTooLarge)?;
+            ensure!(at_eof(&mut reader), "probe {name}: v2 connection stayed open");
+            out.push(format!("probe {name}: v2 {} closed=ok", canonical_error(&err)));
+            Ok(out)
+        }
+        // Fill the connection table; at least one admission must be
+        // refused with the structured error (the session connection
+        // already holds a slot). Afterwards, prove the server admits
+        // again once the probe connections are gone.
+        "conn-limit" => {
+            let mut refusal: Option<WireError> = None;
+            let mut held = Vec::new();
+            for _ in 0..cfg.max_conns {
+                let stream = TcpStream::connect(addr)?;
+                stream.set_read_timeout(Some(Duration::from_millis(300)))?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(n) if n > 0 => {
+                        let j = Json::parse(&line)
+                            .map_err(|e| anyhow!("unparseable refusal: {e}"))?;
+                        let err = error_of(&j)?;
+                        expect_code(name, &err, ErrorCode::TooManyConnections)?;
+                        refusal.get_or_insert(err);
+                    }
+                    _ => held.push(stream), // admitted: nothing to read
+                }
+            }
+            let refusal = refusal.ok_or_else(|| {
+                anyhow!("probe {name}: no refusal within {} connections", cfg.max_conns)
+            })?;
+            drop(held);
+            // Server-side slot release is asynchronous; poll until a
+            // fresh connection serves a request again.
+            let mut recovered = false;
+            for _ in 0..100 {
+                if let Ok((mut s, mut r)) = probe_conn(addr) {
+                    if let Ok(j) = v1_line(&mut s, &mut r, r#"{"op":"hello"}"#) {
+                        if j.get("ok").and_then(Json::as_bool) == Some(true) {
+                            recovered = true;
+                            break;
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            ensure!(recovered, "probe {name}: server never admitted connections again");
+            Ok(vec![format!(
+                "probe {name}: {} recovered=ok",
+                canonical_error(&refusal)
+            )])
+        }
+        // The negotiation matrix. Grants also canonicalize the hello
+        // body; the upgrade probe proves the codec switch by speaking
+        // v2 immediately after.
+        "hello-default" | "hello-v1-only" | "hello-upgrade" => {
+            let (line, want_version) = match name {
+                "hello-default" => (r#"{"op":"hello"}"#, 1),
+                "hello-v1-only" => (r#"{"op":"hello","min_version":1,"max_version":1}"#, 1),
+                _ => (r#"{"op":"hello","max_version":2}"#, 2),
+            };
+            let (mut stream, mut reader) = probe_conn(addr)?;
+            let j = v1_line(&mut stream, &mut reader, line)?;
+            let resp = Response::from_json(&j, "hello")
+                .map_err(|e| anyhow!("probe {name}: hello failed: {}", e.message))?;
+            let version = j.get("version").and_then(Json::as_usize);
+            ensure!(
+                version == Some(want_version),
+                "probe {name}: granted {version:?}, wanted v{want_version}"
+            );
+            let mut out = format!(
+                "probe {name}: version={want_version} {}",
+                canonical_response(&resp)
+            );
+            if want_version == 2 {
+                let bytes =
+                    try_encode_request(Wire::V2, &Request::Stats, DEFAULT_MAX_FRAME_BYTES)
+                        .map_err(|e| anyhow!("encoding the switch proof: {}", e.message))?;
+                stream.write_all(&bytes)?;
+                match read_frame(&mut reader, Wire::V2, DEFAULT_MAX_FRAME_BYTES)? {
+                    FrameRead::Frame(payload) => {
+                        decode_response(Wire::V2, &payload, "stats")
+                            .map_err(|e| anyhow!("probe {name}: post-upgrade stats failed: {}", e.message))?;
+                    }
+                    other => bail!("probe {name}: expected a v2 frame, got {other:?}"),
+                }
+                out.push_str(" switched=ok");
+            }
+            Ok(vec![out])
+        }
+        "hello-bad-range" | "hello-unsupported" | "hello-max-zero" => {
+            let (line, want) = match name {
+                "hello-bad-range" => (
+                    r#"{"op":"hello","min_version":3,"max_version":1}"#,
+                    ErrorCode::InvalidField,
+                ),
+                "hello-unsupported" => {
+                    (r#"{"op":"hello","min_version":99}"#, ErrorCode::UnsupportedVersion)
+                }
+                _ => (r#"{"op":"hello","max_version":0}"#, ErrorCode::UnsupportedVersion),
+            };
+            let (mut stream, mut reader) = probe_conn(addr)?;
+            let err = error_of(&v1_line(&mut stream, &mut reader, line)?)?;
+            expect_code(name, &err, want)?;
+            // A failed negotiation must leave the connection serviceable
+            // on v1.
+            let after = v1_line(&mut stream, &mut reader, r#"{"op":"stats"}"#)?;
+            ensure!(
+                after.get("ok").and_then(Json::as_bool) == Some(true),
+                "probe {name}: connection wedged after the failed hello"
+            );
+            Ok(vec![format!(
+                "probe {name}: {} still-open=ok",
+                canonical_error(&err)
+            )])
+        }
+        other => bail!("unknown probe '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_documents_roundtrip_through_json() {
+        let trace = SessionTrace {
+            case_name: "policies".to_string(),
+            recorded: Json::obj(vec![("server", "hand-authored".into())]),
+            config: CaseConfig { shards: 2, k: 3, max_conns: 8, max_frame_bytes: 4096 },
+            steps: vec![
+                Step::Request {
+                    request: Request::Stats.to_json(),
+                    expect: Expect::CrossCombo,
+                },
+                Step::Request {
+                    request: Request::Reshard { shards: 3 }.to_json(),
+                    expect: Expect::Json(
+                        Response::Resharded { shard_ids: vec![0, 1, 2] }.to_json(),
+                    ),
+                },
+                Step::Probe { name: "v1-garbage".to_string() },
+            ],
+        };
+        let doc = trace.to_json();
+        let back = SessionTrace::from_json(&doc).unwrap();
+        assert_eq!(trace, back);
+        // And through actual text, the way a committed golden lives.
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(SessionTrace::from_json(&reparsed).unwrap(), trace);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        let bad_schema = Json::obj(vec![("schema", "nope/v9".into())]);
+        assert!(SessionTrace::from_json(&bad_schema).is_err());
+
+        let trace = SessionTrace {
+            case_name: "x".to_string(),
+            recorded: Json::Null,
+            config: CaseConfig::default(),
+            steps: vec![Step::Probe { name: "no-such-probe".to_string() }],
+        };
+        let err = SessionTrace::from_json(&trace.to_json()).unwrap_err();
+        assert!(err.to_string().contains("unknown probe"), "{err}");
+    }
+
+    #[test]
+    fn canonical_forms_exclude_volatile_fields() {
+        use crate::coordinator::protocol::StatsSummary;
+        let mut s = StatsSummary { requests: 7, latency_p50_us: 12.5, ..Default::default() };
+        let a = canonical_response(&Response::Stats(s.clone()));
+        s.latency_p50_us = 99.0;
+        s.batches = 42;
+        s.shards = 5;
+        let b = canonical_response(&Response::Stats(s));
+        assert_eq!(a, b, "latency/batches/shards must not affect the canonical form");
+
+        let c = canonical_response(&Response::Resharded { shard_ids: vec![0, 1, 2] });
+        let d = canonical_response(&Response::Resharded { shard_ids: vec![4, 7, 9] });
+        assert_eq!(c, d, "shard ids are topology, only the count is conformance");
+    }
+
+    #[test]
+    fn canonical_plans_compare_bits_not_formatting() {
+        let a = StepPlan::new(vec![0.0, 2.0], vec![1.0, 3.0]);
+        let mut b = a.clone();
+        // A 1-ulp nudge must change the canonical form even though many
+        // formatters would round it away.
+        b.peaks[1] = f64::from_bits(b.peaks[1].to_bits() + 1);
+        assert_ne!(canonical_plan(&a), canonical_plan(&b));
+    }
+
+    #[test]
+    fn every_case_has_a_config_and_script() {
+        for case in case_names() {
+            case_config(case).unwrap();
+            let script = case_script(case).unwrap();
+            assert!(!script.is_empty(), "case {case} has an empty script");
+        }
+        assert!(case_config("bogus").is_err());
+    }
+
+    #[test]
+    fn expect_documents_canonicalize_both_ways() {
+        let ok = Response::Trained { task: "t".to_string(), executions: 12 }.to_json();
+        assert_eq!(canonical_expect("train", &ok).unwrap(), "trained t executions=12");
+        let err = WireError::new(ErrorCode::UnknownPolicy, "unknown policy 'nope'").to_json();
+        assert_eq!(
+            canonical_expect("configure", &err).unwrap(),
+            "err unknown-policy: unknown policy 'nope'"
+        );
+    }
+}

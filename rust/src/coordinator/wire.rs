@@ -45,6 +45,13 @@ use crate::util::json::Json;
 /// declared frame length, and both answer `request-too-large`.
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
 
+/// Hard structural ceiling on a v2 frame payload: the length header is
+/// a `u32`, so anything larger cannot be framed at all. The
+/// `try_encode_*` functions check against it (and the caller's cap)
+/// *before* the cast inside `frame` — nothing oversized is ever
+/// truncated into an undecodable stream.
+pub const MAX_V2_PAYLOAD_BYTES: usize = u32::MAX as usize;
+
 /// Error frames carry this tag instead of `0x80 | request_tag`, so a
 /// pipelining client can decode an error without knowing which request
 /// it answers (responses stay in request order regardless).
@@ -228,8 +235,13 @@ fn put_plan(out: &mut Vec<u8>, p: &StepPlan) {
     put_f64s(out, &p.peaks);
 }
 
-/// Wrap a tagged payload in the 4-byte length header.
+/// Wrap a tagged payload in the 4-byte length header. Callers must
+/// have length-checked `1 + body.len()` against
+/// [`MAX_V2_PAYLOAD_BYTES`] first (the `try_encode_*` functions do) —
+/// the `as u32` cast here would otherwise truncate silently and emit an
+/// undecodable stream.
 fn frame(tag: u8, body: &[u8]) -> Vec<u8> {
+    debug_assert!(1 + body.len() <= MAX_V2_PAYLOAD_BYTES);
     let mut out = Vec::with_capacity(5 + body.len());
     put_u32(&mut out, (1 + body.len()) as u32);
     out.push(tag);
@@ -336,56 +348,86 @@ impl<'a> Cur<'a> {
 
 // ---- requests ------------------------------------------------------------
 
-/// Encode one request for the given wire. v1 output is the JSON line
-/// (trailing `\n` included), byte-identical to what `RemoteClient` has
-/// always written.
-pub fn encode_request(wire: Wire, req: &Request) -> Vec<u8> {
+fn oversized(code: ErrorCode, what: &str, got: usize, cap: usize) -> WireError {
+    WireError::new(code, format!("encoded {what} is {got} bytes, over the {cap}-byte frame cap"))
+}
+
+/// Encode one request for the given wire, refusing — rather than
+/// corrupting — anything that cannot be framed within `max` bytes.
+/// v1 output is the JSON line (trailing `\n` included), byte-identical
+/// to what `RemoteClient` has always written; the cap bounds the line
+/// content, the same boundary the receiving server enforces with
+/// `--max-frame-bytes`. v2 additionally enforces the structural `u32`
+/// ceiling of the length header ([`MAX_V2_PAYLOAD_BYTES`]) — the old
+/// infallible encoder cast lengths with `as u32` and silently truncated
+/// oversized bodies. Failure is `request-too-large`, the same code the
+/// server would answer, except the request never left this process and
+/// the connection stays usable.
+pub fn try_encode_request(wire: Wire, req: &Request, max: usize) -> Result<Vec<u8>, WireError> {
+    let what = || format!("{} request", req.op());
     match wire {
         Wire::V1 => {
             let mut v = req.to_json().to_string().into_bytes();
+            if v.len() > max {
+                return Err(oversized(ErrorCode::RequestTooLarge, &what(), v.len(), max));
+            }
             v.push(b'\n');
-            v
+            Ok(v)
         }
         Wire::V2 => {
-            let mut body = Vec::new();
-            match req {
-                Request::Hello { client, min_version, max_version } => {
-                    put_opt_str(&mut body, client.as_deref());
-                    put_opt_u32(&mut body, min_version.map(|v| v as u32));
-                    put_opt_u32(&mut body, max_version.map(|v| v as u32));
-                }
-                Request::Configure { task, policy } => {
-                    put_opt_str(&mut body, task.as_deref());
-                    put_str(&mut body, policy.name());
-                }
-                Request::Train { task, history } => {
-                    put_str(&mut body, task);
-                    put_u32(&mut body, history.len() as u32);
-                    for e in history {
-                        put_execution(&mut body, e);
-                    }
-                }
-                Request::Observe { task, execution } => {
-                    put_str(&mut body, task);
-                    put_execution(&mut body, execution);
-                }
-                Request::Plan { task, input_mb } => {
-                    put_str(&mut body, task);
-                    put_f64(&mut body, *input_mb);
-                }
-                Request::Failure { task, plan, fail_time } => {
-                    put_opt_str(&mut body, task.as_deref());
-                    put_plan(&mut body, plan);
-                    put_f64(&mut body, *fail_time);
-                }
-                Request::Stats | Request::Snapshot => {}
-                Request::Reshard { shards } => {
-                    put_u32(&mut body, *shards as u32);
-                }
+            let body = v2_request_body(req);
+            let cap = max.min(MAX_V2_PAYLOAD_BYTES);
+            if 1 + body.len() > cap {
+                return Err(oversized(
+                    ErrorCode::RequestTooLarge,
+                    &what(),
+                    1 + body.len(),
+                    cap,
+                ));
             }
-            frame(op_tag(req.op()).expect("every Request op is in OPS"), &body)
+            Ok(frame(op_tag(req.op()).expect("every Request op is in OPS"), &body))
         }
     }
+}
+
+fn v2_request_body(req: &Request) -> Vec<u8> {
+    let mut body = Vec::new();
+    match req {
+        Request::Hello { client, min_version, max_version } => {
+            put_opt_str(&mut body, client.as_deref());
+            put_opt_u32(&mut body, min_version.map(|v| v as u32));
+            put_opt_u32(&mut body, max_version.map(|v| v as u32));
+        }
+        Request::Configure { task, policy } => {
+            put_opt_str(&mut body, task.as_deref());
+            put_str(&mut body, policy.name());
+        }
+        Request::Train { task, history } => {
+            put_str(&mut body, task);
+            put_u32(&mut body, history.len() as u32);
+            for e in history {
+                put_execution(&mut body, e);
+            }
+        }
+        Request::Observe { task, execution } => {
+            put_str(&mut body, task);
+            put_execution(&mut body, execution);
+        }
+        Request::Plan { task, input_mb } => {
+            put_str(&mut body, task);
+            put_f64(&mut body, *input_mb);
+        }
+        Request::Failure { task, plan, fail_time } => {
+            put_opt_str(&mut body, task.as_deref());
+            put_plan(&mut body, plan);
+            put_f64(&mut body, *fail_time);
+        }
+        Request::Stats | Request::Snapshot => {}
+        Request::Reshard { shards } => {
+            put_u32(&mut body, *shards as u32);
+        }
+    }
+    body
 }
 
 /// Decode one request payload (as delimited by [`Wire::split`] or
@@ -451,85 +493,110 @@ pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<Option<Request>, Wir
 
 // ---- responses -----------------------------------------------------------
 
-/// Encode one success response. v1 output is the JSON line with its
-/// trailing `\n`, byte-identical to the threaded server's `writeln!`.
-pub fn encode_response(wire: Wire, resp: &Response) -> Vec<u8> {
+/// Encode one success response, refusing anything that cannot be
+/// framed. v1 output is the JSON line with its trailing `\n`,
+/// byte-identical to the threaded server's `writeln!`, and has no
+/// structural size limit — `max` is a caller-chosen bound (servers pass
+/// [`MAX_V2_PAYLOAD_BYTES`]: responses are not subject to the *request*
+/// cap, a snapshot legitimately exceeds it). On v2 the effective cap is
+/// `min(max, MAX_V2_PAYLOAD_BYTES)` — past the `u32` length header
+/// nothing can be framed. Failure is `internal` (the server built a
+/// response it cannot ship); front ends substitute
+/// `encode_error(wire, &err)` so the client sees a structured error
+/// instead of a truncated, undecodable stream.
+pub fn try_encode_response(wire: Wire, resp: &Response, max: usize) -> Result<Vec<u8>, WireError> {
+    let what = || format!("{} response", response_op(resp));
     match wire {
         Wire::V1 => {
             let mut v = resp.to_json().to_string().into_bytes();
+            if v.len() > max {
+                return Err(oversized(ErrorCode::Internal, &what(), v.len(), max));
+            }
             v.push(b'\n');
-            v
+            Ok(v)
         }
         Wire::V2 => {
-            let mut body = Vec::new();
-            match resp {
-                Response::Hello(i) => {
-                    put_u32(&mut body, i.version as u32);
-                    put_u32(&mut body, i.shards as u32);
-                    put_u32(&mut body, i.ops.len() as u32);
-                    for op in &i.ops {
-                        put_str(&mut body, op);
-                    }
-                    put_u32(&mut body, i.policies.len() as u32);
-                    for p in &i.policies {
-                        put_str(&mut body, p);
-                    }
-                }
-                Response::Configured { task, policy } => {
-                    put_opt_str(&mut body, task.as_deref());
-                    put_str(&mut body, policy.name());
-                }
-                Response::Trained { task, executions } => {
-                    put_str(&mut body, task);
-                    put_u64(&mut body, *executions);
-                }
-                Response::Observed(a) => {
-                    put_str(&mut body, &a.task);
-                    put_u64(&mut body, a.executions);
-                    put_str(&mut body, a.predictor);
-                }
-                Response::Planned(o) => {
-                    put_plan(&mut body, &o.plan);
-                    put_str(&mut body, o.predictor);
-                    put_u64(&mut body, o.model_version);
-                    put_opt_str(&mut body, o.fallback_reason);
-                }
-                Response::Retry(r) => {
-                    put_plan(&mut body, &r.plan);
-                    put_str(&mut body, r.predictor);
-                }
-                Response::Stats(s) => {
-                    put_u32(&mut body, s.shards as u32);
-                    put_u64(&mut body, s.requests);
-                    put_u64(&mut body, s.batches);
-                    put_u64(&mut body, s.failures_handled);
-                    put_u64(&mut body, s.tasks_trained);
-                    put_u64(&mut body, s.observations);
-                    put_u64(&mut body, s.fallbacks);
-                    put_u64(&mut body, s.conns_refused);
-                    put_u64(&mut body, s.conn_timeouts);
-                    put_f64(&mut body, s.latency_p50_us);
-                    put_f64(&mut body, s.latency_p99_us);
-                }
-                Response::Snapshot { doc } => {
-                    // The snapshot document is structurally JSON (it is
-                    // the on-disk schema); v2 carries its text as one
-                    // string field rather than inventing a second
-                    // serialization of the whole model state.
-                    put_str(&mut body, &doc.to_string());
-                }
-                Response::Resharded { shard_ids } => {
-                    put_u32(&mut body, shard_ids.len() as u32);
-                    for &id in shard_ids {
-                        put_u32(&mut body, id as u32);
-                    }
-                }
+            let body = v2_response_body(resp);
+            let cap = max.min(MAX_V2_PAYLOAD_BYTES);
+            if 1 + body.len() > cap {
+                return Err(oversized(ErrorCode::Internal, &what(), 1 + body.len(), cap));
             }
             let tag = RESPONSE_BIT
                 | op_tag(response_op(resp)).expect("every Response op is in OPS");
-            frame(tag, &body)
+            Ok(frame(tag, &body))
         }
     }
+}
+
+fn v2_response_body(resp: &Response) -> Vec<u8> {
+    let mut body = Vec::new();
+    match resp {
+        Response::Hello(i) => {
+            put_u32(&mut body, i.version as u32);
+            put_u32(&mut body, i.shards as u32);
+            put_u32(&mut body, i.ops.len() as u32);
+            for op in &i.ops {
+                put_str(&mut body, op);
+            }
+            put_u32(&mut body, i.policies.len() as u32);
+            for p in &i.policies {
+                put_str(&mut body, p);
+            }
+        }
+        Response::Configured { task, policy } => {
+            put_opt_str(&mut body, task.as_deref());
+            put_str(&mut body, policy.name());
+        }
+        Response::Trained { task, executions } => {
+            put_str(&mut body, task);
+            put_u64(&mut body, *executions);
+        }
+        Response::Observed(a) => {
+            put_str(&mut body, &a.task);
+            put_u64(&mut body, a.executions);
+            put_str(&mut body, a.predictor);
+        }
+        Response::Planned(o) => {
+            put_plan(&mut body, &o.plan);
+            put_str(&mut body, o.predictor);
+            put_u64(&mut body, o.model_version);
+            put_opt_str(&mut body, o.fallback_reason);
+        }
+        Response::Retry(r) => {
+            put_plan(&mut body, &r.plan);
+            put_str(&mut body, r.predictor);
+        }
+        Response::Stats(s) => {
+            put_u32(&mut body, s.shards as u32);
+            put_u64(&mut body, s.requests);
+            put_u64(&mut body, s.batches);
+            put_u64(&mut body, s.failures_handled);
+            put_u64(&mut body, s.tasks_trained);
+            put_u64(&mut body, s.observations);
+            put_u64(&mut body, s.fallbacks);
+            put_u64(&mut body, s.conns_refused);
+            put_u64(&mut body, s.conn_timeouts);
+            put_f64(&mut body, s.latency_p50_us);
+            put_f64(&mut body, s.latency_p99_us);
+            // Appended after every pre-overflow-counter field so old
+            // decoders (which ignore trailing bytes) keep working.
+            put_u64(&mut body, s.conns_overflowed);
+        }
+        Response::Snapshot { doc } => {
+            // The snapshot document is structurally JSON (it is
+            // the on-disk schema); v2 carries its text as one
+            // string field rather than inventing a second
+            // serialization of the whole model state.
+            put_str(&mut body, &doc.to_string());
+        }
+        Response::Resharded { shard_ids } => {
+            put_u32(&mut body, shard_ids.len() as u32);
+            for &id in shard_ids {
+                put_u32(&mut body, id as u32);
+            }
+        }
+    }
+    body
 }
 
 /// Encode an error reply (`ok:false` line on v1, a `0xFF` frame on v2).
@@ -635,19 +702,29 @@ pub fn decode_response(wire: Wire, payload: &[u8], op: &str) -> Result<Response,
                     plan: c.plan()?,
                     predictor: predictor_of(c.str()?),
                 })),
-                "stats" => Ok(Response::Stats(StatsSummary {
-                    shards: c.u32()? as usize,
-                    requests: c.u64()?,
-                    batches: c.u64()?,
-                    failures_handled: c.u64()?,
-                    tasks_trained: c.u64()?,
-                    observations: c.u64()?,
-                    fallbacks: c.u64()?,
-                    conns_refused: c.u64()?,
-                    conn_timeouts: c.u64()?,
-                    latency_p50_us: c.f64()?,
-                    latency_p99_us: c.f64()?,
-                })),
+                "stats" => {
+                    let mut s = StatsSummary {
+                        shards: c.u32()? as usize,
+                        requests: c.u64()?,
+                        batches: c.u64()?,
+                        failures_handled: c.u64()?,
+                        tasks_trained: c.u64()?,
+                        observations: c.u64()?,
+                        fallbacks: c.u64()?,
+                        conns_refused: c.u64()?,
+                        conn_timeouts: c.u64()?,
+                        latency_p50_us: c.f64()?,
+                        latency_p99_us: c.f64()?,
+                        conns_overflowed: 0,
+                    };
+                    // Frames from servers predating the overflow
+                    // counter end here; default 0, the JSON decoder's
+                    // stance for absent counters.
+                    if c.remaining() >= 8 {
+                        s.conns_overflowed = c.u64()?;
+                    }
+                    Ok(Response::Stats(s))
+                }
                 "snapshot" => {
                     let text = c.str()?;
                     let doc = Json::parse(&text)
@@ -871,6 +948,7 @@ mod tests {
                 conn_timeouts: 1,
                 latency_p50_us: 12.5,
                 latency_p99_us: 90.25,
+                conns_overflowed: 6,
             }),
             Response::Snapshot {
                 doc: Json::obj(vec![
@@ -888,12 +966,12 @@ mod tests {
         for req in every_request() {
             let mut want = req.to_json().to_string().into_bytes();
             want.push(b'\n');
-            assert_eq!(encode_request(Wire::V1, &req), want);
+            assert_eq!(try_encode_request(Wire::V1, &req, DEFAULT_MAX_FRAME_BYTES).unwrap(), want);
         }
         for resp in every_response() {
             let mut want = resp.to_json().to_string().into_bytes();
             want.push(b'\n');
-            assert_eq!(encode_response(Wire::V1, &resp), want);
+            assert_eq!(try_encode_response(Wire::V1, &resp, MAX_V2_PAYLOAD_BYTES).unwrap(), want);
         }
         let err = WireError::new(ErrorCode::UnknownOp, "nope");
         let mut want = err.to_json().to_string().into_bytes();
@@ -904,7 +982,7 @@ mod tests {
     #[test]
     fn v2_requests_roundtrip_every_op() {
         for req in every_request() {
-            let framed = encode_request(Wire::V2, &req);
+            let framed = try_encode_request(Wire::V2, &req, DEFAULT_MAX_FRAME_BYTES).unwrap();
             let split = Wire::V2.split(&framed, DEFAULT_MAX_FRAME_BYTES);
             let FrameSplit::Frame { consumed, from, to } = split else {
                 panic!("{req:?}: not one frame: {split:?}");
@@ -921,7 +999,7 @@ mod tests {
     fn v2_responses_roundtrip_with_bit_exact_floats() {
         for resp in every_response() {
             let op = response_op(&resp);
-            let framed = encode_response(Wire::V2, &resp);
+            let framed = try_encode_response(Wire::V2, &resp, MAX_V2_PAYLOAD_BYTES).unwrap();
             let FrameSplit::Frame { from, to, .. } =
                 Wire::V2.split(&framed, DEFAULT_MAX_FRAME_BYTES)
             else {
@@ -934,7 +1012,7 @@ mod tests {
         // PartialEq on f64 conflates 0.0/-0.0; pin bits explicitly.
         let plan = StepPlan::new(vec![-0.0, 68.279_999_999_999_99], vec![4.4, f64::MIN_POSITIVE]);
         let resp = Response::Retry(RetryOutcome { plan: plan.clone(), predictor: "ksplus" });
-        let framed = encode_response(Wire::V2, &resp);
+        let framed = try_encode_response(Wire::V2, &resp, MAX_V2_PAYLOAD_BYTES).unwrap();
         let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
             panic!()
         };
@@ -973,6 +1051,76 @@ mod tests {
         let got = decode_response(Wire::V2, &framed[from..to], "plan").unwrap_err();
         assert_eq!(got.code, ErrorCode::Internal);
         assert_eq!(got.message, "try later");
+    }
+
+    #[test]
+    fn oversized_encodes_are_refused_not_truncated() {
+        // A request over the cap is refused before a single byte is
+        // written, with the same structured code the server would
+        // answer — the old encoder cast lengths `as u32` and emitted a
+        // stream no peer could resynchronize past.
+        let req = Request::Train {
+            task: "t".into(),
+            history: (0..16u64).map(exec).collect(),
+        };
+        for wire in [Wire::V1, Wire::V2] {
+            let err = try_encode_request(wire, &req, 64).unwrap_err();
+            assert_eq!(err.code, ErrorCode::RequestTooLarge, "{}", wire.name());
+            assert!(err.message.contains("64-byte"), "{}", err.message);
+            // The same request clears the real default cap.
+            assert!(try_encode_request(wire, &req, DEFAULT_MAX_FRAME_BYTES).is_ok());
+        }
+        // Response overflow is the server's own fault, hence `internal`.
+        let resp = Response::Snapshot {
+            doc: Json::obj(vec![("blob", "x".repeat(256).into())]),
+        };
+        for wire in [Wire::V1, Wire::V2] {
+            let err = try_encode_response(wire, &resp, 64).unwrap_err();
+            assert_eq!(err.code, ErrorCode::Internal, "{}", wire.name());
+        }
+        // The structural u32 ceiling clamps any larger caller cap (a
+        // >4 GiB body can't be built in a unit test; the clamp is the
+        // code path under test).
+        assert!(try_encode_request(Wire::V2, &Request::Stats, usize::MAX).is_ok());
+        assert!(try_encode_response(
+            Wire::V2,
+            &Response::Trained { task: "t".into(), executions: 1 },
+            usize::MAX
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn v1_boundary_is_line_content_not_newline() {
+        // The cap bounds the line *content*, the same boundary
+        // `Wire::split` and the server's bounded reader enforce.
+        let line_len = Request::Stats.to_json().to_string().len();
+        assert!(try_encode_request(Wire::V1, &Request::Stats, line_len).is_ok());
+        assert_eq!(
+            try_encode_request(Wire::V1, &Request::Stats, line_len - 1).unwrap_err().code,
+            ErrorCode::RequestTooLarge
+        );
+    }
+
+    #[test]
+    fn stats_overflow_counter_is_optional_in_v2_frames() {
+        // A frame from a server predating `conns_overflowed` simply
+        // ends earlier; the decoder defaults the counter to 0 and keeps
+        // every other field.
+        let resp = every_response()
+            .into_iter()
+            .find(|r| matches!(r, Response::Stats(_)))
+            .unwrap();
+        let framed = try_encode_response(Wire::V2, &resp, MAX_V2_PAYLOAD_BYTES).unwrap();
+        let old_payload = &framed[4..framed.len() - 8];
+        match decode_response(Wire::V2, old_payload, "stats").unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.conns_overflowed, 0);
+                assert_eq!(s.conn_timeouts, 1);
+                assert_eq!(s.latency_p99_us, 90.25);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     #[test]
@@ -1051,7 +1199,7 @@ mod tests {
         ];
         for (req, v1_line) in cases {
             let v1_err = Request::parse(v1_line).unwrap_err();
-            let framed = encode_request(Wire::V2, &req);
+            let framed = try_encode_request(Wire::V2, &req, DEFAULT_MAX_FRAME_BYTES).unwrap();
             let FrameSplit::Frame { from, to, .. } = Wire::V2.split(&framed, 1 << 20) else {
                 panic!()
             };
@@ -1063,7 +1211,7 @@ mod tests {
     #[test]
     fn split_handles_partial_frames_and_caps() {
         // v2: header alone, partial payload, exact frame, frame + tail.
-        let framed = encode_request(Wire::V2, &Request::Stats);
+        let framed = try_encode_request(Wire::V2, &Request::Stats, 1024).unwrap();
         assert_eq!(Wire::V2.split(&framed[..3], 1024), FrameSplit::Incomplete);
         assert_eq!(Wire::V2.split(&framed[..4], 1024), FrameSplit::Incomplete);
         let FrameSplit::Frame { consumed, from, to } = Wire::V2.split(&framed, 1024) else {
@@ -1111,11 +1259,15 @@ mod tests {
         assert!(matches!(read_frame(&mut r, Wire::V1, 16).unwrap(), FrameRead::TooLong));
 
         // v2: two frames back to back, then EOF.
-        let mut bytes = encode_request(Wire::V2, &Request::Stats);
-        bytes.extend_from_slice(&encode_request(
-            Wire::V2,
-            &Request::Plan { task: "bwa".into(), input_mb: 7.5 },
-        ));
+        let mut bytes = try_encode_request(Wire::V2, &Request::Stats, 1024).unwrap();
+        bytes.extend_from_slice(
+            &try_encode_request(
+                Wire::V2,
+                &Request::Plan { task: "bwa".into(), input_mb: 7.5 },
+                1024,
+            )
+            .unwrap(),
+        );
         let mut r = BufReader::new(&bytes[..]);
         let FrameRead::Frame(p) = read_frame(&mut r, Wire::V2, 1024).unwrap() else { panic!() };
         assert_eq!(decode_request(Wire::V2, &p).unwrap(), Some(Request::Stats));

@@ -8,6 +8,8 @@
 //!   serve                  smoke-run the online coordinator
 //!   loadgen                closed-loop load test over shard counts
 //!   protocol-smoke         wire conformance check over live TCP (v1/v2)
+//!   record                 capture golden session traces from a live server
+//!   replay                 re-drive traces, assert bit-identical responses
 //!
 //! Run `repro <cmd> --help` for flags.
 
@@ -42,6 +44,8 @@ fn main() {
         "serve" => cmd_serve(rest),
         "loadgen" => cmd_loadgen(rest),
         "protocol-smoke" => cmd_protocol_smoke(rest),
+        "record" => cmd_record(rest),
+        "replay" => cmd_replay(rest),
         other => {
             eprintln!("unknown command '{other}'\n");
             print_help();
@@ -65,7 +69,9 @@ fn print_help() {
            simulate                       discrete-event cluster simulation\n\
            serve                          coordinator service smoke run\n\
            loadgen                        closed-loop coordinator load test\n\
-           protocol-smoke                 wire conformance check over TCP (v1/v2)\n"
+           protocol-smoke                 wire conformance check over TCP (v1/v2)\n\
+           record                         capture golden session traces\n\
+           replay                         replay traces, assert bit-identity\n"
     );
 }
 
@@ -806,6 +812,152 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
         shards,
         policy.name(),
         error_classes
+    );
+    Ok(())
+}
+
+fn cmd_record(argv: &[String]) -> Result<()> {
+    use ksplus::coordinator::session;
+
+    let cmd = Command::new(
+        "repro record",
+        "Capture golden session traces from a live, dispatch-tapped server",
+    )
+    .flag("case", "case name to record, or 'all'", Some("all"))
+    .flag("out-dir", "directory receiving <case>/trace.json", Some("golden"));
+    let a = cmd.parse(argv)?;
+    let out_dir = PathBuf::from(a.get("out-dir").unwrap());
+    let cases: Vec<String> = match a.get("case").unwrap() {
+        "all" => session::case_names().iter().map(|s| s.to_string()).collect(),
+        one => {
+            // Fail on typos before spending time recording.
+            session::case_config(one)?;
+            vec![one.to_string()]
+        }
+    };
+    for case in &cases {
+        let trace = session::record_case(case)
+            .with_context(|| format!("recording case '{case}'"))?;
+        let path = out_dir.join(case).join(session::TRACE_FILE);
+        trace.write_file(&path)?;
+        println!(
+            "recorded {case}: {} steps -> {}",
+            trace.steps.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_replay(argv: &[String]) -> Result<()> {
+    use ksplus::coordinator::session::{self, SessionTrace};
+    use ksplus::coordinator::wire::Wire;
+
+    let cmd = Command::new(
+        "repro replay",
+        "Re-drive recorded session traces against fresh coordinators and assert\n\
+         bit-identical responses across front ends and wires",
+    )
+    .flag("trace", "replay a single trace file", None)
+    .bool_flag("all-goldens", "replay every committed golden case")
+    .flag("goldens-dir", "directory of committed goldens", Some("golden"))
+    .flag("server", "front end(s): threaded|eventloop|all", Some("all"))
+    .flag("wire", "wire(s): v1|v2|all", Some("all"))
+    .flag("shards", "override the recorded shard count", None);
+    let a = cmd.parse(argv)?;
+
+    let shards = match a.get("shards") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--shards wants an integer, got '{s}'"))?,
+        ),
+    };
+    let server_sel = a.get("server").unwrap().to_string();
+    let wire_sel = a.get("wire").unwrap().to_string();
+    let combos: Vec<(&'static str, bool, Wire)> = session::all_combos()
+        .into_iter()
+        .filter(|(_, threaded, _)| match server_sel.as_str() {
+            "threaded" => *threaded,
+            "eventloop" => !*threaded,
+            _ => true,
+        })
+        .filter(|(_, _, wire)| match wire_sel.as_str() {
+            "v1" => *wire == Wire::V1,
+            "v2" => *wire == Wire::V2,
+            _ => true,
+        })
+        .collect();
+    anyhow::ensure!(
+        !combos.is_empty(),
+        "no front-end/wire combination matches --server {server_sel} --wire {wire_sel} \
+         on this platform (the event loop is unix-only)"
+    );
+
+    let traces: Vec<SessionTrace> = if a.get_bool("all-goldens") {
+        let dir = PathBuf::from(a.get("goldens-dir").unwrap());
+        session::case_names()
+            .iter()
+            .map(|case| SessionTrace::read_file(&dir.join(case).join(session::TRACE_FILE)))
+            .collect::<Result<_>>()?
+    } else if let Some(path) = a.get("trace") {
+        vec![SessionTrace::read_file(Path::new(path))?]
+    } else {
+        bail!("nothing to replay: pass --trace <file> or --all-goldens\n\n{}", cmd.usage());
+    };
+
+    let mut total = 0usize;
+    for trace in &traces {
+        // The first combo's transcript is the cross-combo baseline the
+        // rest must reproduce bit-for-bit.
+        let mut baseline: Option<(&'static str, Vec<String>)> = None;
+        for &(combo, threaded, wire) in &combos {
+            let transcript = session::replay_trace(trace, threaded, wire, shards)
+                .with_context(|| format!("case '{}' on {combo}", trace.case_name))?;
+            if let Some((base_combo, base)) = &baseline {
+                diff_transcripts(&trace.case_name, base_combo, base, combo, &transcript)?;
+            } else {
+                baseline = Some((combo, transcript));
+            }
+            println!(
+                "PASS {} on {combo} ({} steps)",
+                trace.case_name,
+                trace.steps.len()
+            );
+            total += 1;
+        }
+    }
+    println!(
+        "replay: {} case(s) x {} combo(s) = {total} run(s), all bit-identical",
+        traces.len(),
+        combos.len()
+    );
+    Ok(())
+}
+
+/// Fail with the first divergent transcript line between two combos.
+fn diff_transcripts(
+    case: &str,
+    base_combo: &str,
+    base: &[String],
+    combo: &str,
+    got: &[String],
+) -> Result<()> {
+    let n = base.len().min(got.len());
+    for i in 0..n {
+        if base[i] != got[i] {
+            bail!(
+                "case '{case}' diverged at transcript line {i}:\n  {base_combo}: {}\n  {combo}: {}",
+                base[i],
+                got[i]
+            );
+        }
+    }
+    anyhow::ensure!(
+        base.len() == got.len(),
+        "case '{case}': {base_combo} produced {} transcript lines, {combo} produced {}",
+        base.len(),
+        got.len()
     );
     Ok(())
 }

@@ -1,0 +1,139 @@
+//! End-to-end record/replay conformance.
+//!
+//! Records live sessions through the dispatch tap, then replays them
+//! against fresh coordinators — across front ends and wires, and across
+//! a snapshot/restore plus reshard in the middle of a trace — asserting
+//! the canonical transcripts stay bit-identical throughout.
+
+use std::time::Duration;
+
+use ksplus::coordinator::remote::RemoteClient;
+use ksplus::coordinator::server::{Server, ServerConfig};
+use ksplus::coordinator::service::{Coordinator, CoordinatorConfig};
+use ksplus::coordinator::session::{self, CaseConfig, Expect, SessionTrace, Step};
+use ksplus::coordinator::wire::Wire;
+use ksplus::coordinator::BackendSpec;
+use ksplus::util::json::Json;
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn server_cfg(cfg: &CaseConfig) -> ServerConfig {
+    ServerConfig {
+        max_conns: cfg.max_conns,
+        max_frame_bytes: cfg.max_frame_bytes,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn recorded_policies_trace_replays_identically_on_every_combo() {
+    let trace = session::record_case("policies").expect("record policies");
+    // Round-trip through the file format so the replays exercise what a
+    // committed golden would actually contain.
+    let trace = SessionTrace::from_json(&trace.to_json()).expect("trace roundtrip");
+    let mut baseline: Option<(&str, Vec<String>)> = None;
+    for (combo, threaded, wire) in session::all_combos() {
+        let transcript = session::replay_trace(&trace, threaded, wire, None)
+            .unwrap_or_else(|e| panic!("combo {combo}: {e:#}"));
+        match &baseline {
+            None => baseline = Some((combo, transcript)),
+            Some((base_combo, base)) => assert_eq!(
+                base, &transcript,
+                "{combo} diverged from the {base_combo} baseline"
+            ),
+        }
+    }
+}
+
+#[test]
+fn replay_detects_a_tampered_expectation() {
+    let mut trace = session::record_case("ops").expect("record ops");
+    // Corrupt one pinned expect: claim the training step folded one
+    // more execution than it did.
+    let tampered = trace.steps.iter_mut().find_map(|s| match s {
+        Step::Request { request, expect: Expect::Json(doc) }
+            if request.get("op").and_then(Json::as_str) == Some("train") =>
+        {
+            if let Json::Obj(m) = doc {
+                m.insert("executions".to_string(), Json::Num(999.0));
+                Some(())
+            } else {
+                None
+            }
+        }
+        _ => None,
+    });
+    assert!(tampered.is_some(), "ops trace should pin a train ack");
+    let err = session::replay_trace(&trace, true, Wire::V1, None)
+        .expect_err("a tampered expect must fail the replay");
+    assert!(format!("{err:#}").contains("diverged"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn snapshot_restore_and_reshard_mid_trace_keep_the_tail_bit_identical() {
+    let trace = session::record_case("mixed-session").expect("record mixed-session");
+    let cfg = trace.config.clone();
+
+    // Control: the whole trace on one uninterrupted server. One
+    // transcript line per step (mixed-session has no probes), so the
+    // control splits index-for-index with the steps.
+    let control = session::replay_trace(&trace, true, Wire::V1, None).expect("control replay");
+    assert_eq!(control.len(), trace.steps.len());
+
+    // Split right before the 2→3 reshard: the tail then replays through
+    // both a snapshot/restore boundary AND a pool resize.
+    let mid = trace
+        .steps
+        .iter()
+        .position(|s| match s {
+            Step::Request { request, .. } => {
+                request.get("op").and_then(Json::as_str) == Some("reshard")
+            }
+            _ => false,
+        })
+        .expect("mixed-session has a reshard step");
+    assert!(mid > 0 && mid < trace.steps.len() - 1, "split must be interior");
+
+    let coord_cfg = CoordinatorConfig {
+        k: cfg.k,
+        shards: cfg.shards,
+        ..Default::default()
+    };
+
+    // Head on coordinator A.
+    let coord_a =
+        Coordinator::start(coord_cfg.clone(), BackendSpec::Native).expect("start A");
+    let server_a = Server::start_with_config("127.0.0.1:0", coord_a.client(), server_cfg(&cfg))
+        .expect("serve A");
+    let mut rc_a =
+        RemoteClient::connect_with_timeout(server_a.addr(), TIMEOUT).expect("connect A");
+    rc_a.set_read_timeout(Some(TIMEOUT)).unwrap();
+    rc_a.negotiate(Wire::V1.version()).expect("negotiate A");
+    let head = session::replay_steps(server_a.addr(), &mut rc_a, &cfg, &trace.steps[..mid])
+        .expect("head replay");
+    assert_eq!(head.as_slice(), &control[..mid], "head transcript drifted");
+
+    // Carry the trained state into a fresh coordinator B.
+    let doc = coord_a.client().snapshot_json();
+    drop(rc_a);
+    let coord_b =
+        Coordinator::start(coord_cfg, BackendSpec::Native).expect("start B");
+    let restored = coord_b.client().restore_snapshot(&doc).expect("restore into B");
+    assert!(restored > 0, "the snapshot should carry trained tasks");
+    let server_b = Server::start_with_config("127.0.0.1:0", coord_b.client(), server_cfg(&cfg))
+        .expect("serve B");
+    let mut rc_b =
+        RemoteClient::connect_with_timeout(server_b.addr(), TIMEOUT).expect("connect B");
+    rc_b.set_read_timeout(Some(TIMEOUT)).unwrap();
+    rc_b.negotiate(Wire::V1.version()).expect("negotiate B");
+
+    // Tail on B: pinned expects (observe acks, the resharded count) and
+    // the control transcript must both hold bit-for-bit.
+    let tail = session::replay_steps(server_b.addr(), &mut rc_b, &cfg, &trace.steps[mid..])
+        .expect("tail replay");
+    assert_eq!(
+        tail.as_slice(),
+        &control[mid..],
+        "the tail after snapshot/restore + reshard drifted from the uninterrupted run"
+    );
+}
