@@ -26,20 +26,21 @@ use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::faults::FaultPlane;
 use crate::coordinator::poll::{drain_waker, waker_pair, Event, Poller, Waker};
 use crate::coordinator::protocol::{ErrorCode, Request, WireError};
-use crate::coordinator::server::{encode_response_or_error, ServerConfig};
+use crate::coordinator::server::{dispatch_contained, encode_response_or_error, ServerConfig};
 use crate::coordinator::service::{
-    dispatch_tapped, Client, ConnCounters, Coordinator, CoordinatorConfig, DispatchTap,
-    Dispatched,
+    Client, ConnCounters, Coordinator, CoordinatorConfig, DispatchTap, Dispatched,
 };
 use crate::coordinator::timer::TimerWheel;
 use crate::coordinator::wire::{decode_request, encode_error, FrameSplit, Wire};
 use crate::coordinator::BackendSpec;
+use crate::util::sync::{lock_recover, wait_recover};
 
 const TOKEN_LISTENER: usize = 0;
 const TOKEN_WAKER: usize = 1;
@@ -107,10 +108,18 @@ struct Shared {
     client: Client,
     counters: Arc<ConnCounters>,
     tap: Option<Arc<dyn DispatchTap>>,
+    faults: Option<Arc<FaultPlane>>,
+    /// Graceful-drain flag: the loop stops accepting connections and
+    /// reading requests, but keeps flushing until everything owed is on
+    /// the wire (or the drain deadline passes).
+    draining: AtomicBool,
 }
 
 fn worker(shared: Arc<Shared>) {
-    let mut q = shared.queue.lock().unwrap();
+    // Poison-recovering locks throughout: one panicking worker (already
+    // contained by `dispatch_contained`, but belt and braces) must not
+    // cascade into every thread touching the shared queue.
+    let mut q = lock_recover(&shared.queue);
     loop {
         let work = loop {
             if let Some(w) = q.work.pop_front() {
@@ -119,14 +128,15 @@ fn worker(shared: Arc<Shared>) {
             if q.stopping {
                 return;
             }
-            q = shared.cv.wait(q).unwrap();
+            q = wait_recover(&shared.cv, q);
         };
         drop(q);
-        let bytes = match dispatch_tapped(
+        let bytes = match dispatch_contained(
             work.req,
             &shared.client,
             &shared.counters,
             shared.tap.as_ref(),
+            shared.faults.as_ref(),
         ) {
             Dispatched::Reply(resp) => encode_response_or_error(work.wire, &resp),
             Dispatched::Error(err) => encode_error(work.wire, &err),
@@ -135,14 +145,14 @@ fn worker(shared: Arc<Shared>) {
             // here, answer it on the request's wire without switching.
             Dispatched::Hello(resp, _) => encode_response_or_error(work.wire, &resp),
         };
-        shared.completions.lock().unwrap().push(Done {
+        lock_recover(&shared.completions).push(Done {
             token: work.token,
             gen: work.gen,
             seq: work.seq,
             bytes,
         });
         shared.waker.wake();
-        q = shared.queue.lock().unwrap();
+        q = lock_recover(&shared.queue);
     }
 }
 
@@ -162,17 +172,39 @@ struct EventLoop {
     stop: Arc<AtomicBool>,
 }
 
+/// How long a graceful drain may take before `stop()` gives up on the
+/// remaining in-flight work and shuts down anyway.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
 impl EventLoop {
     fn run(&mut self) {
         let mut events: Vec<Event> = Vec::new();
+        let mut drain_deadline: Option<Instant> = None;
         loop {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
-            let timeout = self
-                .wheel
-                .as_ref()
-                .and_then(|w| w.next_wakeup(Instant::now()));
+            let draining = self.shared.draining.load(Ordering::SeqCst);
+            if draining {
+                match drain_deadline {
+                    None => drain_deadline = Some(Instant::now() + DRAIN_DEADLINE),
+                    Some(d) if Instant::now() >= d => break,
+                    Some(_) => {}
+                }
+                // Everything owed is on the wire: the drain is complete.
+                if self.fully_flushed() {
+                    break;
+                }
+            }
+            let timeout = if draining {
+                // Bounded poll so the deadline and flush checks re-run
+                // even when no event fires.
+                Some(Duration::from_millis(20))
+            } else {
+                self.wheel
+                    .as_ref()
+                    .and_then(|w| w.next_wakeup(Instant::now()))
+            };
             match self.poller.wait(&mut events, timeout) {
                 Ok(()) => {}
                 Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -184,14 +216,20 @@ impl EventLoop {
             for i in 0..events.len() {
                 let ev = events[i];
                 match ev.token {
-                    TOKEN_LISTENER => self.accept_ready(),
+                    // During a drain nothing new is admitted or read:
+                    // finishing what was accepted is the whole point.
+                    TOKEN_LISTENER => {
+                        if !draining {
+                            self.accept_ready();
+                        }
+                    }
                     TOKEN_WAKER => drain_waker(&self.waker_rx),
                     token => {
                         let idx = token - TOKEN_BASE;
-                        if ev.readable {
+                        if ev.readable && !draining {
                             self.conn_readable(idx);
                         }
-                        if ev.writable {
+                        if ev.writable || draining {
                             self.after_io(idx);
                         }
                     }
@@ -200,6 +238,21 @@ impl EventLoop {
             self.drain_completions();
             self.reap_idle();
         }
+    }
+
+    /// True when no request is owed a response anywhere: the dispatch
+    /// queue and completion buffer are empty and every live connection
+    /// has flushed all of its responses to the socket.
+    fn fully_flushed(&self) -> bool {
+        if !lock_recover(&self.shared.queue).work.is_empty() {
+            return false;
+        }
+        if !lock_recover(&self.shared.completions).is_empty() {
+            return false;
+        }
+        self.slab.iter().flatten().all(|c| {
+            c.flush_seq == c.next_seq && c.wpos >= c.wbuf.len()
+        })
     }
 
     fn accept_ready(&mut self) {
@@ -276,6 +329,7 @@ impl EventLoop {
     }
 
     fn conn_readable(&mut self, idx: usize) {
+        let faults = self.cfg.faults.clone();
         let mut dead = false;
         {
             let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
@@ -287,7 +341,13 @@ impl EventLoop {
             }
             let mut chunk = [0u8; 64 * 1024];
             loop {
-                match conn.stream.read(&mut chunk) {
+                // `short-io` fault: read fewer bytes than the socket
+                // offers, exercising partial-frame reassembly.
+                let want = match &faults {
+                    Some(f) => f.clamp_io(chunk.len()),
+                    None => chunk.len(),
+                };
+                match conn.stream.read(&mut chunk[..want]) {
                     Ok(0) => {
                         conn.draining = true;
                         break;
@@ -318,6 +378,8 @@ impl EventLoop {
     /// switch is ordered against later frames already in the buffer.
     fn parse_frames(&mut self, idx: usize) {
         let cfg_max = self.cfg.max_frame_bytes;
+        let max_queue_depth = self.cfg.max_queue_depth;
+        let max_inflight = self.cfg.max_inflight;
         let shared = Arc::clone(&self.shared);
         let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
             Some(c) => c,
@@ -352,11 +414,12 @@ impl EventLoop {
                         Ok(Some(req @ Request::Hello { .. })) => {
                             let seq = conn.next_seq;
                             conn.next_seq += 1;
-                            match dispatch_tapped(
+                            match dispatch_contained(
                                 req,
                                 &shared.client,
                                 &shared.counters,
                                 shared.tap.as_ref(),
+                                shared.faults.as_ref(),
                             ) {
                                 Dispatched::Hello(resp, version) => {
                                     // STARTTLS-style: the answer travels
@@ -384,14 +447,48 @@ impl EventLoop {
                         Ok(Some(req)) => {
                             let seq = conn.next_seq;
                             conn.next_seq += 1;
-                            shared.queue.lock().unwrap().work.push_back(Work {
-                                token: idx + TOKEN_BASE,
-                                gen: conn.gen,
-                                seq,
-                                wire: conn.wire,
-                                req,
-                            });
-                            new_work = true;
+                            // Admission control: shed instead of queueing
+                            // without bound. The request is *rejected*
+                            // with a structured `overloaded` error slotted
+                            // into its in-order reply position — the
+                            // connection stays open and later requests
+                            // are admitted again once pressure drops.
+                            let inflight = conn.next_seq - conn.flush_seq;
+                            let mut shed_reason = None;
+                            if max_inflight > 0 && inflight > max_inflight as u64 {
+                                shed_reason = Some(format!(
+                                    "connection has {} requests in flight (cap {})",
+                                    inflight - 1,
+                                    max_inflight
+                                ));
+                            } else {
+                                let mut q = lock_recover(&shared.queue);
+                                let depth = q.work.len();
+                                if max_queue_depth > 0 && depth >= max_queue_depth {
+                                    shed_reason = Some(format!(
+                                        "dispatch queue is full ({depth} queued, cap {max_queue_depth})"
+                                    ));
+                                } else {
+                                    q.work.push_back(Work {
+                                        token: idx + TOKEN_BASE,
+                                        gen: conn.gen,
+                                        seq,
+                                        wire: conn.wire,
+                                        req,
+                                    });
+                                    drop(q);
+                                    shared.counters.note_queue_depth(depth as u64 + 1);
+                                    new_work = true;
+                                }
+                            }
+                            if let Some(reason) = shed_reason {
+                                shared.counters.shed.fetch_add(1, Ordering::Relaxed);
+                                let err = WireError::new(
+                                    ErrorCode::Overloaded,
+                                    format!("{reason}; retry after backoff"),
+                                );
+                                conn.pending.insert(seq, encode_error(conn.wire, &err));
+                            }
                         }
                         Err(err) => {
                             // Malformed frame: structured error, stay open
@@ -416,6 +513,8 @@ impl EventLoop {
     /// Move in-order completions into the write buffer, flush as much
     /// as the socket accepts, then settle interest/close state.
     fn after_io(&mut self, idx: usize) {
+        let faults = self.cfg.faults.clone();
+        let mut torn = false;
         {
             let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
                 Some(c) => c,
@@ -423,8 +522,25 @@ impl EventLoop {
             };
             while let Some(bytes) = conn.pending.remove(&conn.flush_seq) {
                 conn.flush_seq += 1;
+                // `corrupt` fault: tear this response frame — write only
+                // a strict prefix and sever the connection, simulating a
+                // crash mid-response. The client never sees an ack, so
+                // retrying the request is safe (and dedup makes a
+                // retried mutation exactly-once).
+                if let Some(f) = &faults {
+                    if let Some(keep) = f.tear_frame(bytes.len()) {
+                        conn.wbuf.extend_from_slice(&bytes[..keep]);
+                        torn = true;
+                        break;
+                    }
+                }
                 conn.wbuf.extend_from_slice(&bytes);
             }
+        }
+        if torn {
+            let _ = self.try_write(idx);
+            self.close(idx);
+            return;
         }
         if !self.try_write(idx) {
             self.close(idx);
@@ -476,12 +592,21 @@ impl EventLoop {
 
     /// Returns false when the connection died mid-write.
     fn try_write(&mut self, idx: usize) -> bool {
+        let faults = self.cfg.faults.clone();
         let conn = match self.slab.get_mut(idx).and_then(Option::as_mut) {
             Some(c) => c,
             None => return true,
         };
         while conn.wpos < conn.wbuf.len() {
-            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            // `short-io` fault: offer the socket a shorter slice,
+            // splitting responses across writes (the peer sees the same
+            // bytes, just in more pieces).
+            let avail = conn.wbuf.len() - conn.wpos;
+            let want = match &faults {
+                Some(f) => f.clamp_io(avail),
+                None => avail,
+            };
+            match conn.stream.write(&conn.wbuf[conn.wpos..conn.wpos + want]) {
                 Ok(0) => return false,
                 Ok(n) => conn.wpos += n,
                 Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -497,7 +622,7 @@ impl EventLoop {
     }
 
     fn drain_completions(&mut self) {
-        let done = mem::take(&mut *self.shared.completions.lock().unwrap());
+        let done = mem::take(&mut *lock_recover(&self.shared.completions));
         let mut touched = Vec::new();
         for d in done {
             let idx = d.token - TOKEN_BASE;
@@ -634,6 +759,8 @@ impl EventLoopServer {
             client,
             counters: Arc::new(ConnCounters::default()),
             tap: cfg.tap.clone(),
+            faults: cfg.faults.clone(),
+            draining: AtomicBool::new(false),
         });
         let stop = Arc::new(AtomicBool::new(false));
 
@@ -690,17 +817,32 @@ impl EventLoopServer {
         self.addr
     }
 
-    /// Stop the loop and the dispatch pool. Live connections are
-    /// dropped; queued-but-undispatched requests are discarded.
+    /// This front end's connection counters (shed / overflow / drain
+    /// totals survive `stop()`, so callers can read them afterwards).
+    pub fn counters(&self) -> Arc<ConnCounters> {
+        self.shared.counters.clone()
+    }
+
+    /// Gracefully drain, then stop the loop and the dispatch pool. The
+    /// drain stops accepting connections and reading requests, lets the
+    /// workers finish everything already queued, and flushes every owed
+    /// response to the wire before tearing sockets down — an acked
+    /// request is never silently discarded by a shutdown. The drain is
+    /// bounded by [`DRAIN_DEADLINE`]; past it, leftover work is dropped
+    /// (those clients never got an ack, so their retries are safe).
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.draining.store(true, Ordering::SeqCst);
         self.shared.waker.wake();
         if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
+            self.shared.counters.drains.fetch_add(1, Ordering::Relaxed);
         }
+        self.stop.store(true, Ordering::SeqCst);
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             q.stopping = true;
+            // A completed drain left this empty; only a deadline
+            // overrun leaves (unacked) work to discard.
             q.work.clear();
         }
         self.shared.cv.notify_all();
@@ -878,6 +1020,7 @@ mod tests {
                     1.0,
                     vec![1.0, 2.0],
                 ),
+                dedup: None,
             };
             batch.extend_from_slice(&try_encode_request(Wire::V2, &req, DEFAULT_MAX_FRAME_BYTES).unwrap());
         }
@@ -1070,6 +1213,119 @@ mod tests {
         let resp = roundtrip(&mut s, &mut r, r#"{"op":"stats"}"#);
         let overflowed = resp.get("conns_overflowed").and_then(Json::as_usize);
         assert_eq!(overflowed, Some(1), "overflow close must be counted: {resp}");
+    }
+
+    #[test]
+    fn inflight_cap_sheds_with_overloaded_and_stays_open() {
+        // Cap in-flight at 4, then pipeline 8 observes in one burst. The
+        // parse loop sees all 8 before anything flushes, so requests
+        // 5..8 are deterministically shed — each with a structured
+        // `overloaded` error in its in-order reply slot — while the
+        // connection survives and keeps serving.
+        let (_coord, server) =
+            start_cfg(ServerConfig { max_inflight: 4, ..Default::default() });
+        let (mut stream, mut reader) = connect(&server);
+        let mut batch = String::new();
+        for i in 0..8 {
+            batch.push_str(&format!(
+                r#"{{"op":"observe","task":"s{i}","execution":{{"input_mb":10,"dt":1.0,"samples":[1.0,2.0]}}}}"#
+            ));
+            batch.push('\n');
+        }
+        stream.write_all(batch.as_bytes()).unwrap();
+        let mut ok = 0;
+        let mut shed = 0;
+        for i in 0..8 {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "response {i} missing");
+            let resp = Json::parse(&line).unwrap();
+            if resp.get("ok") == Some(&Json::Bool(true)) {
+                ok += 1;
+            } else {
+                assert_eq!(err_code(&resp), Some("overloaded"), "{resp}");
+                shed += 1;
+            }
+        }
+        assert_eq!((ok, shed), (4, 4));
+        // Pressure gone: the same connection is admitted again, and the
+        // shed counter is visible in stats.
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("shed").and_then(Json::as_usize), Some(4));
+        assert_eq!(resp.get("observations").and_then(Json::as_usize), Some(4));
+        assert!(resp.get("queue_depth_max").and_then(Json::as_usize).unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn full_dispatch_queue_sheds_instead_of_growing() {
+        // One dispatch thread, queue capped at 1: a burst of slow
+        // reshards fills the queue instantly and most of the burst is
+        // shed. The overload response arrives without waiting for the
+        // queue (it only waits for in-order flushing), and no request is
+        // silently dropped — every one gets exactly one reply.
+        let (_coord, server) = start_cfg(ServerConfig {
+            dispatch_threads: 1,
+            max_queue_depth: 1,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = connect(&server);
+        let mut batch = String::new();
+        for i in 0..32 {
+            batch.push_str(&format!(r#"{{"op":"reshard","shards":{}}}"#, 3 - i % 2));
+            batch.push('\n');
+        }
+        stream.write_all(batch.as_bytes()).unwrap();
+        let mut ok = 0;
+        let mut shed = 0;
+        for i in 0..32 {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "response {i} missing");
+            let resp = Json::parse(&line).unwrap();
+            if resp.get("ok") == Some(&Json::Bool(true)) {
+                ok += 1;
+            } else {
+                assert_eq!(err_code(&resp), Some("overloaded"), "{resp}");
+                shed += 1;
+            }
+        }
+        assert_eq!(ok + shed, 32);
+        assert!(ok >= 1, "the first request is always admitted");
+        assert!(shed >= 1, "a 32-deep burst through a 1-slot queue must shed");
+        let resp = roundtrip(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+        assert_eq!(resp.get("shed").and_then(Json::as_usize), Some(shed));
+        assert_eq!(resp.get("queue_depth_max").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn stop_drains_queued_work_instead_of_discarding_it() {
+        // Pipeline slow work through one dispatch thread, then stop()
+        // while most of it is still queued. The graceful drain must
+        // finish and flush every admitted request's response — the old
+        // behavior (clear the queue) dropped them on the floor.
+        let (_coord, mut server) = start_cfg(ServerConfig {
+            dispatch_threads: 1,
+            ..Default::default()
+        });
+        let (mut stream, mut reader) = connect(&server);
+        let mut batch = String::new();
+        for i in 0..20 {
+            batch.push_str(&format!(r#"{{"op":"reshard","shards":{}}}"#, 3 - i % 2));
+            batch.push('\n');
+        }
+        stream.write_all(batch.as_bytes()).unwrap();
+        // Give the loop a moment to admit the burst, then drain.
+        std::thread::sleep(Duration::from_millis(20));
+        server.stop();
+        assert_eq!(server.counters().drains.load(Ordering::Relaxed), 1);
+        // All 20 responses were flushed before the sockets went down.
+        for i in 0..20 {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "response {i} lost in stop()");
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "reshard {i}: {resp}");
+        }
+        let mut line = String::new();
+        assert_eq!(reader.read_line(&mut line).unwrap_or(0), 0, "then EOF");
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Deterministic fault injection: a seeded [`FaultPlane`] that the
+//! server front ends, the dispatch workers, and the snapshot writer
+//! consult at their natural failure points. Every decision comes from a
+//! per-seam fork of one seeded [`Rng`], so a fault schedule replays
+//! bit-identically from its seed: the Nth read on the wire seam is
+//! shortened (or not) the same way on every run with the same spec.
+//!
+//! Four fault kinds, one per seam:
+//!
+//! * `short-io` — wire codec seam: clamp a read or write to fewer bytes
+//!   than the socket offered, exercising every partial-frame
+//!   reassembly path. Harmless by construction (no bytes are lost or
+//!   reordered, only split), so it is part of the *benign* spec the
+//!   golden replay harness runs under.
+//! * `corrupt` — wire codec seam, outbound only: truncate an encoded
+//!   response frame mid-write and sever the connection. The client sees
+//!   a torn frame / EOF, reconnects, and retries; requests are never
+//!   corrupted (a corrupted request would legitimately change what the
+//!   server applied, which is exactly what the no-lost-acks property
+//!   must distinguish from).
+//! * `stall` — service seam: sleep a dispatch worker before it serves a
+//!   request, widening every queue/timeout race.
+//! * `torn` — snapshot seam: leave a truncated prefix of the document
+//!   in the snapshot's final path and fail the write, simulating the
+//!   worst post-crash state of a non-atomic writer. Restore must
+//!   classify the debris as corrupt and start fresh, not wedge.
+//!
+//! The spec grammar (`--fault-spec` / `--chaos-faults`) is
+//! `key=value` pairs joined by commas:
+//!
+//! ```text
+//! seed=42,short-io=0.1,corrupt=0.05,stall=0.1:5,torn=0.5
+//! ```
+//!
+//! Probabilities are per-decision in `[0,1]`; `stall` takes an optional
+//! `:millis` suffix (default 2ms). Omitted kinds default to 0 (never).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+use crate::util::sync::lock_recover;
+
+/// Parsed fault specification: the seed plus one probability per kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// P(clamp) per wire read/write.
+    pub short_io: f64,
+    /// P(truncate + sever) per outbound response frame.
+    pub corrupt: f64,
+    /// P(sleep) per dispatched request.
+    pub stall: f64,
+    /// Stall duration when one fires.
+    pub stall_ms: u64,
+    /// P(tear) per snapshot write.
+    pub torn: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { seed: 0, short_io: 0.0, corrupt: 0.0, stall: 0.0, stall_ms: 2, torn: 0.0 }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the `key=value,...` grammar. Unknown keys and out-of-range
+    /// probabilities are errors — a typo'd fault spec silently injecting
+    /// nothing would defeat the whole exercise.
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec entry '{part}' is not key=value"))?;
+            let prob = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("'{key}={v}': not a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "'{key}={v}': probability must be in [0,1]"
+                );
+                Ok(p)
+            };
+            match key {
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("'seed={value}': not a u64"))?;
+                }
+                "short-io" => spec.short_io = prob(value)?,
+                "corrupt" => spec.corrupt = prob(value)?,
+                "stall" => match value.split_once(':') {
+                    None => spec.stall = prob(value)?,
+                    Some((p, ms)) => {
+                        spec.stall = prob(p)?;
+                        spec.stall_ms = ms
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("'stall={value}': bad millis"))?;
+                    }
+                },
+                "torn" => spec.torn = prob(value)?,
+                other => anyhow::bail!(
+                    "unknown fault kind '{other}' (valid: seed, short-io, corrupt, stall, torn)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The benign-only spec the golden replay harness runs under
+    /// (`repro replay --fault-seed N`): faults that stress framing and
+    /// scheduling without losing or altering a single response byte, so
+    /// replayed transcripts must stay bit-identical.
+    pub fn benign(seed: u64) -> FaultSpec {
+        FaultSpec { seed, short_io: 0.3, stall: 0.2, stall_ms: 1, ..FaultSpec::default() }
+    }
+
+    /// Does this spec inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.short_io > 0.0 || self.corrupt > 0.0 || self.stall > 0.0 || self.torn > 0.0
+    }
+
+    /// Build the shared runtime plane for this spec.
+    pub fn plane(&self) -> std::sync::Arc<FaultPlane> {
+        std::sync::Arc::new(FaultPlane::new(self.clone()))
+    }
+}
+
+/// Injection counters, for loadgen reports and assertions that a run
+/// actually exercised what it claimed to.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub short_io: AtomicU64,
+    pub corrupt: AtomicU64,
+    pub stall: AtomicU64,
+    pub torn: AtomicU64,
+}
+
+/// Shared runtime state: one seeded RNG fork per seam, behind its own
+/// (poison-recovering) lock so seams never perturb each other's
+/// streams. Decision N on a seam is a pure function of (seed, seam, N).
+pub struct FaultPlane {
+    spec: FaultSpec,
+    io: Mutex<Rng>,
+    frames: Mutex<Rng>,
+    stalls: Mutex<Rng>,
+    snapshots: Mutex<Rng>,
+    pub counters: FaultCounters,
+}
+
+impl std::fmt::Debug for FaultPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlane").field("spec", &self.spec).finish()
+    }
+}
+
+impl FaultPlane {
+    pub fn new(spec: FaultSpec) -> FaultPlane {
+        let mut root = Rng::new(spec.seed);
+        FaultPlane {
+            io: Mutex::new(root.fork(1)),
+            frames: Mutex::new(root.fork(2)),
+            stalls: Mutex::new(root.fork(3)),
+            snapshots: Mutex::new(root.fork(4)),
+            spec,
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Wire seam: how many of `avail` bytes this read/write may move.
+    /// Always at least 1 (a zero-length read would be mistaken for EOF).
+    pub fn clamp_io(&self, avail: usize) -> usize {
+        if avail <= 1 || self.spec.short_io <= 0.0 {
+            return avail;
+        }
+        let mut rng = lock_recover(&self.io);
+        if rng.f64() >= self.spec.short_io {
+            return avail;
+        }
+        self.counters.short_io.fetch_add(1, Ordering::Relaxed);
+        1 + rng.below(avail)
+    }
+
+    /// Wire seam, outbound: should this encoded response frame be torn?
+    /// When `true`, the caller truncates `bytes` to the returned prefix
+    /// length and severs the connection after writing it.
+    pub fn tear_frame(&self, len: usize) -> Option<usize> {
+        if len == 0 || self.spec.corrupt <= 0.0 {
+            return None;
+        }
+        let mut rng = lock_recover(&self.frames);
+        if rng.f64() >= self.spec.corrupt {
+            return None;
+        }
+        self.counters.corrupt.fetch_add(1, Ordering::Relaxed);
+        // Keep a strict prefix: 0..len-1 bytes survive.
+        Some(rng.below(len))
+    }
+
+    /// Service seam: maybe sleep before dispatching one request.
+    pub fn maybe_stall(&self) {
+        if self.spec.stall <= 0.0 {
+            return;
+        }
+        let fire = lock_recover(&self.stalls).f64() < self.spec.stall;
+        if fire {
+            self.counters.stall.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_millis(self.spec.stall_ms));
+        }
+    }
+
+    /// Snapshot seam: should this snapshot write be torn? When `Some(n)`
+    /// the writer leaves only `n` bytes of the document in the final
+    /// path and reports the write as failed (an injected crash).
+    pub fn tear_snapshot(&self, len: usize) -> Option<usize> {
+        if self.spec.torn <= 0.0 {
+            return None;
+        }
+        let mut rng = lock_recover(&self.snapshots);
+        if rng.f64() >= self.spec.torn {
+            return None;
+        }
+        self.counters.torn.fetch_add(1, Ordering::Relaxed);
+        Some(rng.below(len.max(1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let s = FaultSpec::parse("seed=42,short-io=0.1,corrupt=0.05,stall=0.1:5,torn=0.5")
+            .unwrap();
+        assert_eq!(
+            s,
+            FaultSpec {
+                seed: 42,
+                short_io: 0.1,
+                corrupt: 0.05,
+                stall: 0.1,
+                stall_ms: 5,
+                torn: 0.5,
+            }
+        );
+        assert!(s.is_active());
+        // Defaults: everything off, stall at 2ms.
+        let d = FaultSpec::parse("seed=7").unwrap();
+        assert_eq!(d, FaultSpec { seed: 7, ..FaultSpec::default() });
+        assert!(!d.is_active());
+        // Stall without millis keeps the default duration.
+        let st = FaultSpec::parse("stall=0.25").unwrap();
+        assert_eq!((st.stall, st.stall_ms), (0.25, 2));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "frobnicate=1",
+            "short-io=2.0",
+            "short-io=-0.1",
+            "seed=abc",
+            "stall=0.1:xyz",
+            "short-io",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn decisions_replay_bit_identically_from_the_seed() {
+        let spec = FaultSpec::parse("seed=1234,short-io=0.5,corrupt=0.3,torn=0.4").unwrap();
+        let a = spec.plane();
+        let b = spec.plane();
+        for i in 0..200 {
+            assert_eq!(a.clamp_io(64 + i), b.clamp_io(64 + i), "io decision {i}");
+            assert_eq!(a.tear_frame(128), b.tear_frame(128), "frame decision {i}");
+            assert_eq!(a.tear_snapshot(256), b.tear_snapshot(256), "snap decision {i}");
+        }
+        assert_eq!(
+            a.counters.short_io.load(Ordering::Relaxed),
+            b.counters.short_io.load(Ordering::Relaxed)
+        );
+        // A different seed produces a different schedule.
+        let other = FaultSpec { seed: 99, ..spec.clone() }.plane();
+        let same = (0..200).filter(|_| a.clamp_io(1024) == other.clamp_io(1024)).count();
+        assert!(same < 200);
+    }
+
+    #[test]
+    fn clamps_are_in_range_and_probabilistic() {
+        let plane = FaultSpec::parse("seed=5,short-io=0.5,corrupt=0.5").unwrap().plane();
+        let mut clamped = 0;
+        for _ in 0..500 {
+            let n = plane.clamp_io(64);
+            assert!((1..=64).contains(&n));
+            if n < 64 {
+                clamped += 1;
+            }
+        }
+        // ~50% fire rate, generous bounds.
+        assert!((100..=400).contains(&clamped), "clamped {clamped}/500");
+        for _ in 0..500 {
+            if let Some(keep) = plane.tear_frame(32) {
+                assert!(keep < 32, "torn frame must be a strict prefix");
+            }
+        }
+        assert!(plane.counters.corrupt.load(Ordering::Relaxed) > 0);
+        // A 1-byte buffer is never clamped (it would look like EOF).
+        for _ in 0..50 {
+            assert_eq!(plane.clamp_io(1), 1);
+        }
+    }
+
+    #[test]
+    fn benign_spec_never_alters_bytes() {
+        let s = FaultSpec::benign(7);
+        assert!(s.is_active());
+        assert_eq!(s.corrupt, 0.0);
+        assert_eq!(s.torn, 0.0);
+        let plane = s.plane();
+        for _ in 0..100 {
+            assert_eq!(plane.tear_frame(64), None);
+            assert_eq!(plane.tear_snapshot(64), None);
+        }
+    }
+
+    #[test]
+    fn inactive_plane_is_free_of_rng_traffic() {
+        let plane = FaultSpec::default().plane();
+        for _ in 0..10 {
+            assert_eq!(plane.clamp_io(64), 64);
+            assert_eq!(plane.tear_frame(64), None);
+            assert_eq!(plane.tear_snapshot(64), None);
+            plane.maybe_stall();
+        }
+        let c = &plane.counters;
+        assert_eq!(c.short_io.load(Ordering::Relaxed), 0);
+        assert_eq!(c.corrupt.load(Ordering::Relaxed), 0);
+        assert_eq!(c.stall.load(Ordering::Relaxed), 0);
+        assert_eq!(c.torn.load(Ordering::Relaxed), 0);
+    }
+}

@@ -62,6 +62,7 @@
 
 #[cfg(unix)]
 pub mod eventloop;
+pub mod faults;
 #[cfg(unix)]
 pub mod poll;
 pub mod protocol;

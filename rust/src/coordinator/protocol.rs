@@ -127,12 +127,17 @@ pub enum ErrorCode {
     /// truncated payload, or malformed field encoding. The v2 analogue
     /// of `invalid-json`.
     InvalidFrame,
+    /// The server shed this request because its dispatch queue (or the
+    /// connection's in-flight window) is full. Unlike the two
+    /// connection-level errors above, the connection stays open — the
+    /// request was rejected, not the link. Safe to retry after backoff.
+    Overloaded,
     /// Server-side fault, or an unrecognized code from a newer peer.
     Internal,
 }
 
 impl ErrorCode {
-    pub const ALL: [ErrorCode; 13] = [
+    pub const ALL: [ErrorCode; 14] = [
         ErrorCode::InvalidJson,
         ErrorCode::UnknownOp,
         ErrorCode::MissingField,
@@ -145,6 +150,7 @@ impl ErrorCode {
         ErrorCode::RequestTooLarge,
         ErrorCode::TooManyConnections,
         ErrorCode::InvalidFrame,
+        ErrorCode::Overloaded,
         ErrorCode::Internal,
     ];
 
@@ -162,6 +168,7 @@ impl ErrorCode {
             ErrorCode::RequestTooLarge => "request-too-large",
             ErrorCode::TooManyConnections => "too-many-connections",
             ErrorCode::InvalidFrame => "invalid-frame",
+            ErrorCode::Overloaded => "overloaded",
             ErrorCode::Internal => "internal",
         }
     }
@@ -394,6 +401,56 @@ pub fn policy_from_name(name: &str) -> Result<PredictorPolicy, WireError> {
 
 // ---- requests ------------------------------------------------------------
 
+/// Retry-deduplication identity for a mutating request (`configure`,
+/// `train`, `observe`). A client that retries mutating ops attaches a
+/// per-session `nonce` and a per-op `seq`; the server remembers the last
+/// `seq` applied per nonce and answers a replayed `seq` from its cached
+/// response instead of applying the mutation twice. Sequence numbers
+/// must be strictly increasing per nonce — a `seq` below the last
+/// applied one is rejected (`invalid-field`), since its cached response
+/// is gone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dedup {
+    /// Per-session random identity (client-chosen, opaque to the
+    /// server).
+    pub nonce: String,
+    /// Strictly-increasing per-nonce sequence number: one per logical
+    /// op, shared by all retries of that op.
+    pub seq: u64,
+}
+
+/// Parse the optional dedup pair from a v1 request object: both fields
+/// or neither — one without the other is malformed.
+fn dedup_from_json(j: &Json) -> Result<Option<Dedup>, WireError> {
+    match (j.get("nonce"), j.get("seq")) {
+        (None, None) => Ok(None),
+        (Some(n), Some(s)) => {
+            let nonce = n.as_str().ok_or_else(|| {
+                WireError::new(ErrorCode::InvalidField, "'nonce' must be a string")
+            })?;
+            let seq = s.as_usize().ok_or_else(|| {
+                WireError::new(
+                    ErrorCode::InvalidField,
+                    "'seq' must be a non-negative integer",
+                )
+            })?;
+            Ok(Some(Dedup { nonce: nonce.to_string(), seq: seq as u64 }))
+        }
+        _ => Err(WireError::new(
+            ErrorCode::InvalidField,
+            "'nonce' and 'seq' must be sent together",
+        )),
+    }
+}
+
+/// Encoder counterpart of [`dedup_from_json`].
+fn push_dedup(pairs: &mut Vec<(&str, Json)>, dedup: &Option<Dedup>) {
+    if let Some(d) = dedup {
+        pairs.push(("nonce", d.nonce.as_str().into()));
+        pairs.push(("seq", (d.seq as usize).into()));
+    }
+}
+
 /// Every request of wire v1. `parse` maps each malformed-request class
 /// to its specific `ErrorCode`; `to_json` is the client-side encoder.
 #[derive(Debug, Clone, PartialEq)]
@@ -406,9 +463,9 @@ pub enum Request {
     },
     /// Bind `task` to `policy`; a task-less configure sets the
     /// service-wide default for tasks not yet pinned to a policy.
-    Configure { task: Option<String>, policy: PredictorPolicy },
-    Train { task: String, history: Vec<Execution> },
-    Observe { task: String, execution: Execution },
+    Configure { task: Option<String>, policy: PredictorPolicy, dedup: Option<Dedup> },
+    Train { task: String, history: Vec<Execution>, dedup: Option<Dedup> },
+    Observe { task: String, execution: Execution, dedup: Option<Dedup> },
     Plan { task: String, input_mb: f64 },
     /// Report an OOM. With `task`, the retry uses that task's bound
     /// policy; without, the KS+ segment-rescaling strategy.
@@ -456,6 +513,7 @@ impl Request {
                 Ok(Request::Configure {
                     task,
                     policy: policy_from_name(&str_field(&j, "policy")?)?,
+                    dedup: dedup_from_json(&j)?,
                 })
             }
             "train" => {
@@ -468,12 +526,12 @@ impl Request {
                     .iter()
                     .map(|e| execution_from_json(&task, e))
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(Request::Train { task, history })
+                Ok(Request::Train { task, history, dedup: dedup_from_json(&j)? })
             }
             "observe" => {
                 let task = str_field(&j, "task")?;
                 let execution = execution_from_json(&task, field(&j, "execution")?)?;
-                Ok(Request::Observe { task, execution })
+                Ok(Request::Observe { task, execution, dedup: dedup_from_json(&j)? })
             }
             "plan" => Ok(Request::Plan {
                 task: str_field(&j, "task")?,
@@ -515,22 +573,25 @@ impl Request {
                     pairs.push(("max_version", (*v).into()));
                 }
             }
-            Request::Configure { task, policy } => {
+            Request::Configure { task, policy, dedup } => {
                 if let Some(t) = task {
                     pairs.push(("task", t.as_str().into()));
                 }
                 pairs.push(("policy", policy.name().into()));
+                push_dedup(&mut pairs, dedup);
             }
-            Request::Train { task, history } => {
+            Request::Train { task, history, dedup } => {
                 pairs.push(("task", task.as_str().into()));
                 pairs.push((
                     "history",
                     Json::Arr(history.iter().map(execution_to_json).collect()),
                 ));
+                push_dedup(&mut pairs, dedup);
             }
-            Request::Observe { task, execution } => {
+            Request::Observe { task, execution, dedup } => {
                 pairs.push(("task", task.as_str().into()));
                 pairs.push(("execution", execution_to_json(execution)));
+                push_dedup(&mut pairs, dedup);
             }
             Request::Plan { task, input_mb } => {
                 pairs.push(("task", task.as_str().into()));
@@ -595,6 +656,14 @@ pub struct StatsSummary {
     /// server's write-buffer cap (a pipelining peer that stopped
     /// reading).
     pub conns_overflowed: u64,
+    /// Requests shed with `overloaded` at the dispatch-queue or
+    /// per-connection in-flight cap.
+    pub shed: u64,
+    /// High-water mark of the dispatch queue depth.
+    pub queue_depth_max: u64,
+    /// Graceful drains completed (a `stop()` that finished in-flight
+    /// work instead of discarding it).
+    pub drains: u64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
 }
@@ -668,6 +737,9 @@ impl Response {
                 pairs.push(("conns_refused", (s.conns_refused as usize).into()));
                 pairs.push(("conn_timeouts", (s.conn_timeouts as usize).into()));
                 pairs.push(("conns_overflowed", (s.conns_overflowed as usize).into()));
+                pairs.push(("shed", (s.shed as usize).into()));
+                pairs.push(("queue_depth_max", (s.queue_depth_max as usize).into()));
+                pairs.push(("drains", (s.drains as usize).into()));
                 pairs.push(("latency_p50_us", s.latency_p50_us.into()));
                 pairs.push(("latency_p99_us", s.latency_p99_us.into()));
             }
@@ -809,6 +881,12 @@ impl Response {
                     .get("conns_overflowed")
                     .and_then(Json::as_usize)
                     .unwrap_or(0) as u64,
+                shed: j.get("shed").and_then(Json::as_usize).unwrap_or(0) as u64,
+                queue_depth_max: j
+                    .get("queue_depth_max")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0) as u64,
+                drains: j.get("drains").and_then(Json::as_usize).unwrap_or(0) as u64,
                 latency_p50_us: f64_field(j, "latency_p50_us")?,
                 latency_p99_us: f64_field(j, "latency_p99_us")?,
             })),
@@ -862,12 +940,30 @@ mod tests {
                 max_version: Some(1),
             },
             Request::Hello { client: None, min_version: None, max_version: None },
-            Request::Configure { task: Some("bwa".into()), policy: PredictorPolicy::WittLr },
-            Request::Configure { task: None, policy: PredictorPolicy::KsPlus },
+            Request::Configure {
+                task: Some("bwa".into()),
+                policy: PredictorPolicy::WittLr,
+                dedup: None,
+            },
+            Request::Configure {
+                task: None,
+                policy: PredictorPolicy::KsPlus,
+                dedup: Some(Dedup { nonce: "cfg-nonce".into(), seq: 0 }),
+            },
             // Task name matches the generator's ("t"): the parser
             // rebuilds each execution with the op's task field.
-            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)] },
-            Request::Observe { task: "t".into(), execution: exec(3) },
+            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)], dedup: None },
+            Request::Train {
+                task: "t".into(),
+                history: vec![exec(4)],
+                dedup: Some(Dedup { nonce: "sess-1".into(), seq: 7 }),
+            },
+            Request::Observe { task: "t".into(), execution: exec(3), dedup: None },
+            Request::Observe {
+                task: "t".into(),
+                execution: exec(5),
+                dedup: Some(Dedup { nonce: "sess-1".into(), seq: 8 }),
+            },
             Request::Plan { task: "bwa".into(), input_mb: 1234.5 },
             Request::Failure {
                 task: Some("bwa".into()),
@@ -963,6 +1059,9 @@ mod tests {
                     conns_refused: 4,
                     conn_timeouts: 1,
                     conns_overflowed: 6,
+                    shed: 9,
+                    queue_depth_max: 17,
+                    drains: 1,
                     latency_p50_us: 12.5,
                     latency_p99_us: 90.25,
                 }),
@@ -1031,6 +1130,23 @@ mod tests {
             (r#"{"op":"configure","task":5,"policy":"ksplus"}"#, ErrorCode::InvalidField),
             // "*" is the default-scope response sentinel, reserved.
             (r#"{"op":"configure","task":"*","policy":"ksplus"}"#, ErrorCode::InvalidField),
+            // Dedup is both-or-neither, and seq must be an integer.
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[1]},"nonce":"n"}"#,
+                ErrorCode::InvalidField,
+            ),
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[1]},"seq":3}"#,
+                ErrorCode::InvalidField,
+            ),
+            (
+                r#"{"op":"observe","task":"x","execution":{"input_mb":1,"dt":1,"samples":[1]},"nonce":"n","seq":"three"}"#,
+                ErrorCode::InvalidField,
+            ),
+            (
+                r#"{"op":"train","task":"x","history":[{"input_mb":1,"dt":1,"samples":[1]}],"nonce":7,"seq":3}"#,
+                ErrorCode::InvalidField,
+            ),
             (r#"{"op":"failure","fail_time":1}"#, ErrorCode::MissingField),
             (
                 r#"{"op":"failure","plan":{"starts":[0],"peaks":[1]}}"#,
@@ -1093,6 +1209,9 @@ mod tests {
                 assert_eq!(s.conns_refused, 0);
                 assert_eq!(s.conn_timeouts, 0);
                 assert_eq!(s.conns_overflowed, 0);
+                assert_eq!(s.shed, 0);
+                assert_eq!(s.queue_depth_max, 0);
+                assert_eq!(s.drains, 0);
                 assert_eq!(s.requests, 5);
             }
             other => panic!("unexpected {other:?}"),

@@ -30,12 +30,13 @@
 
 use std::io::{BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::protocol::{
-    ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError, WIRE_VERSION,
+    Dedup, ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary, WireError,
+    WIRE_VERSION,
 };
 use crate::coordinator::wire::{
     decode_response, read_frame, try_encode_request, FrameRead, Wire, DEFAULT_MAX_FRAME_BYTES,
@@ -44,6 +45,7 @@ use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome};
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Client-side cap on one response frame. Far above the server's
 /// request cap because a `snapshot` response carries the whole model
@@ -246,7 +248,11 @@ impl RemoteClient {
     /// Bind a task (or, with `None`, the service-wide default) to a
     /// predictor policy.
     pub fn configure(&mut self, task: Option<&str>, policy: PredictorPolicy) -> Result<()> {
-        match self.call(&Request::Configure { task: task.map(str::to_string), policy })? {
+        match self.call(&Request::Configure {
+            task: task.map(str::to_string),
+            policy,
+            dedup: None,
+        })? {
             Response::Configured { .. } => Ok(()),
             other => anyhow::bail!("unexpected response to configure: {other:?}"),
         }
@@ -254,7 +260,11 @@ impl RemoteClient {
 
     /// Batch-train the task; returns the number of executions shipped.
     pub fn train(&mut self, task: &str, history: &[Execution]) -> Result<u64> {
-        match self.call(&Request::Train { task: task.to_string(), history: history.to_vec() })? {
+        match self.call(&Request::Train {
+            task: task.to_string(),
+            history: history.to_vec(),
+            dedup: None,
+        })? {
             Response::Trained { executions, .. } => Ok(executions),
             other => anyhow::bail!("unexpected response to train: {other:?}"),
         }
@@ -265,6 +275,7 @@ impl RemoteClient {
         match self.call(&Request::Observe {
             task: task.to_string(),
             execution: execution.clone(),
+            dedup: None,
         })? {
             Response::Observed(ack) => Ok(ack),
             other => anyhow::bail!("unexpected response to observe: {other:?}"),
@@ -328,4 +339,566 @@ impl RemoteClient {
 fn report_wire_error(e: WireError) -> anyhow::Error {
     // The blanket std-error conversion keeps "{code}: {message}".
     anyhow::Error::from(e)
+}
+
+// ---- self-healing client -------------------------------------------------
+
+/// Knobs for [`ResilientClient`]. The defaults are conservative: retry
+/// only what is provably safe, back off exponentially, and trip the
+/// circuit breaker after a run of transport failures.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Attempts per logical call, including the first. At least 1.
+    pub max_attempts: u32,
+    /// First backoff; doubles per attempt (with seeded jitter) up to
+    /// [`max_backoff`](RetryPolicy::max_backoff).
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// Opt in to retrying mutating ops (`configure`/`train`/`observe`)
+    /// across transport failures. Safe only because every such op then
+    /// carries a [`Dedup`] marker — the server replays the cached ack
+    /// instead of applying twice. Off by default: against a pre-dedup
+    /// server the marker is ignored and a retry could double-apply.
+    pub retry_mutations: bool,
+    /// Consecutive transport failures that open the circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker fails fast before allowing one probe.
+    pub breaker_cooldown: Duration,
+    /// Seeds backoff jitter *and* the dedup session nonce, so a chaos
+    /// run replays bit-identically. Give every client a distinct seed:
+    /// two clients sharing a seed share a dedup session and would
+    /// swallow each other's mutations as replays.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+            retry_mutations: false,
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(1),
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// What the resilience layer has had to do, for reporting (loadgen puts
+/// these next to the server's `shed` counter in its bench JSON).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientCounters {
+    /// Attempts beyond the first (overload backoff + transport retries).
+    pub retries: u64,
+    /// Successful connections after the first one.
+    pub reconnects: u64,
+    /// Times the circuit breaker tripped open.
+    pub circuit_opens: u64,
+}
+
+/// A [`RemoteClient`] wrapped in a self-healing layer: exponential
+/// backoff with seeded jitter, automatic reconnect (with wire
+/// re-negotiation), retries, and a circuit breaker.
+///
+/// Retry rules, from safest to most opt-in:
+///
+/// - An `overloaded` rejection is always retried (until
+///   `max_attempts`): the server sheds *before* executing, so nothing
+///   was applied, and the connection stays open — only backoff is
+///   needed.
+/// - A transport failure (reset, timeout, torn frame) drops the
+///   connection and retries **idempotent** ops (`plan`/`stats`/
+///   `snapshot`) on a fresh one.
+/// - Mutating ops (`configure`/`train`/`observe`) are retried across
+///   transport failures only with
+///   [`retry_mutations`](RetryPolicy::retry_mutations): each logical op
+///   is then stamped once with a per-session `(nonce, seq)` and every
+///   resend carries the same stamp, so the server applies it exactly
+///   once however many times the wire delivers it.
+/// - `failure`/`reshard` never retry past a failed transport (the
+///   protocol has no dedup marker for them); a failed *connect* is
+///   still retried since nothing reached the wire.
+///
+/// After `breaker_threshold` consecutive transport failures the breaker
+/// opens: calls fail fast for `breaker_cooldown`, then one probe call
+/// is let through (half-open) — success closes the breaker, failure
+/// re-opens it.
+pub struct ResilientClient {
+    addr: String,
+    timeout: Option<Duration>,
+    max_wire_version: usize,
+    max_request_bytes: usize,
+    policy: RetryPolicy,
+    rng: Rng,
+    /// Dedup session id; one per client, derived from the policy seed.
+    nonce: String,
+    /// Last dedup sequence number handed out (stamping is pre-increment,
+    /// so the first logical op is seq 1).
+    next_seq: u64,
+    conn: Option<RemoteClient>,
+    ever_connected: bool,
+    consecutive_failures: u32,
+    /// `Some` while the breaker is open; a call at/after the instant is
+    /// the half-open probe.
+    open_until: Option<Instant>,
+    counters: ClientCounters,
+}
+
+impl ResilientClient {
+    /// No I/O happens here — the first call connects (and negotiates
+    /// the highest wire version the server grants, up to this build's).
+    pub fn new(addr: impl Into<String>, policy: RetryPolicy) -> ResilientClient {
+        let mut rng = Rng::new(policy.seed);
+        // Burn the first draw into the nonce so two clients with
+        // adjacent seeds don't produce near-identical jitter schedules.
+        let nonce = format!("rc-{:016x}", rng.next_u64());
+        ResilientClient {
+            addr: addr.into(),
+            timeout: None,
+            max_wire_version: WIRE_VERSION + 1,
+            max_request_bytes: DEFAULT_MAX_FRAME_BYTES,
+            policy,
+            rng,
+            nonce,
+            next_seq: 0,
+            conn: None,
+            ever_connected: false,
+            consecutive_failures: 0,
+            open_until: None,
+            counters: ClientCounters::default(),
+        }
+    }
+
+    /// Bound connect/read/write like
+    /// [`RemoteClient::connect_with_timeout`].
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+
+    /// Cap the wire version offered when (re)negotiating; 1 pins every
+    /// connection to newline JSON.
+    pub fn set_max_wire_version(&mut self, v: usize) {
+        self.max_wire_version = v.max(WIRE_VERSION);
+    }
+
+    /// See [`RemoteClient::set_max_request_bytes`]; applies to the
+    /// current connection and every reconnect.
+    pub fn set_max_request_bytes(&mut self, max: usize) {
+        self.max_request_bytes = max;
+        if let Some(rc) = self.conn.as_mut() {
+            rc.set_max_request_bytes(max);
+        }
+    }
+
+    pub fn counters(&self) -> ClientCounters {
+        self.counters
+    }
+
+    /// The dedup session nonce mutating retries are stamped with.
+    pub fn nonce(&self) -> &str {
+        &self.nonce
+    }
+
+    /// Wire of the live connection, if one is up.
+    pub fn wire(&self) -> Option<Wire> {
+        self.conn.as_ref().map(RemoteClient::wire)
+    }
+
+    pub fn configure(&mut self, task: Option<&str>, policy: PredictorPolicy) -> Result<()> {
+        let req =
+            Request::Configure { task: task.map(str::to_string), policy, dedup: None };
+        match self.exec(req)? {
+            Response::Configured { .. } => Ok(()),
+            other => anyhow::bail!("unexpected response to configure: {other:?}"),
+        }
+    }
+
+    pub fn train(&mut self, task: &str, history: &[Execution]) -> Result<u64> {
+        let req = Request::Train {
+            task: task.to_string(),
+            history: history.to_vec(),
+            dedup: None,
+        };
+        match self.exec(req)? {
+            Response::Trained { executions, .. } => Ok(executions),
+            other => anyhow::bail!("unexpected response to train: {other:?}"),
+        }
+    }
+
+    pub fn observe(&mut self, task: &str, execution: &Execution) -> Result<ObserveAck> {
+        let req = Request::Observe {
+            task: task.to_string(),
+            execution: execution.clone(),
+            dedup: None,
+        };
+        match self.exec(req)? {
+            Response::Observed(ack) => Ok(ack),
+            other => anyhow::bail!("unexpected response to observe: {other:?}"),
+        }
+    }
+
+    pub fn plan(&mut self, task: &str, input_mb: f64) -> Result<PlanOutcome> {
+        match self.exec(Request::Plan { task: task.to_string(), input_mb })? {
+            Response::Planned(out) => Ok(out),
+            other => anyhow::bail!("unexpected response to plan: {other:?}"),
+        }
+    }
+
+    pub fn report_failure(
+        &mut self,
+        task: Option<&str>,
+        plan: &StepPlan,
+        fail_time: f64,
+    ) -> Result<RetryOutcome> {
+        let req = Request::Failure {
+            task: task.map(str::to_string),
+            plan: plan.clone(),
+            fail_time,
+        };
+        match self.exec(req)? {
+            Response::Retry(r) => Ok(r),
+            other => anyhow::bail!("unexpected response to failure: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsSummary> {
+        match self.exec(Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => anyhow::bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+
+    pub fn snapshot(&mut self) -> Result<Json> {
+        match self.exec(Request::Snapshot)? {
+            Response::Snapshot { doc } => Ok(doc),
+            other => anyhow::bail!("unexpected response to snapshot: {other:?}"),
+        }
+    }
+
+    pub fn reshard(&mut self, shards: usize) -> Result<Vec<usize>> {
+        match self.exec(Request::Reshard { shards })? {
+            Response::Resharded { shard_ids } => Ok(shard_ids),
+            other => anyhow::bail!("unexpected response to reshard: {other:?}"),
+        }
+    }
+
+    /// Stamp a mutating request with this session's next dedup marker
+    /// (only when mutation retry is opted in). Returns whether the
+    /// request now carries one. Stamping happens once per *logical* op
+    /// — every retry of the op resends the identical stamp.
+    fn arm_dedup(&mut self, req: &mut Request) -> bool {
+        let slot = match req {
+            Request::Configure { dedup, .. }
+            | Request::Train { dedup, .. }
+            | Request::Observe { dedup, .. } => dedup,
+            _ => return false,
+        };
+        if !self.policy.retry_mutations {
+            return false;
+        }
+        self.next_seq += 1;
+        *slot = Some(Dedup { nonce: self.nonce.clone(), seq: self.next_seq });
+        true
+    }
+
+    /// The retry loop every typed method funnels through.
+    fn exec(&mut self, mut req: Request) -> Result<Response> {
+        let idempotent = matches!(
+            req,
+            Request::Plan { .. } | Request::Stats | Request::Snapshot | Request::Hello { .. }
+        );
+        let deduped = self.arm_dedup(&mut req);
+        let max_attempts = self.policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            if let Some(until) = self.open_until {
+                if Instant::now() < until {
+                    anyhow::bail!(
+                        "circuit breaker open ({} consecutive transport failures to {}); \
+                         failing fast until the cooldown elapses",
+                        self.consecutive_failures,
+                        self.addr
+                    );
+                }
+                // Cooldown elapsed: this attempt is the half-open probe.
+            }
+            // A connect failure means nothing reached the wire, so even
+            // a non-deduped mutation may retry it; `sent` tracks that.
+            let mut sent = false;
+            let outcome = self.ensure_conn().and_then(|()| {
+                sent = true;
+                self.conn.as_mut().expect("just connected").call_raw(&req)
+            });
+            match outcome {
+                Ok(Ok(resp)) => {
+                    self.consecutive_failures = 0;
+                    self.open_until = None;
+                    return Ok(resp);
+                }
+                Ok(Err(we)) if we.code == ErrorCode::Overloaded && attempt < max_attempts => {
+                    // Shed before execution — nothing applied, the
+                    // connection stays open; just back off and resend.
+                    self.consecutive_failures = 0;
+                    self.counters.retries += 1;
+                    self.backoff(attempt);
+                }
+                Ok(Err(we)) => {
+                    // A structured rejection proves the link works.
+                    self.consecutive_failures = 0;
+                    self.open_until = None;
+                    return Err(report_wire_error(we));
+                }
+                Err(e) => {
+                    self.conn = None;
+                    self.consecutive_failures += 1;
+                    if self.consecutive_failures >= self.policy.breaker_threshold.max(1) {
+                        // Reaching an attempt means the breaker was
+                        // closed or half-open — either way this is a
+                        // fresh opening.
+                        self.open_until =
+                            Some(Instant::now() + self.policy.breaker_cooldown);
+                        self.counters.circuit_opens += 1;
+                    }
+                    let retry_safe = idempotent || deduped || !sent;
+                    if retry_safe && attempt < max_attempts {
+                        self.counters.retries += 1;
+                        self.backoff(attempt);
+                    } else {
+                        return Err(e.context(format!(
+                            "{} failed after {attempt} attempt(s)",
+                            req.op()
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Connect + negotiate if no connection is up. Reconnects count.
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut rc = match self.timeout {
+            Some(t) => RemoteClient::connect_with_timeout(&self.addr, t)?,
+            None => RemoteClient::connect(&self.addr)?,
+        };
+        rc.set_max_request_bytes(self.max_request_bytes);
+        // Re-negotiation on every reconnect: the server may have been
+        // replaced by one speaking a different wire since last time.
+        rc.negotiate(self.max_wire_version)?;
+        if self.ever_connected {
+            self.counters.reconnects += 1;
+        }
+        self.ever_connected = true;
+        self.conn = Some(rc);
+        Ok(())
+    }
+
+    /// Exponential backoff with seeded jitter in [0.5x, 1x) of the
+    /// capped exponential step.
+    fn backoff(&mut self, attempt: u32) {
+        let shift = (attempt - 1).min(16);
+        let step = self
+            .policy
+            .base_backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.policy.max_backoff);
+        let jittered = step.mul_f64(0.5 + 0.5 * self.rng.f64());
+        if !jittered.is_zero() {
+            std::thread::sleep(jittered);
+        }
+    }
+
+    /// Test hook: kill the live socket under the client so the next
+    /// call sees a transport failure and must heal.
+    #[cfg(test)]
+    fn sever(&mut self) {
+        if let Some(rc) = self.conn.as_ref() {
+            rc.writer.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::coordinator::service::{Coordinator, CoordinatorConfig};
+    use crate::coordinator::BackendSpec;
+
+    fn start_server() -> (Coordinator, Server) {
+        let coord =
+            Coordinator::start(CoordinatorConfig::default(), BackendSpec::Native).unwrap();
+        let server = Server::start_with_config(
+            "127.0.0.1:0",
+            coord.client(),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        (coord, server)
+    }
+
+    fn fast_policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(0),
+            breaker_threshold: 10,
+            seed: 77,
+            ..Default::default()
+        }
+    }
+
+    fn exec(task: &str) -> Execution {
+        Execution::new(task, 100.0, 1.0, vec![1.0, 2.0, 3.0])
+    }
+
+    #[test]
+    fn dedup_stamps_only_when_opted_in() {
+        let mut off = ResilientClient::new("127.0.0.1:1", fast_policy());
+        let mut req = Request::Observe {
+            task: "t".into(),
+            execution: exec("t"),
+            dedup: None,
+        };
+        assert!(!off.arm_dedup(&mut req));
+        assert!(matches!(&req, Request::Observe { dedup: None, .. }));
+
+        let mut on = ResilientClient::new(
+            "127.0.0.1:1",
+            RetryPolicy { retry_mutations: true, ..fast_policy() },
+        );
+        assert!(on.arm_dedup(&mut req));
+        let first = match &req {
+            Request::Observe { dedup: Some(d), .. } => d.clone(),
+            other => panic!("missing stamp: {other:?}"),
+        };
+        assert_eq!((first.nonce.as_str(), first.seq), (on.nonce(), 1));
+        // The next logical op gets the next seq under the same nonce.
+        assert!(on.arm_dedup(&mut req));
+        match &req {
+            Request::Observe { dedup: Some(d), .. } => {
+                assert_eq!((d.nonce.as_str(), d.seq), (on.nonce(), 2));
+            }
+            other => panic!("missing stamp: {other:?}"),
+        }
+        // Plan never carries a stamp regardless of policy.
+        let mut plan = Request::Plan { task: "t".into(), input_mb: 1.0 };
+        assert!(!on.arm_dedup(&mut plan));
+    }
+
+    #[test]
+    fn reconnects_and_retries_idempotent_ops_after_a_dead_socket() {
+        let (_coord, mut server) = start_server();
+        let mut rc = ResilientClient::new(server.addr().to_string(), fast_policy());
+        rc.observe("t", &exec("t")).unwrap();
+        assert_eq!(rc.counters(), ClientCounters::default());
+
+        rc.sever();
+        // plan is idempotent: the dead socket costs a retry + reconnect,
+        // not an error.
+        let out = rc.plan("t", 100.0).unwrap();
+        assert!(!out.plan.peaks.is_empty());
+        let c = rc.counters();
+        assert!(c.retries >= 1, "{c:?}");
+        assert_eq!(c.reconnects, 1, "{c:?}");
+        assert_eq!(c.circuit_opens, 0, "{c:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn dead_socket_fails_a_mutating_op_unless_opted_in() {
+        let (_coord, mut server) = start_server();
+        let mut rc = ResilientClient::new(server.addr().to_string(), fast_policy());
+        rc.observe("t", &exec("t")).unwrap();
+        rc.sever();
+        // Default policy: the op was (partially) on the wire and carries
+        // no dedup stamp, so retrying could double-apply — refuse.
+        let err = rc.observe("t", &exec("t")).unwrap_err();
+        assert!(err.to_string().contains("observe failed after 1 attempt"), "{err}");
+        // The client still healed for the next call.
+        rc.stats().unwrap();
+        assert_eq!(rc.counters().reconnects, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn opted_in_mutations_heal_with_a_dedup_stamp() {
+        let (_coord, mut server) = start_server();
+        let mut rc = ResilientClient::new(
+            server.addr().to_string(),
+            RetryPolicy { retry_mutations: true, ..fast_policy() },
+        );
+        rc.observe("t", &exec("t")).unwrap();
+        rc.sever();
+        let ack = rc.observe("t", &exec("t")).unwrap();
+        assert_eq!(ack.executions, 2, "both logical observes applied");
+        let stats = rc.stats().unwrap();
+        assert_eq!(stats.observations, 2, "healed retry applied exactly once");
+        assert!(rc.counters().reconnects >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn circuit_breaker_opens_then_fails_fast_and_recovers_via_probe() {
+        // A port with nothing listening: every connect is refused.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut rc = ResilientClient::new(
+            addr,
+            RetryPolicy {
+                max_attempts: 1,
+                base_backoff: Duration::from_millis(0),
+                breaker_threshold: 2,
+                breaker_cooldown: Duration::from_millis(30),
+                seed: 7,
+                ..Default::default()
+            },
+        );
+        assert!(rc.plan("t", 1.0).is_err());
+        assert_eq!(rc.counters().circuit_opens, 0);
+        assert!(rc.plan("t", 1.0).is_err());
+        assert_eq!(rc.counters().circuit_opens, 1, "threshold reached");
+        // Open breaker: fails fast without touching the socket.
+        let err = rc.plan("t", 1.0).unwrap_err();
+        assert!(err.to_string().contains("circuit breaker open"), "{err}");
+        // After the cooldown the probe goes through — still refused, so
+        // the breaker re-opens (a second distinct opening).
+        std::thread::sleep(Duration::from_millis(40));
+        let err = rc.plan("t", 1.0).unwrap_err();
+        assert!(!err.to_string().contains("circuit breaker open"), "{err}");
+        assert_eq!(rc.counters().circuit_opens, 2);
+    }
+
+    #[test]
+    fn breaker_closes_after_a_successful_probe() {
+        let (_coord, mut server) = start_server();
+        let addr = server.addr().to_string();
+        let mut rc = ResilientClient::new(
+            addr,
+            RetryPolicy {
+                max_attempts: 1,
+                base_backoff: Duration::from_millis(0),
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_millis(10),
+                seed: 9,
+                ..Default::default()
+            },
+        );
+        rc.plan("t", 1.0).unwrap();
+        // One dead socket trips the 1-failure threshold.
+        rc.sever();
+        assert!(rc.plan("t", 1.0).is_err());
+        assert_eq!(rc.counters().circuit_opens, 1);
+        std::thread::sleep(Duration::from_millis(20));
+        // Probe succeeds → breaker closes, normal service resumes.
+        rc.plan("t", 1.0).unwrap();
+        rc.stats().unwrap();
+        assert_eq!(rc.counters().circuit_opens, 1);
+        server.stop();
+    }
 }

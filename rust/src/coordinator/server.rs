@@ -58,13 +58,15 @@
 
 use std::io::{BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::protocol::{ErrorCode, Response, WireError};
+use crate::coordinator::faults::FaultPlane;
+use crate::coordinator::protocol::{ErrorCode, Request, Response, WireError};
 use crate::coordinator::service::{
     dispatch_tapped, Client, ConnCounters, Coordinator, CoordinatorConfig, DispatchTap,
     Dispatched,
@@ -114,6 +116,20 @@ pub struct ServerConfig {
     /// Observer for the dispatch seam (`repro record` installs one to
     /// capture session traces); `None` costs nothing.
     pub tap: Option<Arc<dyn DispatchTap>>,
+    /// Event-loop front end only: maximum requests queued for the
+    /// dispatch workers before new requests are shed with a structured
+    /// `overloaded` error (the connection stays open). `0` (the
+    /// default) keeps the queue unbounded, matching the pre-overload
+    /// behavior. The threaded front end has no dispatch queue — each
+    /// connection's thread is its own backpressure — so it ignores this.
+    pub max_queue_depth: usize,
+    /// Event-loop front end only: maximum in-flight (dispatched but not
+    /// yet flushed) requests per connection; past it new requests on
+    /// that connection are shed with `overloaded`. `0` = unbounded.
+    pub max_inflight: usize,
+    /// Deterministic fault injection plane (`repro serve --fault-spec`);
+    /// `None` injects nothing and costs nothing.
+    pub faults: Option<Arc<FaultPlane>>,
 }
 
 impl Default for ServerConfig {
@@ -125,6 +141,9 @@ impl Default for ServerConfig {
             dispatch_threads: 0,
             max_wbuf_bytes: DEFAULT_MAX_WBUF_BYTES,
             tap: None,
+            max_queue_depth: 0,
+            max_inflight: 0,
+            faults: None,
         }
     }
 }
@@ -138,6 +157,9 @@ impl std::fmt::Debug for ServerConfig {
             .field("dispatch_threads", &self.dispatch_threads)
             .field("max_wbuf_bytes", &self.max_wbuf_bytes)
             .field("tap", &self.tap.as_ref().map(|_| "installed"))
+            .field("max_queue_depth", &self.max_queue_depth)
+            .field("max_inflight", &self.max_inflight)
+            .field("faults", &self.faults)
             .finish()
     }
 }
@@ -152,6 +174,32 @@ pub(crate) fn encode_response_or_error(wire: Wire, resp: &Response) -> Vec<u8> {
         .unwrap_or_else(|e| encode_error(wire, &e))
 }
 
+/// [`dispatch_tapped`] hardened for a server front end: a panic inside
+/// the request handler (a buggy policy, a broken invariant) is contained
+/// to a structured `internal` error response instead of unwinding
+/// through the connection handler or dispatch worker — one poisonous
+/// request must not take the server (or its shared locks) down with it.
+/// Also the injection point for the `stall` fault (the service seam).
+/// Both front ends funnel through here, keeping their semantics aligned.
+pub(crate) fn dispatch_contained(
+    req: Request,
+    client: &Client,
+    counters: &ConnCounters,
+    tap: Option<&Arc<dyn DispatchTap>>,
+    faults: Option<&Arc<FaultPlane>>,
+) -> Dispatched {
+    if let Some(f) = faults {
+        f.maybe_stall();
+    }
+    std::panic::catch_unwind(AssertUnwindSafe(|| dispatch_tapped(req, client, counters, tap)))
+    .unwrap_or_else(|_| {
+        Dispatched::Error(WireError::new(
+            ErrorCode::Internal,
+            "request handler panicked; the request may not have been applied".to_string(),
+        ))
+    })
+}
+
 /// A running TCP front end over a coordinator `Client`.
 pub struct Server {
     addr: std::net::SocketAddr,
@@ -161,6 +209,7 @@ pub struct Server {
     /// with `shutdown`) and the handler thread (so `stop()` can join
     /// it). The accept loop prunes finished entries as it goes.
     conns: Arc<Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>>,
+    counters: Arc<ConnCounters>,
 }
 
 impl Server {
@@ -178,6 +227,7 @@ impl Server {
         let conns: Arc<Mutex<Vec<(TcpStream, std::thread::JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
         let counters = Arc::new(ConnCounters::default());
+        let counters_ret = counters.clone();
         let cfg = Arc::new(cfg);
         let stop2 = stop.clone();
         let conns2 = conns.clone();
@@ -228,7 +278,13 @@ impl Server {
                     guard.push((tracked, h));
                 }
             })?;
-        Ok(Server { addr: local, stop, accept_handle: Some(handle), conns })
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_handle: Some(handle),
+            conns,
+            counters: counters_ret,
+        })
     }
 
     /// Build a coordinator pool and a server over it in one call. Backend
@@ -246,6 +302,11 @@ impl Server {
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// This front end's connection counters (shared with every handler).
+    pub fn counters(&self) -> Arc<ConnCounters> {
+        self.counters.clone()
     }
 
     /// Stop accepting, then unblock and join every live connection
@@ -325,7 +386,13 @@ fn handle_conn(
             FrameRead::Frame(payload) => match decode_request(wire, &payload) {
                 Ok(None) => continue, // blank v1 line: no reply
                 Ok(Some(req)) => {
-                    match dispatch_tapped(req, &client, counters, cfg.tap.as_ref()) {
+                    match dispatch_contained(
+                        req,
+                        &client,
+                        counters,
+                        cfg.tap.as_ref(),
+                        cfg.faults.as_ref(),
+                    ) {
                         Dispatched::Reply(resp) => {
                             writer.write_all(&encode_response_or_error(wire, &resp))?;
                         }
@@ -776,6 +843,41 @@ mod tests {
         let stats = coord.client().stats();
         assert_eq!(stats.requests, 80);
         assert!(stats.batches <= 80);
+    }
+
+    /// Tap that panics on a chosen task name — stands in for any buggy
+    /// handler-side code (a policy, a recorder) blowing up mid-request.
+    struct PanickingTap;
+    impl DispatchTap for PanickingTap {
+        fn observe(&self, req: &Request, _out: &Dispatched) {
+            if let Request::Plan { task, .. } = req {
+                if task == "boom" {
+                    panic!("tap exploded");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handler_panic_is_contained_to_an_internal_error() {
+        let cfg = ServerConfig { tap: Some(Arc::new(PanickingTap)), ..Default::default() };
+        let (_coord, server) = start_cfg(cfg);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"boom","input_mb":10}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            r.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("internal")
+        );
+        // The same connection keeps serving — and so does the shared
+        // coordinator state the panicking thread touched.
+        let r = roundtrip(&mut s, r#"{"op":"plan","task":"fine","input_mb":10}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let r = roundtrip(&mut s, r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        // Both plans reached the coordinator (the tap panics after
+        // dispatch); the panic cost nothing but its own request's reply.
+        assert_eq!(r.get("requests").and_then(Json::as_usize), Some(2));
     }
 
     #[test]

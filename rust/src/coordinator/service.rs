@@ -43,15 +43,15 @@
 //! before the worker acts on it, so there is no window that serves a
 //! regressed plan.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
 use crate::coordinator::protocol::{
-    negotiate_version, ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary,
+    negotiate_version, Dedup, ErrorCode, ObserveAck, Request, Response, ServerInfo, StatsSummary,
     WireError, OPS,
 };
 use crate::coordinator::ring::HashRing;
@@ -62,6 +62,7 @@ use crate::coordinator::{
 use crate::segments::StepPlan;
 use crate::trace::Execution;
 use crate::util::json::Json;
+use crate::util::sync::{lock_recover, read_recover, write_recover};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -376,6 +377,10 @@ pub struct Coordinator {
     pool: Arc<RwLock<Pool>>,
     /// Round-robin cursor for task-less messages (`Failure`).
     rr: Arc<AtomicUsize>,
+    /// Exactly-once cache for retried mutating requests (see
+    /// [`DedupTable`]). Shared by every client of this coordinator, so a
+    /// retry landing on a different connection still deduplicates.
+    dedup: Arc<Mutex<DedupTable>>,
 }
 
 /// Client endpoint (clonable, thread-safe). Routing reads the shared
@@ -384,6 +389,7 @@ pub struct Coordinator {
 pub struct Client {
     pool: Arc<RwLock<Pool>>,
     rr: Arc<AtomicUsize>,
+    dedup: Arc<Mutex<DedupTable>>,
 }
 
 struct Pending {
@@ -467,16 +473,17 @@ impl Coordinator {
                 retired: ServiceStats::default(),
             })),
             rr: Arc::new(AtomicUsize::new(0)),
+            dedup: Arc::new(Mutex::new(DedupTable::default())),
         })
     }
 
     pub fn client(&self) -> Client {
-        Client { pool: self.pool.clone(), rr: self.rr.clone() }
+        Client { pool: self.pool.clone(), rr: self.rr.clone(), dedup: self.dedup.clone() }
     }
 
     /// Live shard count (changes under resharding).
     pub fn shards(&self) -> usize {
-        self.pool.read().expect("coordinator pool poisoned").ring.len()
+        read_recover(&self.pool).ring.len()
     }
 }
 
@@ -484,10 +491,7 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         let mut handles = Vec::new();
         {
-            let mut pool = match self.pool.write() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
+            let mut pool = write_recover(&self.pool);
             let ids: Vec<usize> = pool.shards.keys().copied().collect();
             for id in ids {
                 if let Some(mut s) = pool.shards.remove(&id) {
@@ -507,11 +511,13 @@ impl Drop for Coordinator {
 
 impl Client {
     fn read(&self) -> std::sync::RwLockReadGuard<'_, Pool> {
-        self.pool.read().expect("coordinator pool poisoned")
+        // Poison-recovering: a panicking dispatch thread must not wedge
+        // every other connection's routing (see `util::sync`).
+        read_recover(&self.pool)
     }
 
     fn write(&self) -> std::sync::RwLockWriteGuard<'_, Pool> {
-        self.pool.write().expect("coordinator pool poisoned")
+        write_recover(&self.pool)
     }
 
     /// Live shard count.
@@ -1292,6 +1298,79 @@ fn worker(cfg: CoordinatorConfig, backend: crate::coordinator::Backend, rx: mpsc
 // ends own only framing and connection lifecycle; everything from
 // version negotiation to shard routing lives here.
 
+/// How many distinct retry sessions (nonces) the dedup cache retains.
+/// Beyond the cap the oldest nonce is evicted FIFO — a client that went
+/// silent for 1024 sessions' worth of traffic has long since given up on
+/// its retry.
+pub const DEDUP_NONCE_CAP: usize = 1024;
+
+struct DedupEntry {
+    /// Highest sequence number applied under this nonce.
+    seq: u64,
+    /// The response that sequence number produced, replayed verbatim to
+    /// retries.
+    cached: Response,
+}
+
+/// Server-side exactly-once cache for retried mutating requests.
+///
+/// A self-healing client that retries `configure`/`train`/`observe`
+/// attaches a [`Dedup`] marker: a per-session `nonce` plus a sequence
+/// number that increments per *logical* operation (not per attempt). The
+/// table keeps, per nonce, the last applied sequence and its response:
+/// a replay of the same `(nonce, seq)` — e.g. the ack was lost to a
+/// severed connection — returns the cached response without touching the
+/// model store, so the operation applies exactly once; a `seq` below the
+/// last applied is a protocol error (`invalid-field`), since the client
+/// must retry in order.
+#[derive(Default)]
+pub struct DedupTable {
+    entries: BTreeMap<String, DedupEntry>,
+    /// Insertion order of nonces, for FIFO eviction at the cap.
+    order: VecDeque<String>,
+}
+
+impl DedupTable {
+    /// Serve one deduplicated operation: replay the cached response for
+    /// a duplicate, reject a stale sequence, otherwise apply and cache.
+    /// The table lock is held across `apply`, so two racing attempts at
+    /// the same `(nonce, seq)` cannot both reach the model store.
+    fn serve(&mut self, d: &Dedup, apply: impl FnOnce() -> Response) -> Result<Response, WireError> {
+        if let Some(entry) = self.entries.get(&d.nonce) {
+            if d.seq == entry.seq {
+                return Ok(entry.cached.clone());
+            }
+            if d.seq < entry.seq {
+                return Err(WireError::new(
+                    ErrorCode::InvalidField,
+                    format!(
+                        "'seq' {} is stale for nonce '{}' (last applied {})",
+                        d.seq, d.nonce, entry.seq
+                    ),
+                ));
+            }
+        }
+        let resp = apply();
+        match self.entries.get_mut(&d.nonce) {
+            Some(entry) => {
+                entry.seq = d.seq;
+                entry.cached = resp.clone();
+            }
+            None => {
+                if self.entries.len() >= DEDUP_NONCE_CAP {
+                    if let Some(oldest) = self.order.pop_front() {
+                        self.entries.remove(&oldest);
+                    }
+                }
+                self.order.push_back(d.nonce.clone());
+                self.entries
+                    .insert(d.nonce.clone(), DedupEntry { seq: d.seq, cached: resp.clone() });
+            }
+        }
+        Ok(resp)
+    }
+}
+
 /// Connection counters owned by a server front end. The shard workers
 /// know nothing about sockets, so refusals and idle-timeout closes are
 /// counted at the front end and folded into `stats` replies by
@@ -1306,6 +1385,26 @@ pub struct ConnCounters {
     /// exceeded `max_wbuf_bytes` (event-loop front end; a slow or
     /// non-reading pipelining peer).
     pub overflows: AtomicU64,
+    /// Requests rejected with `overloaded` by the admission control
+    /// (dispatch queue at `max_queue_depth`, or a connection at its
+    /// in-flight cap). The connection stays open.
+    pub shed: AtomicU64,
+    /// High-water mark of the dispatch queue depth.
+    pub queue_depth_max: AtomicU64,
+    /// Graceful drains completed by `stop()`.
+    pub drains: AtomicU64,
+}
+
+impl ConnCounters {
+    /// Fold a queue-depth observation into the high-water mark
+    /// (lock-free atomic max).
+    pub fn note_queue_depth(&self, depth: u64) {
+        let _ = self
+            .queue_depth_max
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                (depth > cur).then_some(depth)
+            });
+    }
 }
 
 /// Outcome of dispatching one request.
@@ -1341,19 +1440,19 @@ pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispa
                 ),
             }
         }
-        Request::Configure { task, policy } => {
+        Request::Configure { task, policy, dedup } => with_dedup(client, dedup, || {
             client.configure(task.as_deref(), policy);
-            Dispatched::Reply(Response::Configured { task, policy })
-        }
-        Request::Train { task, history } => {
+            Response::Configured { task, policy }
+        }),
+        Request::Train { task, history, dedup } => with_dedup(client, dedup, || {
             let executions = history.len() as u64;
             client.train(&task, history);
-            Dispatched::Reply(Response::Trained { task, executions })
-        }
-        Request::Observe { task, execution } => {
+            Response::Trained { task, executions }
+        }),
+        Request::Observe { task, execution, dedup } => with_dedup(client, dedup, || {
             let (executions, predictor) = client.observe_detailed(&task, execution);
-            Dispatched::Reply(Response::Observed(ObserveAck { task, executions, predictor }))
-        }
+            Response::Observed(ObserveAck { task, executions, predictor })
+        }),
         Request::Plan { task, input_mb } => {
             Dispatched::Reply(Response::Planned(client.plan_detailed(&task, input_mb)))
         }
@@ -1373,6 +1472,9 @@ pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispa
                 conns_refused: s.conns_refused + counters.refused.load(Ordering::Relaxed),
                 conn_timeouts: s.conn_timeouts + counters.timeouts.load(Ordering::Relaxed),
                 conns_overflowed: counters.overflows.load(Ordering::Relaxed),
+                shed: counters.shed.load(Ordering::Relaxed),
+                queue_depth_max: counters.queue_depth_max.load(Ordering::Relaxed),
+                drains: counters.drains.load(Ordering::Relaxed),
                 latency_p50_us: s.latency_percentile_us(50.0),
                 latency_p99_us: s.latency_percentile_us(99.0),
             }))
@@ -1394,6 +1496,23 @@ pub fn dispatch(req: Request, client: &Client, counters: &ConnCounters) -> Dispa
                 }
             }
         }
+    }
+}
+
+/// Route one mutating operation through the coordinator's dedup table
+/// when the request carries a [`Dedup`] marker; apply it directly when
+/// it does not (the common, non-retrying case pays nothing).
+fn with_dedup(
+    client: &Client,
+    dedup: Option<Dedup>,
+    apply: impl FnOnce() -> Response,
+) -> Dispatched {
+    match dedup {
+        None => Dispatched::Reply(apply()),
+        Some(d) => match lock_recover(&client.dedup).serve(&d, apply) {
+            Ok(resp) => Dispatched::Reply(resp),
+            Err(e) => Dispatched::Error(e),
+        },
     }
 }
 
@@ -2256,5 +2375,97 @@ mod tests {
             assert_eq!(out.fallback_reason, None, "writer-{w}");
             assert_eq!(out.model_version, per_writer);
         }
+    }
+
+    #[test]
+    fn deduped_observe_applies_exactly_once() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { k: 2, ..Default::default() },
+            BackendSpec::Native,
+        )
+        .unwrap();
+        let client = coord.client();
+        let counters = ConnCounters::default();
+        let mut rng = Rng::new(31);
+        let exec = two_phase_exec(5000.0, &mut rng);
+        let req = Request::Observe {
+            task: "bwa".into(),
+            execution: exec,
+            dedup: Some(Dedup { nonce: "sess-a".into(), seq: 1 }),
+        };
+        // First attempt applies; the replayed attempt (lost ack) must
+        // return the identical cached response without re-folding.
+        let first = match dispatch(req.clone(), &client, &counters) {
+            Dispatched::Reply(r) => r,
+            _ => panic!("expected reply"),
+        };
+        let replay = match dispatch(req, &client, &counters) {
+            Dispatched::Reply(r) => r,
+            _ => panic!("expected reply"),
+        };
+        assert_eq!(first, replay);
+        assert_eq!(client.stats().observations, 1, "replay must not re-apply");
+        match first {
+            Response::Observed(ack) => assert_eq!(ack.executions, 1),
+            other => panic!("unexpected response {other:?}"),
+        }
+        // The next logical op under the same nonce applies normally.
+        let next = Request::Observe {
+            task: "bwa".into(),
+            execution: two_phase_exec(6000.0, &mut rng),
+            dedup: Some(Dedup { nonce: "sess-a".into(), seq: 2 }),
+        };
+        match dispatch(next, &client, &counters) {
+            Dispatched::Reply(Response::Observed(ack)) => assert_eq!(ack.executions, 2),
+            _ => panic!("seq 2 must apply normally"),
+        }
+        assert_eq!(client.stats().observations, 2);
+        // A stale sequence is a structured protocol error, not a re-apply.
+        let stale = Request::Observe {
+            task: "bwa".into(),
+            execution: two_phase_exec(7000.0, &mut rng),
+            dedup: Some(Dedup { nonce: "sess-a".into(), seq: 1 }),
+        };
+        match dispatch(stale, &client, &counters) {
+            Dispatched::Error(e) => assert_eq!(e.code, ErrorCode::InvalidField),
+            _ => panic!("stale seq must be rejected"),
+        }
+        assert_eq!(client.stats().observations, 2);
+    }
+
+    #[test]
+    fn dedup_table_evicts_oldest_nonce_at_cap() {
+        let mut table = DedupTable::default();
+        let mut applies = 0u64;
+        let apply = |t: &mut DedupTable, nonce: &str, seq: u64, applies: &mut u64| {
+            t.serve(&Dedup { nonce: nonce.into(), seq }, || {
+                *applies += 1;
+                Response::Trained { task: nonce.into(), executions: seq }
+            })
+            .unwrap()
+        };
+        for i in 0..DEDUP_NONCE_CAP {
+            apply(&mut table, &format!("n{i}"), 1, &mut applies);
+        }
+        assert_eq!(applies, DEDUP_NONCE_CAP as u64);
+        // A replay inside the window is still served from cache...
+        apply(&mut table, &format!("n{}", DEDUP_NONCE_CAP - 1), 1, &mut applies);
+        assert_eq!(applies, DEDUP_NONCE_CAP as u64);
+        // ...a new nonce evicts the oldest (n0), whose replay re-applies.
+        apply(&mut table, "fresh", 1, &mut applies);
+        assert_eq!(applies, DEDUP_NONCE_CAP as u64 + 1);
+        apply(&mut table, "n0", 1, &mut applies);
+        assert_eq!(applies, DEDUP_NONCE_CAP as u64 + 2);
+        assert!(table.entries.len() <= DEDUP_NONCE_CAP);
+        assert_eq!(table.entries.len(), table.order.len());
+    }
+
+    #[test]
+    fn queue_depth_high_water_mark_is_a_max() {
+        let c = ConnCounters::default();
+        for depth in [3, 9, 4, 9, 1] {
+            c.note_queue_depth(depth);
+        }
+        assert_eq!(c.queue_depth_max.load(Ordering::Relaxed), 9);
     }
 }

@@ -36,6 +36,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::coordinator::faults::FaultSpec;
 use crate::coordinator::protocol::{ErrorCode, Request, Response, WireError};
 use crate::coordinator::remote::RemoteClient;
 use crate::coordinator::server::{Server, ServerConfig};
@@ -386,7 +387,11 @@ fn one_exec(task: &str, input: f64) -> Execution {
 }
 
 fn call_train(task: &str, n: usize) -> Action {
-    Action::Call(Request::Train { task: task.to_string(), history: history(task, n) })
+    Action::Call(Request::Train {
+        task: task.to_string(),
+        history: history(task, n),
+        dedup: None,
+    })
 }
 
 fn call_plan(task: &str, input_mb: f64) -> Action {
@@ -403,6 +408,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
             s.push(Action::Call(Request::Configure {
                 task: None,
                 policy: PredictorPolicy::KsPlus,
+                dedup: None,
             }));
             for policy in [
                 PredictorPolicy::KsPlus,
@@ -415,6 +421,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
                 s.push(Action::Call(Request::Configure {
                     task: Some(task.clone()),
                     policy,
+                    dedup: None,
                 }));
                 s.push(call_train(&task, 12));
                 for input in [1500.0, 4096.5, 9000.25] {
@@ -423,6 +430,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
                 s.push(Action::Call(Request::Observe {
                     task: task.clone(),
                     execution: one_exec(&task, 2200.0),
+                    dedup: None,
                 }));
                 s.push(call_plan(&task, 4096.5));
             }
@@ -474,6 +482,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
             s.push(Action::Call(Request::Configure {
                 task: Some("op-task".to_string()),
                 policy: PredictorPolicy::KsPlus,
+                dedup: None,
             }));
             s.push(call_train("op-task", 10));
             s.push(call_plan("op-task", 3000.0));
@@ -500,6 +509,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
                 s.push(Action::Call(Request::Configure {
                     task: Some(task.to_string()),
                     policy,
+                    dedup: None,
                 }));
                 s.push(call_train(task, 10));
                 s.push(call_plan(task, 1800.0));
@@ -510,6 +520,7 @@ fn case_script(case: &str) -> Result<Vec<Action>> {
                 s.push(Action::Call(Request::Observe {
                     task: task.to_string(),
                     execution: one_exec(task, 2600.0),
+                    dedup: None,
                 }));
                 s.push(call_plan(task, 1800.0));
                 s.push(call_plan(task, 7300.5));
@@ -547,12 +558,16 @@ impl CaseServer {
 }
 
 /// Start a fresh coordinator + server for a case. `shards` overrides
-/// the recorded shard count; `tap` is installed at the dispatch seam.
+/// the recorded shard count; `tap` is installed at the dispatch seam;
+/// `fault_seed` arms the *benign* fault plane (short reads/writes and
+/// dispatch stalls — nothing that alters response bytes), under which
+/// every transcript must stay bit-identical to a fault-free run.
 pub fn start_case_server(
     cfg: &CaseConfig,
     threaded: bool,
     shards: Option<usize>,
     tap: Option<Arc<dyn DispatchTap>>,
+    fault_seed: Option<u64>,
 ) -> Result<CaseServer> {
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -567,6 +582,7 @@ pub fn start_case_server(
         max_conns: cfg.max_conns,
         max_frame_bytes: cfg.max_frame_bytes,
         tap,
+        faults: fault_seed.map(|seed| FaultSpec::benign(seed).plane()),
         ..Default::default()
     };
     let front = if threaded {
@@ -642,6 +658,7 @@ pub fn record_case(case: &str) -> Result<SessionTrace> {
         true,
         None,
         Some(Arc::clone(&tap) as Arc<dyn DispatchTap>),
+        None,
     )?;
     let addr = server.addr();
     let mut rc = RemoteClient::connect_with_timeout(addr, TIMEOUT)?;
@@ -755,7 +772,22 @@ pub fn replay_trace(
     wire: Wire,
     shards: Option<usize>,
 ) -> Result<Vec<String>> {
-    let server = start_case_server(&trace.config, threaded, shards, None)?;
+    replay_trace_faulted(trace, threaded, wire, shards, None)
+}
+
+/// [`replay_trace`] with the benign fault plane armed from a seed: the
+/// server's reads, writes, and dispatch scheduling are perturbed
+/// deterministically while the transcript must not move a bit. A
+/// divergence under `--fault-seed` is a partial-frame reassembly or
+/// ordering bug, not a model bug.
+pub fn replay_trace_faulted(
+    trace: &SessionTrace,
+    threaded: bool,
+    wire: Wire,
+    shards: Option<usize>,
+    fault_seed: Option<u64>,
+) -> Result<Vec<String>> {
+    let server = start_case_server(&trace.config, threaded, shards, None, fault_seed)?;
     let mut rc = RemoteClient::connect_with_timeout(server.addr(), TIMEOUT)?;
     rc.set_read_timeout(Some(TIMEOUT))?;
     let info = rc.negotiate(wire.version()).context("negotiating the session wire")?;

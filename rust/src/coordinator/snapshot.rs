@@ -27,10 +27,12 @@
 //! confidence.
 
 use std::fs;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::faults::FaultPlane;
 use super::protocol::{execution_from_json, execution_to_json};
 use super::{AltModel, ModelStore, PredictorPolicy, TaskModels, ALT_HISTORY_CAP};
 use crate::predictor::regression::OlsStats;
@@ -381,31 +383,99 @@ pub fn snapshot_path(dir: &Path) -> PathBuf {
     dir.join(SNAPSHOT_FILE)
 }
 
-/// Write a snapshot document atomically (`.tmp` + rename), creating the
-/// directory if needed. A crash mid-write never corrupts the previous
-/// snapshot. Returns the final path.
+/// Write a snapshot document atomically and durably: `.tmp` + fsync +
+/// rename (+ a directory fsync on unix, so the rename itself survives a
+/// power cut), creating the directory if needed. A crash mid-write never
+/// corrupts the previous snapshot. Returns the final path.
 pub fn write_snapshot_file(dir: &Path, doc: &Json) -> Result<PathBuf> {
+    write_snapshot_file_faulted(dir, doc, None)
+}
+
+/// [`write_snapshot_file`] with the snapshot-seam fault hook. A firing
+/// torn-write fault simulates the post-crash state of a *non-atomic*
+/// writer — a truncated prefix in the final path — and reports the write
+/// as failed; [`load_snapshot_file`] must then classify that debris as
+/// `Corrupt` rather than wedging startup.
+pub fn write_snapshot_file_faulted(
+    dir: &Path,
+    doc: &Json,
+    faults: Option<&FaultPlane>,
+) -> Result<PathBuf> {
     fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     let path = snapshot_path(dir);
     let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
-    fs::write(&tmp, format!("{doc}\n")).with_context(|| format!("writing {}", tmp.display()))?;
+    let bytes = format!("{doc}\n").into_bytes();
+    if let Some(f) = faults {
+        if let Some(keep) = f.tear_snapshot(bytes.len()) {
+            fs::write(&path, &bytes[..keep])
+                .with_context(|| format!("writing {}", path.display()))?;
+            bail!(
+                "injected torn snapshot write: {keep} of {} bytes reached {}",
+                bytes.len(),
+                path.display()
+            );
+        }
+    }
+    let mut file =
+        fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    file.write_all(&bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    // Data must be durable *before* the rename publishes the file, or a
+    // crash can leave a renamed-but-empty snapshot — exactly the torn
+    // state the fault above injects.
+    file.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(file);
     fs::rename(&tmp, &path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    #[cfg(unix)]
+    if let Ok(d) = fs::File::open(dir) {
+        // Best effort: persist the rename's directory entry too.
+        d.sync_all().ok();
+    }
     Ok(path)
 }
 
-/// Read the snapshot file from a directory; `Ok(None)` when none exists
-/// yet (a fresh start, not an error).
-pub fn read_snapshot_file(dir: &Path) -> Result<Option<Json>> {
+/// What a snapshot directory held, read leniently.
+#[derive(Debug)]
+pub enum SnapshotLoad {
+    /// No snapshot yet — a fresh start, not an error.
+    Missing,
+    /// A complete, parseable document ([`ModelStore::restore`] may still
+    /// reject it on schema/hyperparameter grounds).
+    Loaded(Json),
+    /// The file exists but is not a parseable document — the signature
+    /// of a torn write. Structured so callers can warn and start fresh
+    /// instead of refusing to boot.
+    Corrupt { path: PathBuf, reason: String },
+}
+
+/// Read the snapshot file from a directory, classifying an unparseable
+/// file as [`SnapshotLoad::Corrupt`] instead of failing.
+pub fn load_snapshot_file(dir: &Path) -> Result<SnapshotLoad> {
     let path = snapshot_path(dir);
     let text = match fs::read_to_string(&path) {
         Ok(t) => t,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(SnapshotLoad::Missing)
+        }
         Err(e) => return Err(anyhow!("reading {}: {e}", path.display())),
     };
-    let doc = Json::parse(&text)
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-    Ok(Some(doc))
+    match Json::parse(&text) {
+        Ok(doc) => Ok(SnapshotLoad::Loaded(doc)),
+        Err(e) => Ok(SnapshotLoad::Corrupt { path, reason: format!("{e:?}") }),
+    }
+}
+
+/// Read the snapshot file from a directory; `Ok(None)` when none exists
+/// yet (a fresh start, not an error). Strict sibling of
+/// [`load_snapshot_file`]: an unparseable file is a hard error.
+pub fn read_snapshot_file(dir: &Path) -> Result<Option<Json>> {
+    match load_snapshot_file(dir)? {
+        SnapshotLoad::Missing => Ok(None),
+        SnapshotLoad::Loaded(doc) => Ok(Some(doc)),
+        SnapshotLoad::Corrupt { path, reason } => {
+            Err(anyhow!("parsing {}: {reason}", path.display()))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -559,6 +629,55 @@ mod tests {
         assert_same_plans(&store, &restored);
         // No .tmp litter after a successful write.
         assert!(!dir.join(format!("{SNAPSHOT_FILE}.tmp")).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_is_reported_and_classified_as_corrupt() {
+        use crate::coordinator::faults::FaultSpec;
+        let dir = std::env::temp_dir()
+            .join(format!("ksplus-torn-snapshot-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let store = store_with_every_policy(2);
+        let doc = store.snapshot();
+        let plane =
+            FaultSpec { seed: 41, torn: 1.0, ..FaultSpec::default() }.plane();
+        let err = write_snapshot_file_faulted(&dir, &doc, Some(plane.as_ref())).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        // The debris is a strict prefix: lenient load classifies it,
+        // strict read refuses it, and neither panics.
+        match load_snapshot_file(&dir).unwrap() {
+            SnapshotLoad::Corrupt { path, .. } => assert!(path.ends_with(SNAPSHOT_FILE)),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert!(read_snapshot_file(&dir).is_err());
+        // Recovery: a clean write replaces the debris and loads again.
+        write_snapshot_file(&dir, &doc).unwrap();
+        match load_snapshot_file(&dir).unwrap() {
+            SnapshotLoad::Loaded(back) => {
+                let mut restored = ModelStore::new(2, 128.0, Backend::Native);
+                restored.restore(&back).unwrap();
+                assert_same_plans(&store, &restored);
+            }
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hand_truncated_snapshot_is_corrupt_not_fatal() {
+        let dir = std::env::temp_dir()
+            .join(format!("ksplus-truncated-snapshot-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let store = store_with_every_policy(2);
+        write_snapshot_file(&dir, &store.snapshot()).unwrap();
+        let path = snapshot_path(&dir);
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(matches!(
+            load_snapshot_file(&dir).unwrap(),
+            SnapshotLoad::Corrupt { .. }
+        ));
         let _ = fs::remove_dir_all(&dir);
     }
 }

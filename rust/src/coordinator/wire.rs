@@ -32,8 +32,9 @@ use std::io::{self, BufRead, ErrorKind, Read};
 
 use crate::coordinator::protocol::{
     execution_from_parts, plan_from_parts, policy_from_name, validate_configure_task,
-    validate_history_len, validate_reshard_shards, ErrorCode, ObserveAck, Request, Response,
-    ServerInfo, StatsSummary, WireError, OPS, PROVENANCE_UNKNOWN, WIRE_V2, WIRE_VERSION,
+    validate_history_len, validate_reshard_shards, Dedup, ErrorCode, ObserveAck, Request,
+    Response, ServerInfo, StatsSummary, WireError, OPS, PROVENANCE_UNKNOWN, WIRE_V2,
+    WIRE_VERSION,
 };
 use crate::coordinator::{PlanOutcome, PredictorPolicy, RetryOutcome, FALLBACK_UNTRAINED};
 use crate::segments::StepPlan;
@@ -235,6 +236,16 @@ fn put_plan(out: &mut Vec<u8>, p: &StepPlan) {
     put_f64s(out, &p.peaks);
 }
 
+/// Trailing-optional dedup pair on mutating requests: appended after
+/// every base field, so pre-dedup decoders (which ignore trailing
+/// bytes) keep working, and absent entirely when the client sends none.
+fn put_dedup(out: &mut Vec<u8>, dedup: &Option<Dedup>) {
+    if let Some(d) = dedup {
+        put_str(out, &d.nonce);
+        put_u64(out, d.seq);
+    }
+}
+
 /// Wrap a tagged payload in the 4-byte length header. Callers must
 /// have length-checked `1 + body.len()` against
 /// [`MAX_V2_PAYLOAD_BYTES`] first (the `try_encode_*` functions do) —
@@ -344,6 +355,17 @@ impl<'a> Cur<'a> {
         let peaks = self.f64s()?;
         plan_from_parts(starts, peaks)
     }
+
+    /// Decoder counterpart of [`put_dedup`]: a dedup pair is present iff
+    /// any payload bytes remain after the base fields.
+    fn trailing_dedup(&mut self) -> Result<Option<Dedup>, WireError> {
+        if self.remaining() == 0 {
+            return Ok(None);
+        }
+        let nonce = self.str()?;
+        let seq = self.u64()?;
+        Ok(Some(Dedup { nonce, seq }))
+    }
 }
 
 // ---- requests ------------------------------------------------------------
@@ -398,20 +420,23 @@ fn v2_request_body(req: &Request) -> Vec<u8> {
             put_opt_u32(&mut body, min_version.map(|v| v as u32));
             put_opt_u32(&mut body, max_version.map(|v| v as u32));
         }
-        Request::Configure { task, policy } => {
+        Request::Configure { task, policy, dedup } => {
             put_opt_str(&mut body, task.as_deref());
             put_str(&mut body, policy.name());
+            put_dedup(&mut body, dedup);
         }
-        Request::Train { task, history } => {
+        Request::Train { task, history, dedup } => {
             put_str(&mut body, task);
             put_u32(&mut body, history.len() as u32);
             for e in history {
                 put_execution(&mut body, e);
             }
+            put_dedup(&mut body, dedup);
         }
-        Request::Observe { task, execution } => {
+        Request::Observe { task, execution, dedup } => {
             put_str(&mut body, task);
             put_execution(&mut body, execution);
+            put_dedup(&mut body, dedup);
         }
         Request::Plan { task, input_mb } => {
             put_str(&mut body, task);
@@ -457,7 +482,7 @@ pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<Option<Request>, Wir
                 "configure" => {
                     let task = validate_configure_task(c.opt_str()?)?;
                     let policy = policy_from_name(&c.str()?)?;
-                    Request::Configure { task, policy }
+                    Request::Configure { task, policy, dedup: c.trailing_dedup()? }
                 }
                 "train" => {
                     let task = c.str()?;
@@ -466,12 +491,12 @@ pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<Option<Request>, Wir
                     let history = (0..n)
                         .map(|_| c.execution(&task))
                         .collect::<Result<Vec<_>, _>>()?;
-                    Request::Train { task, history }
+                    Request::Train { task, history, dedup: c.trailing_dedup()? }
                 }
                 "observe" => {
                     let task = c.str()?;
                     let execution = c.execution(&task)?;
-                    Request::Observe { task, execution }
+                    Request::Observe { task, execution, dedup: c.trailing_dedup()? }
                 }
                 "plan" => Request::Plan { task: c.str()?, input_mb: c.f64()? },
                 "failure" => Request::Failure {
@@ -581,6 +606,11 @@ fn v2_response_body(resp: &Response) -> Vec<u8> {
             // Appended after every pre-overflow-counter field so old
             // decoders (which ignore trailing bytes) keep working.
             put_u64(&mut body, s.conns_overflowed);
+            // Overload-control counters, appended in turn after the
+            // overflow counter for the same forward compatibility.
+            put_u64(&mut body, s.shed);
+            put_u64(&mut body, s.queue_depth_max);
+            put_u64(&mut body, s.drains);
         }
         Response::Snapshot { doc } => {
             // The snapshot document is structurally JSON (it is
@@ -716,12 +746,24 @@ pub fn decode_response(wire: Wire, payload: &[u8], op: &str) -> Result<Response,
                         latency_p50_us: c.f64()?,
                         latency_p99_us: c.f64()?,
                         conns_overflowed: 0,
+                        shed: 0,
+                        queue_depth_max: 0,
+                        drains: 0,
                     };
-                    // Frames from servers predating the overflow
-                    // counter end here; default 0, the JSON decoder's
-                    // stance for absent counters.
+                    // Frames from servers predating each appended
+                    // counter end earlier; default 0, the JSON
+                    // decoder's stance for absent counters.
                     if c.remaining() >= 8 {
                         s.conns_overflowed = c.u64()?;
+                    }
+                    if c.remaining() >= 8 {
+                        s.shed = c.u64()?;
+                    }
+                    if c.remaining() >= 8 {
+                        s.queue_depth_max = c.u64()?;
+                    }
+                    if c.remaining() >= 8 {
+                        s.drains = c.u64()?;
                     }
                     Ok(Response::Stats(s))
                 }
@@ -885,10 +927,29 @@ mod tests {
                 max_version: Some(2),
             },
             Request::Hello { client: None, min_version: None, max_version: None },
-            Request::Configure { task: Some("bwa".into()), policy: PredictorPolicy::WittLr },
-            Request::Configure { task: None, policy: PredictorPolicy::KsPlus },
-            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)] },
-            Request::Observe { task: "t".into(), execution: exec(3) },
+            Request::Configure {
+                task: Some("bwa".into()),
+                policy: PredictorPolicy::WittLr,
+                dedup: None,
+            },
+            Request::Configure { task: None, policy: PredictorPolicy::KsPlus, dedup: None },
+            Request::Configure {
+                task: Some("bwa".into()),
+                policy: PredictorPolicy::KsPlus,
+                dedup: Some(Dedup { nonce: "codec-nonce".into(), seq: 1 }),
+            },
+            Request::Train { task: "t".into(), history: vec![exec(1), exec(2)], dedup: None },
+            Request::Train {
+                task: "t".into(),
+                history: vec![exec(6)],
+                dedup: Some(Dedup { nonce: "codec-nonce".into(), seq: 2 }),
+            },
+            Request::Observe { task: "t".into(), execution: exec(3), dedup: None },
+            Request::Observe {
+                task: "t".into(),
+                execution: exec(7),
+                dedup: Some(Dedup { nonce: "codec-nonce".into(), seq: 3 }),
+            },
             Request::Plan { task: "bwa".into(), input_mb: 1234.5 },
             Request::Failure {
                 task: Some("bwa".into()),
@@ -949,6 +1010,9 @@ mod tests {
                 latency_p50_us: 12.5,
                 latency_p99_us: 90.25,
                 conns_overflowed: 6,
+                shed: 9,
+                queue_depth_max: 17,
+                drains: 1,
             }),
             Response::Snapshot {
                 doc: Json::obj(vec![
@@ -1062,6 +1126,7 @@ mod tests {
         let req = Request::Train {
             task: "t".into(),
             history: (0..16u64).map(exec).collect(),
+            dedup: None,
         };
         for wire in [Wire::V1, Wire::V2] {
             let err = try_encode_request(wire, &req, 64).unwrap_err();
@@ -1103,21 +1168,44 @@ mod tests {
     }
 
     #[test]
-    fn stats_overflow_counter_is_optional_in_v2_frames() {
-        // A frame from a server predating `conns_overflowed` simply
-        // ends earlier; the decoder defaults the counter to 0 and keeps
-        // every other field.
+    fn stats_trailing_counters_are_optional_in_v2_frames() {
+        // The appended counters (conns_overflowed, then shed /
+        // queue_depth_max / drains) peel off the tail in reverse order:
+        // a frame from any older server simply ends earlier, and the
+        // decoder defaults whatever is absent to 0 while keeping every
+        // other field.
         let resp = every_response()
             .into_iter()
             .find(|r| matches!(r, Response::Stats(_)))
             .unwrap();
         let framed = try_encode_response(Wire::V2, &resp, MAX_V2_PAYLOAD_BYTES).unwrap();
-        let old_payload = &framed[4..framed.len() - 8];
-        match decode_response(Wire::V2, old_payload, "stats").unwrap() {
+        // Pre-overload-control server: the last three u64s are absent.
+        let pre_overload = &framed[4..framed.len() - 24];
+        match decode_response(Wire::V2, pre_overload, "stats").unwrap() {
             Response::Stats(s) => {
-                assert_eq!(s.conns_overflowed, 0);
+                assert_eq!(s.conns_overflowed, 6);
+                assert_eq!((s.shed, s.queue_depth_max, s.drains), (0, 0, 0));
                 assert_eq!(s.conn_timeouts, 1);
                 assert_eq!(s.latency_p99_us, 90.25);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Pre-overflow-counter server: all four trailing u64s absent.
+        let pre_overflow = &framed[4..framed.len() - 32];
+        match decode_response(Wire::V2, pre_overflow, "stats").unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.conns_overflowed, 0);
+                assert_eq!((s.shed, s.queue_depth_max, s.drains), (0, 0, 0));
+                assert_eq!(s.conn_timeouts, 1);
+                assert_eq!(s.latency_p99_us, 90.25);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // The full current frame carries all four.
+        match decode_response(Wire::V2, &framed[4..], "stats").unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.conns_overflowed, 6);
+                assert_eq!((s.shed, s.queue_depth_max, s.drains), (9, 17, 1));
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -1166,6 +1254,7 @@ mod tests {
                 Request::Observe {
                     task: "t".into(),
                     execution: Execution::new("t", 1.0, 0.0, vec![1.0]),
+                    dedup: None,
                 },
                 r#"{"op":"observe","task":"t","execution":{"input_mb":1,"dt":0,"samples":[1]}}"#,
             ),
@@ -1173,6 +1262,7 @@ mod tests {
                 Request::Observe {
                     task: "t".into(),
                     execution: Execution::new("t", 1.0, 1.0, vec![]),
+                    dedup: None,
                 },
                 r#"{"op":"observe","task":"t","execution":{"input_mb":1,"dt":1,"samples":[]}}"#,
             ),
@@ -1189,11 +1279,15 @@ mod tests {
                 r#"{"op":"reshard","shards":0}"#,
             ),
             (
-                Request::Configure { task: Some("*".into()), policy: PredictorPolicy::KsPlus },
+                Request::Configure {
+                    task: Some("*".into()),
+                    policy: PredictorPolicy::KsPlus,
+                    dedup: None,
+                },
                 r#"{"op":"configure","task":"*","policy":"ksplus"}"#,
             ),
             (
-                Request::Train { task: "t".into(), history: vec![] },
+                Request::Train { task: "t".into(), history: vec![], dedup: None },
                 r#"{"op":"train","task":"t","history":[]}"#,
             ),
         ];

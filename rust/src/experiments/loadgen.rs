@@ -24,10 +24,13 @@ use anyhow::{Context, Result};
 
 #[cfg(unix)]
 use crate::coordinator::eventloop::EventLoopServer;
+use crate::coordinator::faults::FaultSpec;
 use crate::coordinator::protocol::{Request, Response};
-use crate::coordinator::remote::RemoteClient;
-use crate::coordinator::server::Server;
-use crate::coordinator::service::{Client, Coordinator, CoordinatorConfig, ServiceStats};
+use crate::coordinator::remote::{ClientCounters, RemoteClient, ResilientClient, RetryPolicy};
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::service::{
+    Client, ConnCounters, Coordinator, CoordinatorConfig, ServiceStats,
+};
 use crate::coordinator::wire::Wire;
 use crate::coordinator::{BackendSpec, PredictorPolicy};
 use crate::trace::workflow::Workflow;
@@ -108,6 +111,19 @@ pub struct LoadGenConfig {
     /// strict request/response; higher depths ship a whole batch in one
     /// write and then collect the in-order responses.
     pub pipeline: usize,
+    /// Seeded wire/dispatch/snapshot fault injection on the server side
+    /// (`--chaos-faults`). Implies self-healing clients: every client
+    /// becomes a [`ResilientClient`] with mutation retry + dedup on, and
+    /// the run still asserts that no acknowledged observation is lost.
+    pub chaos_faults: Option<FaultSpec>,
+    /// Bound the event-loop front end's dispatch queue; excess load is
+    /// shed with structured `overloaded` errors, which the resilient
+    /// clients absorb with backoff. 0 = unbounded.
+    pub max_queue_depth: usize,
+    /// Dispatch worker threads for the event-loop front end (0 = that
+    /// front end's default). A squeeze run sets 1 so the queue cap
+    /// actually binds.
+    pub dispatch_threads: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -125,6 +141,9 @@ impl Default for LoadGenConfig {
             server: ServeMode::InProcess,
             wire: Wire::V1,
             pipeline: 1,
+            chaos_faults: None,
+            max_queue_depth: 0,
+            dispatch_threads: 0,
         }
     }
 }
@@ -159,6 +178,20 @@ pub struct LoadGenReport {
     pub per_shard_requests: Vec<u64>,
     /// Shard crash/restore cycles performed during the run.
     pub chaos_kills: u64,
+    /// Requests the server shed with a structured `overloaded` error
+    /// (dispatch queue at `max_queue_depth` or a connection at its
+    /// in-flight cap). The resilient clients retried every one.
+    pub shed: u64,
+    /// High-water mark of the event-loop dispatch queue.
+    pub queue_depth_max: u64,
+    /// Client-side request retries (overloaded backoff plus transport
+    /// replays), summed over all clients.
+    pub retries: u64,
+    /// Successful client reconnects after a severed connection.
+    pub reconnects: u64,
+    /// Circuit-breaker openings across all clients. Nonzero means some
+    /// client judged the server down and started failing fast.
+    pub circuit_opens: u64,
 }
 
 impl LoadGenReport {
@@ -192,6 +225,11 @@ impl LoadGenReport {
                 ),
             ),
             ("chaos_kills", (self.chaos_kills as usize).into()),
+            ("shed", (self.shed as usize).into()),
+            ("queue_depth_max", (self.queue_depth_max as usize).into()),
+            ("retries", (self.retries as usize).into()),
+            ("reconnects", (self.reconnects as usize).into()),
+            ("circuit_opens", (self.circuit_opens as usize).into()),
         ])
     }
 }
@@ -277,17 +315,26 @@ impl ServeHandle {
             ServeHandle::EventLoop(s) => s.stop(),
         }
     }
+
+    fn counters(&self) -> Arc<ConnCounters> {
+        match self {
+            ServeHandle::Threaded(s) => s.counters(),
+            #[cfg(unix)]
+            ServeHandle::EventLoop(s) => s.counters(),
+        }
+    }
 }
 
 #[cfg(unix)]
-fn start_eventloop(client: Client) -> Result<ServeHandle> {
+fn start_eventloop(client: Client, cfg: ServerConfig) -> Result<ServeHandle> {
     Ok(ServeHandle::EventLoop(
-        EventLoopServer::start("127.0.0.1:0", client).context("start event-loop server")?,
+        EventLoopServer::start_with_config("127.0.0.1:0", client, cfg)
+            .context("start event-loop server")?,
     ))
 }
 
 #[cfg(not(unix))]
-fn start_eventloop(_client: Client) -> Result<ServeHandle> {
+fn start_eventloop(_client: Client, _cfg: ServerConfig) -> Result<ServeHandle> {
     anyhow::bail!("the event-loop server needs epoll/kqueue; use --server threaded here")
 }
 
@@ -308,6 +355,25 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     anyhow::ensure!(
         cfg.server != ServeMode::InProcess || (cfg.wire == Wire::V1 && cfg.pipeline == 1),
         "--wire and --pipeline need a TCP front end (--server threaded|eventloop)"
+    );
+    // Faults and overload squeezes imply self-healing clients: every
+    // client becomes a ResilientClient with mutation retry + dedup, so
+    // the run survives torn frames and `overloaded` sheds — and the
+    // no-lost-acks invariant at the end still has to hold exactly.
+    let resilient = cfg.chaos_faults.is_some() || cfg.max_queue_depth > 0;
+    anyhow::ensure!(
+        !resilient || cfg.server != ServeMode::InProcess,
+        "--chaos-faults and --max-queue-depth exercise a TCP front end \
+         (--server threaded|eventloop)"
+    );
+    anyhow::ensure!(
+        !resilient || cfg.pipeline == 1,
+        "self-healing clients are strict request/response; --pipeline must be 1 \
+         under --chaos-faults/--max-queue-depth"
+    );
+    anyhow::ensure!(
+        cfg.max_queue_depth == 0 || cfg.server == ServeMode::EventLoop,
+        "--max-queue-depth bounds the event-loop dispatch queue; use --server eventloop"
     );
     let wf = Workflow::by_name(&cfg.workflow)
         .with_context(|| format!("unknown workflow '{}'", cfg.workflow))?;
@@ -362,13 +428,22 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
 
     // TCP modes put the chosen front end (ephemeral loopback port) in
     // front of the same coordinator; training above already went through
-    // the in-process client either way.
+    // the in-process client either way. The front end carries the
+    // robustness knobs: the fault plane and the dispatch-queue bound
+    // that turns excess load into structured `overloaded` sheds.
+    let server_cfg = ServerConfig {
+        dispatch_threads: cfg.dispatch_threads,
+        max_queue_depth: cfg.max_queue_depth,
+        faults: cfg.chaos_faults.as_ref().map(FaultSpec::plane),
+        ..Default::default()
+    };
     let mut front = match cfg.server {
         ServeMode::InProcess => None,
         ServeMode::Threaded => Some(ServeHandle::Threaded(
-            Server::start("127.0.0.1:0", coord.client()).context("start threaded server")?,
+            Server::start_with_config("127.0.0.1:0", coord.client(), server_cfg)
+                .context("start threaded server")?,
         )),
-        ServeMode::EventLoop => Some(start_eventloop(coord.client())?),
+        ServeMode::EventLoop => Some(start_eventloop(coord.client(), server_cfg)?),
     };
     let addr = front.as_ref().map(ServeHandle::addr);
 
@@ -398,12 +473,54 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
             Ok(kills)
         })
     });
-    let mut handles: Vec<std::thread::JoinHandle<Result<(u64, u64)>>> =
+    let mut handles: Vec<std::thread::JoinHandle<Result<(u64, u64, ClientCounters)>>> =
         Vec::with_capacity(cfg.clients);
     for c in 0..cfg.clients {
         let mix = mix.clone();
         let obs_mix = Arc::clone(&obs_mix);
         match addr {
+            // Fault/overload runs: every client is a self-healing
+            // ResilientClient. Mutation retry is on (dedup stamps make
+            // the replays exactly-once server-side), backoffs are kept
+            // short — the run measures healing, not idling.
+            Some(addr) if resilient => {
+                let wire = cfg.wire;
+                handles.push(std::thread::spawn(move || {
+                    let mut rc = ResilientClient::new(
+                        addr.to_string(),
+                        RetryPolicy {
+                            max_attempts: 16,
+                            base_backoff: Duration::from_millis(1),
+                            max_backoff: Duration::from_millis(50),
+                            retry_mutations: true,
+                            breaker_threshold: 32,
+                            breaker_cooldown: Duration::from_millis(50),
+                            // Distinct per client: the nonce derives from
+                            // the seed, and sharing one would share a
+                            // dedup session.
+                            seed: 0x5EED ^ c as u64,
+                        },
+                    );
+                    rc.set_timeout(Some(CLIENT_TIMEOUT));
+                    rc.set_max_wire_version(wire.version());
+                    let mut rng = Rng::new(0xC0FFEE ^ c as u64);
+                    let mut invalid = 0u64;
+                    let mut observes = 0u64;
+                    for _ in 0..per_client {
+                        if observe_frac > 0.0 && rng.f64() < observe_frac {
+                            let (task, exec) = &obs_mix[rng.below(obs_mix.len())];
+                            rc.observe(task, exec).context("resilient observe")?;
+                            observes += 1;
+                        }
+                        let (task, input) = &mix[rng.below(mix.len())];
+                        let out = rc.plan(task, *input).context("resilient plan")?;
+                        if !out.plan.is_valid() {
+                            invalid += 1;
+                        }
+                    }
+                    Ok((invalid, observes, rc.counters()))
+                }));
+            }
             None => {
                 let cl = coord.client();
                 handles.push(std::thread::spawn(move || {
@@ -421,7 +538,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                             invalid += 1;
                         }
                     }
-                    Ok((invalid, observes))
+                    Ok((invalid, observes, ClientCounters::default()))
                 }));
             }
             Some(addr) => {
@@ -451,6 +568,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                                 reqs.push(Request::Observe {
                                     task: task.clone(),
                                     execution: exec.clone(),
+                                    dedup: None,
                                 });
                             }
                             let (task, input) = &mix[rng.below(mix.len())];
@@ -476,18 +594,22 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
                         }
                         remaining -= batch;
                     }
-                    Ok((invalid, observes))
+                    Ok((invalid, observes, ClientCounters::default()))
                 }));
             }
         }
     }
     let mut invalid = 0u64;
     let mut observes = 0u64;
+    let mut healing = ClientCounters::default();
     for h in handles {
-        let (i, o) =
+        let (i, o, cc) =
             h.join().map_err(|_| anyhow::anyhow!("loadgen client thread panicked"))??;
         invalid += i;
         observes += o;
+        healing.retries += cc.retries;
+        healing.reconnects += cc.reconnects;
+        healing.circuit_opens += cc.circuit_opens;
     }
     // A trained (or fallback) plan is always well-formed; an invalid one
     // is a service bug, not a load characteristic — fail loudly rather
@@ -499,6 +621,13 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
     };
     let served = (per_client * cfg.clients) as u64;
     let elapsed = t0.elapsed().max(Duration::from_nanos(1));
+    let (shed, queue_depth_max) = match front.as_ref().map(ServeHandle::counters) {
+        Some(cc) => (
+            cc.shed.load(std::sync::atomic::Ordering::Relaxed),
+            cc.queue_depth_max.load(std::sync::atomic::Ordering::Relaxed),
+        ),
+        None => (0, 0),
+    };
     if let Some(f) = front.as_mut() {
         f.stop();
     }
@@ -533,6 +662,11 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         observes_per_s: observes as f64 / elapsed.as_secs_f64(),
         per_shard_requests: per_shard.iter().map(|s| s.requests).collect(),
         chaos_kills,
+        shed,
+        queue_depth_max,
+        retries: healing.retries,
+        reconnects: healing.reconnects,
+        circuit_opens: healing.circuit_opens,
     })
 }
 
@@ -609,6 +743,26 @@ mod tests {
         // Wire/pipeline knobs without a TCP front end to apply them to.
         assert!(run(&LoadGenConfig { wire: Wire::V2, ..Default::default() }).is_err());
         assert!(run(&LoadGenConfig { pipeline: 4, ..Default::default() }).is_err());
+        // Robustness knobs without a front end (or queue) to apply to.
+        let faults = FaultSpec::parse("seed=1,stall=0.1:1").unwrap();
+        assert!(run(&LoadGenConfig {
+            chaos_faults: Some(faults.clone()),
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run(&LoadGenConfig {
+            server: ServeMode::Threaded,
+            max_queue_depth: 4,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run(&LoadGenConfig {
+            server: ServeMode::EventLoop,
+            chaos_faults: Some(faults),
+            pipeline: 4,
+            ..Default::default()
+        })
+        .is_err());
     }
 
     #[test]
@@ -674,6 +828,71 @@ mod tests {
         assert_eq!(j.get("server").and_then(Json::as_str), Some("eventloop"));
         assert_eq!(j.get("wire").and_then(Json::as_str), Some("v2"));
         assert_eq!(j.get("pipeline").and_then(Json::as_usize), Some(4));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn loadgen_queue_squeeze_sheds_but_loses_nothing() {
+        // One dispatch worker, a depth-1 queue, and a dispatch stall make
+        // admission control actually bind; the resilient clients absorb
+        // every `overloaded` with backoff, so the run still serves the
+        // full request count and the no-lost-acks invariant holds.
+        let r = run(&LoadGenConfig {
+            clients: 4,
+            requests: 80,
+            observe_frac: 0.25,
+            server: ServeMode::EventLoop,
+            max_queue_depth: 1,
+            dispatch_threads: 1,
+            chaos_faults: Some(FaultSpec::parse("seed=9,stall=0.9:3").unwrap()),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 80);
+        assert!(r.shed > 0, "queue squeeze never shed: {r:?}");
+        // Every shed came back as an `overloaded` the client retried.
+        assert!(r.retries >= r.shed, "{r:?}");
+        assert_eq!(r.queue_depth_max, 1, "{r:?}");
+        assert!(r.observes > 0);
+        let j = r.to_json();
+        assert!(j.get("shed").and_then(Json::as_usize).unwrap() > 0);
+        assert_eq!(
+            j.get("queue_depth_max").and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn loadgen_chaos_faults_heal_without_losing_acks() {
+        // Torn frames sever connections mid-response; the self-healing
+        // clients reconnect and replay with dedup stamps. The run's own
+        // invariant — acked observations exactly equal recorded ones —
+        // is the exactly-once proof.
+        let r = run(&LoadGenConfig {
+            clients: 3,
+            requests: 120,
+            observe_frac: 0.4,
+            server: ServeMode::EventLoop,
+            wire: Wire::V2,
+            chaos_faults: Some(
+                FaultSpec::parse("seed=7,short-io=0.2,corrupt=0.08,stall=0.1:1").unwrap(),
+            ),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 120);
+        assert!(r.observes > 0);
+        assert!(
+            r.reconnects > 0,
+            "corrupt frames never severed a connection: {r:?}"
+        );
+        assert!(r.retries >= r.reconnects, "{r:?}");
+        // No queue bound: nothing shed, clients healed around faults only.
+        assert_eq!(r.shed, 0, "{r:?}");
+        let j = r.to_json();
+        assert!(j.get("reconnects").and_then(Json::as_usize).unwrap() > 0);
+        assert!(j.get("retries").and_then(Json::as_usize).unwrap() > 0);
     }
 
     #[test]

@@ -364,6 +364,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "event-loop dispatch worker threads (0 = size from the core count)",
             Some("0"),
         )
+        .flag(
+            "max-queue-depth",
+            "bound the event-loop dispatch queue; excess requests are shed with a \
+             structured 'overloaded' error (0 = unbounded)",
+            Some("0"),
+        )
+        .flag(
+            "max-inflight",
+            "cap in-flight requests per connection; past it requests on that \
+             connection are shed with 'overloaded' (0 = unbounded)",
+            Some("0"),
+        )
+        .flag(
+            "fault-spec",
+            "arm deterministic fault injection, e.g. \
+             seed=42,short-io=0.1,corrupt=0.05,stall=0.1:5,torn=0.01 (see docs/PROTOCOL.md)",
+            None,
+        )
         .bool_flag(
             "threaded",
             "serve with the thread-per-connection front end instead of the event loop",
@@ -385,17 +403,39 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     )?;
     let client = coord.client();
     let snapshot_dir = a.get("snapshot-dir").map(PathBuf::from);
+    let faults = match a.get("fault-spec") {
+        Some(s) => {
+            let spec = ksplus::coordinator::faults::FaultSpec::parse(s)
+                .with_context(|| format!("parsing --fault-spec '{s}'"))?;
+            eprintln!("fault injection armed: {s}");
+            Some(spec.plane())
+        }
+        None => None,
+    };
 
     // Crash-safety: a snapshot on disk wins over the synthetic
     // pre-training — restoring it reproduces the exact pre-crash plans.
+    // A torn snapshot (crash mid-write of a pre-atomic writer, or an
+    // injected torn-write fault) must not wedge the service: warn, leave
+    // the debris for forensics, start from synthetic training instead.
     let mut restored = 0usize;
     if let Some(dir) = &snapshot_dir {
-        if let Some(doc) = snapshot::read_snapshot_file(dir)? {
-            restored = client.restore_snapshot(&doc)?;
-            println!(
-                "restored {restored} task models from {}",
-                snapshot::snapshot_path(dir).display()
-            );
+        match snapshot::load_snapshot_file(dir)? {
+            snapshot::SnapshotLoad::Loaded(doc) => {
+                restored = client.restore_snapshot(&doc)?;
+                println!(
+                    "restored {restored} task models from {}",
+                    snapshot::snapshot_path(dir).display()
+                );
+            }
+            snapshot::SnapshotLoad::Corrupt { path, reason } => {
+                eprintln!(
+                    "warning: ignoring corrupt snapshot {} ({reason}); \
+                     starting from synthetic training",
+                    path.display()
+                );
+            }
+            snapshot::SnapshotLoad::Missing => {}
         }
     }
     if restored == 0 {
@@ -415,6 +455,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             read_timeout: (idle > 0).then(|| std::time::Duration::from_secs(idle)),
             max_frame_bytes: a.get_usize("max-frame-bytes")?,
             dispatch_threads: a.get_usize("dispatch-threads")?,
+            max_queue_depth: a.get_usize("max-queue-depth")?,
+            max_inflight: a.get_usize("max-inflight")?,
+            faults: faults.clone(),
+            ..Default::default()
         };
         let server = start_front_end(addr, coord.client(), server_cfg, a.get_bool("threaded"))?;
         println!(
@@ -437,8 +481,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 let dir = dir.clone();
                 loop {
                     std::thread::sleep(std::time::Duration::from_secs(every));
-                    let path = snapshot::write_snapshot_file(&dir, &client.snapshot_json())?;
-                    eprintln!("snapshot written to {}", path.display());
+                    // A failed periodic snapshot (disk trouble, or an
+                    // injected torn write) costs durability, not
+                    // availability — the server keeps serving.
+                    match snapshot::write_snapshot_file_faulted(
+                        &dir,
+                        &client.snapshot_json(),
+                        faults.as_deref(),
+                    ) {
+                        Ok(path) => eprintln!("snapshot written to {}", path.display()),
+                        Err(e) => eprintln!("warning: snapshot failed: {e:#}"),
+                    }
                 }
             }
             _ => loop {
@@ -502,6 +555,24 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     )
     .flag("wire", "wire the TCP clients negotiate: v1 or v2", Some("v1"))
     .flag("pipeline", "requests each TCP client keeps in flight", Some("1"))
+    .flag(
+        "chaos-faults",
+        "arm seeded server-side fault injection (e.g. seed=7,short-io=0.2,corrupt=0.05,\
+         stall=0.1:2); clients become self-healing and the run still fails on any lost ack",
+        None,
+    )
+    .flag(
+        "max-queue-depth",
+        "bound the event-loop dispatch queue so excess load is shed with 'overloaded' \
+         (0 = unbounded; needs --server eventloop)",
+        Some("0"),
+    )
+    .flag(
+        "dispatch-threads",
+        "event-loop dispatch worker threads (0 = default); set 1 to make a queue \
+         squeeze actually bind",
+        Some("0"),
+    )
     .flag("out", "write per-run JSON reports to this directory", None)
     .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
@@ -517,10 +588,19 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     let wire = ksplus::coordinator::wire::Wire::parse(a.get("wire").unwrap())
         .with_context(|| format!("unknown wire '{}'", a.get("wire").unwrap()))?;
     let pipeline = a.get_usize("pipeline")?;
+    let chaos_faults = match a.get("chaos-faults") {
+        Some(s) => Some(
+            ksplus::coordinator::faults::FaultSpec::parse(s)
+                .with_context(|| format!("parsing --chaos-faults '{s}'"))?,
+        ),
+        None => None,
+    };
+    let max_queue_depth = a.get_usize("max-queue-depth")?;
+    let dispatch_threads = a.get_usize("dispatch-threads")?;
 
     println!(
         "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {}, \
-         server {}, wire {}, pipeline {}{} ==",
+         server {}, wire {}, pipeline {}{}{}{} ==",
         clients,
         requests,
         observe_frac,
@@ -531,6 +611,15 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         pipeline,
         if chaos_kills > 0 {
             format!(", chaos-kills {chaos_kills}")
+        } else {
+            String::new()
+        },
+        match a.get("chaos-faults") {
+            Some(s) => format!(", chaos-faults {s}"),
+            None => String::new(),
+        },
+        if max_queue_depth > 0 {
+            format!(", max-queue-depth {max_queue_depth}")
         } else {
             String::new()
         }
@@ -555,6 +644,9 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             server,
             wire,
             pipeline,
+            chaos_faults: chaos_faults.clone(),
+            max_queue_depth,
+            dispatch_threads,
         })?;
         let speedup = match baseline {
             None => {
@@ -575,6 +667,17 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             report.per_shard_requests,
             speedup
         );
+        if report.shed > 0 || report.retries > 0 || report.reconnects > 0 {
+            println!(
+                "        robustness: shed {}, queue-depth max {}, retries {}, \
+                 reconnects {}, circuit-opens {} — zero acked observations lost",
+                report.shed,
+                report.queue_depth_max,
+                report.retries,
+                report.reconnects,
+                report.circuit_opens
+            );
+        }
         if let Some(dir) = a.get("out") {
             let dir = PathBuf::from(dir);
             std::fs::create_dir_all(&dir)?;
@@ -752,7 +855,10 @@ fn cmd_protocol_smoke(argv: &[String]) -> Result<()> {
     // Semantically invalid but well-framed requests: expressible as
     // typed values, so both wires must reject them with the same codes.
     for (req, want) in [
-        (Request::Train { task: "x".into(), history: vec![] }, ErrorCode::EmptyHistory),
+        (
+            Request::Train { task: "x".into(), history: vec![], dedup: None },
+            ErrorCode::EmptyHistory,
+        ),
         (Request::Reshard { shards: 0 }, ErrorCode::InvalidField),
         (
             Request::Hello { client: None, min_version: Some(99), max_version: None },
@@ -863,7 +969,13 @@ fn cmd_replay(argv: &[String]) -> Result<()> {
     .flag("goldens-dir", "directory of committed goldens", Some("golden"))
     .flag("server", "front end(s): threaded|eventloop|all", Some("all"))
     .flag("wire", "wire(s): v1|v2|all", Some("all"))
-    .flag("shards", "override the recorded shard count", None);
+    .flag("shards", "override the recorded shard count", None)
+    .flag(
+        "fault-seed",
+        "arm benign seeded faults (short reads/writes + dispatch stalls) during \
+         replay; the transcripts must still be bit-identical",
+        None,
+    );
     let a = cmd.parse(argv)?;
 
     let shards = match a.get("shards") {
@@ -871,6 +983,13 @@ fn cmd_replay(argv: &[String]) -> Result<()> {
         Some(s) => Some(
             s.parse::<usize>()
                 .map_err(|_| anyhow::anyhow!("--shards wants an integer, got '{s}'"))?,
+        ),
+    };
+    let fault_seed = match a.get("fault-seed") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--fault-seed wants an integer, got '{s}'"))?,
         ),
     };
     let server_sel = a.get("server").unwrap().to_string();
@@ -912,8 +1031,9 @@ fn cmd_replay(argv: &[String]) -> Result<()> {
         // rest must reproduce bit-for-bit.
         let mut baseline: Option<(&'static str, Vec<String>)> = None;
         for &(combo, threaded, wire) in &combos {
-            let transcript = session::replay_trace(trace, threaded, wire, shards)
-                .with_context(|| format!("case '{}' on {combo}", trace.case_name))?;
+            let transcript =
+                session::replay_trace_faulted(trace, threaded, wire, shards, fault_seed)
+                    .with_context(|| format!("case '{}' on {combo}", trace.case_name))?;
             if let Some((base_combo, base)) = &baseline {
                 diff_transcripts(&trace.case_name, base_combo, base, combo, &transcript)?;
             } else {
@@ -928,9 +1048,13 @@ fn cmd_replay(argv: &[String]) -> Result<()> {
         }
     }
     println!(
-        "replay: {} case(s) x {} combo(s) = {total} run(s), all bit-identical",
+        "replay: {} case(s) x {} combo(s) = {total} run(s), all bit-identical{}",
         traces.len(),
-        combos.len()
+        combos.len(),
+        match fault_seed {
+            Some(seed) => format!(" (benign faults armed, seed {seed})"),
+            None => String::new(),
+        }
     );
     Ok(())
 }

@@ -6,6 +6,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// FNV-1a over a string: the shared cheap string hash (shard routing,
 /// property-test seed derivation). Deterministic across runs and

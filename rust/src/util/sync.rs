@@ -1,0 +1,98 @@
+//! Poison-recovering lock helpers.
+//!
+//! A panicking thread poisons every `Mutex`/`RwLock` it holds, and the
+//! default `.lock().unwrap()` idiom then cascades that one panic into
+//! every other thread touching the lock — a single buggy dispatch worker
+//! could wedge the whole event loop. Server-side shared state in this
+//! crate is counters, queues, and connection tables: all of it remains
+//! structurally valid after a worker panic (the panicking code never
+//! leaves a half-written entry observable, because pushes/pops are the
+//! last statement under the guard). Recovering the guard and continuing
+//! is therefore strictly better than dying, and these helpers make the
+//! recovery explicit and greppable.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// `mutex.lock()` that survives poisoning instead of panicking.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `rwlock.read()` that survives poisoning instead of panicking.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `rwlock.write()` that survives poisoning instead of panicking.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `condvar.wait(guard)` that survives poisoning instead of panicking.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_a_panicking_writer() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_from_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // Poison the mutex first so the eventual `wait` returns a
+        // poisoned guard rather than panicking through the helper.
+        let p2 = pair.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let p3 = pair.clone();
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            *lock_recover(&p3.0) = true;
+            p3.1.notify_all();
+        });
+        let (m, cv) = (&pair.0, &pair.1);
+        let mut g = lock_recover(m);
+        while !*g {
+            g = wait_recover(cv, g);
+        }
+        drop(g);
+        waker.join().unwrap();
+    }
+}

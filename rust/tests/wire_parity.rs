@@ -151,10 +151,16 @@ fn drive_session(addr: std::net::SocketAddr, wire: Wire) -> Vec<String> {
     // Semantic error classes, typed so both wires can express them; the
     // structured code must not depend on the framing.
     for (req, label) in [
-        (Request::Train { task: "x".into(), history: vec![] }, "empty-train"),
+        (Request::Train { task: "x".into(), history: vec![], dedup: None }, "empty-train"),
         (Request::Reshard { shards: 0 }, "reshard-0"),
-        (Request::Configure { task: Some("*".into()), policy: PredictorPolicy::KsPlus },
-            "configure-star"),
+        (
+            Request::Configure {
+                task: Some("*".into()),
+                policy: PredictorPolicy::KsPlus,
+                dedup: None,
+            },
+            "configure-star",
+        ),
         (Request::Hello { client: None, min_version: Some(99), max_version: None },
             "hello-99"),
     ] {
