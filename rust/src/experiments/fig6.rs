@@ -12,10 +12,9 @@
 
 use anyhow::Result;
 
-use crate::experiments::{evaluate_method, report, ExpConfig, ExpOutput};
+use crate::experiments::{eval_traces, evaluate_method, report, ExpConfig, ExpOutput};
 use crate::metrics::relative_reduction;
 use crate::predictor::paper_methods;
-use crate::trace::workflow::Workflow;
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -35,8 +34,7 @@ pub fn collect(cfg: &ExpConfig) -> Result<Vec<Cell>> {
 
 pub fn collect_methods(cfg: &ExpConfig, methods: &[&'static str]) -> Result<Vec<Cell>> {
     let mut cells = Vec::new();
-    for wf in [Workflow::eager(), Workflow::sarek()] {
-        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+    for (wf, trace, label) in eval_traces(cfg)? {
         for &frac in &cfg.train_fracs {
             for &method in methods {
                 let mut wastage = Vec::with_capacity(cfg.seeds.len());
@@ -55,7 +53,7 @@ pub fn collect_methods(cfg: &ExpConfig, methods: &[&'static str]) -> Result<Vec<
                     failures.push(r.total_failures() as f64);
                 }
                 cells.push(Cell {
-                    workflow: wf.name,
+                    workflow: label,
                     method,
                     train_frac: frac,
                     wastage_gbs: wastage,
@@ -67,6 +65,18 @@ pub fn collect_methods(cfg: &ExpConfig, methods: &[&'static str]) -> Result<Vec<
     Ok(cells)
 }
 
+/// Workflow labels present in the cells, in first-appearance order
+/// (the synthetic pair, or just "trace" for an ingested CSV).
+fn labels(cells: &[Cell]) -> Vec<&'static str> {
+    let mut out = Vec::new();
+    for c in cells {
+        if !out.contains(&c.workflow) {
+            out.push(c.workflow);
+        }
+    }
+    out
+}
+
 /// Extended Fig 6: adds the Witt LR related-work baselines and the
 /// dynamic-k KS+ variant (future work) to the paper's method set.
 pub fn run_extended(cfg: &ExpConfig) -> Result<ExpOutput> {
@@ -74,7 +84,7 @@ pub fn run_extended(cfg: &ExpConfig) -> Result<ExpOutput> {
     let cells = collect_methods(cfg, &methods)?;
     let mut text = String::new();
     let mut json_rows = Vec::new();
-    for wf_name in ["eager", "sarek"] {
+    for wf_name in labels(&cells) {
         let mut table = report::Table::new(&["method", "train%", "wastage GBs", "failures"]);
         for &frac in &cfg.train_fracs {
             for &method in &methods {
@@ -107,7 +117,7 @@ pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
     let mut text = String::new();
     let mut json_rows = Vec::new();
 
-    for wf_name in ["eager", "sarek"] {
+    for wf_name in labels(&cells) {
         let mut table = report::Table::new(&["method", "train%", "wastage GBs", "failures"]);
         for &frac in &cfg.train_fracs {
             for method in paper_methods() {
@@ -206,5 +216,26 @@ mod tests {
         assert!(out.text.contains("Fig 6 (eager)"));
         assert!(out.text.contains("ksplus"));
         assert!(out.json.get("fig6").is_some());
+    }
+
+    #[test]
+    fn trace_csv_drives_fig6() {
+        let cfg = ExpConfig {
+            trace_csv: Some(
+                concat!(
+                    env!("CARGO_MANIFEST_DIR"),
+                    "/../golden/traces/nfcore_rnaseq_sample.csv"
+                )
+                .into(),
+            ),
+            ..tiny_cfg()
+        };
+        let out = run(&cfg).unwrap();
+        assert!(out.text.contains("Fig 6 (trace)"), "{}", out.text);
+        assert!(!out.text.contains("sarek"));
+        let cells = collect(&cfg).unwrap();
+        // 1 trace x 1 frac x 6 methods.
+        assert_eq!(cells.len(), 6);
+        assert!(cells.iter().all(|c| c.workflow == "trace"));
     }
 }

@@ -3,8 +3,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::{evaluate_method, report, ExpConfig, ExpOutput};
-use crate::trace::workflow::Workflow;
+use crate::experiments::{eval_traces, evaluate_method, report, ExpConfig, ExpOutput};
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -12,8 +11,7 @@ pub const K_RANGE: std::ops::RangeInclusive<usize> = 2..=10;
 
 pub fn collect(cfg: &ExpConfig) -> Result<Vec<(&'static str, usize, Vec<f64>)>> {
     let mut out = Vec::new();
-    for wf in [Workflow::eager(), Workflow::sarek()] {
-        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+    for (wf, trace, label) in eval_traces(cfg)? {
         for k in K_RANGE {
             let mut wastage = Vec::with_capacity(cfg.seeds.len());
             for &seed in &cfg.seeds {
@@ -21,7 +19,7 @@ pub fn collect(cfg: &ExpConfig) -> Result<Vec<(&'static str, usize, Vec<f64>)>> 
                     evaluate_method("ksplus", k, cfg.capacity_gb, &wf, &trace, 0.5, seed)?;
                 wastage.push(r.total_wastage_gbs());
             }
-            out.push((wf.name, k, wastage));
+            out.push((label, k, wastage));
         }
     }
     Ok(out)
@@ -31,7 +29,13 @@ pub fn run(cfg: &ExpConfig) -> Result<ExpOutput> {
     let series = collect(cfg)?;
     let mut text = String::new();
     let mut json_rows = Vec::new();
-    for wf_name in ["eager", "sarek"] {
+    let mut labels: Vec<&'static str> = Vec::new();
+    for (label, _, _) in &series {
+        if !labels.contains(label) {
+            labels.push(label);
+        }
+    }
+    for wf_name in labels {
         let mut table = report::Table::new(&["k", "wastage GBs"]);
         let rows: Vec<_> = series.iter().filter(|(w, _, _)| *w == wf_name).collect();
         for (_, k, wastage) in &rows {
@@ -76,5 +80,25 @@ mod tests {
         let out = run(&cfg).unwrap();
         assert!(out.text.contains("Fig 7 (eager)"));
         assert!(out.text.contains("Fig 7 (sarek)"));
+    }
+
+    #[test]
+    fn trace_csv_drives_fig7() {
+        let cfg = ExpConfig {
+            seeds: vec![1],
+            trace_csv: Some(
+                concat!(
+                    env!("CARGO_MANIFEST_DIR"),
+                    "/../golden/traces/nfcore_rnaseq_sample.csv"
+                )
+                .into(),
+            ),
+            ..Default::default()
+        };
+        let series = collect(&cfg).unwrap();
+        assert_eq!(series.len(), K_RANGE.count());
+        assert!(series.iter().all(|(w, _, _)| *w == "trace"));
+        let out = run(&cfg).unwrap();
+        assert!(out.text.contains("Fig 7 (trace)"));
     }
 }

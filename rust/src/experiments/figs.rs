@@ -221,11 +221,12 @@ pub fn fig4(cfg: &ExpConfig) -> Result<ExpOutput> {
 }
 
 /// Fig 5: workflow overview — instances and peak statistics per task.
+/// Under `--trace` the table describes the ingested CSV instead of the
+/// synthetic workflows (no paper reference value in that case).
 pub fn fig5(cfg: &ExpConfig) -> Result<ExpOutput> {
     let mut text = String::new();
     let mut json_rows = Vec::new();
-    for wf in [Workflow::eager(), Workflow::sarek()] {
-        let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+    for (_wf, trace, label) in crate::experiments::eval_traces(cfg)? {
         let mut table =
             report::Table::new(&["task", "instances", "mean peak", "median", "max"]);
         for s in summarize(&trace) {
@@ -237,18 +238,22 @@ pub fn fig5(cfg: &ExpConfig) -> Result<ExpOutput> {
                 report::f(s.max_peak_gb),
             ]);
             json_rows.push(Json::obj(vec![
-                ("workflow", wf.name.into()),
+                ("workflow", label.into()),
                 ("task", s.task.clone().into()),
                 ("instances", s.instances.into()),
                 ("mean_peak_gb", s.mean_peak_gb.into()),
             ]));
         }
-        text.push_str(&table.render(&format!("Fig 5 ({})", wf.name)));
+        text.push_str(&table.render(&format!("Fig 5 ({label})")));
+        let paper = match label {
+            "eager" => " (paper: 2.31 GB)",
+            "sarek" => " (paper: 1.67 GB)",
+            _ => "",
+        };
         text.push_str(&format!(
-            "  {} instances total, workflow mean peak {:.2} GB (paper: {})\n\n",
+            "  {} instances total, workflow mean peak {:.2} GB{paper}\n\n",
             trace.total_instances(),
             trace.mean_peak(),
-            if wf.name == "eager" { "2.31 GB" } else { "1.67 GB" }
         ));
     }
     Ok(ExpOutput { text, json: Json::obj(vec![("fig5", Json::Arr(json_rows))]) })

@@ -124,6 +124,14 @@ pub struct LoadGenConfig {
     /// front end's default). A squeeze run sets 1 so the queue cap
     /// actually binds.
     pub dispatch_threads: usize,
+    /// Drive the request stream from a scenario spec (`name=...,
+    /// param=...`, see `scenario::ScenarioSpec`) instead of the plain
+    /// workflow mix: every client replays its own seeded slice of the
+    /// perturbed stream — plan, walk the OOM/retry loop through the
+    /// `failure` op, observe the finished execution — so the same
+    /// perturbations behind the offline wastage matrix exercise the
+    /// serving hot path end to end. In-process serving only.
+    pub scenario: Option<String>,
 }
 
 impl Default for LoadGenConfig {
@@ -144,6 +152,7 @@ impl Default for LoadGenConfig {
             chaos_faults: None,
             max_queue_depth: 0,
             dispatch_threads: 0,
+            scenario: None,
         }
     }
 }
@@ -192,6 +201,10 @@ pub struct LoadGenReport {
     /// Circuit-breaker openings across all clients. Nonzero means some
     /// client judged the server down and started failing fast.
     pub circuit_opens: u64,
+    /// Simulated OOM failures the scenario stream's retry loops hit
+    /// against the served plans (0 for the plain plan/observe mix, which
+    /// never replays executions against its plans).
+    pub failures: u64,
 }
 
 impl LoadGenReport {
@@ -230,6 +243,7 @@ impl LoadGenReport {
             ("retries", (self.retries as usize).into()),
             ("reconnects", (self.reconnects as usize).into()),
             ("circuit_opens", (self.circuit_opens as usize).into()),
+            ("failures", (self.failures as usize).into()),
         ])
     }
 }
@@ -338,6 +352,143 @@ fn start_eventloop(_client: Client, _cfg: ServerConfig) -> Result<ServeHandle> {
     anyhow::bail!("the event-loop server needs epoll/kqueue; use --server threaded here")
 }
 
+/// Scenario-driven load (`--scenario`): train the pool from the stream's
+/// own training split, then have every client replay a seeded slice of
+/// the perturbed stream against the live coordinator — plan, walk the
+/// OOM/retry loop through `report_failure`, and (at `observe_frac`) feed
+/// the finished execution back as an `observe`. The loadgen bridge of
+/// the scenario engine: retry storms and drift become live `failure` and
+/// retraining traffic instead of offline matrix rows.
+fn run_scenario_load(cfg: &LoadGenConfig, spec_str: &str) -> Result<LoadGenReport> {
+    use crate::scenario::stream::ScenarioStream;
+    use crate::scenario::ScenarioSpec;
+
+    anyhow::ensure!(
+        cfg.server == ServeMode::InProcess,
+        "--scenario drives the in-process client; drop --server"
+    );
+    anyhow::ensure!(
+        cfg.chaos_kills == 0 && cfg.chaos_faults.is_none() && cfg.max_queue_depth == 0,
+        "--scenario does not compose with the chaos/overload knobs"
+    );
+    let mut spec = ScenarioSpec::parse(spec_str)
+        .with_context(|| format!("parsing --scenario '{spec_str}'"))?;
+    let per_client = cfg.requests.div_ceil(cfg.clients);
+    // Each client replays its own slice; sizing the spec to the slice
+    // keeps time-positional perturbations (drift's `at`) at the same
+    // fraction of every client's stream.
+    spec.n = per_client;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            k: cfg.k,
+            shards: cfg.shards,
+            batch_delay: Duration::ZERO,
+            default_policy: cfg.policy,
+            ..Default::default()
+        },
+        cfg.spec.clone(),
+    )
+    .context("start coordinator")?;
+    let client = coord.client();
+    // One training pass from the base spec's split; the per-client
+    // streams only supply test-side traffic.
+    let probe = ScenarioStream::new(&spec)?;
+    for tt in probe.training() {
+        client.train(&tt.task, tt.executions.clone());
+    }
+    let observe_frac = cfg.observe_frac;
+    let t0 = Instant::now();
+    let mut handles: Vec<std::thread::JoinHandle<Result<(u64, u64, u64)>>> =
+        Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let cl = coord.client();
+        let spec = ScenarioSpec { seed: spec.seed.wrapping_add(c as u64), ..spec.clone() };
+        handles.push(std::thread::spawn(move || {
+            let mut stream = ScenarioStream::new(&spec)?;
+            let mut e = crate::trace::Execution::new("", 0.0, 0.0, Vec::new());
+            let mut rng = Rng::new(0xBEEF ^ c as u64);
+            let mut invalid = 0u64;
+            let mut observes = 0u64;
+            let mut failures = 0u64;
+            for _ in 0..per_client {
+                stream.fill_next(&mut e);
+                let mut plan = cl.plan(&e.task, e.input_mb);
+                if !plan.is_valid() {
+                    invalid += 1;
+                    continue;
+                }
+                // The live analogue of the simulator's retry loop: every
+                // OOM goes back to the coordinator's failure op for a
+                // resized plan, up to the same retry budget.
+                let mut attempt = 0usize;
+                while let Some((t_fail, _used)) = plan.first_oom(&e) {
+                    failures += 1;
+                    attempt += 1;
+                    if attempt >= crate::sim::MAX_RETRIES {
+                        break;
+                    }
+                    plan = cl.report_failure_for(Some(e.task.as_str()), &plan, t_fail).plan;
+                    if !plan.is_valid() {
+                        invalid += 1;
+                        break;
+                    }
+                }
+                if observe_frac > 0.0 && rng.f64() < observe_frac {
+                    cl.observe(&e.task, e.clone());
+                    observes += 1;
+                }
+            }
+            Ok((invalid, observes, failures))
+        }));
+    }
+    let mut invalid = 0u64;
+    let mut observes = 0u64;
+    let mut failures = 0u64;
+    for h in handles {
+        let (i, o, f) =
+            h.join().map_err(|_| anyhow::anyhow!("scenario loadgen client panicked"))??;
+        invalid += i;
+        observes += o;
+        failures += f;
+    }
+    anyhow::ensure!(invalid == 0, "coordinator returned {invalid} invalid plans");
+    let served = (per_client * cfg.clients) as u64;
+    let elapsed = t0.elapsed().max(Duration::from_nanos(1));
+    let per_shard = client.shard_stats();
+    let stats = ServiceStats::merged(&per_shard);
+    anyhow::ensure!(
+        stats.observations == observes,
+        "coordinator lost observations: {} issued, {} recorded",
+        observes,
+        stats.observations
+    );
+    Ok(LoadGenReport {
+        shards: cfg.shards,
+        clients: cfg.clients,
+        policy: cfg.policy.name(),
+        server: cfg.server.name(),
+        wire: cfg.wire.name(),
+        pipeline: cfg.pipeline,
+        requests: served,
+        elapsed_s: elapsed.as_secs_f64(),
+        plans_per_s: served as f64 / elapsed.as_secs_f64(),
+        p50_us: stats.latency_percentile_us(50.0),
+        p99_us: stats.latency_percentile_us(99.0),
+        batches: stats.batches,
+        mean_batch_size: stats.mean_batch_size(),
+        observes,
+        observes_per_s: observes as f64 / elapsed.as_secs_f64(),
+        per_shard_requests: per_shard.iter().map(|s| s.requests).collect(),
+        chaos_kills: 0,
+        shed: 0,
+        queue_depth_max: 0,
+        retries: 0,
+        reconnects: 0,
+        circuit_opens: 0,
+        failures,
+    })
+}
+
 /// Train every task of the workflow, then hammer the coordinator from
 /// `clients` closed-loop threads and collect the merged service stats.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
@@ -348,6 +499,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         (0.0..=1.0).contains(&cfg.observe_frac),
         "observe_frac must be in [0, 1]"
     );
+    if let Some(spec_str) = &cfg.scenario {
+        return run_scenario_load(cfg, spec_str);
+    }
     anyhow::ensure!(
         cfg.chaos_kills == 0 || cfg.shards >= 2,
         "chaos kills need at least 2 shards (a lone shard has no standby to restore from)"
@@ -667,6 +821,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenReport> {
         retries: healing.retries,
         reconnects: healing.reconnects,
         circuit_opens: healing.circuit_opens,
+        failures: 0,
     })
 }
 
@@ -893,6 +1048,76 @@ mod tests {
         let j = r.to_json();
         assert!(j.get("reconnects").and_then(Json::as_usize).unwrap() > 0);
         assert!(j.get("retries").and_then(Json::as_usize).unwrap() > 0);
+    }
+
+    #[test]
+    fn scenario_loadgen_drives_retry_storms_through_the_live_service() {
+        // A hot storm (every execution spikes 4x) must surface as real
+        // `failure` traffic against the served plans; the observe mix
+        // keeps the no-lost-acks invariant in play at the same time.
+        let r = run(&LoadGenConfig {
+            clients: 2,
+            requests: 60,
+            observe_frac: 0.5,
+            scenario: Some(
+                "name=retry-storm,prob=0.8,factor=4.0,train-per-task=8,seed=3".into(),
+            ),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 60);
+        assert!(r.failures > 0, "a hot retry storm never OOMed: {r:?}");
+        assert!(r.observes > 0);
+        assert_eq!(r.server, "in-process");
+        let j = r.to_json();
+        assert_eq!(
+            j.get("failures").and_then(Json::as_usize),
+            Some(r.failures as usize)
+        );
+    }
+
+    #[test]
+    fn scenario_loadgen_baseline_mostly_fits() {
+        // The unperturbed stream against freshly trained models: far
+        // fewer failures per request than the storm, and a full request
+        // count either way.
+        let r = run(&LoadGenConfig {
+            clients: 2,
+            requests: 60,
+            scenario: Some("name=baseline,train-per-task=8,seed=3".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(r.requests, 60);
+        assert!(
+            r.failures < r.requests,
+            "baseline failed more often than it planned: {r:?}"
+        );
+        assert_eq!(r.observes, 0, "no observe mix requested");
+    }
+
+    #[test]
+    fn scenario_loadgen_rejects_bad_configs() {
+        // Unparseable spec.
+        assert!(run(&LoadGenConfig {
+            scenario: Some("name=unheard-of".into()),
+            ..Default::default()
+        })
+        .is_err());
+        // TCP front ends and chaos knobs do not compose with --scenario.
+        assert!(run(&LoadGenConfig {
+            scenario: Some("name=baseline".into()),
+            server: ServeMode::Threaded,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(run(&LoadGenConfig {
+            scenario: Some("name=baseline".into()),
+            shards: 2,
+            chaos_kills: 1,
+            ..Default::default()
+        })
+        .is_err());
     }
 
     #[test]

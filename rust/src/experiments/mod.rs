@@ -39,6 +39,9 @@ pub struct ExpConfig {
     pub trace_seed: u64,
     /// Target samples per trace (bounded by the wastage bucket N=512).
     pub target_samples: usize,
+    /// Ingested trace CSV (either supported header shape) to evaluate on
+    /// instead of the synthetic workflows (`repro experiment --trace`).
+    pub trace_csv: Option<std::path::PathBuf>,
 }
 
 impl Default for ExpConfig {
@@ -50,6 +53,7 @@ impl Default for ExpConfig {
             capacity_gb: 128.0,
             trace_seed: 42,
             target_samples: 200,
+            trace_csv: None,
         }
     }
 }
@@ -59,6 +63,31 @@ impl ExpConfig {
     pub fn quick() -> Self {
         ExpConfig { seeds: vec![1, 2, 3], ..Default::default() }
     }
+}
+
+/// The (workflow, trace, label) list an experiment evaluates: the two
+/// synthetic workflows by default, or the single ingested CSV when
+/// `--trace` is set. The workflow paired with an ingested trace only
+/// supplies developer limits for tasks it happens to know; everything
+/// else gets a data-driven limit from its training history.
+pub fn eval_traces(cfg: &ExpConfig) -> Result<Vec<(Workflow, WorkflowTrace, &'static str)>> {
+    if let Some(path) = &cfg.trace_csv {
+        let trace = crate::trace::load_csv_auto(path, "trace")?;
+        anyhow::ensure!(
+            trace.tasks.iter().any(|t| t.executions.len() >= 2),
+            "{}: no task has >= 2 executions, nothing to split into train/test",
+            path.display()
+        );
+        return Ok(vec![(Workflow::eager(), trace, "trace")]);
+    }
+    Ok([Workflow::eager(), Workflow::sarek()]
+        .into_iter()
+        .map(|wf| {
+            let trace = wf.generate(cfg.trace_seed, cfg.target_samples);
+            let name = wf.name;
+            (wf, trace, name)
+        })
+        .collect())
 }
 
 /// Build a trained predictor for `method` on `train`, honouring the
@@ -72,10 +101,14 @@ pub fn trained_predictor(
     train: &[Execution],
 ) -> Result<Box<dyn Predictor>> {
     let mut pred: Box<dyn Predictor> = if method == "default" {
+        // Tasks the workflow does not know (ingested traces, scenario
+        // streams) start with no registered limit; `DefaultLimits::train`
+        // then sizes one from the history (2x max observed peak), the way
+        // a user would after a first run.
         let limit = workflow
             .archetype(task)
             .map(|a| a.default_limit_gb)
-            .unwrap_or(4.0);
+            .unwrap_or(0.0);
         Box::new(predictor::DefaultLimits::with_limit(capacity, limit))
     } else {
         match predictor::by_name(method, k, capacity) {
@@ -186,6 +219,51 @@ mod tests {
         let trace = wf.generate(42, 60);
         let r = evaluate_method("default", 4, 128.0, &wf, &trace, 0.5, 1).unwrap();
         assert!(r.total_wastage_gbs() > 0.0);
+    }
+
+    #[test]
+    fn eval_traces_switches_between_synthetic_and_csv() {
+        let cfg = ExpConfig::quick();
+        let synth = eval_traces(&cfg).unwrap();
+        assert_eq!(synth.len(), 2);
+        assert_eq!(synth[0].2, "eager");
+        assert_eq!(synth[1].2, "sarek");
+
+        let csv = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../golden/traces/nfcore_rnaseq_sample.csv"
+        );
+        let cfg = ExpConfig { trace_csv: Some(csv.into()), ..ExpConfig::quick() };
+        let ingested = eval_traces(&cfg).unwrap();
+        assert_eq!(ingested.len(), 1);
+        assert_eq!(ingested[0].2, "trace");
+        assert_eq!(ingested[0].1.tasks.len(), 3);
+        // The ingested trace evaluates under every paper method,
+        // including `default` (data-driven limits for unknown tasks).
+        let (wf, trace, _) = &ingested[0];
+        for method in ["ksplus", "default"] {
+            let r = evaluate_method(method, 4, 128.0, wf, trace, 0.5, 1).unwrap();
+            assert_eq!(r.per_task.len(), 3, "{method}");
+        }
+
+        let cfg = ExpConfig {
+            trace_csv: Some("/nonexistent/x.csv".into()),
+            ..ExpConfig::quick()
+        };
+        assert!(eval_traces(&cfg).is_err());
+    }
+
+    #[test]
+    fn default_method_sizes_unknown_tasks_from_history() {
+        let wf = Workflow::eager();
+        let train = vec![
+            Execution::new("NOT_AN_ARCHETYPE", 10.0, 1.0, vec![1.0, 3.0]),
+            Execution::new("NOT_AN_ARCHETYPE", 12.0, 1.0, vec![2.0, 2.5]),
+        ];
+        let p = trained_predictor("default", 4, 128.0, &wf, "NOT_AN_ARCHETYPE", &train).unwrap();
+        let plan = p.plan(10.0);
+        // 2x the max observed peak (3.0), not a hard-coded constant.
+        assert!((plan.peaks[0] - 6.0).abs() < 1e-9, "{:?}", plan.peaks);
     }
 
     #[test]

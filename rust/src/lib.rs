@@ -32,6 +32,7 @@ pub mod metrics;
 pub mod predictor;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod segments;
 pub mod sim;
 pub mod trace;

@@ -7,6 +7,7 @@
 //!   simulate               cluster simulation with a chosen method
 //!   serve                  smoke-run the online coordinator
 //!   loadgen                closed-loop load test over shard counts
+//!   scenarios              perturbed-stream wastage matrix per policy
 //!   protocol-smoke         wire conformance check over live TCP (v1/v2)
 //!   record                 capture golden session traces from a live server
 //!   replay                 re-drive traces, assert bit-identical responses
@@ -43,6 +44,7 @@ fn main() {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
         "loadgen" => cmd_loadgen(rest),
+        "scenarios" => cmd_scenarios(rest),
         "protocol-smoke" => cmd_protocol_smoke(rest),
         "record" => cmd_record(rest),
         "replay" => cmd_replay(rest),
@@ -69,6 +71,7 @@ fn print_help() {
            simulate                       discrete-event cluster simulation\n\
            serve                          coordinator service smoke run\n\
            loadgen                        closed-loop coordinator load test\n\
+           scenarios                      perturbed-stream wastage matrix per policy\n\
            protocol-smoke                 wire conformance check over TCP (v1/v2)\n\
            record                         capture golden session traces\n\
            replay                         replay traces, assert bit-identity\n"
@@ -92,6 +95,7 @@ fn exp_config(a: &ksplus::util::cli::Args) -> Result<ExpConfig> {
         k: a.get_usize("k")?,
         capacity_gb: a.get_f64("capacity")?,
         trace_seed: a.get_u64("trace-seed")?,
+        trace_csv: a.get("trace").map(PathBuf::from),
         ..Default::default()
     })
 }
@@ -102,6 +106,12 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         .flag("k", "segment count for segment methods", Some("4"))
         .flag("capacity", "node memory capacity in GB", Some("128"))
         .flag("trace-seed", "trace generation seed", Some("42"))
+        .flag(
+            "trace",
+            "evaluate on this ingested CSV (either supported header shape) instead of \
+             the synthetic workflows",
+            None,
+        )
         .flag("out", "directory for JSON results", Some("results"));
     let a = cmd.parse(argv)?;
     let Some(id) = a.positional.first() else {
@@ -573,6 +583,13 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
          squeeze actually bind",
         Some("0"),
     )
+    .flag(
+        "scenario",
+        "drive the stream from a scenario spec (name=...,param=..., see docs/SCENARIOS.md) \
+         instead of the plain workflow mix; plans are replayed against the perturbed \
+         executions and OOMs become live failure/retry traffic (in-process server only)",
+        None,
+    )
     .flag("out", "write per-run JSON reports to this directory", None)
     .flag("bench-json", "write the sweep as machine-readable BENCH_hotpath.json here", None);
     let a = cmd.parse(argv)?;
@@ -600,7 +617,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
 
     println!(
         "== loadgen: {} clients, {} requests per run, observe-frac {}, policy {}, backend {}, \
-         server {}, wire {}, pipeline {}{}{}{} ==",
+         server {}, wire {}, pipeline {}{}{}{}{} ==",
         clients,
         requests,
         observe_frac,
@@ -622,6 +639,10 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             format!(", max-queue-depth {max_queue_depth}")
         } else {
             String::new()
+        },
+        match a.get("scenario") {
+            Some(s) => format!(", scenario {s}"),
+            None => String::new(),
         }
     );
     println!(
@@ -647,6 +668,7 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             chaos_faults: chaos_faults.clone(),
             max_queue_depth,
             dispatch_threads,
+            scenario: a.get("scenario").map(String::from),
         })?;
         let speedup = match baseline {
             None => {
@@ -667,6 +689,12 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             report.per_shard_requests,
             speedup
         );
+        if report.failures > 0 {
+            println!(
+                "        scenario: {} OOM failures replayed through the live failure/retry op",
+                report.failures
+            );
+        }
         if report.shed > 0 || report.retries > 0 || report.reconnects > 0 {
             println!(
                 "        robustness: shed {}, queue-depth max {}, retries {}, \
@@ -689,6 +717,192 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     if let Some(path) = a.get("bench-json") {
         experiments::loadgen::write_bench_json(Path::new(path), &reports)?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The scenario matrix: replay perturbed execution streams (heavy tails,
+/// concept drift, correlated groups, retry storms, stragglers) through
+/// the offline OOM/retry simulator under every serving policy, print the
+/// per-(scenario x policy) wastage/failure table, and merge it into
+/// `BENCH_scenarios.json`. `--thresholds` turns the table into a CI
+/// gate; `--dag` additionally replays bounded slices through the
+/// DAG-aware cluster scheduler so stragglers show up as makespan.
+fn cmd_scenarios(argv: &[String]) -> Result<()> {
+    use ksplus::scenario::{engine, presets, ScenarioSpec};
+    use ksplus::util::json::Json;
+
+    let cmd = Command::new(
+        "repro scenarios",
+        "Scenario engine: perturbed-stream wastage matrix per serving policy",
+    )
+    .bool_flag("matrix", "replay the six built-in scenarios under every policy")
+    .flag(
+        "scenario",
+        "replay a single spec (name=...,param=..., see docs/SCENARIOS.md) instead of \
+         the presets; the spec's own sizing wins unless --n is nonzero",
+        None,
+    )
+    .bool_flag("quick", "CI smoke sizing for the presets (400 executions per cell)")
+    .flag(
+        "n",
+        "executions per (scenario, policy) cell (0 = 40000, or 400 under --quick)",
+        Some("0"),
+    )
+    .flag(
+        "policies",
+        "comma-separated policies to replay (default: ksplus,witt-lr,tovar-ppm,\
+         ksegments,default-limits)",
+        None,
+    )
+    .flag("seed", "base stream seed for the presets", Some("42"))
+    .flag("workflow", "synthetic source workflow for the presets (eager or sarek)", Some("eager"))
+    .flag(
+        "trace",
+        "ingested CSV (either supported header shape) as the presets' base distribution \
+         instead of the synthetic workflow",
+        None,
+    )
+    .flag(
+        "bench-json",
+        "merge the matrix (and --figs output) into this machine-readable file",
+        Some("BENCH_scenarios.json"),
+    )
+    .flag(
+        "thresholds",
+        "gate the matrix against this thresholds file (schema \
+         ksplus-scenario-thresholds/v1); exits non-zero on any violation",
+        None,
+    )
+    .bool_flag(
+        "figs",
+        "also regenerate fig6/fig7/fig8 (3 seeds, honouring --trace) and merge their \
+         JSON under \"figures\"",
+    )
+    .bool_flag(
+        "dag",
+        "additionally replay a bounded slice of each synthetic scenario through the \
+         DAG-aware cluster scheduler and print stage makespans",
+    )
+    .flag("nodes", "DAG replay: cluster nodes", Some("4"))
+    .flag("dag-limit", "DAG replay: executions per (scenario, policy)", Some("400"));
+    let a = cmd.parse(argv)?;
+
+    let n_flag = a.get_usize("n")?;
+    let trace = a.get("trace").map(PathBuf::from);
+    let mut specs: Vec<ksplus::scenario::ScenarioSpec> = if let Some(s) = a.get("scenario") {
+        // A hand-written spec carries its own sizing; only an explicit
+        // --n overrides it.
+        let mut spec = ScenarioSpec::parse(s)?;
+        if n_flag > 0 {
+            spec.n = n_flag;
+        }
+        vec![spec]
+    } else if a.get_bool("matrix") {
+        let n = match n_flag {
+            0 if a.get_bool("quick") => engine::QUICK_N,
+            0 => engine::FULL_N,
+            n => n,
+        };
+        let seed = a.get_u64("seed")?;
+        let workflow = a.get("workflow").unwrap().to_string();
+        let specs: Vec<ScenarioSpec> = presets()
+            .into_iter()
+            .map(|s| ScenarioSpec {
+                n,
+                seed,
+                workflow: workflow.clone(),
+                trace: trace.clone(),
+                ..s
+            })
+            .collect();
+        for s in &specs {
+            s.validate()?;
+        }
+        specs
+    } else {
+        bail!("nothing to run: pass --matrix or --scenario <spec>\n\n{}", cmd.usage());
+    };
+
+    let policies: Vec<&str> = match a.get("policies") {
+        Some(list) => {
+            let ps: Vec<&str> =
+                list.split(',').map(str::trim).filter(|p| !p.is_empty()).collect();
+            for p in &ps {
+                if engine::method_for_policy(p).is_none() {
+                    bail!(
+                        "unknown policy '{p}' (valid: {})",
+                        engine::default_policies().join(", ")
+                    );
+                }
+            }
+            ps
+        }
+        None => engine::default_policies(),
+    };
+
+    let matrix = engine::run_matrix(&specs, &policies)?;
+    print!("{}", matrix.render("Scenario wastage matrix"));
+
+    // Optional figure reproductions ride along in the same document so
+    // one artifact holds the whole evaluation.
+    let mut figures: Vec<(String, Json)> = Vec::new();
+    if a.get_bool("figs") {
+        let cfg = ExpConfig {
+            seeds: vec![1, 2, 3],
+            trace_csv: trace.clone(),
+            ..Default::default()
+        };
+        for (key, out) in [
+            ("fig6", experiments::fig6::run(&cfg)?),
+            ("fig7", experiments::fig7::run(&cfg)?),
+            ("fig8", experiments::fig8::run(&cfg)?),
+        ] {
+            print!("{}", out.text);
+            figures.push((key.to_string(), out.json));
+        }
+    }
+
+    if a.get_bool("dag") {
+        let nodes = a.get_usize("nodes")?;
+        let limit = a.get_usize("dag-limit")?;
+        for spec in &specs {
+            if spec.trace.is_some() {
+                println!("dag: skipping '{}' (a trace CSV carries no DAG)", spec.name);
+                continue;
+            }
+            for policy in &policies {
+                let cluster =
+                    ClusterConfig { nodes, node_capacity_gb: spec.capacity_gb };
+                let r = engine::run_scenario_dag(spec, policy, &cluster, limit)?;
+                println!(
+                    "dag {:>11} / {:<14}: makespan {:>8.0} s, failures {:>4}, wastage {:>10.0} GBs",
+                    spec.name,
+                    policy,
+                    r.makespan_s,
+                    r.report.total_failures(),
+                    r.report.total_wastage_gbs()
+                );
+            }
+        }
+    }
+
+    let bench = PathBuf::from(a.get("bench-json").unwrap());
+    engine::write_bench_json(&bench, &matrix, figures)?;
+    println!("wrote {}", bench.display());
+
+    // The gate runs last so the artifact above reflects the failing run.
+    if let Some(path) = a.get("thresholds") {
+        let t = engine::Thresholds::load(Path::new(path))
+            .with_context(|| format!("loading thresholds {path}"))?;
+        let violations = t.check(&matrix);
+        if !violations.is_empty() {
+            for v in &violations {
+                eprintln!("THRESHOLD VIOLATION: {v}");
+            }
+            bail!("{} scenario threshold violation(s) against {path}", violations.len());
+        }
+        println!("thresholds OK ({path})");
     }
     Ok(())
 }

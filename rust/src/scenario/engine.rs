@@ -1,0 +1,738 @@
+//! Scenario replay engine: streams a [`ScenarioSpec`] through the
+//! OOM/retry simulator under each serving policy and aggregates the
+//! per-(scenario × policy) wastage/failure/retry matrix behind
+//! `repro scenarios --matrix`.
+//!
+//! Per policy the engine recreates the *identical* stream (a pure
+//! function of the spec), so the matrix is a paired comparison: every
+//! policy faces exactly the same million perturbed executions. Online
+//! retraining is part of the replay — each task keeps a sliding window of
+//! its observed executions and refits on a fixed occurrence schedule, so
+//! drift scenarios show the degrade-then-recover shape instead of a
+//! permanently broken model. The schedule depends only on the stream,
+//! never on plan quality, which keeps the pairing exact.
+//!
+//! Everything here is deterministic: `Matrix::fingerprint` (FNV-1a over
+//! the full-precision row text) is pinned by tests and printed by the
+//! CLI, so "same spec, same table" is checkable at a glance.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::stream::ScenarioStream;
+use super::ScenarioSpec;
+use crate::experiments::{report, trained_predictor};
+use crate::metrics::TaskOutcome;
+use crate::predictor::Predictor;
+use crate::sim;
+use crate::sim::cluster::{ClusterConfig, PredictorSource};
+use crate::sim::dag::{run_workflow_dag, DagResult};
+use crate::trace::workflow::Workflow;
+use crate::trace::{Execution, TaskTraces, WorkflowTrace};
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Serving policy → offline predictor method, in matrix column order.
+/// The names are the coordinator's `PredictorPolicy` wire names; the
+/// methods are `predictor::by_name` report names.
+pub const POLICY_METHODS: [(&str, &str); 5] = [
+    ("ksplus", "ksplus"),
+    ("witt-lr", "witt-lr-mean"),
+    ("tovar-ppm", "tovar-ppm"),
+    ("ksegments", "ksegments-selective"),
+    ("default-limits", "default"),
+];
+
+/// Executions per (scenario, policy) cell in full mode: 6 scenarios x
+/// 5 policies x 40k = 1.2 M replayed task executions per matrix run.
+pub const FULL_N: usize = 40_000;
+/// Reduced cell size for `--quick` (CI smoke).
+pub const QUICK_N: usize = 400;
+
+pub fn method_for_policy(policy: &str) -> Option<&'static str> {
+    POLICY_METHODS.iter().find(|(p, _)| *p == policy).map(|(_, m)| *m)
+}
+
+pub fn default_policies() -> Vec<&'static str> {
+    POLICY_METHODS.iter().map(|(p, _)| *p).collect()
+}
+
+/// One (scenario × policy) cell of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixRow {
+    pub scenario: String,
+    pub policy: String,
+    pub instances: usize,
+    /// Failed attempts (OOM kills) across all instances.
+    pub failures: usize,
+    /// Instances that exhausted the retry budget.
+    pub unfinished: usize,
+    pub wastage_gbs: f64,
+    pub alloc_gbs: f64,
+    pub used_gbs: f64,
+}
+
+impl MatrixRow {
+    fn new(scenario: String, policy: String) -> MatrixRow {
+        MatrixRow {
+            scenario,
+            policy,
+            instances: 0,
+            failures: 0,
+            unfinished: 0,
+            wastage_gbs: 0.0,
+            alloc_gbs: 0.0,
+            used_gbs: 0.0,
+        }
+    }
+
+    fn add(&mut self, o: &TaskOutcome) {
+        self.instances += 1;
+        self.failures += o.attempts - 1;
+        if !o.success {
+            self.unfinished += 1;
+        }
+        self.wastage_gbs += o.wastage_gbs;
+        self.alloc_gbs += o.alloc_gbs;
+        self.used_gbs += o.used_gbs;
+    }
+
+    pub fn failure_rate(&self) -> f64 {
+        self.failures as f64 / self.instances.max(1) as f64
+    }
+
+    pub fn unfinished_rate(&self) -> f64 {
+        self.unfinished as f64 / self.instances.max(1) as f64
+    }
+
+    pub fn wastage_per_task(&self) -> f64 {
+        self.wastage_gbs / self.instances.max(1) as f64
+    }
+
+    pub fn efficiency(&self) -> f64 {
+        if self.alloc_gbs <= 0.0 {
+            0.0
+        } else {
+            self.used_gbs / self.alloc_gbs
+        }
+    }
+
+    /// Full-precision row rendering ({:?} floats), the fingerprint input.
+    pub fn row_text(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{:?}|{:?}|{:?}",
+            self.scenario,
+            self.policy,
+            self.instances,
+            self.failures,
+            self.unfinished,
+            self.wastage_gbs,
+            self.alloc_gbs,
+            self.used_gbs
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.scenario.as_str().into()),
+            ("policy", self.policy.as_str().into()),
+            ("instances", self.instances.into()),
+            ("failures", self.failures.into()),
+            ("unfinished", self.unfinished.into()),
+            ("wastage_gbs", self.wastage_gbs.into()),
+            ("alloc_gbs", self.alloc_gbs.into()),
+            ("used_gbs", self.used_gbs.into()),
+            ("failure_rate", self.failure_rate().into()),
+            ("unfinished_rate", self.unfinished_rate().into()),
+        ])
+    }
+}
+
+/// Sliding window of the most recent executions of one task, backing the
+/// online refits. Seeded from the training tail so the first refit never
+/// trains on a near-empty window; thereafter the oldest slot is
+/// overwritten in place (`Execution::copy_from`, no reallocation).
+struct Ring {
+    buf: Vec<Execution>,
+    cap: usize,
+    next: usize,
+    /// Streamed executions pushed (excludes the training seed).
+    seen: usize,
+}
+
+impl Ring {
+    fn new(cap: usize, seed: &[Execution]) -> Ring {
+        let tail = seed.len().saturating_sub(cap);
+        Ring { buf: seed[tail..].to_vec(), cap, next: 0, seen: 0 }
+    }
+
+    fn push(&mut self, e: &Execution) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e.clone());
+        } else {
+            self.buf[self.next].copy_from(e);
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.seen += 1;
+    }
+
+    fn contents(&self) -> &[Execution] {
+        &self.buf
+    }
+}
+
+/// Replay one scenario under one policy. `on_outcome` (stream index,
+/// outcome) observes every simulated instance — the drift tests use it to
+/// window failure rates over time.
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    policy: &str,
+    mut on_outcome: Option<&mut dyn FnMut(usize, &TaskOutcome)>,
+) -> Result<MatrixRow> {
+    let Some(method) = method_for_policy(policy) else {
+        bail!(
+            "unknown policy '{policy}' (valid: {})",
+            default_policies().join(", ")
+        );
+    };
+    let mut stream = ScenarioStream::new(spec)?;
+    // The workflow only supplies per-task developer limits for the
+    // `default` method; trace tasks it does not know get a data-driven
+    // limit from their training history instead.
+    let wf = Workflow::by_name(&spec.workflow).unwrap_or_else(Workflow::eager);
+    let mut models: BTreeMap<String, (Box<dyn Predictor>, Ring)> = BTreeMap::new();
+    for tt in stream.training() {
+        let pred =
+            trained_predictor(method, spec.k, spec.capacity_gb, &wf, &tt.task, &tt.executions)?;
+        models.insert(tt.task.clone(), (pred, Ring::new(spec.window, &tt.executions)));
+    }
+
+    let mut row = MatrixRow::new(spec.name.clone(), policy.to_string());
+    let mut scratch = Execution::new("", 0.0, 0.0, Vec::new());
+    for i in 0..spec.n {
+        stream.fill_next(&mut scratch);
+        let Some((pred, ring)) = models.get_mut(&scratch.task) else {
+            bail!("stream produced task '{}' with no trained model", scratch.task);
+        };
+        let o = sim::run_task_outcome(pred.as_ref(), &scratch, sim::MAX_RETRIES);
+        row.add(&o);
+        if let Some(cb) = on_outcome.as_deref_mut() {
+            cb(i, &o);
+        }
+        if spec.retrain_every > 0 {
+            // The model observes what actually ran — including the
+            // perturbation — on a schedule that depends only on the
+            // stream, never on plan quality (keeps policies paired).
+            ring.push(&scratch);
+            if ring.seen % spec.retrain_every == 0 {
+                pred.train(ring.contents());
+            }
+        }
+    }
+    Ok(row)
+}
+
+/// The full wastage matrix: one row per (scenario × policy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: Vec<MatrixRow>,
+    pub total_replayed: usize,
+}
+
+impl Matrix {
+    /// FNV-1a over the full-precision row text: two runs of the same
+    /// seeded specs must print the same 16-hex-digit fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        let text: String =
+            self.rows.iter().map(|r| r.row_text() + "\n").collect();
+        fnv1a(&text)
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let mut t = report::Table::new(&[
+            "scenario",
+            "policy",
+            "tasks",
+            "failures",
+            "fail/task",
+            "unfinished",
+            "wastage-gbs",
+            "waste/task",
+            "efficiency",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.scenario.clone(),
+                r.policy.clone(),
+                r.instances.to_string(),
+                r.failures.to_string(),
+                report::f(r.failure_rate()),
+                r.unfinished.to_string(),
+                report::f(r.wastage_gbs),
+                report::f(r.wastage_per_task()),
+                report::f(r.efficiency()),
+            ]);
+        }
+        let mut out = t.render(title);
+        out.push_str(&format!(
+            "replayed {} task executions; fingerprint {:016x}\n",
+            self.total_replayed,
+            self.fingerprint()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rows", Json::Arr(self.rows.iter().map(MatrixRow::to_json).collect())),
+            ("total_replayed", self.total_replayed.into()),
+            ("fingerprint", format!("{:016x}", self.fingerprint()).into()),
+        ])
+    }
+}
+
+/// Replay every (scenario, policy) pair. Row order is specs-major, so
+/// the table groups a scenario's five policies together.
+pub fn run_matrix(specs: &[ScenarioSpec], policies: &[&str]) -> Result<Matrix> {
+    let mut rows = Vec::with_capacity(specs.len() * policies.len());
+    let mut total = 0usize;
+    for spec in specs {
+        for policy in policies {
+            let row = run_scenario(spec, policy, None)
+                .with_context(|| format!("scenario '{}' policy '{policy}'", spec.name))?;
+            total += row.instances;
+            rows.push(row);
+        }
+    }
+    Ok(Matrix { rows, total_replayed: total })
+}
+
+/// Write the matrix (and optional figure reproductions) into the
+/// machine-readable `BENCH_scenarios.json`. Merges into an existing
+/// schema-compatible document instead of clobbering: a full-mode matrix
+/// and a later `--figs` run land in the same file, and each `--figs` key
+/// only replaces its own slot.
+pub fn write_bench_json(
+    path: &Path,
+    matrix: &Matrix,
+    figures: Vec<(String, Json)>,
+) -> Result<()> {
+    const SCHEMA: &str = "ksplus-bench-scenarios/v1";
+    let mut doc = match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(existing) if existing.get("schema").and_then(Json::as_str) == Some(SCHEMA) => {
+            existing
+        }
+        _ => Json::obj(vec![("schema", SCHEMA.into())]),
+    };
+    if let Json::Obj(map) = &mut doc {
+        map.insert("source".to_string(), "repro-scenarios".into());
+        map.insert(
+            "matrix".to_string(),
+            Json::Arr(matrix.rows.iter().map(MatrixRow::to_json).collect()),
+        );
+        map.insert("total_replayed".to_string(), matrix.total_replayed.into());
+        map.insert(
+            "fingerprint".to_string(),
+            format!("{:016x}", matrix.fingerprint()).into(),
+        );
+        if !figures.is_empty() {
+            let figs = map.entry("figures".to_string()).or_insert_with(|| Json::obj(vec![]));
+            if !matches!(figs, Json::Obj(_)) {
+                *figs = Json::obj(vec![]);
+            }
+            if let Json::Obj(slots) = figs {
+                for (key, value) in figures {
+                    slots.insert(key, value);
+                }
+            }
+        }
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Regression gates for the CI smoke matrix: per-row caps on failure and
+/// unfinished rates. Override keys are `scenario/policy`, with
+/// `scenario/*` as a scenario-wide wildcard; everything else uses the
+/// defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Thresholds {
+    pub max_failure_rate: f64,
+    pub max_unfinished_rate: f64,
+    pub failure_overrides: BTreeMap<String, f64>,
+    pub unfinished_overrides: BTreeMap<String, f64>,
+}
+
+impl Thresholds {
+    pub fn load(path: &Path) -> Result<Thresholds> {
+        const SCHEMA: &str = "ksplus-scenario-thresholds/v1";
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+            bail!("{} is not a {SCHEMA} document", path.display());
+        }
+        let field = |key: &str| -> Result<f64> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{}: missing number '{key}'", path.display()))
+        };
+        let overrides = |key: &str| -> Result<BTreeMap<String, f64>> {
+            let mut out = BTreeMap::new();
+            if let Some(Json::Obj(map)) = doc.get(key) {
+                for (k, v) in map {
+                    let Some(x) = v.as_f64() else {
+                        bail!("{}: {key}.{k} is not a number", path.display());
+                    };
+                    out.insert(k.clone(), x);
+                }
+            }
+            Ok(out)
+        };
+        Ok(Thresholds {
+            max_failure_rate: field("max_failure_rate")?,
+            max_unfinished_rate: field("max_unfinished_rate")?,
+            failure_overrides: overrides("failure_overrides")?,
+            unfinished_overrides: overrides("unfinished_overrides")?,
+        })
+    }
+
+    fn cap(map: &BTreeMap<String, f64>, row: &MatrixRow, default: f64) -> f64 {
+        map.get(&format!("{}/{}", row.scenario, row.policy))
+            .or_else(|| map.get(&format!("{}/*", row.scenario)))
+            .copied()
+            .unwrap_or(default)
+    }
+
+    /// Every violated cap, as human-readable lines; empty == pass.
+    pub fn check(&self, matrix: &Matrix) -> Vec<String> {
+        let mut violations = Vec::new();
+        for r in &matrix.rows {
+            let fmax = Self::cap(&self.failure_overrides, r, self.max_failure_rate);
+            if r.failure_rate() > fmax {
+                violations.push(format!(
+                    "{}/{}: failure rate {:.3} exceeds cap {:.3}",
+                    r.scenario,
+                    r.policy,
+                    r.failure_rate(),
+                    fmax
+                ));
+            }
+            let umax = Self::cap(&self.unfinished_overrides, r, self.max_unfinished_rate);
+            if r.unfinished_rate() > umax {
+                violations.push(format!(
+                    "{}/{}: unfinished rate {:.3} exceeds cap {:.3}",
+                    r.scenario,
+                    r.policy,
+                    r.unfinished_rate(),
+                    umax
+                ));
+            }
+        }
+        violations
+    }
+}
+
+/// Replay a bounded slice of the scenario stream through the DAG-aware
+/// cluster scheduler (`--dag`): stragglers and storms become stage
+/// makespans, not just wastage. Synthetic sources only — an ingested CSV
+/// carries no DAG. Bounded because the DAG path materialises its trace.
+pub fn run_scenario_dag(
+    spec: &ScenarioSpec,
+    policy: &str,
+    cluster: &ClusterConfig,
+    limit: usize,
+) -> Result<DagResult> {
+    if spec.trace.is_some() {
+        bail!("scenario DAG replay needs a synthetic workflow (a trace CSV carries no DAG)");
+    }
+    let Some(method) = method_for_policy(policy) else {
+        bail!(
+            "unknown policy '{policy}' (valid: {})",
+            default_policies().join(", ")
+        );
+    };
+    let Some(wf) = Workflow::by_name(&spec.workflow) else {
+        bail!("unknown workflow '{}'", spec.workflow);
+    };
+    let mut stream = ScenarioStream::new(spec)?;
+    struct Src(BTreeMap<String, Box<dyn Predictor>>);
+    impl PredictorSource for Src {
+        fn get(&self, task: &str) -> Option<&dyn Predictor> {
+            self.0.get(task).map(|p| p.as_ref())
+        }
+    }
+    let mut preds = Src(BTreeMap::new());
+    let mut trace =
+        WorkflowTrace { name: format!("scenario-{}", spec.name), tasks: Vec::new() };
+    for tt in stream.training() {
+        preds.0.insert(
+            tt.task.clone(),
+            trained_predictor(method, spec.k, spec.capacity_gb, &wf, &tt.task, &tt.executions)?,
+        );
+        trace.tasks.push(TaskTraces { task: tt.task.clone(), executions: Vec::new() });
+    }
+    let n = limit.min(spec.n).max(1);
+    let mut scratch = Execution::new("", 0.0, 0.0, Vec::new());
+    for _ in 0..n {
+        stream.fill_next(&mut scratch);
+        if let Some(t) = trace.tasks.iter_mut().find(|t| t.task == scratch.task) {
+            t.executions.push(scratch.clone());
+        }
+    }
+    Ok(run_workflow_dag(cluster, &wf, &trace, &preds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    const GOLDEN_CSV: &str =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../golden/traces/nfcore_rnaseq_sample.csv");
+
+    #[test]
+    fn matrix_is_bit_identical_across_runs() {
+        let specs: Vec<ScenarioSpec> = presets()
+            .into_iter()
+            .map(|s| ScenarioSpec { n: 60, train_per_task: 12, ..s })
+            .collect();
+        let policies = ["ksplus", "default-limits"];
+        let a = run_matrix(&specs, &policies).unwrap();
+        let b = run_matrix(&specs, &policies).unwrap();
+        assert_eq!(a.rows, b.rows, "matrix rows not bit-identical");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.total_replayed, 6 * 2 * 60);
+        // A different seed moves the fingerprint.
+        let reseeded: Vec<ScenarioSpec> =
+            specs.iter().map(|s| ScenarioSpec { seed: s.seed + 1, ..s.clone() }).collect();
+        let c = run_matrix(&reseeded, &policies).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn matrix_covers_all_policies_and_renders() {
+        let spec = ScenarioSpec::parse("name=baseline,n=40,train-per-task=10").unwrap();
+        let policies = default_policies();
+        let m = run_matrix(&[spec], &policies).unwrap();
+        assert_eq!(m.rows.len(), 5);
+        let text = m.render("scenario matrix (test)");
+        for p in &policies {
+            assert!(text.contains(p), "rendered table missing policy {p}");
+        }
+        assert!(text.contains("fingerprint"));
+        let j = m.to_json();
+        assert_eq!(j.get("rows").and_then(Json::as_arr).map(|a| a.len()), Some(5));
+        assert_eq!(j.get("total_replayed").and_then(Json::as_usize), Some(200));
+    }
+
+    #[test]
+    fn unknown_policy_errors() {
+        let spec = ScenarioSpec::parse("name=baseline,n=10").unwrap();
+        assert!(run_scenario(&spec, "nope", None).is_err());
+    }
+
+    #[test]
+    fn trace_spec_replays_through_the_matrix() {
+        for policy in ["ksplus", "default-limits"] {
+            let spec = ScenarioSpec::parse(&format!(
+                "name=heavy-tail,n=50,trace={GOLDEN_CSV}"
+            ))
+            .unwrap();
+            let row = run_scenario(&spec, policy, None).unwrap();
+            assert_eq!(row.instances, 50, "{policy}");
+            assert!(row.used_gbs > 0.0, "{policy}");
+            // Bit-identical on a second run, trace source included.
+            let again = run_scenario(&spec, policy, None).unwrap();
+            assert_eq!(row, again, "{policy}");
+        }
+    }
+
+    #[test]
+    fn drift_degrades_then_recovers() {
+        // KS+ with online refits: failures per task must jump right after
+        // the concept shift and come back down once the sliding window is
+        // dominated by post-drift executions.
+        let spec = ScenarioSpec::parse(
+            "name=drift,n=2700,at=0.45,factor=2.0,retrain-every=16,window=96,seed=5",
+        )
+        .unwrap();
+        let (mut pre, mut mid, mut late) = (0usize, 0usize, 0usize);
+        let mut cb = |i: usize, o: &TaskOutcome| {
+            let f = o.attempts - 1;
+            match i {
+                810..=1214 => pre += f,
+                1215..=1619 => mid += f,
+                2295..=2699 => late += f,
+                _ => {}
+            }
+        };
+        let row = run_scenario(&spec, "ksplus", Some(&mut cb)).unwrap();
+        assert_eq!(row.instances, 2700);
+        let w = 405.0;
+        let (pre, mid, late) = (pre as f64 / w, mid as f64 / w, late as f64 / w);
+        assert!(
+            mid > pre + 0.2,
+            "drift did not degrade failures: pre {pre:.3}/task, mid {mid:.3}/task"
+        );
+        assert!(
+            late < mid * 0.75,
+            "model did not recover after retraining: mid {mid:.3}/task, late {late:.3}/task"
+        );
+    }
+
+    #[test]
+    fn retraining_off_means_no_recovery_schedule() {
+        // retrain-every=0 runs the same stream with frozen models; the
+        // run must still complete and stay deterministic.
+        let spec =
+            ScenarioSpec::parse("name=drift,n=300,retrain-every=0,train-per-task=12").unwrap();
+        let a = run_scenario(&spec, "ksplus", None).unwrap();
+        let b = run_scenario(&spec, "ksplus", None).unwrap();
+        assert_eq!(a, b);
+        assert!(a.failures > 0, "a frozen model should be failing post-drift");
+    }
+
+    #[test]
+    fn stragglers_stretch_dag_makespan() {
+        let cluster = ClusterConfig { nodes: 2, node_capacity_gb: 128.0 };
+        let base = ScenarioSpec::parse("name=baseline,n=400,train-per-task=12,seed=8").unwrap();
+        let slow = ScenarioSpec::parse(
+            "name=stragglers,n=400,prob=0.3,slow=4.0,train-per-task=12,seed=8",
+        )
+        .unwrap();
+        let b = run_scenario_dag(&base, "ksplus", &cluster, 180).unwrap();
+        let s = run_scenario_dag(&slow, "ksplus", &cluster, 180).unwrap();
+        assert!(
+            s.makespan_s > b.makespan_s * 1.2,
+            "stragglers {:.1}s vs baseline {:.1}s",
+            s.makespan_s,
+            b.makespan_s
+        );
+        assert!(!s.stages.is_empty());
+    }
+
+    #[test]
+    fn dag_replay_rejects_trace_sources() {
+        let spec =
+            ScenarioSpec::parse(&format!("name=baseline,trace={GOLDEN_CSV}")).unwrap();
+        let cluster = ClusterConfig { nodes: 2, node_capacity_gb: 128.0 };
+        assert!(run_scenario_dag(&spec, "ksplus", &cluster, 50).is_err());
+    }
+
+    fn row(scenario: &str, policy: &str, failures: usize, unfinished: usize) -> MatrixRow {
+        MatrixRow {
+            scenario: scenario.into(),
+            policy: policy.into(),
+            instances: 100,
+            failures,
+            unfinished,
+            wastage_gbs: 10.0,
+            alloc_gbs: 100.0,
+            used_gbs: 50.0,
+        }
+    }
+
+    #[test]
+    fn thresholds_cap_lookup_and_check() {
+        let mut t = Thresholds {
+            max_failure_rate: 0.5,
+            max_unfinished_rate: 0.02,
+            failure_overrides: BTreeMap::new(),
+            unfinished_overrides: BTreeMap::new(),
+        };
+        t.failure_overrides.insert("drift/*".into(), 3.0);
+        t.failure_overrides.insert("drift/ksplus".into(), 1.0);
+        let m = Matrix {
+            rows: vec![
+                row("baseline", "ksplus", 10, 0),    // 0.1 <= 0.5: ok
+                row("baseline", "tovar-ppm", 80, 0), // 0.8 > 0.5: violation
+                row("drift", "ksplus", 150, 0),      // 1.5 > 1.0 (exact key)
+                row("drift", "witt-lr", 150, 0),     // 1.5 <= 3.0 (wildcard)
+                row("heavy-tail", "ksplus", 0, 5),   // 0.05 > 0.02 unfinished
+            ],
+            total_replayed: 500,
+        };
+        let v = t.check(&m);
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert!(v[0].contains("baseline/tovar-ppm"), "{v:?}");
+        assert!(v[1].contains("drift/ksplus"), "{v:?}");
+        assert!(v[2].contains("heavy-tail/ksplus"), "{v:?}");
+    }
+
+    #[test]
+    fn thresholds_load_parses_and_rejects_bad_schema() {
+        let dir = std::env::temp_dir();
+        let good = dir.join(format!("ksplus_thresh_{}.json", std::process::id()));
+        std::fs::write(
+            &good,
+            r#"{"schema":"ksplus-scenario-thresholds/v1","max_failure_rate":2.0,
+                "max_unfinished_rate":0.02,
+                "failure_overrides":{"drift/*":6.0},
+                "unfinished_overrides":{"heavy-tail/*":0.05}}"#,
+        )
+        .unwrap();
+        let t = Thresholds::load(&good).unwrap();
+        std::fs::remove_file(&good).ok();
+        assert!((t.max_failure_rate - 2.0).abs() < 1e-12);
+        assert_eq!(t.failure_overrides.get("drift/*"), Some(&6.0));
+        assert_eq!(t.unfinished_overrides.get("heavy-tail/*"), Some(&0.05));
+
+        let bad = dir.join(format!("ksplus_thresh_bad_{}.json", std::process::id()));
+        std::fs::write(&bad, r#"{"schema":"something-else/v1","max_failure_rate":2.0}"#)
+            .unwrap();
+        assert!(Thresholds::load(&bad).is_err());
+        std::fs::remove_file(&bad).ok();
+        assert!(Thresholds::load(Path::new("/nonexistent/t.json")).is_err());
+    }
+
+    #[test]
+    fn committed_thresholds_file_loads() {
+        let t = Thresholds::load(Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../golden/scenarios/thresholds.json"
+        )))
+        .unwrap();
+        assert!(t.max_failure_rate > 0.0);
+        assert!(t.max_unfinished_rate > 0.0);
+    }
+
+    #[test]
+    fn bench_json_merges_matrix_and_figures() {
+        let spec = ScenarioSpec::parse("name=baseline,n=30,train-per-task=10").unwrap();
+        let m = run_matrix(&[spec], &["ksplus"]).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("ksplus_bench_scenarios_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        write_bench_json(&path, &m, vec![]).unwrap();
+        // Second write adds a figure slot without clobbering the matrix.
+        write_bench_json(
+            &path,
+            &m,
+            vec![("fig6".to_string(), Json::obj(vec![("ok", 1.0.into())]))],
+        )
+        .unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(
+            back.get("schema").and_then(Json::as_str),
+            Some("ksplus-bench-scenarios/v1")
+        );
+        assert_eq!(back.get("matrix").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert_eq!(back.get("total_replayed").and_then(Json::as_usize), Some(30));
+        assert!(back.get("figures").and_then(|f| f.get("fig6")).is_some());
+        assert_eq!(
+            back.get("fingerprint").and_then(Json::as_str),
+            Some(format!("{:016x}", m.fingerprint()).as_str())
+        );
+    }
+}

@@ -1,0 +1,336 @@
+//! Declarative scenario engine: stress evaluation beyond the paper.
+//!
+//! A scenario turns a base execution source — a named synthetic workflow
+//! or an ingested nf-core long-form CSV — into a lazy, seeded stream of
+//! perturbed task executions, and replays it through the offline OOM/retry
+//! simulator under every serving policy. The result is the per-
+//! (scenario × policy) wastage/failure/retry matrix behind
+//! `repro scenarios --matrix` and `BENCH_scenarios.json`.
+//!
+//! Each scenario is a [`ScenarioSpec`]: a pure value parsed from the same
+//! `name=...,param=...` grammar as `coordinator::faults::FaultSpec`, and
+//! every random draw comes from RNG streams forked from `seed` — the same
+//! spec always reproduces a bit-identical stream and matrix row.
+//!
+//! Built-in scenarios ([`SCENARIO_NAMES`]):
+//!
+//! - `baseline`      — the unperturbed source distribution;
+//! - `heavy-tail`    — Pareto-tailed input sizes (shape `alpha`, capped);
+//! - `drift`         — concept drift: after `at`·n executions the
+//!   memory-per-input relationship shifts by `factor` (models must
+//!   degrade, then recover as they retrain on the post-drift window);
+//! - `correlated`    — co-located groups of `group` consecutive
+//!   executions share one input-size multiplier (lognormal `rho`);
+//! - `retry-storm`   — a `prob` fraction of executions spike to
+//!   `factor`× memory, driving clustered OOM/retry loops;
+//! - `stragglers`    — a `prob` fraction of executions run `slow`×
+//!   longer, stretching DAG stage makespans (see `engine::run_scenario_dag`).
+
+pub mod engine;
+pub mod stream;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// The built-in scenario names, in matrix order.
+pub const SCENARIO_NAMES: [&str; 6] =
+    ["baseline", "heavy-tail", "drift", "correlated", "retry-storm", "stragglers"];
+
+/// Which perturbation a scenario applies to its base stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Baseline,
+    HeavyTail,
+    Drift,
+    Correlated,
+    RetryStorm,
+    Stragglers,
+}
+
+impl Kind {
+    pub fn from_name(name: &str) -> Option<Kind> {
+        Some(match name {
+            "baseline" => Kind::Baseline,
+            "heavy-tail" => Kind::HeavyTail,
+            "drift" => Kind::Drift,
+            "correlated" => Kind::Correlated,
+            "retry-storm" => Kind::RetryStorm,
+            "stragglers" => Kind::Stragglers,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Baseline => "baseline",
+            Kind::HeavyTail => "heavy-tail",
+            Kind::Drift => "drift",
+            Kind::Correlated => "correlated",
+            Kind::RetryStorm => "retry-storm",
+            Kind::Stragglers => "stragglers",
+        }
+    }
+}
+
+/// A fully-specified, seeded scenario. Everything the stream and the
+/// replay engine do is a pure function of this value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario name (one of [`SCENARIO_NAMES`]).
+    pub name: String,
+    /// Synthetic source workflow (`eager` or `sarek`); ignored when
+    /// `trace` is set.
+    pub workflow: String,
+    /// Ingested trace CSV (either supported header shape) as the base
+    /// distribution instead of the synthetic workflow.
+    pub trace: Option<PathBuf>,
+    /// Executions to replay per (scenario, policy).
+    pub n: usize,
+    pub seed: u64,
+    /// Target samples per synthetic execution (bounded by the wastage
+    /// bucket, as everywhere else).
+    pub target_samples: usize,
+    /// Synthetic training executions per task.
+    pub train_per_task: usize,
+    /// Train fraction for trace sources (`split_train_test`).
+    pub train_frac: f64,
+    /// Refit a task's predictor after this many stream occurrences of the
+    /// task (0 disables online retraining).
+    pub retrain_every: usize,
+    /// Sliding-window size (executions) the refits train on.
+    pub window: usize,
+    /// Segment count for the segment-based policies.
+    pub k: usize,
+    /// Node capacity, GB.
+    pub capacity_gb: f64,
+    /// heavy-tail: Pareto shape (> 1 keeps the mean finite).
+    pub alpha: f64,
+    /// drift: fraction of the run after which the shift applies, (0,1).
+    pub at: f64,
+    /// drift / retry-storm: memory multiplier.
+    pub factor: f64,
+    /// correlated: consecutive executions per co-located group.
+    pub group: usize,
+    /// correlated: lognormal sigma of the shared group multiplier.
+    pub rho: f64,
+    /// retry-storm / stragglers: per-execution perturbation probability.
+    pub prob: f64,
+    /// stragglers: duration multiplier for perturbed executions.
+    pub slow: f64,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "baseline".to_string(),
+            workflow: "eager".to_string(),
+            trace: None,
+            n: 10_000,
+            seed: 42,
+            target_samples: 200,
+            train_per_task: 48,
+            train_frac: 0.5,
+            retrain_every: 32,
+            window: 96,
+            k: 4,
+            capacity_gb: 128.0,
+            alpha: 1.3,
+            at: 0.5,
+            factor: 2.0,
+            group: 8,
+            rho: 0.4,
+            prob: 0.05,
+            slow: 4.0,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse the `name=...,param=...` grammar (same shape as
+    /// `coordinator::faults::FaultSpec::parse`). `name` is required;
+    /// every other key overrides a default.
+    pub fn parse(s: &str) -> Result<ScenarioSpec> {
+        fn num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+            match value.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("scenario spec: {key}={value} is not a valid number"),
+            }
+        }
+        let mut spec = ScenarioSpec::default();
+        let mut saw_name = false;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("scenario spec: '{part}' is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "name" => {
+                    if Kind::from_name(value).is_none() {
+                        bail!(
+                            "unknown scenario '{value}' (valid: {})",
+                            SCENARIO_NAMES.join(", ")
+                        );
+                    }
+                    spec.name = value.to_string();
+                    saw_name = true;
+                }
+                "workflow" => spec.workflow = value.to_string(),
+                "trace" => spec.trace = Some(PathBuf::from(value)),
+                "n" => spec.n = num(key, value)?,
+                "seed" => spec.seed = num(key, value)?,
+                "target-samples" => spec.target_samples = num(key, value)?,
+                "train-per-task" => spec.train_per_task = num(key, value)?,
+                "train-frac" => spec.train_frac = num(key, value)?,
+                "retrain-every" => spec.retrain_every = num(key, value)?,
+                "window" => spec.window = num(key, value)?,
+                "k" => spec.k = num(key, value)?,
+                "capacity" => spec.capacity_gb = num(key, value)?,
+                "alpha" => spec.alpha = num(key, value)?,
+                "at" => spec.at = num(key, value)?,
+                "factor" => spec.factor = num(key, value)?,
+                "group" => spec.group = num(key, value)?,
+                "rho" => spec.rho = num(key, value)?,
+                "prob" => spec.prob = num(key, value)?,
+                "slow" => spec.slow = num(key, value)?,
+                _ => bail!(
+                    "scenario spec: unknown key '{key}' (valid: name, workflow, trace, n, \
+                     seed, target-samples, train-per-task, train-frac, retrain-every, \
+                     window, k, capacity, alpha, at, factor, group, rho, prob, slow)"
+                ),
+            }
+        }
+        if !saw_name {
+            bail!("scenario spec needs name=<scenario> (valid: {})", SCENARIO_NAMES.join(", "));
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check every parameter; `parse` calls this, and programmatic
+    /// constructors should too.
+    pub fn validate(&self) -> Result<()> {
+        if Kind::from_name(&self.name).is_none() {
+            bail!("unknown scenario '{}'", self.name);
+        }
+        if self.trace.is_none() && crate::trace::workflow::Workflow::by_name(&self.workflow).is_none()
+        {
+            bail!("unknown workflow '{}' (valid: eager, sarek)", self.workflow);
+        }
+        if self.n == 0 {
+            bail!("scenario spec: n must be >= 1");
+        }
+        if self.target_samples == 0 {
+            bail!("scenario spec: target-samples must be >= 1");
+        }
+        if self.train_per_task < 2 {
+            bail!("scenario spec: train-per-task must be >= 2");
+        }
+        if !(self.train_frac > 0.0 && self.train_frac < 1.0) {
+            bail!("scenario spec: train-frac must be in (0,1)");
+        }
+        if self.window < 2 {
+            bail!("scenario spec: window must be >= 2");
+        }
+        if self.k == 0 {
+            bail!("scenario spec: k must be >= 1");
+        }
+        if self.capacity_gb <= 0.0 {
+            bail!("scenario spec: capacity must be positive");
+        }
+        if self.alpha <= 1.0 {
+            bail!("scenario spec: alpha must be > 1 (finite-mean Pareto)");
+        }
+        if !(self.at > 0.0 && self.at < 1.0) {
+            bail!("scenario spec: at must be in (0,1)");
+        }
+        if self.factor <= 0.0 {
+            bail!("scenario spec: factor must be positive");
+        }
+        if self.group == 0 {
+            bail!("scenario spec: group must be >= 1");
+        }
+        if self.rho < 0.0 {
+            bail!("scenario spec: rho must be >= 0");
+        }
+        if !(0.0..=1.0).contains(&self.prob) {
+            bail!("scenario spec: prob must be in [0,1]");
+        }
+        if self.slow < 1.0 {
+            bail!("scenario spec: slow must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// The perturbation kind; valid after `validate`.
+    pub fn kind(&self) -> Kind {
+        Kind::from_name(&self.name).expect("validated scenario name")
+    }
+}
+
+/// The six built-in scenarios with default parameters.
+pub fn presets() -> Vec<ScenarioSpec> {
+    SCENARIO_NAMES
+        .iter()
+        .map(|n| ScenarioSpec { name: n.to_string(), ..ScenarioSpec::default() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let s = ScenarioSpec::parse("name=heavy-tail, alpha=1.7, n=500, seed=7").unwrap();
+        assert_eq!(s.kind(), Kind::HeavyTail);
+        assert_eq!(s.n, 500);
+        assert_eq!(s.seed, 7);
+        assert!((s.alpha - 1.7).abs() < 1e-12);
+        // Untouched keys keep their defaults.
+        assert_eq!(s.workflow, "eager");
+        assert_eq!(s.window, 96);
+    }
+
+    #[test]
+    fn parse_accepts_every_preset() {
+        for name in SCENARIO_NAMES {
+            let s = ScenarioSpec::parse(&format!("name={name}")).unwrap();
+            assert_eq!(s.name, name);
+            assert_eq!(s.kind().name(), name);
+        }
+        assert_eq!(presets().len(), SCENARIO_NAMES.len());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "",                              // missing name
+            "n=100",                         // missing name
+            "name=unheard-of",               // unknown scenario
+            "name=drift,at=1.5",             // at out of range
+            "name=drift,bogus=1",            // unknown key
+            "name=drift,at",                 // not key=value
+            "name=heavy-tail,alpha=0.5",     // infinite-mean tail
+            "name=heavy-tail,alpha=abc",     // not a number
+            "name=baseline,workflow=nope",   // unknown workflow
+            "name=retry-storm,prob=1.5",     // prob out of range
+            "name=stragglers,slow=0.5",      // speed-up is not a straggler
+            "name=baseline,n=0",             // empty run
+            "name=baseline,train-frac=1.0",  // no test set
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn trace_spec_skips_workflow_validation() {
+        let s = ScenarioSpec::parse("name=baseline,trace=some/file.csv,workflow=whatever")
+            .unwrap();
+        assert_eq!(s.trace.as_deref(), Some(std::path::Path::new("some/file.csv")));
+    }
+}

@@ -1,0 +1,366 @@
+//! Lazy, seeded execution stream for a scenario.
+//!
+//! `ScenarioStream` is the allocation-lean producer behind million-task
+//! replay: `fill_next` writes each execution into a caller-provided
+//! `Execution` (task string and sample buffer reused via
+//! `Execution::copy_from` / `Archetype::generate_with_input_into`), so
+//! nothing per-item is materialised — there is never a million-element
+//! Vec anywhere.
+//!
+//! Determinism: the stream RNG, the training-set RNG, and (for trace
+//! sources) the split RNG are forked from `spec.seed` with distinct tags.
+//! The stream is a pure function of the spec — the engine recreates an
+//! identical stream per policy, giving the paired evaluation the paper
+//! uses.
+//!
+//! Training sets deliberately come from the *unperturbed* base
+//! distribution (synthetic: fresh per-task generations; trace: the train
+//! side of `split_train_test`): heavy tails, drift, and storms are things
+//! that happen to a deployed model, not things it gets to train on
+//! up front. Online retraining (the engine's sliding window) is how a
+//! model catches up.
+
+use anyhow::{bail, Context, Result};
+
+use super::{Kind, ScenarioSpec};
+use crate::trace::synth::{Archetype, GenScratch};
+use crate::trace::workflow::Workflow;
+use crate::trace::{split_train_test, Execution, TaskTraces};
+use crate::util::rng::Rng;
+
+/// Fork tags separating the independent RNG streams of a scenario.
+const TAG_STREAM: u64 = 0x5ce0;
+const TAG_TRAIN: u64 = 0x7a19;
+
+/// Cap on the heavy-tail input multiplier: keeps the stressed tail inside
+/// "very painful" rather than "physically impossible" (a handful of
+/// unfinishable giants would otherwise dominate every wastage column).
+pub const HEAVY_TAIL_CAP: f64 = 20.0;
+
+enum Source {
+    /// Count-weighted synthetic archetypes of a named workflow.
+    Synth { archetypes: Vec<Archetype>, cum: Vec<usize>, total: usize, scratch: GenScratch },
+    /// Size-weighted resampling of an ingested trace's test split.
+    Trace { tasks: Vec<TaskTraces>, cum: Vec<usize>, total: usize },
+}
+
+pub struct ScenarioStream {
+    spec: ScenarioSpec,
+    kind: Kind,
+    source: Source,
+    rng: Rng,
+    /// Next stream position (0-based).
+    i: usize,
+    /// First position the drift shift applies to.
+    drift_at: usize,
+    group_left: usize,
+    group_mult: f64,
+    training: Vec<TaskTraces>,
+}
+
+impl ScenarioStream {
+    pub fn new(spec: &ScenarioSpec) -> Result<ScenarioStream> {
+        spec.validate()?;
+        let kind = spec.kind();
+        let mut training = Vec::new();
+        let source = if let Some(path) = &spec.trace {
+            let full = crate::trace::load_csv_auto(path, "scenario-trace")
+                .with_context(|| format!("scenario trace {}", path.display()))?;
+            let mut tasks = Vec::new();
+            for (idx, t) in full.tasks.iter().enumerate() {
+                if t.executions.len() < 2 {
+                    eprintln!(
+                        "warning: scenario trace task '{}' has {} execution(s); \
+                         needs >= 2 for a train/test split, skipping",
+                        t.task,
+                        t.executions.len()
+                    );
+                    continue;
+                }
+                let mut split_rng = Rng::new(spec.seed).fork(TAG_TRAIN).fork(idx as u64 + 1);
+                let (train, test) = split_train_test(t, spec.train_frac, &mut split_rng);
+                training.push(TaskTraces { task: t.task.clone(), executions: train });
+                tasks.push(TaskTraces { task: t.task.clone(), executions: test });
+            }
+            let mut cum = Vec::with_capacity(tasks.len());
+            let mut total = 0usize;
+            for t in &tasks {
+                total += t.executions.len();
+                cum.push(total);
+            }
+            if total == 0 {
+                bail!(
+                    "scenario trace {} has no task with >= 2 executions",
+                    path.display()
+                );
+            }
+            Source::Trace { tasks, cum, total }
+        } else {
+            let Some(wf) = Workflow::by_name(&spec.workflow) else {
+                bail!("unknown workflow '{}'", spec.workflow);
+            };
+            let mut archetypes = Vec::with_capacity(wf.counts.len());
+            let mut cum = Vec::with_capacity(wf.counts.len());
+            let mut total = 0usize;
+            for (idx, (name, count)) in wf.counts.iter().enumerate() {
+                let Some(a) = wf.archetype(name) else {
+                    bail!("workflow '{}' counts task '{name}' with no archetype", wf.name);
+                };
+                let mut train_rng = Rng::new(spec.seed).fork(TAG_TRAIN).fork(idx as u64 + 1);
+                training.push(a.generate_many(
+                    &mut train_rng,
+                    spec.train_per_task,
+                    spec.target_samples,
+                ));
+                archetypes.push(a.clone());
+                total += count;
+                cum.push(total);
+            }
+            Source::Synth { archetypes, cum, total, scratch: GenScratch::default() }
+        };
+        Ok(ScenarioStream {
+            kind,
+            source,
+            rng: Rng::new(spec.seed).fork(TAG_STREAM),
+            i: 0,
+            drift_at: (spec.at * spec.n as f64) as usize,
+            group_left: 0,
+            group_mult: 1.0,
+            training,
+            spec: spec.clone(),
+        })
+    }
+
+    /// The per-task training sets (unperturbed base distribution).
+    pub fn training(&self) -> &[TaskTraces] {
+        &self.training
+    }
+
+    /// Stream position: executions produced so far.
+    pub fn position(&self) -> usize {
+        self.i
+    }
+
+    /// Produce the next execution into `out`, reusing its buffers.
+    pub fn fill_next(&mut self, out: &mut Execution) {
+        let i = self.i;
+        self.i += 1;
+        let rng = &mut self.rng;
+        match &mut self.source {
+            Source::Synth { archetypes, cum, total, scratch } => {
+                let pick = rng.below(*total);
+                let a_idx = cum.partition_point(|&c| c <= pick);
+                let a = &archetypes[a_idx];
+                // Base input draw; heavy-tail swaps the lognormal for a
+                // Pareto tail around the same median.
+                let mut input = match self.kind {
+                    Kind::HeavyTail => {
+                        a.input_median_mb * rng.pareto(1.0, self.spec.alpha, HEAVY_TAIL_CAP)
+                    }
+                    _ => a.input_median_mb * rng.log_normal(0.0, a.input_sigma),
+                };
+                if self.kind == Kind::Correlated {
+                    if self.group_left == 0 {
+                        self.group_mult = rng.log_normal(0.0, self.spec.rho);
+                        self.group_left = self.spec.group;
+                    }
+                    self.group_left -= 1;
+                    input *= self.group_mult;
+                }
+                a.generate_with_input_into(rng, input, self.spec.target_samples, scratch, out);
+            }
+            Source::Trace { tasks, cum, total } => {
+                let pick = rng.below(*total);
+                let t_idx = cum.partition_point(|&c| c <= pick);
+                let tt = &tasks[t_idx];
+                let e_idx = rng.below(tt.executions.len());
+                out.copy_from(&tt.executions[e_idx]);
+                // Input multipliers on a recorded execution scale memory
+                // proportionally (linear memory-vs-input assumption, the
+                // same one the paper's predictors make).
+                let mut m = 1.0;
+                if self.kind == Kind::HeavyTail {
+                    m = rng.pareto(1.0, self.spec.alpha, HEAVY_TAIL_CAP);
+                }
+                if self.kind == Kind::Correlated {
+                    if self.group_left == 0 {
+                        self.group_mult = rng.log_normal(0.0, self.spec.rho);
+                        self.group_left = self.spec.group;
+                    }
+                    self.group_left -= 1;
+                    m *= self.group_mult;
+                }
+                if m != 1.0 {
+                    out.input_mb *= m;
+                    for s in &mut out.samples {
+                        *s *= m;
+                    }
+                }
+            }
+        }
+        // Perturbations shared by both sources.
+        match self.kind {
+            Kind::Drift => {
+                if i >= self.drift_at {
+                    // Concept shift: memory per unit input jumps by
+                    // `factor`; the input itself is unchanged, so
+                    // input-aware models are genuinely wrong until they
+                    // retrain on post-drift observations.
+                    for s in &mut out.samples {
+                        *s *= self.spec.factor;
+                    }
+                }
+            }
+            Kind::RetryStorm => {
+                if self.rng.f64() < self.spec.prob {
+                    for s in &mut out.samples {
+                        *s *= self.spec.factor;
+                    }
+                }
+            }
+            Kind::Stragglers => {
+                if self.rng.f64() < self.spec.prob {
+                    out.dt *= self.spec.slow;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::SCENARIO_NAMES;
+
+    const GOLDEN_CSV: &str =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../golden/traces/nfcore_rnaseq_sample.csv");
+
+    fn collect(spec: &ScenarioSpec, n: usize) -> Vec<Execution> {
+        let mut s = ScenarioStream::new(spec).unwrap();
+        let mut out = Execution::new("", 0.0, 0.0, Vec::new());
+        (0..n)
+            .map(|_| {
+                s.fill_next(&mut out);
+                out.clone()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_transform_is_seed_deterministic() {
+        for name in SCENARIO_NAMES {
+            let spec = ScenarioSpec::parse(&format!("name={name},n=80,seed=11")).unwrap();
+            let a = collect(&spec, 80);
+            let b = collect(&spec, 80);
+            assert_eq!(a, b, "stream of '{name}' not bit-identical across runs");
+            let other = ScenarioSpec { seed: 12, ..spec.clone() };
+            let c = collect(&other, 80);
+            assert_ne!(a, c, "stream of '{name}' ignores the seed");
+        }
+    }
+
+    #[test]
+    fn every_trace_transform_is_seed_deterministic() {
+        for name in SCENARIO_NAMES {
+            let spec = ScenarioSpec::parse(&format!(
+                "name={name},n=60,seed=3,trace={GOLDEN_CSV}"
+            ))
+            .unwrap();
+            let a = collect(&spec, 60);
+            let b = collect(&spec, 60);
+            assert_eq!(a, b, "trace stream of '{name}' not bit-identical");
+            // Trace tasks come from the CSV, not the synthetic workflow.
+            assert!(a.iter().all(|e| {
+                ["FASTQC", "STAR_ALIGN", "SALMON_QUANT"].contains(&e.task.as_str())
+            }));
+        }
+    }
+
+    #[test]
+    fn transforms_actually_perturb() {
+        let base = ScenarioSpec::parse("name=baseline,n=80,seed=11").unwrap();
+        let a = collect(&base, 80);
+        for name in SCENARIO_NAMES.iter().skip(1) {
+            let spec = ScenarioSpec::parse(&format!("name={name},n=80,seed=11")).unwrap();
+            let c = collect(&spec, 80);
+            assert_ne!(a, c, "'{name}' left the stream untouched");
+        }
+    }
+
+    #[test]
+    fn drift_scales_exactly_after_the_shift_point() {
+        // Drift consumes no extra RNG draws, so item-for-item the drift
+        // stream equals baseline before `at`*n and baseline x factor
+        // after.
+        let base = ScenarioSpec::parse("name=baseline,n=40,seed=5").unwrap();
+        let drift = ScenarioSpec::parse("name=drift,n=40,seed=5,at=0.5,factor=2.0").unwrap();
+        let a = collect(&base, 40);
+        let d = collect(&drift, 40);
+        for i in 0..40 {
+            if i < 20 {
+                assert_eq!(a[i], d[i], "pre-drift item {i} differs");
+            } else {
+                assert_eq!(a[i].task, d[i].task);
+                assert_eq!(a[i].input_mb, d[i].input_mb, "drift must not touch inputs");
+                for (x, y) in a[i].samples.iter().zip(&d[i].samples) {
+                    assert_eq!(*x * 2.0, *y, "post-drift item {i} not exactly doubled");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tail_stretches_inputs() {
+        let base = ScenarioSpec::parse("name=baseline,n=300,seed=9").unwrap();
+        let tail = ScenarioSpec::parse("name=heavy-tail,n=300,seed=9,alpha=1.3").unwrap();
+        let max_in = |v: &[Execution]| v.iter().map(|e| e.input_mb).fold(0.0, f64::max);
+        let b = max_in(&collect(&base, 300));
+        let t = max_in(&collect(&tail, 300));
+        assert!(t > b * 1.5, "heavy tail max input {t} vs baseline {b}");
+    }
+
+    #[test]
+    fn stragglers_stretch_durations_only() {
+        let spec =
+            ScenarioSpec::parse("name=stragglers,n=400,seed=2,prob=0.2,slow=4.0").unwrap();
+        let base = ScenarioSpec::parse("name=baseline,n=400,seed=2").unwrap();
+        let total = |v: &[Execution]| v.iter().map(|e| e.duration()).sum::<f64>();
+        let s = collect(&spec, 400);
+        let b = collect(&base, 400);
+        assert!(total(&s) > total(&b) * 1.2, "{} vs {}", total(&s), total(&b));
+        // Peaks are untouched by stragglers on matching draws: compare
+        // only sample counts (dt changes, samples don't).
+        assert!(s.iter().zip(&b).take(1).all(|(x, y)| x.samples == y.samples));
+    }
+
+    #[test]
+    fn training_sets_are_per_task_and_deterministic() {
+        let spec = ScenarioSpec::parse("name=baseline,train-per-task=10").unwrap();
+        let s1 = ScenarioStream::new(&spec).unwrap();
+        let s2 = ScenarioStream::new(&spec).unwrap();
+        assert_eq!(s1.training().len(), 9); // eager task count
+        for (a, b) in s1.training().iter().zip(s2.training()) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.executions, b.executions);
+            assert_eq!(a.executions.len(), 10);
+        }
+    }
+
+    #[test]
+    fn trace_stream_training_uses_split() {
+        let spec =
+            ScenarioSpec::parse(&format!("name=baseline,trace={GOLDEN_CSV}")).unwrap();
+        let s = ScenarioStream::new(&spec).unwrap();
+        // 4 instances per task, train-frac 0.5 -> 2 train per task.
+        assert_eq!(s.training().len(), 3);
+        assert!(s.training().iter().all(|t| t.executions.len() == 2));
+    }
+
+    #[test]
+    fn missing_trace_file_errors() {
+        let spec =
+            ScenarioSpec::parse("name=baseline,trace=/nonexistent/nope.csv").unwrap();
+        assert!(ScenarioStream::new(&spec).is_err());
+    }
+}

@@ -86,6 +86,51 @@ pub fn run_task(pred: &dyn Predictor, e: &Execution, max_retries: usize) -> (Tas
     (outcome, attempts)
 }
 
+/// Allocation-lean variant of [`run_task`] for high-volume replay (the
+/// scenario engine streams millions of executions through this): the
+/// identical OOM/retry loop and accounting, but no per-attempt log and no
+/// plan clones beyond what the retry strategy itself returns.
+pub fn run_task_outcome(pred: &dyn Predictor, e: &Execution, max_retries: usize) -> TaskOutcome {
+    let mut plan = pred.plan(e.input_mb).clamped(pred.capacity());
+    let mut wastage = 0.0;
+    let mut success = false;
+    let mut alloc_gbs = 0.0;
+    let mut attempts = 0usize;
+
+    for attempt_no in 0..=max_retries {
+        attempts += 1;
+        match plan.first_oom(e) {
+            None => {
+                wastage += plan.wastage_gbs(e);
+                alloc_gbs = plan.alloc_gbs(e.duration());
+                success = true;
+                break;
+            }
+            Some((t_fail, _used)) => {
+                wastage += plan.alloc_gbs(t_fail.max(e.dt));
+                if attempt_no == max_retries {
+                    break;
+                }
+                plan = if attempt_no + 1 == max_retries {
+                    StepPlan::flat(pred.capacity())
+                } else {
+                    pred.on_failure(&plan, t_fail, attempt_no + 1).clamped(pred.capacity())
+                };
+            }
+        }
+    }
+
+    TaskOutcome {
+        task: e.task.clone(),
+        input_mb: e.input_mb,
+        attempts,
+        success,
+        wastage_gbs: wastage,
+        alloc_gbs,
+        used_gbs: e.used_gbs(),
+    }
+}
+
 /// Run a whole test set through a trained predictor.
 pub fn run_all(pred: &dyn Predictor, test: &[Execution]) -> Vec<TaskOutcome> {
     test.iter().map(|e| run_task(pred, e, MAX_RETRIES).0).collect()
@@ -215,6 +260,21 @@ mod tests {
             let last = attempts.last().unwrap();
             let expect = last.plan.wastage_gbs(&e);
             assert!((last.wastage_gbs - expect).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_run_task_outcome_matches_run_task() {
+        // The lean variant must be observationally identical, including
+        // never-succeeding executions that exhaust the retry budget.
+        run_prop("run_task_outcome_parity", 80, |rng| {
+            let n = 1 + rng.below(60);
+            let samples: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 200.0)).collect();
+            let e = exec(samples, rng.uniform(0.5, 2.0));
+            let limit = rng.uniform(0.5, 8.0);
+            let p = DefaultLimits::with_limit(128.0, limit);
+            assert_eq!(run_task_outcome(&p, &e, MAX_RETRIES), run_task(&p, &e, MAX_RETRIES).0);
+            assert_eq!(run_task_outcome(&p, &e, 2), run_task(&p, &e, 2).0);
         });
     }
 

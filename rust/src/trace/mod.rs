@@ -38,6 +38,18 @@ impl Execution {
         Execution { task: task.into(), input_mb, dt, samples }
     }
 
+    /// Copy `src` into `self`, reusing the existing `task`/`samples`
+    /// buffers. High-volume replay loops (the scenario engine) use this
+    /// so a million copies allocate nothing after warm-up.
+    pub fn copy_from(&mut self, src: &Execution) {
+        self.task.clear();
+        self.task.push_str(&src.task);
+        self.input_mb = src.input_mb;
+        self.dt = src.dt;
+        self.samples.clear();
+        self.samples.extend_from_slice(&src.samples);
+    }
+
     /// Wall-clock duration covered by the samples.
     pub fn duration(&self) -> f64 {
         self.samples.len() as f64 * self.dt
@@ -128,6 +140,30 @@ pub fn split_train_test(
     (train, test)
 }
 
+/// Load a trace CSV of either supported shape, sniffing the header line:
+/// the nf-core long-form monitoring export (`nextflow::HEADER`) or the
+/// crate's internal per-execution format (`io::CSV_HEADER`).
+pub fn load_csv_auto(path: &std::path::Path, name: &str) -> anyhow::Result<WorkflowTrace> {
+    use anyhow::Context;
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut first = String::new();
+    std::io::BufRead::read_line(&mut std::io::BufReader::new(f), &mut first)
+        .with_context(|| format!("read {}", path.display()))?;
+    let first = first.trim();
+    if first == nextflow::HEADER {
+        nextflow::read_long_csv(path, name)
+    } else if first == io::CSV_HEADER {
+        io::read_csv(path, name)
+    } else {
+        anyhow::bail!(
+            "unrecognised trace header in {}: '{first}' (expected '{}' or '{}')",
+            path.display(),
+            nextflow::HEADER,
+            io::CSV_HEADER
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +200,27 @@ mod tests {
         assert_eq!(e.peak(), 0.0);
         assert_eq!(e.usage_at(3.0), 0.0);
         assert_eq!(e.used_gbs(), 0.0);
+    }
+
+    #[test]
+    fn copy_from_reuses_buffers() {
+        let src = Execution::new("bwa", 8000.0, 0.5, vec![1.0, 2.0, 3.0]);
+        let mut dst = Execution::new("longer-name-than-bwa", 1.0, 1.0, vec![9.0; 64]);
+        let cap_before = dst.samples.capacity();
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.samples.capacity(), cap_before, "copy must reuse the sample buffer");
+    }
+
+    #[test]
+    fn load_csv_auto_rejects_unknown_header() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ksplus_auto_hdr_{}.csv", std::process::id()));
+        std::fs::write(&path, "who,knows\n1,2\n").unwrap();
+        let err = load_csv_auto(&path, "x").unwrap_err().to_string();
+        assert!(err.contains("unrecognised trace header"), "{err}");
+        std::fs::remove_file(&path).ok();
+        assert!(load_csv_auto(std::path::Path::new("/nonexistent/x.csv"), "x").is_err());
     }
 
     #[test]

@@ -25,6 +25,14 @@ use crate::trace::{Execution, TaskTraces, WorkflowTrace};
 
 pub const HEADER: &str = "process,task_id,input_bytes,timestamp_ms,rss_bytes";
 
+/// Upper bound on the resampled grid per task instance. A long-duration
+/// instance whose median gap is tiny (one dense burst of samples inside
+/// hours of sparse monitoring) would otherwise ask for a multi-million-
+/// sample grid — `Vec::with_capacity` on an adversarial CSV could OOM the
+/// importer. Past the cap, `dt` is coarsened to span the instance in
+/// exactly this many samples.
+pub const MAX_RESAMPLE: usize = 100_000;
+
 #[derive(Debug, Clone, Copy)]
 struct Row {
     input_bytes: f64,
@@ -96,10 +104,19 @@ fn rows_to_execution(process: &str, rows: &[Row]) -> Result<Execution> {
     let mut gaps: Vec<f64> = rows.windows(2).map(|w| w[1].t_ms - w[0].t_ms).collect();
     gaps.retain(|g| *g > 0.0);
     anyhow::ensure!(!gaps.is_empty(), "all timestamps identical for {process}");
-    let dt_ms = crate::util::stats::median(&gaps);
+    let mut dt_ms = crate::util::stats::median(&gaps);
     let t0 = rows[0].t_ms;
     let t_end = rows[rows.len() - 1].t_ms;
-    let n = ((t_end - t0) / dt_ms).round() as usize + 1;
+    let mut n = (((t_end - t0) / dt_ms).round() as usize).saturating_add(1);
+    let capped = n > MAX_RESAMPLE;
+    if capped {
+        dt_ms = (t_end - t0) / (MAX_RESAMPLE - 1) as f64;
+        n = MAX_RESAMPLE;
+        eprintln!(
+            "warning: {process}: resample grid capped at {MAX_RESAMPLE} samples \
+             (dt coarsened to {dt_ms:.1} ms)"
+        );
+    }
     // Nearest-earlier sample for each grid point (step interpolation,
     // matching how RSS monitoring behaves).
     let mut samples = Vec::with_capacity(n);
@@ -110,6 +127,13 @@ fn rows_to_execution(process: &str, rows: &[Row]) -> Result<Execution> {
             j += 1;
         }
         samples.push(rows[j].rss_bytes / 1e9);
+    }
+    if capped {
+        // The coarsened dt is no longer an exact multiple of the row
+        // gaps, so the last grid point can land a rounding error short of
+        // `t_end` and miss the final observation; pin it (the grid ends
+        // at `t_end` by construction).
+        *samples.last_mut().unwrap() = rows[rows.len() - 1].rss_bytes / 1e9;
     }
     Ok(Execution::new(process, input_mb, dt_ms / 1e3, samples))
 }
@@ -166,6 +190,25 @@ mod tests {
         assert_eq!(e.samples.len(), 7);
         assert_eq!(e.samples[3], 3.0); // hole
         assert_eq!(e.samples[6], 4.0);
+    }
+
+    #[test]
+    fn caps_adversarial_resample_grid() {
+        // Three samples 1 ms apart, then one a billion ms later: median
+        // gap 1 ms over a 1e9 ms span would resample to a billion-sample
+        // grid (and OOM in `Vec::with_capacity`) without the cap.
+        let src = csv("T,1,1e9,0,1e9\nT,1,1e9,1,1e9\nT,1,1e9,2,2e9\nT,1,1e9,1000000000,3e9\n");
+        let t = parse_long_csv(Cursor::new(src), "x").unwrap();
+        let e = &t.task("T").unwrap().executions[0];
+        assert_eq!(e.samples.len(), MAX_RESAMPLE);
+        assert!((e.peak() - 3.0).abs() < 1e-9);
+        // dt was coarsened to span/(MAX_RESAMPLE-1), converted to seconds.
+        let want_dt = 1e9 / (MAX_RESAMPLE - 1) as f64 / 1e3;
+        assert!((e.dt - want_dt).abs() < 1e-9, "dt {} want {want_dt}", e.dt);
+        // Step interpolation still holds: last grid point sees the final
+        // sample, earlier points the dense prefix.
+        assert_eq!(*e.samples.last().unwrap(), 3.0);
+        assert_eq!(e.samples[0], 1.0);
     }
 
     #[test]

@@ -72,6 +72,13 @@ impl Phase {
     }
 }
 
+/// Reusable per-phase scratch for `Archetype::generate_with_input_into`.
+#[derive(Debug, Default)]
+pub struct GenScratch {
+    durs: Vec<f64>,
+    levels: Vec<f64>,
+}
+
 /// A task type's generative model.
 #[derive(Debug, Clone)]
 pub struct Archetype {
@@ -126,6 +133,26 @@ impl Archetype {
         input_mb: f64,
         target_samples: usize,
     ) -> Execution {
+        let mut scratch = GenScratch::default();
+        let mut out = Execution::new("", 0.0, 0.0, Vec::new());
+        self.generate_with_input_into(rng, input_mb, target_samples, &mut scratch, &mut out);
+        out
+    }
+
+    /// Buffer-reusing variant of [`Archetype::generate_with_input`] for
+    /// streaming callers (the scenario engine): the execution is written
+    /// into `out` and per-phase scratch lives in `scratch`, so repeated
+    /// calls allocate nothing after warm-up. Draws the RNG in exactly the
+    /// same order as the allocating API (which is a thin wrapper), so
+    /// both produce bit-identical traces from the same RNG state.
+    pub fn generate_with_input_into(
+        &self,
+        rng: &mut Rng,
+        input_mb: f64,
+        target_samples: usize,
+        scratch: &mut GenScratch,
+        out: &mut Execution,
+    ) {
         // Global timing factor: lognormal plus rare strong outliers.
         let mut speed = rng.log_normal(0.0, self.slowdown_sigma);
         if rng.f64() < self.outlier_prob {
@@ -133,8 +160,10 @@ impl Archetype {
         }
 
         // Realised per-phase durations and levels.
-        let mut durs = Vec::with_capacity(self.phases.len());
-        let mut levels = Vec::with_capacity(self.phases.len());
+        let durs = &mut scratch.durs;
+        let levels = &mut scratch.levels;
+        durs.clear();
+        levels.clear();
         for p in &self.phases {
             let d = (p.dur_base_s + p.dur_per_mb * input_mb)
                 * speed
@@ -147,7 +176,13 @@ impl Archetype {
         let dt = (total / target_samples as f64).max(0.25);
         let n = (total / dt).ceil() as usize;
 
-        let mut samples = Vec::with_capacity(n);
+        out.task.clear();
+        out.task.push_str(self.name);
+        out.input_mb = input_mb;
+        out.dt = dt;
+        let samples = &mut out.samples;
+        samples.clear();
+        samples.reserve(n);
         let mut phase_idx = 0usize;
         let mut phase_start = 0.0f64;
         for i in 0..n {
@@ -181,7 +216,6 @@ impl Archetype {
                 samples[last_phase_peak_idx] = peak_level;
             }
         }
-        Execution::new(self.name, input_mb, dt, samples)
     }
 
     /// Generate `n` executions as a `TaskTraces`.
@@ -444,6 +478,22 @@ mod tests {
         let below: usize = e.samples.iter().filter(|&&s| s < 0.7 * peak).count();
         let frac = below as f64 / e.samples.len() as f64;
         assert!(frac > 0.6, "low-plateau fraction {frac}");
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_api() {
+        // Same RNG state, dirty reused buffers: bit-identical output.
+        let a = bwa();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let mut scratch = GenScratch::default();
+        let mut out = Execution::new("stale-task-name", 1.0, 1.0, vec![9.9; 300]);
+        for i in 0..20 {
+            let input = 4000.0 + 500.0 * i as f64;
+            let e = a.generate_with_input(&mut r1, input, 200);
+            a.generate_with_input_into(&mut r2, input, 200, &mut scratch, &mut out);
+            assert_eq!(e, out);
+        }
     }
 
     #[test]

@@ -1,0 +1,71 @@
+//! Golden ingestion conformance for the committed nf-core-shaped
+//! long-form monitoring CSV: parse -> summarize must reproduce the
+//! committed per-task peak/duration table **bit-exactly** (floats are
+//! rendered with `{:?}`, Rust's shortest-roundtrip form), so importer
+//! refactors can't silently shift the figures derived from real traces.
+//!
+//! The CSV is constructed so every derived float is a dyadic rational
+//! (rss multiples of 0.25 GB, inputs multiples of 1 MB, 1000 ms grid):
+//! every division, sum, mean, and interpolated median is exact in IEEE
+//! double, which is what makes a bit-exact pin meaningful.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use ksplus::trace::workflow::summarize;
+use ksplus::trace::{load_csv_auto, nextflow};
+
+const CSV: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../golden/traces/nfcore_rnaseq_sample.csv");
+const EXPECTED: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../golden/traces/expected_summary.txt");
+
+#[test]
+fn golden_trace_ingestion_is_bit_exact() {
+    let trace = load_csv_auto(Path::new(CSV), "nfcore_rnaseq_sample").unwrap();
+    let mut got = String::new();
+    got.push_str("task,instance,input_mb,dt,samples,peak_gb,duration_s,used_gbs\n");
+    for t in &trace.tasks {
+        for (i, e) in t.executions.iter().enumerate() {
+            writeln!(
+                got,
+                "{},{},{:?},{:?},{},{:?},{:?},{:?}",
+                t.task,
+                i,
+                e.input_mb,
+                e.dt,
+                e.samples.len(),
+                e.peak(),
+                e.duration(),
+                e.used_gbs()
+            )
+            .unwrap();
+        }
+    }
+    got.push_str("task,instances,mean_peak_gb,median_peak_gb,max_peak_gb\n");
+    for s in summarize(&trace) {
+        writeln!(
+            got,
+            "{},{},{:?},{:?},{:?}",
+            s.task, s.instances, s.mean_peak_gb, s.median_peak_gb, s.max_peak_gb
+        )
+        .unwrap();
+    }
+    let want = std::fs::read_to_string(EXPECTED).unwrap();
+    assert_eq!(
+        got, want,
+        "golden trace summary drifted; if the importer change is intentional, \
+         update golden/traces/expected_summary.txt"
+    );
+}
+
+#[test]
+fn auto_loader_matches_long_form_reader() {
+    let via_auto = load_csv_auto(Path::new(CSV), "x").unwrap();
+    let direct = nextflow::read_long_csv(Path::new(CSV), "x").unwrap();
+    assert_eq!(via_auto.tasks.len(), direct.tasks.len());
+    for (a, b) in via_auto.tasks.iter().zip(&direct.tasks) {
+        assert_eq!(a.task, b.task);
+        assert_eq!(a.executions, b.executions);
+    }
+}
